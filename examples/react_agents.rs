@@ -1,0 +1,59 @@
+//! End-to-end ReAct workflow driver on the REAL PJRT engine (the
+//! serving-paper validation run recorded in EXPERIMENTS.md §E2E):
+//! a persistent 4-agent pipeline over a shared context serves a stream of
+//! requests; we compare ForkKV against the prefix-caching baseline on
+//! identical workloads and report throughput / TTFT / hit rates.
+//!
+//!   make artifacts && cargo run --release --example react_agents
+
+use forkkv::config::{CacheConfig, CachePolicy, EngineConfig};
+use forkkv::engine::Engine;
+use forkkv::exec::PjrtExecutor;
+use forkkv::workload::{WorkflowDriver, WorkloadSpec};
+
+fn run(policy: CachePolicy, budget_mb: usize) -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts/llama3-8b-sim");
+    let exec = PjrtExecutor::load(dir)?;
+    let cfg = EngineConfig {
+        policy,
+        cache: CacheConfig { page_tokens: 16, budget_bytes: budget_mb << 20 },
+        seed: 9,
+        ..EngineConfig::default()
+    };
+    let mut engine = Engine::new(cfg, Box::new(exec))?;
+
+    // small real-mode geometry (artifacts are compiled for s_max=768):
+    // 2 pipelines x 4 agents, 6 requests streaming through
+    let mut spec = WorkloadSpec::react4("loogle", 2);
+    spec.n_requests = 6;
+    let mut driver = WorkflowDriver::new(spec);
+
+    let t0 = std::time::Instant::now();
+    engine.run_driver(&mut driver)?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!(
+        "{:<8} tasks={} tasks/s={:.2} (virtual) wall={:.1}s hit={:.2} partial={:.2} batch={:.1} ttft p50={:.0}ms",
+        policy.name(),
+        driver.tasks_done(),
+        driver.throughput_tasks_per_s(),
+        wall,
+        engine.metrics.hit_rate(),
+        engine.metrics.hit_partial_tokens as f64 / engine.metrics.prompt_tokens as f64,
+        engine.metrics.avg_decode_batch(),
+        driver.ttft_us.percentile(50.0) / 1000.0,
+    );
+    engine.check_quiescent().map_err(|e| anyhow::anyhow!(e))?;
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    if !std::path::Path::new("artifacts/llama3-8b-sim/manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    println!("# ReAct pipeline, real PJRT execution, llama3-8b-sim");
+    run(CachePolicy::Disaggregated, 24)?;
+    run(CachePolicy::UnifiedPerAdapter, 24)?;
+    Ok(())
+}

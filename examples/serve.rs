@@ -1,0 +1,77 @@
+//! Serving demo: start the HTTP front-end on the real PJRT engine, fire a
+//! few client requests at it from this process, print the responses, then
+//! shut down. (For a long-running server use `forkkv serve`.)
+//!
+//!   make artifacts && cargo run --release --example serve
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+
+use forkkv::config::{CacheConfig, CachePolicy, EngineConfig};
+use forkkv::engine::Engine;
+use forkkv::exec::PjrtExecutor;
+use forkkv::server::Server;
+
+fn post(addr: &str, body: &str) -> anyhow::Result<String> {
+    let mut conn = TcpStream::connect(addr)?;
+    let req = format!(
+        "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    );
+    conn.write_all(req.as_bytes())?;
+    let mut resp = String::new();
+    conn.read_to_string(&mut resp)?;
+    Ok(resp
+        .split("\r\n\r\n")
+        .nth(1)
+        .unwrap_or("")
+        .to_string())
+}
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::Path::new("artifacts/llama3-8b-sim");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing — run `make artifacts` first");
+        return Ok(());
+    }
+    let exec = PjrtExecutor::load(dir)?;
+    let cfg = EngineConfig {
+        policy: CachePolicy::Disaggregated,
+        cache: CacheConfig { page_tokens: 16, budget_bytes: 48 << 20 },
+        ..EngineConfig::default()
+    };
+    let engine = Engine::new(cfg, Box::new(exec))?;
+    let (server, engine_thread) = Server::start(engine);
+
+    let addr = "127.0.0.1:18080";
+    let http_thread = {
+        let server = server.clone();
+        let addr = addr.to_string();
+        std::thread::spawn(move || server.serve_http(&addr, Some(4)))
+    };
+    std::thread::sleep(std::time::Duration::from_millis(200));
+
+    let shared = "analyze this repository scheduler allocator radix tree fork \
+                  copy on write pages adapters residual base cache kernel";
+    for (adapter, task) in [
+        (0, "summarize the design"),
+        (1, "find potential bugs"),
+        (0, "summarize the design"), // repeat: full cache hit
+        (2, "suggest optimizations"),
+    ] {
+        let body = format!(
+            r#"{{"prompt": "{shared} {task}", "adapter": {adapter}, "max_new": 10}}"#
+        );
+        let t0 = std::time::Instant::now();
+        let resp = post(addr, &body)?;
+        println!(
+            "adapter {adapter} [{task}] -> {resp} ({:.0} ms)",
+            t0.elapsed().as_secs_f64() * 1000.0
+        );
+    }
+    http_thread.join().unwrap()?;
+    println!("\nstats: {}", server.stats()?.to_string());
+    server.shutdown();
+    engine_thread.join().ok();
+    Ok(())
+}

@@ -1,0 +1,203 @@
+"""AOT compile path: lower L2 entrypoints to HLO text + export weights.
+
+Python runs ONCE here (`make artifacts`); the Rust coordinator then loads
+`artifacts/<model>/*.hlo.txt` via the PJRT C API and never calls back into
+Python on the request path.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+the published `xla` 0.1.6 crate binds) rejects; the text parser reassigns
+ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs per model under --out-dir/<model>/:
+  prefill.hlo.txt, decode_b{1,2,4,8}.hlo.txt   -- compiled by Rust at startup
+  weights.bin                                   -- f32 LE, params then bank
+  manifest.json                                 -- schema the Rust side replays
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .configs import MODELS, get
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _abstract(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.int32 if dtype == "i32" else jnp.float32)
+
+
+def lower_model(cfg, rank: int, seed: int, lora_seed: int, out_dir: str,
+                verbose: bool = True) -> dict:
+    mdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(mdir, exist_ok=True)
+
+    params = M.init_params(cfg, seed)
+    bank = M.init_bank(cfg, rank=rank, seed=lora_seed)
+    pspecs = M.param_specs(cfg)
+    bspecs = M.bank_specs(cfg)
+
+    # ---- weights.bin + offset table --------------------------------------
+    offset = 0
+    entries = {"params": [], "bank": []}
+    with open(os.path.join(mdir, "weights.bin"), "wb") as f:
+        for section, specs, tree in (
+            ("params", pspecs, params),
+            ("bank", bspecs, bank),
+        ):
+            for name, shape in specs:
+                arr = np.asarray(tree[name], dtype=np.float32)
+                assert arr.shape == tuple(shape), (name, arr.shape, shape)
+                f.write(arr.tobytes())
+                entries[section].append(
+                    {"name": name, "shape": list(shape), "offset": offset}
+                )
+                offset += arr.size
+
+    weight_args = [params[n] for n, _ in pspecs] + [bank[n] for n, _ in bspecs]
+    weight_abstract = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in weight_args]
+
+    # ---- lower entrypoints ------------------------------------------------
+    artifacts = []
+    runtime_inputs = {}
+    outputs = {}
+
+    def lower(kind: str, fn, batch: int, fname: str):
+        rt = M.runtime_input_specs(cfg, kind, batch)
+        args = weight_abstract + [_abstract(s, d) for _, s, d in rt]
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(mdir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        key = kind if kind == "prefill" else f"decode_b{batch}"
+        runtime_inputs[key] = [[n, list(s), d] for n, s, d in rt]
+        outputs[key] = [
+            [n, list(s), d] for n, s, d in M.output_specs(cfg, kind, batch)
+        ]
+        artifacts.append({"kind": kind, "batch": batch, "file": fname})
+        if verbose:
+            print(f"  {cfg.name}/{fname}: {len(text) / 1e6:.1f} MB hlo text")
+
+    lower("prefill", M.make_prefill_fn(cfg), 1, "prefill.hlo.txt")
+    for b in cfg.decode_batches:
+        lower("decode", M.make_decode_fn(cfg, b), b, f"decode_b{b}.hlo.txt")
+
+    manifest = {
+        "model": {
+            "name": cfg.name,
+            "n_layers": cfg.n_layers,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_kv_heads": cfg.n_kv_heads,
+            "head_dim": cfg.head_dim,
+            "d_ff": cfg.d_ff,
+            "vocab": cfg.vocab,
+            "rope_theta": cfg.rope_theta,
+            "qkv_bias": cfg.qkv_bias,
+            "s_max": cfg.s_max,
+            "chunk": cfg.chunk,
+            "rank_max": cfg.rank_max,
+            "n_adapters": cfg.n_adapters,
+            "decode_batches": list(cfg.decode_batches),
+            "rank_effective": rank,
+            "seed": seed,
+            "lora_seed": lora_seed,
+        },
+        "params": entries["params"],
+        "bank": entries["bank"],
+        "artifacts": artifacts,
+        "runtime_inputs": runtime_inputs,
+        "outputs": outputs,
+    }
+    with open(os.path.join(mdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+    # ---- golden outputs: the cross-language numerics contract -------------
+    # Rust integration tests replay exactly this call through the PJRT
+    # artifacts and must match within tolerance (tests/runtime_golden.rs).
+    golden = make_golden(cfg, params, bank)
+    with open(os.path.join(mdir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    return manifest
+
+
+def make_golden(cfg, params, bank) -> dict:
+    """Run one prefill chunk + one decode step in pure python (jnp) and
+    record probe values for the Rust runtime to verify against."""
+    L, S, KH, HD, R = (
+        cfg.n_layers, cfg.s_max, cfg.n_kv_heads, cfg.head_dim, cfg.rank_max,
+    )
+    C = cfg.chunk
+    kb = jnp.zeros((L, S, KH, HD)); vb = jnp.zeros((L, S, KH, HD))
+    kr = jnp.zeros((L, S, R)); vr = jnp.zeros((L, S, R))
+    tokens = (jnp.arange(C, dtype=jnp.int32) * 7 + 1) % cfg.vocab
+    adapter_id, on = jnp.int32(2), jnp.float32(1.0)
+
+    out = M.forward_chunk(
+        cfg, params, bank, tokens, jnp.int32(0), adapter_id, on, kb, vb, kr, vr
+    )
+    logits, kbn, vbn, krn, vrn, kmn, vmn, xs = out
+    n_keep = max(1, 3 * C // 4)  # pretend only these chunk tokens are "real"
+
+    for l in range(L):
+        kb = kb.at[l, :n_keep].set(kbn[l, :n_keep])
+        vb = vb.at[l, :n_keep].set(vbn[l, :n_keep])
+        kr = kr.at[l, :n_keep].set(krn[l, :n_keep])
+        vr = vr.at[l, :n_keep].set(vrn[l, :n_keep])
+    tok_d = jnp.array([5], jnp.int32)
+    dec = M.forward_chunk(
+        cfg, params, bank, tok_d, jnp.int32(n_keep), adapter_id, on,
+        kb, vb, kr, vr,
+    )
+    probe = lambda a: [float(x) for x in np.asarray(a, np.float32).reshape(-1)[:8]]
+    return {
+        "tokens": [int(t) for t in np.asarray(tokens)],
+        "adapter_id": 2,
+        "n_keep": n_keep,
+        "decode_token": 5,
+        "prefill_logits_last8": probe(logits[C - 1]),
+        "prefill_kb_l0": probe(kbn[0]),
+        "prefill_kr_l0": probe(krn[0]),
+        "prefill_km_l0": probe(kmn[0]),
+        "decode_logits8": probe(dec[0][0]),
+        "decode_argmax": int(jnp.argmax(dec[0][0])),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="llama3-8b-sim",
+                    help="comma-separated, or 'all'")
+    ap.add_argument("--rank", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--lora-seed", type=int, default=1)
+    args = ap.parse_args()
+
+    names = list(MODELS) if args.models == "all" else args.models.split(",")
+    for name in names:
+        cfg = get(name)
+        print(f"lowering {name} ...", flush=True)
+        lower_model(cfg, args.rank, args.seed, args.lora_seed, args.out_dir)
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

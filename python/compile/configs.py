@@ -1,0 +1,77 @@
+"""Model + AOT geometry configs.
+
+Three *sim* configs mirror the paper's three evaluation models
+(Llama3-8B / Qwen2.5-7B / Qwen2.5-14B) at laptop scale: the architectural
+family (GQA ratio, bias policy, depth/width ordering) is preserved, because
+the systems behaviour under test depends on cache geometry — n = kv width,
+r = LoRA rank, layer count — not on trained weights (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    d_ff: int
+    vocab: int
+    rope_theta: float
+    qkv_bias: bool
+    # --- AOT serving geometry ---
+    s_max: int = 768          # padded KV-cache capacity per sequence
+    chunk: int = 64           # prefill chunk length
+    rank_max: int = 32        # padded LoRA rank (effective rank <= this)
+    n_adapters: int = 16      # adapter-bank slots baked into the artifacts
+    decode_batches: Tuple[int, ...] = (1, 2, 4, 8)
+
+    @property
+    def q_width(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_width(self) -> int:
+        """n in the paper's Eq. 3: per-layer K (or V) width of the bCache."""
+        return self.n_kv_heads * self.head_dim
+
+    def validate(self) -> None:
+        assert self.n_heads % self.n_kv_heads == 0
+        assert self.head_dim % 2 == 0
+        assert self.s_max % self.chunk == 0
+
+
+MODELS = {
+    # Llama3 family: GQA 2:1, no qkv bias.
+    "llama3-8b-sim": ModelConfig(
+        name="llama3-8b-sim",
+        n_layers=4, d_model=256, n_heads=8, n_kv_heads=4, head_dim=32,
+        d_ff=704, vocab=2048, rope_theta=10000.0, qkv_bias=False,
+    ),
+    # Qwen2.5 family: more aggressive GQA (4:1) and qkv bias.
+    "qwen2.5-7b-sim": ModelConfig(
+        name="qwen2.5-7b-sim",
+        n_layers=4, d_model=256, n_heads=8, n_kv_heads=2, head_dim=32,
+        d_ff=704, vocab=2048, rope_theta=10000.0, qkv_bias=True,
+    ),
+    # The "bigger" model of the eval: deeper + wider => more memory pressure.
+    "qwen2.5-14b-sim": ModelConfig(
+        name="qwen2.5-14b-sim",
+        n_layers=6, d_model=384, n_heads=12, n_kv_heads=6, head_dim=32,
+        d_ff=1024, vocab=2048, rope_theta=10000.0, qkv_bias=True,
+    ),
+}
+
+DEFAULT_MODEL = "llama3-8b-sim"
+
+
+def get(name: str) -> ModelConfig:
+    cfg = MODELS[name]
+    cfg.validate()
+    return cfg

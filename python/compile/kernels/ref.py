@@ -1,0 +1,119 @@
+"""Pure-jnp reference oracle for ResidualAttention.
+
+This module is the correctness anchor of the whole stack: the Pallas kernel
+(`residual_attention.py`), the L2 model, and (transitively, through the AOT
+artifacts) the Rust request path are all validated against these functions.
+
+Disaggregated KV cache layout (paper §5.1):
+  bCache:  K_base = RoPE(x W_k) and V_base = x W_v   -- full-width, shared
+  rCache:  K_res  = x A_k       and V_res  = x A_v   -- rank-r, per adapter
+Reconstruction (exact, because RoPE is linear per position):
+  K = K_base + RoPE(K_res @ B_k)
+  V = V_base + V_res @ B_v
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_tables(s: int, head_dim: int, theta: float = 10000.0, dtype=jnp.float32):
+    """Return (sin, cos) tables of shape [s, head_dim].
+
+    Uses the half-split convention: dimension i pairs with i + head_dim/2,
+    frequencies are theta ** (-2i / head_dim) for i in [0, head_dim/2).
+    """
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    pos = jnp.arange(s, dtype=jnp.float32)
+    ang = pos[:, None] * freqs[None, :]  # [s, half]
+    sin = jnp.concatenate([jnp.sin(ang), jnp.sin(ang)], axis=-1)
+    cos = jnp.concatenate([jnp.cos(ang), jnp.cos(ang)], axis=-1)
+    return sin.astype(dtype), cos.astype(dtype)
+
+
+def apply_rope(x, sin, cos):
+    """Rotate `x` [..., s, head_dim] by per-position tables broadcastable to x.
+
+    rotate_half convention: rot(x) = x * cos + rotate_half(x) * sin where
+    rotate_half([a, b]) = [-b, a] on the two half-splits of the last dim.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    rotated = jnp.concatenate([-x2, x1], axis=-1)
+    return x * cos + rotated * sin
+
+
+def reconstruct_k(k_base, k_res, b_k, sin, cos):
+    """K = K_base + RoPE(K_res @ B_k).
+
+    k_base: [s, kh, hd] (already rotated), k_res: [s, r],
+    b_k: [r, kh, hd] (LoRA scale pre-folded), sin/cos: [s, hd].
+    """
+    k_lora = jnp.einsum("sr,rkh->skh", k_res, b_k)  # [s, kh, hd]
+    k_lora = apply_rope(k_lora, sin[:, None, :], cos[:, None, :])
+    return k_base + k_lora
+
+
+def reconstruct_v(v_base, v_res, b_v):
+    """V = V_base + V_res @ B_v (no RoPE on values)."""
+    return v_base + jnp.einsum("sr,rkh->skh", v_res, b_v)
+
+
+def residual_attention_ref(
+    q,          # [m, h, hd]   queries (already rotated)
+    k_base,     # [s, kh, hd]  rotated base keys
+    v_base,     # [s, kh, hd]
+    k_res,      # [s, r]       un-rotated low-rank key residuals
+    v_res,      # [s, r]
+    b_k,        # [r, kh, hd]  LoRA up-projection (scale folded in)
+    b_v,        # [r, kh, hd]
+    q_pos,      # [m] int32    absolute position of each query
+    sin,        # [s, hd]
+    cos,        # [s, hd]
+):
+    """Exact attention over the disaggregated cache.
+
+    Causal/padding mask: key slot j is visible to query i iff j <= q_pos[i].
+    Cache slots are laid out so that slot index == absolute token position;
+    garbage slots beyond the filled region sit at positions > max(q_pos) and
+    are therefore masked out by the same comparison.
+    """
+    m, h, hd = q.shape
+    s, kh, _ = k_base.shape
+    group = h // kh
+
+    k = reconstruct_k(k_base, k_res, b_k, sin, cos)  # [s, kh, hd]
+    v = reconstruct_v(v_base, v_res, b_v)            # [s, kh, hd]
+
+    # Expand GQA kv heads to query heads.
+    k = jnp.repeat(k, group, axis=1)  # [s, h, hd]
+    v = jnp.repeat(v, group, axis=1)
+
+    scale = 1.0 / jnp.sqrt(jnp.array(hd, dtype=jnp.float32))
+    logits = jnp.einsum("mhd,shd->hms", q.astype(jnp.float32), k.astype(jnp.float32))
+    logits = logits * scale
+
+    kpos = jnp.arange(s, dtype=jnp.int32)
+    mask = kpos[None, :] <= q_pos[:, None]  # [m, s]
+    logits = jnp.where(mask[None, :, :], logits, -1e30)
+
+    p = jnp.exp(logits - logits.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("hms,shd->mhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def unified_attention_ref(q, k, v, q_pos):
+    """Standard attention over a monolithic cache (baseline oracle).
+
+    q: [m, h, hd], k/v: [s, kh, hd] fully merged + rotated.
+    """
+    s, kh, hd = k.shape
+    zeros_res = jnp.zeros((s, 1), dtype=k.dtype)
+    zeros_b = jnp.zeros((1, kh, hd), dtype=k.dtype)
+    sin = jnp.zeros((s, hd), dtype=k.dtype)
+    cos = jnp.ones((s, hd), dtype=k.dtype)
+    return residual_attention_ref(
+        q, k, v, zeros_res, zeros_res, zeros_b, zeros_b, q_pos, sin, cos
+    )

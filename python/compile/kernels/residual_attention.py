@@ -1,0 +1,186 @@
+"""ResidualAttention — Pallas kernel for the disaggregated KV cache (paper Alg. 1).
+
+The kernel fuses KV-cache reconstruction into the attention loop so the full
+K/V are never materialized in HBM:
+
+  Stage 1 (per key block, on-chip): K_lora = RoPE(K_res @ B_k);  K = K_base + K_lora
+  Stage 2: online-softmax attention with *two* accumulators:
+             acc   += P @ V_base      (full width head_dim)
+             acc_r += P @ V_res       (width r only)
+  Stage 3 (epilogue, once): O = (acc + acc_r @ B_v) / l
+           -- the V up-projection is hoisted out of the loop via matrix
+              associativity (paper Eq. 4).
+
+TPU adaptation (DESIGN.md §2): the grid iterates (query-block, head); B_k/B_v
+are pinned whole in VMEM (they are r x hd slices, a few KB); key blocks are
+streamed with `fori_loop` + dynamic slices over refs that the BlockSpec maps
+into VMEM. `interpret=True` is mandatory on this CPU-only image — real TPU
+lowering emits Mosaic custom-calls the CPU PJRT plugin cannot execute.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_Q = 64
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _rotate_half(x):
+    half = x.shape[-1] // 2
+    return jnp.concatenate([-x[..., half:], x[..., :half]], axis=-1)
+
+
+def _kernel(
+    q_ref,       # [bq, hd]        query block for this (qb, head)
+    kb_ref,      # [s, hd]         base keys for this head's kv group
+    vb_ref,      # [s, hd]
+    kr_ref,      # [s, r]          residual keys (shared across heads)
+    vr_ref,      # [s, r]
+    bk_ref,      # [r, hd]         K up-projection slice for this kv head
+    bv_ref,      # [r, hd]
+    qpos_ref,    # [bq]            absolute positions of queries
+    sin_ref,     # [s, hd]
+    cos_ref,     # [s, hd]
+    o_ref,       # [bq, hd]        output block
+    *,
+    block_k: int,
+    seq_len: int,
+    sm_scale: float,
+):
+    bq, hd = q_ref.shape
+    r = kr_ref.shape[-1]
+    nblocks = seq_len // block_k
+
+    q = q_ref[...].astype(jnp.float32)
+    qpos = qpos_ref[...]
+    # Stage-0: pin the tiny LoRA up-projections in VMEM for the whole kernel
+    # (paper Alg. 1 line 3: "Load B_k, B_v to SRAM").
+    bk = bk_ref[...].astype(jnp.float32)   # [r, hd]
+    bv = bv_ref[...].astype(jnp.float32)   # [r, hd]
+
+    def body(nb, carry):
+        acc, acc_r, m, l = carry
+        kslice = pl.dslice(nb * block_k, block_k)
+
+        # ---- Stage 1: on-the-fly key reconstruction with deferred RoPE ----
+        kb = kb_ref[kslice, :].astype(jnp.float32)       # [bk, hd]
+        kr = kr_ref[kslice, :].astype(jnp.float32)       # [bk, r]
+        sin = sin_ref[kslice, :].astype(jnp.float32)     # [bk, hd]
+        cos = cos_ref[kslice, :].astype(jnp.float32)
+        k_lora = kr @ bk                                  # [bk, hd]  (MXU)
+        k_lora = k_lora * cos + _rotate_half(k_lora) * sin
+        k = kb + k_lora
+
+        # ---- Stage 2: separate attention accumulation (base / residual) ----
+        s_blk = (q @ k.T) * sm_scale                      # [bq, bk]
+        kpos = nb * block_k + jax.lax.iota(jnp.int32, block_k)
+        mask = kpos[None, :] <= qpos[:, None]
+        s_blk = jnp.where(mask, s_blk, NEG_INF)
+
+        m_new = jnp.maximum(m, s_blk.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s_blk - m_new[:, None])
+        l_new = l * alpha + p.sum(axis=-1)
+
+        vb = vb_ref[kslice, :].astype(jnp.float32)        # [bk, hd]
+        vr = vr_ref[kslice, :].astype(jnp.float32)        # [bk, r]
+        acc = acc * alpha[:, None] + p @ vb               # [bq, hd]
+        acc_r = acc_r * alpha[:, None] + p @ vr           # [bq, r]
+        return acc, acc_r, m_new, l_new
+
+    acc0 = jnp.zeros((bq, hd), jnp.float32)
+    accr0 = jnp.zeros((bq, r), jnp.float32)
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    acc, acc_r, m, l = jax.lax.fori_loop(0, nblocks, body, (acc0, accr0, m0, l0))
+
+    # ---- Stage 3: fuse via matrix associativity (Eq. 4) ----
+    acc_final = acc + acc_r @ bv                          # [bq, hd]
+    l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows (padded queries)
+    o_ref[...] = (acc_final / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_k", "interpret"),
+)
+def residual_attention(
+    q,        # [m, h, hd]    rotated queries
+    k_base,   # [s, kh, hd]   rotated base keys (bCache)
+    v_base,   # [s, kh, hd]
+    k_res,    # [s, r]        un-rotated residual keys (rCache)
+    v_res,    # [s, r]
+    b_k,      # [r, kh, hd]   LoRA up-projection, scale folded in
+    b_v,      # [r, kh, hd]
+    q_pos,    # [m] int32
+    sin,      # [s, hd]
+    cos,      # [s, hd]
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = True,
+):
+    """Fused attention over a disaggregated KV cache. Returns [m, h, hd].
+
+    Requires s % block_k == 0; m is padded internally to block_q. GQA is
+    expressed through the grid: query head i reads kv head i // (h // kh).
+    """
+    m, h, hd = q.shape
+    s, kh, _ = k_base.shape
+    r = k_res.shape[-1]
+    if s % block_k != 0:
+        raise ValueError(f"seq_len {s} must be divisible by block_k {block_k}")
+    group = h // kh
+
+    block_q = min(block_q, max(m, 1))
+    pad_m = (-m) % block_q
+    if pad_m:
+        q = jnp.pad(q, ((0, pad_m), (0, 0), (0, 0)))
+        # Padded queries get position -1: every key is masked; the kernel's
+        # l==0 guard keeps the division finite and rows are sliced off below.
+        q_pos = jnp.pad(q_pos, (0, pad_m), constant_values=-1)
+    m_padded = q.shape[0]
+    nq = m_padded // block_q
+
+    sm_scale = 1.0 / (hd ** 0.5)
+    kernel = functools.partial(
+        _kernel, block_k=block_k, seq_len=s, sm_scale=sm_scale
+    )
+
+    grid = (nq, h)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, None, hd), lambda qb, hh: (qb, hh, 0)),   # q
+            pl.BlockSpec((s, None, hd), lambda qb, hh, g=group: (0, hh // g, 0)),  # kb
+            pl.BlockSpec((s, None, hd), lambda qb, hh, g=group: (0, hh // g, 0)),  # vb
+            pl.BlockSpec((s, r), lambda qb, hh: (0, 0)),                  # kr
+            pl.BlockSpec((s, r), lambda qb, hh: (0, 0)),                  # vr
+            pl.BlockSpec((r, None, hd), lambda qb, hh, g=group: (0, hh // g, 0)),  # bk
+            pl.BlockSpec((r, None, hd), lambda qb, hh, g=group: (0, hh // g, 0)),  # bv
+            pl.BlockSpec((block_q,), lambda qb, hh: (qb,)),               # qpos
+            pl.BlockSpec((s, hd), lambda qb, hh: (0, 0)),                 # sin
+            pl.BlockSpec((s, hd), lambda qb, hh: (0, 0)),                 # cos
+        ],
+        out_specs=pl.BlockSpec((block_q, None, hd), lambda qb, hh: (qb, hh, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_padded, h, hd), q.dtype),
+        interpret=interpret,
+    )(
+        q,
+        k_base,
+        v_base,
+        k_res,
+        v_res,
+        b_k,
+        b_v,
+        q_pos,
+        sin,
+        cos,
+    )
+    return out[:m]

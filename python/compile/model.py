@@ -1,0 +1,367 @@
+"""L2: multi-LoRA transformer over the disaggregated KV cache.
+
+A Llama/Qwen-style decoder (RMSNorm, RoPE, GQA, SwiGLU, optional QKV bias)
+with LoRA adapters on the q/k/v/o projections, selected per request from an
+*adapter bank* passed as arguments (so the Rust runtime uploads the bank once
+as PJRT buffers and selects adapters by index in-graph).
+
+Two entrypoints are AOT-lowered (see aot.py):
+  - prefill: one chunk of `C` tokens for a single sequence
+  - decode:  one token for each of `B` sequences (vmap of the row function)
+
+Both read/write the disaggregated cache layout of paper §5.1 and call the
+L1 Pallas `residual_attention` kernel for every attention. The unified
+baselines run through the *same* artifacts by storing merged K/V in the
+base-layout cache and passing zero residuals (kernel reduces exactly to
+standard attention — tested in test_kernel.py).
+
+Weights are explicit positional arguments in `param_names()` order; the
+Rust side replays the same order from `manifest.json`.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.ref import apply_rope, rope_tables
+from .kernels.residual_attention import residual_attention
+
+# ---------------------------------------------------------------------------
+# parameter schema
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> List[tuple]:
+    """Ordered (name, shape) for all base-model parameters.
+
+    Bias vectors are always present (zero when cfg.qkv_bias is False) so that
+    all three models share one artifact I/O contract.
+    """
+    d, qw, kvw, ff, v = cfg.d_model, cfg.q_width, cfg.kv_width, cfg.d_ff, cfg.vocab
+    specs = [("embed", (v, d))]
+    for i in range(cfg.n_layers):
+        specs += [
+            (f"l{i}.norm1", (d,)),
+            (f"l{i}.wq", (d, qw)),
+            (f"l{i}.bq", (qw,)),
+            (f"l{i}.wk", (d, kvw)),
+            (f"l{i}.bk", (kvw,)),
+            (f"l{i}.wv", (d, kvw)),
+            (f"l{i}.bv", (kvw,)),
+            (f"l{i}.wo", (qw, d)),
+            (f"l{i}.norm2", (d,)),
+            (f"l{i}.wg", (d, ff)),
+            (f"l{i}.wu", (d, ff)),
+            (f"l{i}.wd", (ff, d)),
+        ]
+    specs += [("normf", (d,)), ("lm_head", (d, v))]
+    return specs
+
+
+def bank_specs(cfg: ModelConfig) -> List[tuple]:
+    """Ordered (name, shape) for the stacked adapter bank.
+
+    A*: down-projections (store x@A as rCache); B*: up-projections with the
+    LoRA scale alpha/r folded in at init. Rank is padded to cfg.rank_max;
+    adapters with a smaller effective rank have zero tail columns/rows.
+    """
+    na, nl, d, r = cfg.n_adapters, cfg.n_layers, cfg.d_model, cfg.rank_max
+    qw, kvw = cfg.q_width, cfg.kv_width
+    return [
+        ("bank.aq", (na, nl, d, r)),
+        ("bank.bq", (na, nl, r, qw)),
+        ("bank.ak", (na, nl, d, r)),
+        ("bank.bk", (na, nl, r, kvw)),
+        ("bank.av", (na, nl, d, r)),
+        ("bank.bv", (na, nl, r, kvw)),
+        ("bank.ao", (na, nl, qw, r)),
+        ("bank.bo", (na, nl, r, d)),
+    ]
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jax.Array]:
+    """Seeded random init, scaled for a stable residual stream."""
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith((".norm1", ".norm2")) or name == "normf":
+            out[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith((".bq", ".bk", ".bv")):
+            if cfg.qkv_bias:
+                out[name] = jax.random.normal(sub, shape, jnp.float32) * 0.02
+            else:
+                out[name] = jnp.zeros(shape, jnp.float32)
+        else:
+            fan_in = shape[0] if len(shape) > 1 else shape[0]
+            scale = fan_in ** -0.5
+            out[name] = jax.random.normal(sub, shape, jnp.float32) * scale
+    return out
+
+
+def init_bank(cfg: ModelConfig, rank: int = 16, seed: int = 1,
+              lora_alpha_mult: float = 2.0) -> Dict[str, jax.Array]:
+    """Seeded adapter bank. Each of the cfg.n_adapters slots is a distinct
+    adapter of effective `rank`; tails up to rank_max are zero. The LoRA
+    scale alpha/r (= lora_alpha_mult) is folded into the B matrices."""
+    assert rank <= cfg.rank_max
+    key = jax.random.PRNGKey(seed)
+    out = {}
+    for name, shape in bank_specs(cfg):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, shape, jnp.float32)
+        if name.startswith("bank.a"):
+            w = w * (shape[-2] ** -0.5)          # fan-in of the down-proj
+            w = w.at[..., rank:].set(0.0)        # pad rank to rank_max
+        else:
+            # Trained-adapter-like magnitude: LoRA deltas are a few percent
+            # of the base activation norm (Hu et al.), not O(1) — this is
+            # what bounds the paper's cross-agent x divergence (Fig. 5b).
+            w = w * 0.012 * lora_alpha_mult
+            w = w.at[..., rank:, :].set(0.0)
+        out[name] = w
+    return out
+
+
+# ---------------------------------------------------------------------------
+# forward pass
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x, w, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * w
+
+
+def _lora(h, a, b, on):
+    """h @ A @ B, gated by `on` (0.0 disables the adapter entirely)."""
+    return ((h @ a) @ b) * on
+
+
+def forward_chunk(
+    cfg: ModelConfig,
+    params: Dict[str, jax.Array],
+    bank: Dict[str, jax.Array],
+    tokens,       # i32[C]
+    cache_len,    # i32[] -- number of already-cached tokens (= first position)
+    adapter_id,   # i32[]
+    adapter_on,   # f32[]
+    kb,           # f32[L, S, KH, HD] rotated base keys
+    vb,           # f32[L, S, KH, HD]
+    kr,           # f32[L, S, R]
+    vr,           # f32[L, S, R]
+    *,
+    interpret: bool = True,
+):
+    """Process one chunk of C tokens at positions [cache_len, cache_len+C).
+
+    Returns (logits[C,V], kb_new[L,C,KH,HD], vb_new, kr_new[L,C,R], vr_new,
+             km_new[L,C,KH,HD], vm_new, xs[L,C,d]).
+    The padded cache arrays are updated in-graph only for attention; the
+    caller persists the returned chunk tensors into its pools.
+    """
+    C = tokens.shape[0]
+    L, S = cfg.n_layers, cfg.s_max
+    KH, HD, H = cfg.n_kv_heads, cfg.head_dim, cfg.n_heads
+    R = cfg.rank_max
+
+    sin_t, cos_t = rope_tables(S, HD, cfg.rope_theta)        # [S, HD]
+    pos = cache_len + jnp.arange(C, dtype=jnp.int32)          # [C]
+    # Per-chunk rope slices; positions are always < S by construction.
+    sin_c = jnp.take(sin_t, pos, axis=0)                      # [C, HD]
+    cos_c = jnp.take(cos_t, pos, axis=0)
+
+    def pick(name):
+        return jnp.take(bank[name], adapter_id, axis=0)       # [L, ...]
+
+    aq, bq = pick("bank.aq"), pick("bank.bq")
+    ak, bk_up = pick("bank.ak"), pick("bank.bk")
+    av, bv_up = pick("bank.av"), pick("bank.bv")
+    ao, bo = pick("bank.ao"), pick("bank.bo")
+
+    x = jnp.take(params["embed"], tokens, axis=0)             # [C, d]
+    kb_out, vb_out, kr_out, vr_out, km_out, vm_out, xs = [], [], [], [], [], [], []
+
+    for i in range(L):
+        h = _rmsnorm(x, params[f"l{i}.norm1"])
+
+        q = h @ params[f"l{i}.wq"] + params[f"l{i}.bq"] + _lora(h, aq[i], bq[i], adapter_on)
+        k_base = h @ params[f"l{i}.wk"] + params[f"l{i}.bk"]  # bias lives in bCache
+        v_base = h @ params[f"l{i}.wv"] + params[f"l{i}.bv"]
+        # rCache truncates at the down-projection (paper §5.1); gate by
+        # adapter_on so a zeroed adapter reproduces the pure base model.
+        k_res = (h @ ak[i]) * adapter_on                      # [C, R]
+        v_res = (h @ av[i]) * adapter_on
+
+        q = q.reshape(C, H, HD)
+        q = apply_rope(q, sin_c[:, None, :], cos_c[:, None, :])
+        k_base = k_base.reshape(C, KH, HD)
+        k_base = apply_rope(k_base, sin_c[:, None, :], cos_c[:, None, :])
+        v_base = v_base.reshape(C, KH, HD)
+
+        # Write the chunk into the padded cache (slot == absolute position).
+        kb_l = jax.lax.dynamic_update_slice(kb[i], k_base, (cache_len, 0, 0))
+        vb_l = jax.lax.dynamic_update_slice(vb[i], v_base, (cache_len, 0, 0))
+        kr_l = jax.lax.dynamic_update_slice(kr[i], k_res, (cache_len, 0))
+        vr_l = jax.lax.dynamic_update_slice(vr[i], v_res, (cache_len, 0))
+
+        bk_i = bk_up[i].reshape(R, KH, HD)
+        bv_i = bv_up[i].reshape(R, KH, HD)
+        attn = residual_attention(
+            q, kb_l, vb_l, kr_l, vr_l, bk_i, bv_i, pos, sin_t, cos_t,
+            interpret=interpret,
+        )                                                     # [C, H, HD]
+
+        attn = attn.reshape(C, H * HD)
+        o = attn @ params[f"l{i}.wo"] + _lora(attn, ao[i], bo[i], adapter_on)
+        x = x + o
+
+        h2 = _rmsnorm(x, params[f"l{i}.norm2"])
+        mlp = (jax.nn.silu(h2 @ params[f"l{i}.wg"]) * (h2 @ params[f"l{i}.wu"]))
+        x = x + mlp @ params[f"l{i}.wd"]
+
+        # Merged (monolithic) chunk K/V for the unified-cache baselines.
+        k_lora = (k_res @ bk_up[i]).reshape(C, KH, HD)
+        k_lora = apply_rope(k_lora, sin_c[:, None, :], cos_c[:, None, :])
+        km = k_base + k_lora
+        vm = v_base + (v_res @ bv_up[i]).reshape(C, KH, HD)
+
+        kb_out.append(k_base); vb_out.append(v_base)
+        kr_out.append(k_res); vr_out.append(v_res)
+        km_out.append(km); vm_out.append(vm)
+        xs.append(x)
+
+    logits = _rmsnorm(x, params["normf"]) @ params["lm_head"]  # [C, V]
+    stack = lambda t: jnp.stack(t, axis=0)
+    return (
+        logits,
+        stack(kb_out), stack(vb_out),
+        stack(kr_out), stack(vr_out),
+        stack(km_out), stack(vm_out),
+        stack(xs),
+    )
+
+
+# ---------------------------------------------------------------------------
+# AOT entrypoints
+# ---------------------------------------------------------------------------
+
+
+def make_prefill_fn(cfg: ModelConfig, interpret: bool = True):
+    """Returns f(*params, *bank, tokens, cache_len, adapter_id, adapter_on,
+    kb, vb, kr, vr) -> 8-tuple; argument order matches manifest.json."""
+    pnames = [n for n, _ in param_specs(cfg)]
+    bnames = [n for n, _ in bank_specs(cfg)]
+
+    def fn(*args):
+        params = dict(zip(pnames, args[: len(pnames)]))
+        bank = dict(zip(bnames, args[len(pnames): len(pnames) + len(bnames)]))
+        rt = args[len(pnames) + len(bnames):]
+        tokens, cache_len, adapter_id, adapter_on, kb, vb, kr, vr = rt
+        return forward_chunk(
+            cfg, params, bank, tokens, cache_len, adapter_id, adapter_on,
+            kb, vb, kr, vr, interpret=interpret,
+        )
+
+    return fn
+
+
+def make_decode_fn(cfg: ModelConfig, batch: int, interpret: bool = True):
+    """Batched single-token decode: vmap of the chunk function with C=1.
+
+    f(*params, *bank, tokens[B], cache_lens[B], adapter_ids[B],
+      adapter_on[B], kb[B,L,S,KH,HD], vb, kr[B,L,S,R], vr)
+      -> (logits[B,V], kb_new[B,L,KH,HD], vb_new, kr_new[B,L,R], vr_new,
+          km_new[B,L,KH,HD], vm_new)
+    """
+    pnames = [n for n, _ in param_specs(cfg)]
+    bnames = [n for n, _ in bank_specs(cfg)]
+
+    def row(params, bank, token, cache_len, adapter_id, adapter_on, kb, vb, kr, vr):
+        out = forward_chunk(
+            cfg, params, bank, token[None], cache_len, adapter_id, adapter_on,
+            kb, vb, kr, vr, interpret=interpret,
+        )
+        logits, kbn, vbn, krn, vrn, kmn, vmn, _xs = out
+        squeeze = lambda t: t[:, 0]  # drop the C=1 axis -> [L, ...]
+        return (
+            logits[0],
+            squeeze(kbn), squeeze(vbn), squeeze(krn), squeeze(vrn),
+            squeeze(kmn), squeeze(vmn),
+        )
+
+    def fn(*args):
+        params = dict(zip(pnames, args[: len(pnames)]))
+        bank = dict(zip(bnames, args[len(pnames): len(pnames) + len(bnames)]))
+        tokens, cache_lens, adapter_ids, adapter_on, kb, vb, kr, vr = args[
+            len(pnames) + len(bnames):
+        ]
+        return jax.vmap(
+            functools.partial(row, params, bank),
+        )(tokens, cache_lens, adapter_ids, adapter_on, kb, vb, kr, vr)
+
+    return fn
+
+
+def runtime_input_specs(cfg: ModelConfig, kind: str, batch: int = 1):
+    """Shapes/dtypes of the runtime (non-weight) inputs, manifest order."""
+    L, S, KH, HD, R = (
+        cfg.n_layers, cfg.s_max, cfg.n_kv_heads, cfg.head_dim, cfg.rank_max,
+    )
+    if kind == "prefill":
+        C = cfg.chunk
+        return [
+            ("tokens", (C,), "i32"),
+            ("cache_len", (), "i32"),
+            ("adapter_id", (), "i32"),
+            ("adapter_on", (), "f32"),
+            ("kb", (L, S, KH, HD), "f32"),
+            ("vb", (L, S, KH, HD), "f32"),
+            ("kr", (L, S, R), "f32"),
+            ("vr", (L, S, R), "f32"),
+        ]
+    assert kind == "decode"
+    B = batch
+    return [
+        ("tokens", (B,), "i32"),
+        ("cache_lens", (B,), "i32"),
+        ("adapter_ids", (B,), "i32"),
+        ("adapter_on", (B,), "f32"),
+        ("kb", (B, L, S, KH, HD), "f32"),
+        ("vb", (B, L, S, KH, HD), "f32"),
+        ("kr", (B, L, S, R), "f32"),
+        ("vr", (B, L, S, R), "f32"),
+    ]
+
+
+def output_specs(cfg: ModelConfig, kind: str, batch: int = 1):
+    L, S, KH, HD, R, V, d = (
+        cfg.n_layers, cfg.s_max, cfg.n_kv_heads, cfg.head_dim, cfg.rank_max,
+        cfg.vocab, cfg.d_model,
+    )
+    if kind == "prefill":
+        C = cfg.chunk
+        return [
+            ("logits", (C, V), "f32"),
+            ("kb_new", (L, C, KH, HD), "f32"),
+            ("vb_new", (L, C, KH, HD), "f32"),
+            ("kr_new", (L, C, R), "f32"),
+            ("vr_new", (L, C, R), "f32"),
+            ("km_new", (L, C, KH, HD), "f32"),
+            ("vm_new", (L, C, KH, HD), "f32"),
+            ("xs", (L, C, d), "f32"),
+        ]
+    B = batch
+    return [
+        ("logits", (B, V), "f32"),
+        ("kb_new", (B, L, KH, HD), "f32"),
+        ("vb_new", (B, L, KH, HD), "f32"),
+        ("kr_new", (B, L, R), "f32"),
+        ("vr_new", (B, L, R), "f32"),
+        ("km_new", (B, L, KH, HD), "f32"),
+        ("vm_new", (B, L, KH, HD), "f32"),
+    ]

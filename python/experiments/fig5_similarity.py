@@ -1,0 +1,118 @@
+"""Fig. 5 — (a) generation-quality proxy and (b) per-layer input-x cosine
+similarity of the three sharing policies, measured directly on the L2 model
+(APIGen-like geometry, scaled).
+
+Policies compared against lossless per-adapter prefix caching:
+  - forkkv: agent B attends over agent A's bCache + its own rCache
+  - full-reuse: agent B attends over agent A's *merged* cache (A's adapter)
+
+Run: cd python && python -m experiments.fig5_similarity
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model as M
+from compile.configs import MODELS
+
+
+def cosine(a, b, axis=-1):
+    a = np.asarray(a, np.float64)
+    b = np.asarray(b, np.float64)
+    num = (a * b).sum(axis)
+    den = np.sqrt((a * a).sum(axis) * (b * b).sum(axis)) + 1e-12
+    return num / den
+
+
+def main():
+    cfg = dataclasses.replace(
+        MODELS["llama3-8b-sim"], s_max=256, chunk=192, vocab=2048
+    )
+    params = M.init_params(cfg, 0)
+    bank = M.init_bank(cfg, rank=16, seed=1)
+    rng = np.random.default_rng(7)
+    ctx_len, q_len = 160, 16
+    n_cases = 8
+
+    L = cfg.n_layers
+    sims_fork = np.zeros(L)
+    sims_full = np.zeros(L)
+    agree_fork = agree_full = total = 0
+
+    for case in range(n_cases):
+        tokens = jnp.asarray(
+            rng.integers(2, cfg.vocab, size=ctx_len + q_len), jnp.int32
+        )
+        zero = (
+            jnp.zeros((L, cfg.s_max, cfg.n_kv_heads, cfg.head_dim)),
+            jnp.zeros((L, cfg.s_max, cfg.n_kv_heads, cfg.head_dim)),
+            jnp.zeros((L, cfg.s_max, cfg.rank_max)),
+            jnp.zeros((L, cfg.s_max, cfg.rank_max)),
+        )
+        adapter_a, adapter_b = jnp.int32(1), jnp.int32(2 + case % 6)
+
+        def prefill(adapter, caches, toks, cache_len):
+            return M.forward_chunk(
+                cfg, params, bank, toks, jnp.int32(cache_len), adapter,
+                jnp.float32(1.0), *caches,
+            )
+
+        # agent A processes the shared context -> its bCache/merged cache
+        out_a = prefill(adapter_a, zero, tokens[:ctx_len], 0)
+        _, kb_a, vb_a, kr_a, vr_a, km_a, vm_a, _ = out_a
+
+        def seed_caches(kb_c, vb_c, kr_c, vr_c):
+            kb, vb, kr, vr = zero
+            for l in range(L):
+                kb = kb.at[l, :ctx_len].set(kb_c[l])
+                vb = vb.at[l, :ctx_len].set(vb_c[l])
+                if kr_c is not None:
+                    kr = kr.at[l, :ctx_len].set(kr_c[l])
+                    vr = vr.at[l, :ctx_len].set(vr_c[l])
+            return kb, vb, kr, vr
+
+        # reference: agent B recomputes the context itself (lossless)
+        out_ref = prefill(adapter_b, zero, tokens, 0)
+        x_ref, logits_ref = out_ref[7][:, ctx_len:], out_ref[0][ctx_len:]
+
+        # forkkv: inherit A's bCache, compute own rCache over the context
+        # (residual prefill, DESIGN.md §1), then answer the query
+        fork_ctx = prefill(adapter_b, seed_caches(kb_a, vb_a, None, None),
+                           tokens[:ctx_len], 0)
+        caches_fork = seed_caches(kb_a, vb_a, fork_ctx[3], fork_ctx[4])
+        out_fork = prefill(adapter_b, caches_fork, tokens[ctx_len:], ctx_len)
+        x_fork, logits_fork = out_fork[7], out_fork[0]
+
+        # full reuse: adopt A's merged cache wholesale (no B transformations)
+        caches_full = seed_caches(km_a, vm_a, None, None)
+        out_full = prefill(adapter_b, caches_full, tokens[ctx_len:], ctx_len)
+        x_full, logits_full = out_full[7], out_full[0]
+
+        for l in range(L):
+            sims_fork[l] += cosine(x_fork[l], x_ref[l]).mean() / n_cases
+            sims_full[l] += cosine(x_full[l], x_ref[l]).mean() / n_cases
+        agree_fork += int(
+            (np.argmax(logits_fork, -1) == np.argmax(logits_ref, -1)).sum()
+        )
+        agree_full += int(
+            (np.argmax(logits_full, -1) == np.argmax(logits_ref, -1)).sum()
+        )
+        total += q_len
+
+    print("# Fig. 5b: per-layer input-x cosine similarity vs prefix caching")
+    print(f"{'layer':>6} {'forkkv':>10} {'full-reuse':>11}")
+    for l in range(L):
+        print(f"{l:>6} {sims_fork[l]:>10.4f} {sims_full[l]:>11.4f}")
+    print("# paper: forkkv >= 0.994 at every layer; full reuse drops to ~0.924")
+    print()
+    print("# Fig. 5a: greedy next-token agreement with prefix caching (quality proxy)")
+    print(f"forkkv     {100.0 * agree_fork / total:6.1f}%")
+    print(f"full-reuse {100.0 * agree_full / total:6.1f}%")
+    print("# paper: forkkv -1.60% F1 worst case; full reuse -21.0% on APIGen")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+"""L2 model invariants: chunked==full prefill, adapter gating, merged-cache
+reconstruction, GQA/bias variants, decode vmap consistency."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model as M
+from compile.configs import MODELS
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def tiny(name="llama3-8b-sim", **kw):
+    base = dict(n_layers=2, s_max=128, chunk=8, vocab=256, d_model=64,
+                d_ff=128, n_heads=4, n_kv_heads=2)
+    base.update(kw)
+    return dataclasses.replace(MODELS[name], **base)
+
+
+def zero_caches(cfg):
+    L, S, KH, HD, R = (cfg.n_layers, cfg.s_max, cfg.n_kv_heads,
+                       cfg.head_dim, cfg.rank_max)
+    return (jnp.zeros((L, S, KH, HD)), jnp.zeros((L, S, KH, HD)),
+            jnp.zeros((L, S, R)), jnp.zeros((L, S, R)))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny()
+    params = M.init_params(cfg, 0)
+    bank = M.init_bank(cfg, rank=8, seed=1)
+    return cfg, params, bank
+
+
+def run_chunk(cfg, params, bank, tokens, cache_len, caches, adapter=2, on=1.0):
+    return M.forward_chunk(
+        cfg, params, bank, tokens, jnp.int32(cache_len), jnp.int32(adapter),
+        jnp.float32(on), *caches,
+    )
+
+
+def write_chunk(caches, out, start, n):
+    kb, vb, kr, vr = caches
+    _, kbn, vbn, krn, vrn, _, _, _ = out
+    for l in range(kb.shape[0]):
+        kb = kb.at[l, start:start + n].set(kbn[l, :n])
+        vb = vb.at[l, start:start + n].set(vbn[l, :n])
+        kr = kr.at[l, start:start + n].set(krn[l, :n])
+        vr = vr.at[l, start:start + n].set(vrn[l, :n])
+    return kb, vb, kr, vr
+
+
+def test_chunked_prefill_equals_monolithic(setup):
+    cfg, params, bank = setup
+    toks = (jnp.arange(16, dtype=jnp.int32) * 5 + 2) % cfg.vocab
+    caches = zero_caches(cfg)
+    # two chunks of 8
+    out1 = run_chunk(cfg, params, bank, toks[:8], 0, caches)
+    caches2 = write_chunk(caches, out1, 0, 8)
+    out2 = run_chunk(cfg, params, bank, toks[8:], 8, caches2)
+    # monolithic 16 (chunk fn accepts any C)
+    outm = run_chunk(cfg, params, bank, toks, 0, zero_caches(cfg))
+    np.testing.assert_allclose(
+        np.asarray(out2[0]), np.asarray(outm[0][8:]), atol=2e-4, rtol=2e-4
+    )
+
+
+def test_adapter_off_equals_base_model(setup):
+    cfg, params, bank = setup
+    toks = jnp.arange(8, dtype=jnp.int32) + 3
+    out_off = run_chunk(cfg, params, bank, toks, 0, zero_caches(cfg), on=0.0)
+    # residuals must be exactly zero and merged == base
+    assert float(jnp.abs(out_off[3]).max()) == 0.0  # kr
+    assert float(jnp.abs(out_off[4]).max()) == 0.0  # vr
+    np.testing.assert_allclose(np.asarray(out_off[1]), np.asarray(out_off[5]),
+                               atol=1e-6)  # kb == km
+    # different adapters with on=0 give identical logits
+    out_off2 = run_chunk(cfg, params, bank, toks, 0, zero_caches(cfg),
+                         adapter=7, on=0.0)
+    np.testing.assert_allclose(np.asarray(out_off[0]), np.asarray(out_off2[0]),
+                               atol=1e-6)
+
+
+def test_adapters_differ(setup):
+    cfg, params, bank = setup
+    toks = jnp.arange(8, dtype=jnp.int32) + 3
+    a = run_chunk(cfg, params, bank, toks, 0, zero_caches(cfg), adapter=1)
+    b = run_chunk(cfg, params, bank, toks, 0, zero_caches(cfg), adapter=2)
+    assert float(jnp.abs(a[0] - b[0]).max()) > 1e-4
+
+
+def test_merged_equals_base_plus_residual(setup):
+    """km == kb + RoPE(kr @ Bk): the Eq. 2 reconstruction the unified
+    baselines persist."""
+    from compile.kernels.ref import apply_rope, rope_tables
+    cfg, params, bank = setup
+    toks = jnp.arange(8, dtype=jnp.int32) + 5
+    adapter = 3
+    out = run_chunk(cfg, params, bank, toks, 0, zero_caches(cfg), adapter=adapter)
+    _, kbn, vbn, krn, vrn, kmn, vmn, _ = out
+    sin, cos = rope_tables(cfg.s_max, cfg.head_dim, cfg.rope_theta)
+    C = 8
+    for l in range(cfg.n_layers):
+        bk = bank["bank.bk"][adapter, l].reshape(cfg.rank_max, cfg.n_kv_heads, cfg.head_dim)
+        bv = bank["bank.bv"][adapter, l].reshape(cfg.rank_max, cfg.n_kv_heads, cfg.head_dim)
+        k_lora = jnp.einsum("cr,rkh->ckh", krn[l], bk)
+        k_lora = apply_rope(k_lora, sin[:C, None, :], cos[:C, None, :])
+        np.testing.assert_allclose(np.asarray(kmn[l]), np.asarray(kbn[l] + k_lora),
+                                   atol=2e-5, rtol=2e-5)
+        v_lora = jnp.einsum("cr,rkh->ckh", vrn[l], bv)
+        np.testing.assert_allclose(np.asarray(vmn[l]), np.asarray(vbn[l] + v_lora),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_decode_matches_prefill_continuation(setup):
+    cfg, params, bank = setup
+    toks = jnp.arange(9, dtype=jnp.int32) + 2
+    out = run_chunk(cfg, params, bank, toks[:8], 0, zero_caches(cfg))
+    caches = write_chunk(zero_caches(cfg), out, 0, 8)
+    dec = M.make_decode_fn(cfg, 2)
+    pn = [params[n] for n, _ in M.param_specs(cfg)]
+    bn = [bank[n] for n, _ in M.bank_specs(cfg)]
+    kbB, vbB, krB, vrB = (jnp.stack([c, c]) for c in caches)
+    res = dec(*pn, *bn,
+              jnp.array([toks[8], 0], jnp.int32),
+              jnp.array([8, 0], jnp.int32),
+              jnp.array([2, 0], jnp.int32),
+              jnp.array([1.0, 0.0], jnp.float32),
+              kbB, vbB, krB, vrB)
+    full = run_chunk(cfg, params, bank, toks, 0, zero_caches(cfg))
+    np.testing.assert_allclose(np.asarray(res[0][0]), np.asarray(full[0][8]),
+                               atol=2e-4, rtol=2e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(name=st.sampled_from(["llama3-8b-sim", "qwen2.5-7b-sim", "qwen2.5-14b-sim"]),
+       seed=st.integers(0, 1000))
+def test_all_model_families_run(name, seed):
+    """GQA ratios and qkv-bias variants all produce finite outputs."""
+    cfg = tiny(name, n_heads=MODELS[name].n_heads,
+               n_kv_heads=MODELS[name].n_kv_heads,
+               d_model=MODELS[name].n_heads * 16)
+    cfg = dataclasses.replace(cfg, head_dim=16)
+    params = M.init_params(cfg, seed)
+    bank = M.init_bank(cfg, rank=8, seed=seed + 1)
+    toks = jnp.arange(8, dtype=jnp.int32) + 2
+    out = M.forward_chunk(cfg, params, bank, toks, jnp.int32(0), jnp.int32(1),
+                          jnp.float32(1.0), *zero_caches(cfg))
+    assert np.isfinite(np.asarray(out[0])).all()
+
+
+def test_param_specs_cover_init():
+    for name in MODELS:
+        cfg = MODELS[name]
+        params = M.init_params(tiny(name), 0)
+        assert set(params) == {n for n, _ in M.param_specs(tiny(name))}

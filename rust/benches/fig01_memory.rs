@@ -1,0 +1,68 @@
+//! Fig. 1 — context memory vs number of concurrent agents on one shared
+//! context (paper: 32K tokens, Llama3-8B, r=16; here paper-scale /10).
+//!
+//! N agents with distinct adapters all hold the same static context. We
+//! measure the engine's actual pool usage at peak for the unified layout
+//! vs the disaggregated layout, plus the Eq. 3 analytic curve.
+
+use forkkv::config::CachePolicy;
+use forkkv::engine::{Request, Tick};
+use forkkv::util::rng::Rng;
+use forkkv::workload::{presets, PAPER_S_MAX};
+
+fn peak_bytes(policy: CachePolicy, n_agents: usize, ctx: &[u32]) -> (usize, usize) {
+    // generous budget: this experiment measures footprint, not contention
+    let mut e = presets::paper_sim_engine("llama3-8b-sim", policy, 4096, 16, 1).unwrap();
+    for i in 0..n_agents {
+        let mut tokens = ctx.to_vec();
+        tokens.push(3000 + i as u32); // distinct final token per agent
+        e.submit(Request {
+            id: i as u64,
+            tag: 0,
+            adapter: i as u32,
+            tokens,
+            max_new: 8,
+            arrival_us: 0,
+            ignore_eos: true,
+        });
+    }
+    let mut peak_base = 0usize;
+    let mut peak_res = 0usize;
+    for _ in 0..2_000_000 {
+        match e.tick().unwrap() {
+            Tick::Progress => {
+                peak_base = peak_base.max(e.base_pool().used_bytes());
+                peak_res = peak_res.max(e.res_pool().map_or(0, |p| p.used_bytes()));
+            }
+            Tick::Idle => break,
+        }
+    }
+    (peak_base, peak_res)
+}
+
+fn main() {
+    let ctx = Rng::seeded(11).tokens(3264, 2048);
+    println!("# Fig. 1: context memory vs concurrent agents (shared 3.3K-token context, r/n = 1/64)");
+    println!(
+        "{:>7} {:>14} {:>16} {:>10} {:>12} {:>10}",
+        "agents", "unified(MB)", "forkkv(MB)", "saving", "eq3 M_R", "meas M_R"
+    );
+    let mut max_saving = 0.0f64;
+    for &n in &[1usize, 2, 4, 8, 16, 32] {
+        let (u_base, _) = peak_bytes(CachePolicy::UnifiedPerAdapter, n, &ctx);
+        let (f_base, f_res) = peak_bytes(CachePolicy::Disaggregated, n, &ctx);
+        let unified = u_base as f64 / 1048576.0;
+        let fork = (f_base + f_res) as f64 / 1048576.0;
+        // Eq. 3: M_R = 1/N + r/n  (r_eff = 2, n = 128 at sim geometry)
+        let eq3 = 1.0 / n as f64 + 2.0 / 128.0;
+        let meas = fork / unified;
+        max_saving = max_saving.max(unified / fork);
+        println!(
+            "{:>7} {:>14.1} {:>16.1} {:>9.1}x {:>12.3} {:>10.3}",
+            n, unified, fork, unified / fork, eq3, meas
+        );
+    }
+    println!("# paper: memory grows linearly with agents for prefix caching; ForkKV");
+    println!("# stays near one shared copy (32x more agents in 8GB). max saving here: {max_saving:.1}x");
+    let _ = PAPER_S_MAX;
+}

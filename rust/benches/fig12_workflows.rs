@@ -1,0 +1,38 @@
+//! Fig. 12 — throughput vs number of concurrent workflows (Llama3-8B-sim,
+//! LooGLE). The paper's signature shape: prefix caching is competitive (or
+//! slightly ahead) while memory is abundant, then collapses as workflows
+//! scale; ForkKV degrades gracefully.
+
+use forkkv::config::CachePolicy;
+use forkkv::workload::{presets, WorkflowDriver, WorkloadSpec};
+
+fn run(n_wf: usize, policy: CachePolicy) -> (f64, f64) {
+    let spec = WorkloadSpec::paper_react4("loogle", n_wf, (n_wf * 5).max(16));
+    let mut driver = WorkflowDriver::new(spec);
+    let mut engine = presets::paper_sim_engine("llama3-8b-sim", policy, 160, 16, 12).unwrap();
+    engine.run_driver(&mut driver).unwrap();
+    (driver.throughput_tasks_per_s(), engine.metrics.hit_rate())
+}
+
+fn main() {
+    println!("# Fig. 12: throughput vs concurrent workflows (LooGLE, llama3-8b-sim, 160MB)");
+    println!(
+        "{:>10} {:>12} {:>12} {:>9} {:>10} {:>10}",
+        "workflows", "prefix t/s", "forkkv t/s", "speedup", "hit(pfx)", "hit(fork)"
+    );
+    for &n in &[2usize, 4, 6, 8, 12, 16] {
+        let (u_tps, u_hit) = run(n, CachePolicy::UnifiedPerAdapter);
+        let (f_tps, f_hit) = run(n, CachePolicy::Disaggregated);
+        println!(
+            "{:>10} {:>12.2} {:>12.2} {:>8.2}x {:>10.2} {:>10.2}",
+            n,
+            u_tps,
+            f_tps,
+            f_tps / u_tps,
+            u_hit,
+            f_hit
+        );
+    }
+    println!("# paper: baselines ahead at 4 workflows (abundant memory), ForkKV");
+    println!("# 1.84-2.33x ahead under contention");
+}

@@ -1,0 +1,130 @@
+//! L3 hot-path microbenchmarks (the §Perf targets in DESIGN.md §8):
+//! radix match, fork+release cycle, pool alloc/free, page scatter/gather
+//! bandwidth, JSON parse. Used by the performance pass to find and verify
+//! coordinator-side bottlenecks.
+
+use std::time::Instant;
+
+use forkkv::batch::{scatter_chunk, SeqSlab, SlabSpec};
+use forkkv::kvcache::{BlockPool, PoolSpec};
+use forkkv::radix::RadixTree;
+use forkkv::util::json;
+use forkkv::util::rng::Rng;
+
+fn timeit<F: FnMut()>(name: &str, iters: usize, unit_work: f64, unit: &str, mut f: F) {
+    // warmup
+    f();
+    let t = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let secs = t.elapsed().as_secs_f64();
+    let per = secs / iters as f64;
+    println!(
+        "{:<34} {:>10.1} us/op {:>14.1} {}/s",
+        name,
+        per * 1e6,
+        unit_work / per,
+        unit
+    );
+}
+
+fn main() {
+    println!("# L3 microbenchmarks");
+
+    // ---- radix match over a long cached context ----
+    let pt = 16;
+    let ctx_tokens = 4096;
+    let mut pool = BlockPool::new(PoolSpec {
+        n_pages: 2 * ctx_tokens / pt,
+        page_tokens: pt,
+        n_layers: 4,
+        width: 128,
+    });
+    let mut tree = RadixTree::new(pt);
+    let tokens = Rng::seeded(1).tokens(ctx_tokens, 2048);
+    let pages: Vec<_> = (0..ctx_tokens / pt).map(|_| pool.alloc().unwrap()).collect();
+    tree.insert(0, &tokens, &pages, &mut pool);
+    for p in pages {
+        pool.release(p);
+    }
+    timeit("radix match+lease+release 4K ctx", 2000, ctx_tokens as f64, "tok", || {
+        let m = tree.match_lease(0, &tokens, &mut pool);
+        tree.release_path(&m.path);
+        for p in &m.pages {
+            pool.release(*p);
+        }
+    });
+
+    // ---- pool alloc/release cycle ----
+    let mut pool2 = BlockPool::new(PoolSpec {
+        n_pages: 4096,
+        page_tokens: pt,
+        n_layers: 4,
+        width: 128,
+    });
+    timeit("pool alloc+release x256", 2000, 256.0, "page", || {
+        let pages: Vec<_> = (0..256).map(|_| pool2.alloc().unwrap()).collect();
+        for p in pages {
+            pool2.release(p);
+        }
+    });
+
+    // ---- scatter (chunk -> pages) + gather (pages -> slab) bandwidth ----
+    let layers = 4;
+    let width = 128;
+    let chunk = 64;
+    let mut pool3 = BlockPool::new(PoolSpec {
+        n_pages: 64,
+        page_tokens: pt,
+        n_layers: layers,
+        width,
+    });
+    let pages: Vec<_> = (0..chunk / pt).map(|_| pool3.alloc().unwrap()).collect();
+    let k = vec![1.0f32; layers * chunk * width];
+    let v = vec![2.0f32; layers * chunk * width];
+    let bytes = (2 * layers * chunk * width * 4) as f64;
+    timeit("scatter 64-token chunk", 5000, bytes / 1e9, "GB", || {
+        scatter_chunk(&mut pool3, &pages, 0, chunk, chunk, width, &k, &v);
+    });
+
+    let mut slab = SeqSlab::new(SlabSpec {
+        n_layers: layers,
+        s_max: 768,
+        base_width: width,
+        res_width: 32,
+    });
+    timeit("gather 64 tokens into slab", 5000, bytes / 1e9, "GB", || {
+        slab.load_base_pages(&pool3, &pages, chunk);
+    });
+
+    // ---- batched slab stacking (decode-step assembly) ----
+    let row = vec![0.5f32; layers * 768 * width];
+    let rows: Vec<&[f32]> = (0..8).map(|_| row.as_slice()).collect();
+    let mut out = Vec::new();
+    let stack_bytes = (8 * row.len() * 4) as f64;
+    timeit("stack 8 decode slabs (1 thread)", 200, stack_bytes / 1e9, "GB", || {
+        forkkv::batch::stack_slabs(rows.iter().copied(), row.len(), 8, &mut out);
+    });
+    // the engine's parallel assembly (4 tensors on scoped threads)
+    let row_r = vec![0.25f32; 4 * 768 * 32];
+    let rows_r: Vec<&[f32]> = (0..8).map(|_| row_r.as_slice()).collect();
+    let (mut o1, mut o2, mut o3, mut o4) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    timeit("stack 4x8 slabs (scoped threads)", 200, 2.0 * stack_bytes / 1e9, "GB", || {
+        std::thread::scope(|s| {
+            s.spawn(|| forkkv::batch::stack_slabs(rows.iter().copied(), row.len(), 8, &mut o1));
+            s.spawn(|| forkkv::batch::stack_slabs(rows.iter().copied(), row.len(), 8, &mut o2));
+            s.spawn(|| forkkv::batch::stack_slabs(rows_r.iter().copied(), row_r.len(), 8, &mut o3));
+            s.spawn(|| forkkv::batch::stack_slabs(rows_r.iter().copied(), row_r.len(), 8, &mut o4));
+        });
+    });
+
+    // ---- json parse (manifest-sized) ----
+    let manifest = std::fs::read_to_string("artifacts/llama3-8b-sim/manifest.json").ok();
+    if let Some(text) = manifest {
+        let bytes = text.len() as f64;
+        timeit("parse manifest.json", 500, bytes / 1e6, "MB", || {
+            let _ = json::parse(&text).unwrap();
+        });
+    }
+}

@@ -1,0 +1,139 @@
+//! Table 2 / Fig. 5a — generation quality under the three sharing policies,
+//! measured through the REAL PJRT artifacts (no simulation).
+//!
+//! With untrained sim weights, absolute F1 is meaningless; what Table 2
+//! establishes is the *ordering* "ForkKV ≈ lossless prefix caching ≫ full
+//! reuse". We therefore measure generation fidelity against the lossless
+//! prefix-caching run of the identical workload (DESIGN.md §3):
+//!   - greedy token agreement rate (exact-match fraction of generated ids)
+//!   - cosine similarity of the first generated token's logits
+//!
+//! Skips gracefully when `make artifacts` has not run.
+
+use std::path::Path;
+
+use forkkv::config::{CacheConfig, CachePolicy, EngineConfig};
+use forkkv::engine::{Engine, Request, Tick};
+use forkkv::exec::PjrtExecutor;
+use forkkv::metrics::FinishedRequest;
+use forkkv::util::rng::Rng;
+use forkkv::workload::dataset;
+
+fn run_policy(
+    dir: &Path,
+    policy: CachePolicy,
+    ds: &str,
+    n_requests: usize,
+) -> anyhow::Result<Vec<FinishedRequest>> {
+    let exec = PjrtExecutor::load(dir)?;
+    let cfg = EngineConfig {
+        policy,
+        cache: CacheConfig { page_tokens: 16, budget_bytes: 256 << 20 },
+        seed: 5,
+        ..EngineConfig::default()
+    };
+    let mut engine = Engine::new(cfg, Box::new(exec))?;
+    engine.collect_first_logits = true;
+
+    let d = dataset(ds)?;
+    let shared = Rng::seeded(100).tokens(d.static_len, 2048);
+    for i in 0..n_requests {
+        let mut tokens = shared.clone();
+        let mut r = Rng::seeded(200 + i as u64);
+        tokens.extend(r.tokens(d.dynamic_len, 2048));
+        engine.submit(Request {
+            id: i as u64,
+            tag: 0,
+            // cycle 3 adapters so later requests fork caches created by
+            // *different* adapters — the case the policies disagree on
+            adapter: (i % 3) as u32,
+            tokens,
+            max_new: 16,
+            arrival_us: i as u64, // strictly sequential admission order
+            ignore_eos: true,
+        });
+    }
+    let mut fin = Vec::new();
+    while fin.len() < n_requests {
+        match engine.tick()? {
+            Tick::Progress => fin.extend(engine.drain_finished()),
+            Tick::Idle => break,
+        }
+    }
+    fin.sort_by_key(|f| f.id);
+    Ok(fin)
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    let dot: f64 = a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum();
+    let na: f64 = a.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    let nb: f64 = b.iter().map(|&x| (x as f64).powi(2)).sum::<f64>().sqrt();
+    dot / (na * nb).max(1e-12)
+}
+
+fn main() -> anyhow::Result<()> {
+    let models = ["llama3-8b-sim", "qwen2.5-7b-sim", "qwen2.5-14b-sim"];
+    let available: Vec<&str> = models
+        .iter()
+        .copied()
+        .filter(|m| Path::new("artifacts").join(m).join("manifest.json").exists())
+        .collect();
+    if available.is_empty() {
+        println!("# table2_quality: skipped (run `make artifacts` first)");
+        return Ok(());
+    }
+    println!("# Table 2 / Fig. 5a: generation fidelity vs lossless prefix caching");
+    println!("# (token agreement %, first-token logits cosine; real PJRT execution)");
+    println!(
+        "{:<18} {:<10} {:<12} {:>10} {:>12}",
+        "model", "dataset", "policy", "agree(%)", "logit-cos"
+    );
+    let n_requests = 6;
+    for model in available {
+        let dir = Path::new("artifacts").join(model);
+        for ds in ["hotpotqa", "apigen"] {
+            let reference = run_policy(&dir, CachePolicy::UnifiedPerAdapter, ds, n_requests)?;
+            for policy in [
+                CachePolicy::UnifiedPerAdapter,
+                CachePolicy::Disaggregated,
+                CachePolicy::FullReuse,
+            ] {
+                let got = if policy == CachePolicy::UnifiedPerAdapter {
+                    reference.clone()
+                } else {
+                    run_policy(&dir, policy, ds, n_requests)?
+                };
+                let mut agree = 0usize;
+                let mut total = 0usize;
+                let mut cos_sum = 0.0;
+                let mut cos_n = 0usize;
+                for (r, g) in reference.iter().zip(got.iter()) {
+                    assert_eq!(r.id, g.id);
+                    for (a, b) in r.generated.iter().zip(g.generated.iter()) {
+                        total += 1;
+                        agree += usize::from(a == b);
+                    }
+                    if let (Some(la), Some(lb)) = (&r.first_logits, &g.first_logits) {
+                        cos_sum += cosine(la, lb);
+                        cos_n += 1;
+                    }
+                }
+                println!(
+                    "{:<18} {:<10} {:<12} {:>10.1} {:>12.4}",
+                    model,
+                    ds,
+                    policy.name(),
+                    100.0 * agree as f64 / total.max(1) as f64,
+                    cos_sum / cos_n.max(1) as f64
+                );
+            }
+        }
+        if std::env::var_os("FORKKV_ALL_MODELS").is_none() {
+            println!("# (set FORKKV_ALL_MODELS=1 to evaluate the remaining models)");
+            break;
+        }
+    }
+    println!("# paper Table 2: ForkKV within 0.71 F1 points of prefix caching on");
+    println!("# average; full reuse drops 5.40 points (21.95 worst case on APIGen)");
+    Ok(())
+}

@@ -1,0 +1,377 @@
+//! Gather/scatter between the paged pools and the padded kernel inputs.
+//!
+//! The AOT artifacts take dense, padded cache slabs (`[L, S, width]` per
+//! sequence). Each running sequence keeps a persistent host `SeqSlab` that
+//! mirrors its logical cache: loaded once from inherited pages at fork time
+//! and appended incrementally afterwards, so the per-step cost is O(new
+//! tokens), not O(S). On a real accelerator the kernel would read the pages
+//! directly; on this CPU substrate the slab is the transient reconstruction
+//! buffer (DESIGN.md §2) — the *persistent* state remains the shared pages.
+
+use crate::kvcache::BlockPool;
+use crate::kvcache::PageId;
+use crate::runtime::{DecodeOut, PrefillOut};
+
+/// Geometry of one sequence's padded slabs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlabSpec {
+    pub n_layers: usize,
+    pub s_max: usize,
+    /// base width per token per layer (= n_kv_heads * head_dim)
+    pub base_width: usize,
+    /// residual width per token per layer (= rank_max)
+    pub res_width: usize,
+}
+
+/// Per-sequence padded cache mirror: kb/vb `[L, S, base_width]`,
+/// kr/vr `[L, S, res_width]`.
+#[derive(Debug, Clone)]
+pub struct SeqSlab {
+    pub spec: SlabSpec,
+    pub kb: Vec<f32>,
+    pub vb: Vec<f32>,
+    pub kr: Vec<f32>,
+    pub vr: Vec<f32>,
+    /// tokens materialized so far
+    pub filled: usize,
+}
+
+impl SeqSlab {
+    pub fn new(spec: SlabSpec) -> Self {
+        let nb = spec.n_layers * spec.s_max * spec.base_width;
+        let nr = spec.n_layers * spec.s_max * spec.res_width;
+        SeqSlab {
+            spec,
+            kb: vec![0.0; nb],
+            vb: vec![0.0; nb],
+            kr: vec![0.0; nr],
+            vr: vec![0.0; nr],
+            filled: 0,
+        }
+    }
+
+    #[inline]
+    fn row_base(&self, layer: usize, pos: usize) -> usize {
+        (layer * self.spec.s_max + pos) * self.spec.base_width
+    }
+
+    #[inline]
+    fn row_res(&self, layer: usize, pos: usize) -> usize {
+        (layer * self.spec.s_max + pos) * self.spec.res_width
+    }
+
+    /// Fill positions `[0, n_tokens)` of the base component from pages
+    /// (fork inheritance of bCache, or of merged KV for the baselines).
+    pub fn load_base_pages(&mut self, pool: &BlockPool, pages: &[PageId], n_tokens: usize) {
+        let pt = pool.spec().page_tokens;
+        let w = self.spec.base_width;
+        assert_eq!(pool.spec().width, w, "pool/slab base width mismatch");
+        assert!(n_tokens <= pages.len() * pt);
+        for l in 0..self.spec.n_layers {
+            for (pi, &page) in pages.iter().enumerate() {
+                let start = pi * pt;
+                if start >= n_tokens {
+                    break;
+                }
+                let take = (n_tokens - start).min(pt);
+                let src_k = pool.kv_slice(page, l, 0);
+                let src_v = pool.kv_slice(page, l, 1);
+                let dst = self.row_base(l, start);
+                self.kb[dst..dst + take * w].copy_from_slice(&src_k[..take * w]);
+                self.vb[dst..dst + take * w].copy_from_slice(&src_v[..take * w]);
+            }
+        }
+        self.filled = self.filled.max(n_tokens);
+    }
+
+    /// Fill positions `[0, n_tokens)` of the residual component from pages.
+    /// The pool stores only `rank_effective` floats per row (honest memory
+    /// accounting, paper Eq. 3); the slab rows are `rank_max` wide with a
+    /// zero tail, so rows are copied individually.
+    pub fn load_res_pages(&mut self, pool: &BlockPool, pages: &[PageId], n_tokens: usize) {
+        let pt = pool.spec().page_tokens;
+        let wp = pool.spec().width;
+        let ws = self.spec.res_width;
+        assert!(wp <= ws, "pool res width exceeds slab rank_max");
+        for l in 0..self.spec.n_layers {
+            for (pi, &page) in pages.iter().enumerate() {
+                let start = pi * pt;
+                if start >= n_tokens {
+                    break;
+                }
+                let take = (n_tokens - start).min(pt);
+                let src_k = pool.kv_slice(page, l, 0);
+                let src_v = pool.kv_slice(page, l, 1);
+                for t in 0..take {
+                    let dst = self.row_res(l, start + t);
+                    self.kr[dst..dst + wp].copy_from_slice(&src_k[t * wp..(t + 1) * wp]);
+                    self.vr[dst..dst + wp].copy_from_slice(&src_v[t * wp..(t + 1) * wp]);
+                }
+            }
+        }
+    }
+
+    /// Append a prefill chunk's outputs at `start` (= cache_len of the
+    /// call). `use_merged` selects km/vm instead of kb/vb for the base
+    /// component (unified baselines store + attend over merged KV) and
+    /// skips the residual lanes, which must remain zero so the kernel
+    /// reduces to standard attention over the merged cache.
+    pub fn append_prefill(&mut self, out: &PrefillOut, start: usize, n: usize,
+                          chunk: usize, use_merged: bool) {
+        let (wb, wr) = (self.spec.base_width, self.spec.res_width);
+        let (kb_src, vb_src) = if use_merged {
+            (&out.km, &out.vm)
+        } else {
+            (&out.kb, &out.vb)
+        };
+        for l in 0..self.spec.n_layers {
+            let src = (l * chunk) * wb;
+            let dst = self.row_base(l, start);
+            self.kb[dst..dst + n * wb].copy_from_slice(&kb_src[src..src + n * wb]);
+            self.vb[dst..dst + n * wb].copy_from_slice(&vb_src[src..src + n * wb]);
+            if !use_merged {
+                let src_r = (l * chunk) * wr;
+                let dst_r = self.row_res(l, start);
+                self.kr[dst_r..dst_r + n * wr]
+                    .copy_from_slice(&out.kr[src_r..src_r + n * wr]);
+                self.vr[dst_r..dst_r + n * wr]
+                    .copy_from_slice(&out.vr[src_r..src_r + n * wr]);
+            }
+        }
+        self.filled = self.filled.max(start + n);
+    }
+
+    /// Append one decoded token's KV (row `row` of a decode output) at
+    /// position `pos`. `use_merged` as in `append_prefill`.
+    pub fn append_decode(&mut self, out: &DecodeOut, row: usize, pos: usize,
+                         n_rows: usize, use_merged: bool) {
+        let (wb, wr) = (self.spec.base_width, self.spec.res_width);
+        let l_total = self.spec.n_layers;
+        let (kb_src, vb_src) = if use_merged {
+            (&out.km, &out.vm)
+        } else {
+            (&out.kb, &out.vb)
+        };
+        debug_assert_eq!(kb_src.len(), n_rows * l_total * wb);
+        for l in 0..l_total {
+            let src = (row * l_total + l) * wb;
+            let dst = self.row_base(l, pos);
+            self.kb[dst..dst + wb].copy_from_slice(&kb_src[src..src + wb]);
+            self.vb[dst..dst + wb].copy_from_slice(&vb_src[src..src + wb]);
+            if !use_merged {
+                let src_r = (row * l_total + l) * wr;
+                let dst_r = self.row_res(l, pos);
+                self.kr[dst_r..dst_r + wr].copy_from_slice(&out.kr[src_r..src_r + wr]);
+                self.vr[dst_r..dst_r + wr].copy_from_slice(&out.vr[src_r..src_r + wr]);
+            }
+        }
+        self.filled = self.filled.max(pos + 1);
+    }
+
+    /// Zero the residual component (a sequence forked onto merged-KV pages
+    /// must not attend over stale residuals).
+    pub fn clear_res(&mut self) {
+        self.kr.fill(0.0);
+        self.vr.fill(0.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scatter: persist computed KV into pool pages
+// ---------------------------------------------------------------------------
+
+/// Write `n` token rows from a prefill chunk (layout `[L, chunk, src_width]`)\n/// persisting only the pool-width prefix of each row (the residual pool\n/// stores `rank_effective` of `rank_max` — honest Eq. 3 accounting).
+/// into `pages`, starting at absolute token position `start`. Pages must
+/// cover positions `[start, start+n)`; `pages[i]` holds tokens
+/// `[i*pt, (i+1)*pt)`.
+pub fn scatter_chunk(
+    pool: &mut BlockPool,
+    pages: &[PageId],
+    start: usize,
+    n: usize,
+    chunk: usize,
+    src_width: usize,
+    k_src: &[f32],
+    v_src: &[f32],
+) {
+    let pt = pool.spec().page_tokens;
+    let w = pool.spec().width;
+    let n_layers = pool.spec().n_layers;
+    assert!(w <= src_width, "pool width exceeds source row width");
+    debug_assert!(k_src.len() >= n_layers * chunk * src_width);
+    for l in 0..n_layers {
+        for t in 0..n {
+            let pos = start + t;
+            let page = pages[pos / pt];
+            let slot = pos % pt;
+            let src = (l * chunk + t) * src_width;
+            let dst = slot * w;
+            pool.kv_slice_mut(page, l, 0)[dst..dst + w]
+                .copy_from_slice(&k_src[src..src + w]);
+            pool.kv_slice_mut(page, l, 1)[dst..dst + w]
+                .copy_from_slice(&v_src[src..src + w]);
+        }
+    }
+}
+
+/// Write one decoded token's KV (row `row` of `[B, L, src_width]`) into the
+/// page covering absolute position `pos`.
+pub fn scatter_token(
+    pool: &mut BlockPool,
+    page: PageId,
+    pos: usize,
+    row: usize,
+    n_layers: usize,
+    src_width: usize,
+    k_src: &[f32],
+    v_src: &[f32],
+) {
+    let pt = pool.spec().page_tokens;
+    let w = pool.spec().width;
+    assert!(w <= src_width, "pool width exceeds source row width");
+    let slot = pos % pt;
+    for l in 0..n_layers {
+        let src = (row * n_layers + l) * src_width;
+        let dst = slot * w;
+        pool.kv_slice_mut(page, l, 0)[dst..dst + w]
+            .copy_from_slice(&k_src[src..src + w]);
+        pool.kv_slice_mut(page, l, 1)[dst..dst + w]
+            .copy_from_slice(&v_src[src..src + w]);
+    }
+}
+
+/// Concatenate row slabs into the batched `[B, L, S, width]` upload buffer.
+pub fn stack_slabs<'a>(
+    rows: impl Iterator<Item = &'a [f32]>,
+    row_len: usize,
+    bucket: usize,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.resize(bucket * row_len, 0.0);
+    for (i, row) in rows.enumerate() {
+        debug_assert_eq!(row.len(), row_len);
+        out[i * row_len..(i + 1) * row_len].copy_from_slice(row);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::PoolSpec;
+
+    fn mk_pool() -> BlockPool {
+        BlockPool::new(PoolSpec { n_pages: 8, page_tokens: 4, n_layers: 2, width: 3 })
+    }
+
+    fn spec() -> SlabSpec {
+        SlabSpec { n_layers: 2, s_max: 16, base_width: 3, res_width: 2 }
+    }
+
+    #[test]
+    fn scatter_then_gather_round_trips() {
+        let mut pool = mk_pool();
+        let pages: Vec<PageId> = (0..2).map(|_| pool.alloc().unwrap()).collect();
+        // fabricate a "prefill chunk" of 6 tokens, chunk capacity 8
+        let chunk = 8;
+        let w = 3;
+        let nl = 2;
+        let k: Vec<f32> = (0..nl * chunk * w).map(|i| i as f32).collect();
+        let v: Vec<f32> = (0..nl * chunk * w).map(|i| 1000.0 + i as f32).collect();
+        scatter_chunk(&mut pool, &pages, 0, 6, chunk, w, &k, &v);
+
+        let mut slab = SeqSlab::new(spec());
+        slab.load_base_pages(&pool, &pages, 6);
+        for l in 0..nl {
+            for t in 0..6 {
+                let src = (l * chunk + t) * w;
+                let dst = (l * 16 + t) * w;
+                assert_eq!(&slab.kb[dst..dst + w], &k[src..src + w], "l{l} t{t}");
+                assert_eq!(&slab.vb[dst..dst + w], &v[src..src + w]);
+            }
+        }
+        assert_eq!(slab.filled, 6);
+    }
+
+    #[test]
+    fn scatter_token_places_by_slot() {
+        let mut pool = mk_pool();
+        let p0 = pool.alloc().unwrap();
+        let p1 = pool.alloc().unwrap();
+        let nl = 2;
+        let w = 3;
+        // token at absolute position 5 -> page 1, slot 1 (page_tokens=4)
+        let k: Vec<f32> = (0..2 * nl * w).map(|i| i as f32).collect(); // B=2 rows
+        let v = k.clone();
+        scatter_token(&mut pool, p1, 5, 1, nl, w, &k, &v);
+        let got = pool.kv_slice(p1, 0, 0);
+        let src = (1 * nl + 0) * w;
+        assert_eq!(&got[1 * w..2 * w], &k[src..src + w]);
+        let _ = p0;
+    }
+
+    #[test]
+    fn append_prefill_writes_rows_and_advances_fill() {
+        let chunk = 8;
+        let s = spec();
+        let mut slab = SeqSlab::new(s);
+        let nb = s.n_layers * chunk * s.base_width;
+        let nr = s.n_layers * chunk * s.res_width;
+        let out = PrefillOut {
+            logits: vec![],
+            kb: (0..nb).map(|i| i as f32).collect(),
+            vb: (0..nb).map(|i| 10_000.0 + i as f32).collect(),
+            kr: (0..nr).map(|i| 20_000.0 + i as f32).collect(),
+            vr: (0..nr).map(|i| 30_000.0 + i as f32).collect(),
+            km: vec![7.0; nb],
+            vm: vec![8.0; nb],
+            xs: vec![],
+        };
+        slab.append_prefill(&out, 4, 5, chunk, false);
+        assert_eq!(slab.filled, 9);
+        // layer 1, token 2 of the chunk lands at position 6
+        let dst = (1 * s.s_max + 6) * s.base_width;
+        let src = (1 * chunk + 2) * s.base_width;
+        assert_eq!(slab.kb[dst], out.kb[src]);
+        let dst_r = (1 * s.s_max + 6) * s.res_width;
+        let src_r = (1 * chunk + 2) * s.res_width;
+        assert_eq!(slab.kr[dst_r], out.kr[src_r]);
+
+        // merged variant routes km/vm into the base lanes
+        let mut slab2 = SeqSlab::new(s);
+        slab2.append_prefill(&out, 0, 3, chunk, true);
+        assert!(slab2.kb[..3 * s.base_width].iter().all(|&x| x == 7.0));
+    }
+
+    #[test]
+    fn append_decode_single_row() {
+        let s = spec();
+        let mut slab = SeqSlab::new(s);
+        let b = 4;
+        let out = DecodeOut {
+            logits: vec![],
+            kb: (0..b * s.n_layers * s.base_width).map(|i| i as f32).collect(),
+            vb: vec![1.0; b * s.n_layers * s.base_width],
+            kr: (0..b * s.n_layers * s.res_width).map(|i| i as f32).collect(),
+            vr: vec![2.0; b * s.n_layers * s.res_width],
+            km: vec![9.0; b * s.n_layers * s.base_width],
+            vm: vec![9.5; b * s.n_layers * s.base_width],
+        };
+        slab.append_decode(&out, 2, 7, b, false);
+        let dst = (0 * s.s_max + 7) * s.base_width;
+        let src = (2 * s.n_layers + 0) * s.base_width;
+        assert_eq!(slab.kb[dst], out.kb[src]);
+        assert_eq!(slab.filled, 8);
+    }
+
+    #[test]
+    fn stack_slabs_pads_bucket() {
+        let rows: Vec<Vec<f32>> = vec![vec![1.0; 4], vec![2.0; 4]];
+        let mut out = Vec::new();
+        stack_slabs(rows.iter().map(|r| r.as_slice()), 4, 4, &mut out);
+        assert_eq!(out.len(), 16);
+        assert_eq!(&out[..4], &[1.0; 4]);
+        assert_eq!(&out[4..8], &[2.0; 4]);
+        assert!(out[8..].iter().all(|&x| x == 0.0));
+    }
+}

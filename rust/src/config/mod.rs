@@ -1,0 +1,163 @@
+//! Typed configuration for the serving engine, cache, scheduler and
+//! workloads, loadable from JSON (`--config file.json`) with defaults that
+//! match the paper's evaluation setup scaled to this substrate.
+
+use crate::util::json::Json;
+
+/// Which KV-cache sharing policy the engine runs (DESIGN.md §3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CachePolicy {
+    /// ForkKV: shared bCache + per-adapter CoW rCache (the paper).
+    Disaggregated,
+    /// vLLM/SGLang-style prefix caching: monolithic KV keyed by
+    /// (adapter, tokens) — lossless, memory-hungry.
+    UnifiedPerAdapter,
+    /// Aggressive cross-adapter reuse of monolithic KV keyed by tokens
+    /// only — memory-cheap, lossy (paper §7.1 "Full Reuse").
+    FullReuse,
+}
+
+impl CachePolicy {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "forkkv" | "disaggregated" => CachePolicy::Disaggregated,
+            "prefix" | "unified" | "unified-per-adapter" => CachePolicy::UnifiedPerAdapter,
+            "full-reuse" | "fullreuse" => CachePolicy::FullReuse,
+            other => anyhow::bail!("unknown cache policy {other:?}"),
+        })
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            CachePolicy::Disaggregated => "forkkv",
+            CachePolicy::UnifiedPerAdapter => "prefix",
+            CachePolicy::FullReuse => "full-reuse",
+        }
+    }
+    /// Does this policy maintain a residual pool at all?
+    pub fn uses_residual(&self) -> bool {
+        matches!(self, CachePolicy::Disaggregated)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// tokens per page (allocator + radix granularity)
+    pub page_tokens: usize,
+    /// total byte budget for KV state, split between the pools; this is
+    /// the experiment's "GPU memory" knob that creates contention
+    pub budget_bytes: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            page_tokens: 16,
+            budget_bytes: 64 << 20,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// decode batch buckets available as AOT artifacts (ascending)
+    pub decode_buckets: Vec<usize>,
+    /// max sequences resident (prefill + decode) before queueing
+    pub max_running: usize,
+    /// evict this many pages extra when under pressure (hysteresis)
+    pub evict_slack_pages: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            decode_buckets: vec![1, 2, 4, 8],
+            max_running: 64,
+            evict_slack_pages: 4,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub policy: CachePolicy,
+    pub cache: CacheConfig,
+    pub sched: SchedulerConfig,
+    pub seed: u64,
+    /// sample greedily (real mode); sim mode always synthesizes tokens
+    pub greedy: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            policy: CachePolicy::Disaggregated,
+            cache: CacheConfig::default(),
+            sched: SchedulerConfig::default(),
+            seed: 0,
+            greedy: true,
+        }
+    }
+}
+
+impl EngineConfig {
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let mut cfg = EngineConfig::default();
+        if let Some(p) = j.get("policy").and_then(Json::as_str) {
+            cfg.policy = CachePolicy::parse(p)?;
+        }
+        if let Some(c) = j.get("cache") {
+            if let Some(v) = c.get("page_tokens").and_then(Json::as_usize) {
+                cfg.cache.page_tokens = v;
+            }
+            if let Some(v) = c.get("budget_mb").and_then(Json::as_f64) {
+                cfg.cache.budget_bytes = (v * 1048576.0) as usize;
+            }
+        }
+        if let Some(s) = j.get("sched") {
+            if let Some(v) = s.get("max_running").and_then(Json::as_usize) {
+                cfg.sched.max_running = v;
+            }
+        }
+        if let Some(v) = j.get("seed").and_then(Json::as_f64) {
+            cfg.seed = v as u64;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json;
+
+    #[test]
+    fn policy_parsing() {
+        assert_eq!(CachePolicy::parse("forkkv").unwrap(), CachePolicy::Disaggregated);
+        assert_eq!(CachePolicy::parse("prefix").unwrap(), CachePolicy::UnifiedPerAdapter);
+        assert_eq!(CachePolicy::parse("full-reuse").unwrap(), CachePolicy::FullReuse);
+        assert!(CachePolicy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn engine_config_from_json() {
+        let j = json::parse(
+            r#"{"policy":"prefix","cache":{"page_tokens":8,"budget_mb":16},
+                "sched":{"max_running":4},"seed":7}"#,
+        )
+        .unwrap();
+        let cfg = EngineConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.policy, CachePolicy::UnifiedPerAdapter);
+        assert_eq!(cfg.cache.page_tokens, 8);
+        assert_eq!(cfg.cache.budget_bytes, 16 << 20);
+        assert_eq!(cfg.sched.max_running, 4);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn defaults_are_sane() {
+        let cfg = EngineConfig::default();
+        assert!(cfg.policy.uses_residual());
+        assert!(cfg.cache.budget_bytes > 1 << 20);
+        assert_eq!(*cfg.sched.decode_buckets.last().unwrap(), 8);
+    }
+}

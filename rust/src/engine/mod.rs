@@ -1,0 +1,1158 @@
+//! The ForkKV serving engine: continuous batching + chunked prefill over
+//! the paged dual pools and the DualRadixTree, with OS-style fork/CoW
+//! admission (paper §4–5) — the L3 coordination contribution.
+//!
+//! One engine implementation serves all three cache policies (DESIGN.md §3):
+//!   - `Disaggregated` (ForkKV): bCache keyed by tokens (shared), rCache
+//!     keyed by (adapter, tokens); fork inherits the base, CoW-allocates
+//!     the residual.
+//!   - `UnifiedPerAdapter` (vLLM/SGLang prefix caching): monolithic merged
+//!     KV keyed by (adapter, tokens) — lossless baseline.
+//!   - `FullReuse`: monolithic merged KV keyed by tokens only — lossy
+//!     baseline.
+//! The policies differ *only* in tree keying and which tensors are
+//! persisted; scheduler, allocator and kernel path are shared, so the
+//! benchmarks isolate exactly the paper's variable.
+//!
+//! Determinism: the engine is a discrete-event state machine over a
+//! monotone clock. With `SimExecutor` the clock is fully virtual; with
+//! `PjrtExecutor` it advances by measured execution time — the same
+//! scheduler code path either way.
+//!
+//! CoW invariant (checked by debug assertions + tests): a page is written
+//! only while its refcount is 1. Fork inheritance is page-aligned, the
+//! final prompt token is never served from cache, and only full pages are
+//! published to the trees — together these guarantee divergence always
+//! lands in fresh pages, so sharing never requires a copy.
+
+use std::collections::{BinaryHeap, HashMap, VecDeque};
+
+use crate::batch::{self, SeqSlab, SlabSpec};
+use crate::config::{CachePolicy, EngineConfig};
+use crate::exec::Executor;
+use crate::kvcache::{pages_for, BlockPool, PageId, PoolSpec};
+use crate::metrics::{EngineMetrics, FinishedRequest};
+use crate::radix::{DualRadixTree, MatchResult};
+use crate::runtime::{argmax, DecodeArgs, PrefillArgs};
+use crate::util::rng::Rng;
+use crate::util::tokenizer::EOS;
+
+/// Namespace scheme per policy (radix-tree key prefix).
+fn base_ns(policy: CachePolicy, adapter: u32) -> u32 {
+    match policy {
+        CachePolicy::Disaggregated => 0, // globally shared bCache
+        CachePolicy::UnifiedPerAdapter => 1 + adapter,
+        CachePolicy::FullReuse => 0,
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    /// opaque grouping tag (workflow id) carried into FinishedRequest
+    pub tag: u64,
+    pub adapter: u32,
+    pub tokens: Vec<u32>,
+    pub max_new: usize,
+    pub arrival_us: u64,
+    pub ignore_eos: bool,
+}
+
+#[derive(Debug, PartialEq, Eq, Clone, Copy)]
+enum Phase {
+    Prefill,
+    Decode,
+}
+
+struct Seq {
+    req: Request,
+    /// prompt + generated tokens
+    all: Vec<u32>,
+    generated: Vec<u32>,
+    phase: Phase,
+    // ---- cache state ----
+    base_pages: Vec<PageId>,
+    res_pages: Vec<PageId>,
+    base_lease: Vec<u32>,
+    res_lease: Vec<u32>,
+    /// inherited coverage (token counts, page aligned)
+    base_cached: usize,
+    res_cached: usize,
+    /// tokens with materialized KV
+    processed: usize,
+    slab: Option<SeqSlab>,
+    // ---- accounting ----
+    admitted: bool,
+    /// hit metrics recorded (first admission only; re-admissions after
+    /// preemption would otherwise count recompute hits as cache wins)
+    counted: bool,
+    hit_full: usize,
+    hit_partial: usize,
+    computed_prompt: usize,
+    preemptions: u32,
+    first_token_us: Option<u64>,
+    first_logits: Option<Vec<f32>>,
+}
+
+impl Seq {
+    fn new(req: Request) -> Self {
+        let all = req.tokens.clone();
+        Seq {
+            req,
+            all,
+            generated: Vec::new(),
+            phase: Phase::Prefill,
+            base_pages: Vec::new(),
+            res_pages: Vec::new(),
+            base_lease: Vec::new(),
+            res_lease: Vec::new(),
+            base_cached: 0,
+            res_cached: 0,
+            processed: 0,
+            slab: None,
+            admitted: false,
+            counted: false,
+            hit_full: 0,
+            hit_partial: 0,
+            computed_prompt: 0,
+            preemptions: 0,
+            first_token_us: None,
+            first_logits: None,
+        }
+    }
+
+    /// FCFS priority: earlier arrivals are strictly higher priority and
+    /// are never preempted by younger sequences (prevents livelock).
+    fn priority_key(&self) -> (u64, u64) {
+        (self.req.arrival_us, self.req.id)
+    }
+
+    /// Tokens that must have KV before decode can run. Fresh sequences
+    /// prefill the whole prompt (the last row's logits sample the first
+    /// token); resumed ones stop one short — the newest token is the next
+    /// decode input.
+    fn prefill_target(&self) -> usize {
+        if self.generated.is_empty() {
+            self.req.tokens.len()
+        } else {
+            self.all.len() - 1
+        }
+    }
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum Tick {
+    Progress,
+    Idle,
+}
+
+/// Workload driver: releases requests over (virtual) time and observes
+/// completions (the agent-workflow layer implements this).
+pub trait Driver {
+    fn poll(&mut self, now_us: u64, finished: &[FinishedRequest]) -> Vec<Request>;
+    fn done(&self) -> bool;
+}
+
+pub struct Engine {
+    pub cfg: EngineConfig,
+    exec: Box<dyn Executor>,
+    base_pool: BlockPool,
+    res_pool: Option<BlockPool>,
+    trees: DualRadixTree,
+    seqs: HashMap<u64, Seq>,
+    pending: BinaryHeap<std::cmp::Reverse<(u64, u64)>>, // (arrival, id)
+    pending_reqs: HashMap<u64, Request>,
+    waiting: VecDeque<u64>,
+    running: Vec<u64>,
+    now_us: u64,
+    rng: Rng,
+    pub metrics: EngineMetrics,
+    finished: Vec<FinishedRequest>,
+    pub collect_first_logits: bool,
+    max_bucket: usize,
+    // reusable decode scratch slabs + incremental-assembly state
+    scratch_kb: Vec<f32>,
+    scratch_vb: Vec<f32>,
+    scratch_kr: Vec<f32>,
+    scratch_vr: Vec<f32>,
+    /// (seq id, preemption epoch) of the last stacked batch — the epoch
+    /// guards against a re-admitted sequence whose rebuilt slab content
+    /// changed beneath an unchanged `filled` watermark
+    scratch_rows: Vec<(u64, u32)>,
+    scratch_filled: Vec<usize>,
+    scratch_bucket: usize,
+}
+
+impl Engine {
+    pub fn new(cfg: EngineConfig, exec: Box<dyn Executor>) -> anyhow::Result<Self> {
+        let meta = exec.meta().clone();
+        let pt = cfg.cache.page_tokens;
+        anyhow::ensure!(meta.chunk % pt == 0, "chunk must be page aligned");
+
+        // Both pools draw on ONE byte budget (the experiment's "GPU
+        // memory"): each pool's page table is sized so it alone could fill
+        // the budget, and `alloc_pages` enforces the global limit — so the
+        // base/residual split is fully dynamic, exactly like two data
+        // structures sharing one device memory.
+        let budget = cfg.cache.budget_bytes;
+        let base_pool = BlockPool::new(PoolSpec {
+            page_tokens: pt,
+            n_layers: meta.n_layers,
+            width: meta.kv_width(),
+            n_pages: (budget / (meta.n_layers * 2 * meta.kv_width() * 4 * pt)).max(4),
+        });
+        let res_pool = if cfg.policy.uses_residual() {
+            Some(BlockPool::new(PoolSpec {
+                page_tokens: pt,
+                n_layers: meta.n_layers,
+                width: meta.rank_effective,
+                n_pages: (budget / (meta.n_layers * 2 * meta.rank_effective * 4 * pt))
+                    .max(4),
+            }))
+        } else {
+            None
+        };
+        let max_bucket = exec.decode_buckets().into_iter().max().unwrap_or(1);
+        Ok(Engine {
+            rng: Rng::seeded(cfg.seed ^ 0xF0F0),
+            cfg,
+            exec,
+            base_pool,
+            res_pool,
+            trees: DualRadixTree::new(pt),
+            seqs: HashMap::new(),
+            pending: BinaryHeap::new(),
+            pending_reqs: HashMap::new(),
+            waiting: VecDeque::new(),
+            running: Vec::new(),
+            now_us: 0,
+            metrics: EngineMetrics::default(),
+            finished: Vec::new(),
+            collect_first_logits: false,
+            max_bucket,
+            scratch_kb: Vec::new(),
+            scratch_vb: Vec::new(),
+            scratch_kr: Vec::new(),
+            scratch_vr: Vec::new(),
+            scratch_rows: Vec::new(),
+            scratch_filled: Vec::new(),
+            scratch_bucket: 0,
+        })
+    }
+
+    pub fn meta(&self) -> &crate::runtime::ModelMeta {
+        self.exec.meta()
+    }
+    pub fn now_us(&self) -> u64 {
+        self.now_us
+    }
+    pub fn base_pool(&self) -> &BlockPool {
+        &self.base_pool
+    }
+    pub fn res_pool(&self) -> Option<&BlockPool> {
+        self.res_pool.as_ref()
+    }
+    pub fn trees(&self) -> &DualRadixTree {
+        &self.trees
+    }
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
+    }
+    pub fn used_cache_bytes(&self) -> usize {
+        self.base_pool.used_bytes() + self.res_pool.as_ref().map_or(0, |p| p.used_bytes())
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        let max_ctx = self.exec.meta().s_max;
+        assert!(
+            req.tokens.len() + req.max_new <= max_ctx,
+            "request {}: {} prompt + {} new > s_max {}",
+            req.id,
+            req.tokens.len(),
+            req.max_new,
+            max_ctx
+        );
+        assert!(!req.tokens.is_empty(), "empty prompt");
+        self.pending.push(std::cmp::Reverse((req.arrival_us, req.id)));
+        self.pending_reqs.insert(req.id, req);
+    }
+
+    pub fn drain_finished(&mut self) -> Vec<FinishedRequest> {
+        std::mem::take(&mut self.finished)
+    }
+
+    pub fn next_pending_arrival(&self) -> Option<u64> {
+        self.pending.peek().map(|std::cmp::Reverse((t, _))| *t)
+    }
+
+    fn admit_pending(&mut self) {
+        while let Some(&std::cmp::Reverse((t, id))) = self.pending.peek() {
+            if t > self.now_us {
+                break;
+            }
+            self.pending.pop();
+            let req = self.pending_reqs.remove(&id).expect("pending req");
+            self.seqs.insert(id, Seq::new(req));
+            self.waiting.push_back(id);
+        }
+    }
+
+    /// One scheduling decision: prefill-first (vLLM default); a prefill
+    /// blocked on memory falls through to decode so running sequences keep
+    /// draining and eventually release the memory the head is waiting for.
+    pub fn tick(&mut self) -> anyhow::Result<Tick> {
+        self.admit_pending();
+        let mut prefill_blocked = false;
+        if let Some(&sid) = self.waiting.front() {
+            if self.prefill_tick(sid)? {
+                self.sample_memory();
+                return Ok(Tick::Progress);
+            }
+            prefill_blocked = true;
+        }
+        if !self.running.is_empty() && self.decode_tick()? {
+            self.sample_memory();
+            return Ok(Tick::Progress);
+        }
+        if prefill_blocked || !self.running.is_empty() {
+            // Memory deadlock: every schedulable unit is blocked on pages
+            // that only blocked sequences hold. Break it by dropping the
+            // youngest memory-holding sequence (guaranteed progress).
+            let victim = self
+                .seqs
+                .iter()
+                .filter(|(_, s)| s.admitted)
+                .max_by_key(|(_, s)| s.priority_key())
+                .map(|(&id, _)| id)
+                .or_else(|| {
+                    self.seqs
+                        .iter()
+                        .max_by_key(|(_, s)| s.priority_key())
+                        .map(|(&id, _)| id)
+                });
+            if let Some(vid) = victim {
+                self.oom_drop(vid);
+                self.sample_memory();
+                return Ok(Tick::Progress);
+            }
+        }
+        Ok(Tick::Idle)
+    }
+
+    /// Drive to completion against a workload driver (discrete-event loop).
+    pub fn run_driver(
+        &mut self,
+        driver: &mut dyn Driver,
+    ) -> anyhow::Result<Vec<FinishedRequest>> {
+        let mut all_finished = Vec::new();
+        let mut delivered: Vec<FinishedRequest> = Vec::new();
+        loop {
+            let newly = driver.poll(self.now_us, &delivered);
+            delivered.clear();
+            for r in newly {
+                self.submit(r);
+            }
+            match self.tick()? {
+                Tick::Progress => {
+                    let fin = self.drain_finished();
+                    if !fin.is_empty() {
+                        delivered.extend(fin.iter().cloned());
+                        all_finished.extend(delivered.iter().cloned());
+                    }
+                }
+                Tick::Idle => {
+                    if let Some(t) = self.next_pending_arrival() {
+                        self.now_us = self.now_us.max(t);
+                        continue;
+                    }
+                    if driver.done() {
+                        break;
+                    }
+                    anyhow::ensure!(
+                        !delivered.is_empty(),
+                        "driver stalled: not done, nothing pending or in flight"
+                    );
+                }
+            }
+        }
+        Ok(all_finished)
+    }
+
+    fn sample_memory(&mut self) {
+        let res = self.res_pool.as_ref().map_or(0, |p| p.used_bytes());
+        self.metrics
+            .sample_memory(self.base_pool.used_bytes(), res, self.seqs.len());
+    }
+
+    // -----------------------------------------------------------------
+    // memory management: alloc -> evict (decoupled LRU) -> preempt
+    // -----------------------------------------------------------------
+
+    fn alloc_pages(&mut self, which: Which, n: usize, for_seq: u64) -> Option<Vec<PageId>> {
+        let budget = self.cfg.cache.budget_bytes;
+        let mut pages = Vec::with_capacity(n);
+        loop {
+            while pages.len() < n {
+                let page_bytes = match which {
+                    Which::Base => self.base_pool.spec().bytes_per_page(),
+                    Which::Res => self.res_pool.as_ref().unwrap().spec().bytes_per_page(),
+                };
+                if self.used_cache_bytes() + page_bytes > budget {
+                    break; // global budget exhausted
+                }
+                let pool = match which {
+                    Which::Base => &mut self.base_pool,
+                    Which::Res => self.res_pool.as_mut().expect("res pool"),
+                };
+                match pool.alloc() {
+                    Some(p) => pages.push(p),
+                    None => break,
+                }
+            }
+            if pages.len() == n {
+                return Some(pages);
+            }
+            // Decoupled eviction (paper §5.2): each tree keeps its own LRU;
+            // global pressure first drains the tree backing the requested
+            // kind, then the other — never as a cascading unit.
+            let want = n - pages.len() + self.cfg.sched.evict_slack_pages;
+            let evicted = match which {
+                Which::Base => self.trees.base.evict(want, &mut self.base_pool),
+                Which::Res => self
+                    .trees
+                    .residual
+                    .evict(want, self.res_pool.as_mut().expect("res pool")),
+            };
+            if evicted > 0 {
+                continue;
+            }
+            // Strictly decoupled (paper §5.2): base pressure never evicts
+            // the residual tree and vice versa. A residual page is ~n/r
+            // times smaller than a base page, so cross-eviction would
+            // cannibalize entire agents' rCaches for negligible bytes —
+            // the cascading coupling the decoupled policy exists to avoid.
+            if self.preempt_one(for_seq) {
+                continue;
+            }
+            // out of options: roll back
+            let pool = match which {
+                Which::Base => &mut self.base_pool,
+                Which::Res => self.res_pool.as_mut().expect("res pool"),
+            };
+            for p in pages {
+                pool.release(p);
+            }
+            return None;
+        }
+    }
+
+    /// Preempt the *youngest* admitted sequence that is strictly lower
+    /// priority than `for_seq` (recompute-style preemption: release
+    /// everything, requeue). Never preempts upward — FCFS priority is what
+    /// guarantees forward progress under memory thrash.
+    fn preempt_one(&mut self, for_seq: u64) -> bool {
+        let my_key = self.seqs.get(&for_seq).map(|s| s.priority_key());
+        let Some(my_key) = my_key else { return false };
+        let victim = self
+            .running
+            .iter()
+            .chain(self.waiting.iter())
+            .copied()
+            .filter(|&id| {
+                id != for_seq
+                    && self.seqs.get(&id).is_some_and(|s| {
+                        s.admitted && s.priority_key() > my_key
+                    })
+            })
+            .max_by_key(|&id| self.seqs[&id].priority_key());
+        let Some(vid) = victim else {
+            return false;
+        };
+        self.release_seq_resources(vid);
+        let seq = self.seqs.get_mut(&vid).unwrap();
+        seq.preemptions += 1;
+        seq.phase = Phase::Prefill;
+        self.metrics.preemptions += 1;
+        self.running.retain(|&id| id != vid);
+        if !self.waiting.contains(&vid) {
+            self.waiting.push_back(vid);
+        }
+        true
+    }
+
+    /// Release every cache resource a sequence holds (teardown/preempt).
+    fn release_seq_resources(&mut self, sid: u64) {
+        let Some(seq) = self.seqs.get_mut(&sid) else {
+            return;
+        };
+        for &p in &seq.base_pages {
+            self.base_pool.release(p);
+        }
+        if let Some(pool) = self.res_pool.as_mut() {
+            for &p in &seq.res_pages {
+                pool.release(p);
+            }
+        }
+        self.trees.base.release_path(&seq.base_lease);
+        self.trees.residual.release_path(&seq.res_lease);
+        seq.base_pages.clear();
+        seq.res_pages.clear();
+        seq.base_lease.clear();
+        seq.res_lease.clear();
+        seq.base_cached = 0;
+        seq.res_cached = 0;
+        seq.processed = 0;
+        seq.admitted = false;
+        seq.slab = None;
+    }
+
+    fn oom_drop(&mut self, sid: u64) {
+        self.release_seq_resources(sid);
+        self.waiting.retain(|&id| id != sid);
+        self.running.retain(|&id| id != sid);
+        self.seqs.remove(&sid);
+        self.metrics.oom_drops += 1;
+    }
+
+    // -----------------------------------------------------------------
+    // prefill
+    // -----------------------------------------------------------------
+
+    /// Fork admission (paper Fig. 9): Step 1 = prefix match + inherit the
+    /// shared pages; the chunk loop below performs Step 2's CoW
+    /// allocations for the un-cached tail.
+    fn admit_fork(&mut self, sid: u64) {
+        let policy = self.cfg.policy;
+        let (match_tokens, adapter, prompt_len) = {
+            let seq = &self.seqs[&sid];
+            // never serve the newest token from cache: its logits (fresh
+            // seq) or its KV-write (resumed seq) must be recomputed
+            (
+                seq.all[..seq.all.len() - 1].to_vec(),
+                seq.req.adapter,
+                seq.req.tokens.len(),
+            )
+        };
+        let ns = base_ns(policy, adapter);
+        let bm: MatchResult =
+            self.trees
+                .base
+                .match_lease(ns, &match_tokens, &mut self.base_pool);
+        let rm: MatchResult = if policy.uses_residual() {
+            self.trees.residual.match_lease(
+                adapter,
+                &match_tokens,
+                self.res_pool.as_mut().expect("res pool"),
+            )
+        } else {
+            MatchResult::default()
+        };
+
+        let skip = if policy.uses_residual() {
+            bm.tokens.min(rm.tokens)
+        } else {
+            bm.tokens
+        };
+        let needs_data = self.exec.needs_data();
+        let slab_spec = {
+            let meta = self.exec.meta();
+            SlabSpec {
+                n_layers: meta.n_layers,
+                s_max: meta.s_max,
+                base_width: meta.kv_width(),
+                res_width: meta.rank_max,
+            }
+        };
+        let first_admission = !self.seqs[&sid].counted;
+        {
+            let seq = self.seqs.get_mut(&sid).expect("seq");
+            seq.base_cached = bm.tokens;
+            seq.res_cached = rm.tokens;
+            seq.base_pages = bm.pages;
+            seq.base_lease = bm.path;
+            seq.res_pages = rm.pages;
+            seq.res_lease = rm.path;
+            seq.processed = skip;
+            seq.admitted = true;
+            if first_admission {
+                seq.counted = true;
+                seq.hit_full = skip.min(prompt_len);
+                seq.hit_partial =
+                    (seq.base_cached.max(seq.res_cached)).min(prompt_len) - seq.hit_full;
+            }
+        }
+        if first_admission {
+            self.metrics.prompt_tokens += prompt_len as u64;
+            self.metrics.hit_full_tokens += self.seqs[&sid].hit_full as u64;
+            self.metrics.hit_partial_tokens += self.seqs[&sid].hit_partial as u64;
+        }
+
+        if needs_data {
+            let mut slab = SeqSlab::new(slab_spec);
+            let seq = &self.seqs[&sid];
+            slab.load_base_pages(&self.base_pool, &seq.base_pages, seq.base_cached);
+            if let Some(pool) = self.res_pool.as_ref() {
+                slab.load_res_pages(pool, &seq.res_pages, seq.res_cached);
+            }
+            slab.filled = seq.processed;
+            self.seqs.get_mut(&sid).unwrap().slab = Some(slab);
+        }
+    }
+
+    /// Admission control (vLLM-style `can_allocate`): a new sequence
+    /// starts prefill only if its whole lifetime footprint could be
+    /// satisfied from free + tree-reclaimable memory. Without this gate,
+    /// prefill-first scheduling over-admits under saturation and the
+    /// engine preempt-thrashes.
+    fn can_admit(&self, sid: u64) -> bool {
+        let seq = &self.seqs[&sid];
+        let pt = self.cfg.cache.page_tokens;
+        let policy = self.cfg.policy;
+        let ns = base_ns(policy, seq.req.adapter);
+        let total_pages = pages_for(seq.all.len() + seq.req.max_new, pt);
+        // sharing-aware footprint: pages this fork would inherit rather
+        // than allocate (the mechanism behind the paper's Fig. 1 claim
+        // that one budget serves many more ForkKV agents)
+        let probe = &seq.all[..seq.all.len() - 1];
+        let base_hit = self.trees.base.probe_pages(ns, probe);
+        let base_page = self.base_pool.spec().bytes_per_page();
+        let mut needed = total_pages.saturating_sub(base_hit) * base_page;
+        if let Some(res) = &self.res_pool {
+            let res_hit = self.trees.residual.probe_pages(seq.req.adapter, probe);
+            needed += total_pages.saturating_sub(res_hit) * res.spec().bytes_per_page();
+        }
+        let free = self.cfg.cache.budget_bytes.saturating_sub(self.used_cache_bytes());
+        let reclaimable = self.trees.base.reclaimable_pages(&self.base_pool) * base_page
+            + self.res_pool.as_ref().map_or(0, |p| {
+                self.trees.residual.reclaimable_pages(p) * p.spec().bytes_per_page()
+            });
+        // headroom: concurrent decode growth + estimate error would
+        // otherwise preempt-thrash right at the admission boundary
+        let slack = self.cfg.cache.budget_bytes / 16;
+        needed + slack <= free + reclaimable
+    }
+
+    /// Returns Ok(false) when the chunk is blocked on memory (the caller
+    /// falls through to decode; the sequence keeps its state and retries).
+    fn prefill_tick(&mut self, sid: u64) -> anyhow::Result<bool> {
+        if !self.seqs[&sid].admitted {
+            if !self.can_admit(sid) {
+                return Ok(false); // wait for memory; decode keeps draining
+            }
+            self.admit_fork(sid);
+        }
+        let policy = self.cfg.policy;
+        let meta = self.exec.meta().clone();
+        let pt = self.cfg.cache.page_tokens;
+
+        let (start, end, target) = {
+            let seq = &self.seqs[&sid];
+            let target = seq.prefill_target();
+            let start = seq.processed;
+            let end = (start + meta.chunk).min(target);
+            (start, end, target)
+        };
+
+        if start >= target {
+            // resumed sequence whose whole KV prefix was still cached
+            self.to_decode(sid, None, 0);
+            return Ok(true);
+        }
+
+        // ---- Step 2 (CoW): allocate pages for the un-cached span ----
+        let need_base = pages_for(end, pt);
+        let have_base = self.seqs[&sid].base_pages.len();
+        if need_base > have_base {
+            match self.alloc_pages(Which::Base, need_base - have_base, sid) {
+                Some(pages) => self.seqs.get_mut(&sid).unwrap().base_pages.extend(pages),
+                None => return Ok(false), // blocked on base pool
+            }
+        }
+        if policy.uses_residual() {
+            let need_res = pages_for(end, pt);
+            let have_res = self.seqs[&sid].res_pages.len();
+            if need_res > have_res {
+                match self.alloc_pages(Which::Res, need_res - have_res, sid) {
+                    Some(pages) => self.seqs.get_mut(&sid).unwrap().res_pages.extend(pages),
+                    None => return Ok(false), // blocked on residual pool
+                }
+            }
+        }
+
+        // ---- execute the chunk ----
+        let n = end - start;
+        let exec_out = {
+            let seq = &self.seqs[&sid];
+            let empty: [f32; 0] = [];
+            let (kb, vb, kr, vr): (&[f32], &[f32], &[f32], &[f32]) =
+                if let Some(slab) = &seq.slab {
+                    (&slab.kb, &slab.vb, &slab.kr, &slab.vr)
+                } else {
+                    (&empty, &empty, &empty, &empty)
+                };
+            let args = PrefillArgs {
+                tokens: &seq.all[start..end],
+                cache_len: start,
+                adapter_id: seq.req.adapter % meta.n_adapters as u32,
+                adapter_on: true,
+                kb,
+                vb,
+                kr,
+                vr,
+            };
+            self.exec.prefill(&args)?
+        };
+        self.now_us += exec_out.elapsed_us;
+        self.metrics.prefill_steps += 1;
+        self.metrics.prefill_busy_us += exec_out.elapsed_us;
+        self.metrics.computed_prompt_tokens += n as u64;
+
+        // ---- persist into pages + mirror into the slab ----
+        let use_merged = !policy.uses_residual();
+        if let Some(out) = &exec_out.out {
+            let (base_cached, res_cached) = {
+                let s = &self.seqs[&sid];
+                (s.base_cached, s.res_cached)
+            };
+            // base component: only positions beyond the inherited coverage
+            let base_from = start.max(base_cached);
+            if base_from < end {
+                let (k_src, v_src) = if use_merged {
+                    (&out.km, &out.vm)
+                } else {
+                    (&out.kb, &out.vb)
+                };
+                let pages = self.seqs[&sid].base_pages.clone();
+                scatter_range(
+                    &mut self.base_pool,
+                    &pages,
+                    base_from,
+                    end,
+                    start,
+                    meta.chunk,
+                    meta.kv_width(),
+                    k_src,
+                    v_src,
+                );
+            }
+            if policy.uses_residual() {
+                let res_from = start.max(res_cached);
+                if res_from < end {
+                    let pages = self.seqs[&sid].res_pages.clone();
+                    let pool = self.res_pool.as_mut().expect("res pool");
+                    scatter_range(
+                        pool,
+                        &pages,
+                        res_from,
+                        end,
+                        start,
+                        meta.chunk,
+                        meta.rank_max,
+                        &out.kr,
+                        &out.vr,
+                    );
+                }
+            }
+            let seq = self.seqs.get_mut(&sid).unwrap();
+            let slab = seq.slab.as_mut().expect("slab in real mode");
+            slab.append_prefill(out, start, n, meta.chunk, use_merged);
+        }
+        {
+            let seq = self.seqs.get_mut(&sid).unwrap();
+            seq.processed = end;
+            seq.computed_prompt += n;
+        }
+
+        // ---- publish completed full pages (cache-as-you-go) ----
+        self.publish(sid);
+
+        if end >= target {
+            let last_logits = exec_out.out.map(|o| {
+                let v = meta.vocab;
+                o.logits[(n - 1) * v..n * v].to_vec()
+            });
+            self.to_decode(sid, last_logits, meta.vocab);
+        }
+        Ok(true)
+    }
+
+    /// Transition a sequence out of prefill; sample its first token if it
+    /// has none yet (fresh prefill).
+    fn to_decode(&mut self, sid: u64, last_logits: Option<Vec<f32>>, _vocab: usize) {
+        let sample_first = self.seqs[&sid].generated.is_empty();
+        if sample_first {
+            let tok = match &last_logits {
+                Some(row) => argmax(row),
+                None => self.rng.token(self.exec.meta().vocab),
+            };
+            let seq = self.seqs.get_mut(&sid).unwrap();
+            if self.collect_first_logits {
+                seq.first_logits = last_logits;
+            }
+            seq.generated.push(tok);
+            seq.all.push(tok);
+            seq.first_token_us = Some(self.now_us);
+        }
+        let seq = self.seqs.get_mut(&sid).unwrap();
+        seq.phase = Phase::Decode;
+        if seq.first_token_us.is_none() {
+            seq.first_token_us = Some(self.now_us);
+        }
+        self.waiting.retain(|&id| id != sid);
+        if !self.running.contains(&sid) {
+            self.running.push(sid);
+        }
+        let eos_hit = {
+            let s = &self.seqs[&sid];
+            !s.req.ignore_eos && s.generated.last() == Some(&EOS)
+        };
+        if self.seqs[&sid].generated.len() >= self.seqs[&sid].req.max_new || eos_hit {
+            self.finish_seq(sid);
+        }
+    }
+
+    /// Insert this sequence's full pages into the trees so concurrent and
+    /// future agents can fork from them (SGLang-style cache-as-you-go).
+    fn publish(&mut self, sid: u64) {
+        let policy = self.cfg.policy;
+        let pt = self.cfg.cache.page_tokens;
+        let Some(seq) = self.seqs.get(&sid) else {
+            return;
+        };
+        let aligned = (seq.processed / pt) * pt;
+        if aligned == 0 {
+            return;
+        }
+        let ns = base_ns(policy, seq.req.adapter);
+        let tokens = seq.all[..aligned].to_vec();
+        let base_pages = seq.base_pages[..aligned / pt].to_vec();
+        self.trees
+            .base
+            .insert(ns, &tokens, &base_pages, &mut self.base_pool);
+        if policy.uses_residual() {
+            let res_pages = self.seqs[&sid].res_pages[..aligned / pt].to_vec();
+            self.trees.residual.insert(
+                self.seqs[&sid].req.adapter,
+                &tokens,
+                &res_pages,
+                self.res_pool.as_mut().expect("res pool"),
+            );
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // decode
+    // -----------------------------------------------------------------
+
+    /// Returns Ok(false) when no decode row could be scheduled (all blocked
+    /// on memory or preempted) — the caller breaks the deadlock.
+    fn decode_tick(&mut self) -> anyhow::Result<bool> {
+        let meta = self.exec.meta().clone();
+        let pt = self.cfg.cache.page_tokens;
+        let policy = self.cfg.policy;
+
+        // ---- pick rows; ensure page capacity for the incoming token ----
+        let mut rows: Vec<u64> = Vec::new();
+        for sid in self.running.clone() {
+            if rows.len() >= self.max_bucket {
+                break;
+            }
+            if !self.seqs.get(&sid).is_some_and(|s| s.phase == Phase::Decode && s.admitted)
+            {
+                continue;
+            }
+            let write_pos = self.seqs[&sid].all.len() - 1;
+            let need = pages_for(write_pos + 1, pt);
+            let mut ok = true;
+            if self.seqs[&sid].base_pages.len() < need {
+                match self.alloc_pages(Which::Base, 1, sid) {
+                    Some(p) => self.seqs.get_mut(&sid).unwrap().base_pages.extend(p),
+                    None => ok = false, // blocked this step; retry next tick
+                }
+            }
+            if ok
+                && policy.uses_residual()
+                && self.seqs.get(&sid).is_some_and(|s| s.res_pages.len() < need)
+            {
+                match self.alloc_pages(Which::Res, 1, sid) {
+                    Some(p) => self.seqs.get_mut(&sid).unwrap().res_pages.extend(p),
+                    None => ok = false,
+                }
+            }
+            if ok {
+                rows.push(sid);
+            }
+        }
+        // allocs above may have preempted earlier-chosen rows — drop them
+        rows.retain(|&sid| {
+            self.running.contains(&sid)
+                && self.seqs.get(&sid).is_some_and(|s| s.phase == Phase::Decode && s.admitted)
+        });
+        if rows.is_empty() {
+            return Ok(false); // nothing schedulable this step
+        }
+
+        let bucket = self
+            .exec
+            .decode_buckets()
+            .into_iter()
+            .find(|&b| b >= rows.len())
+            .unwrap_or(self.max_bucket);
+
+        // ---- assemble args ----
+        let mut tokens: Vec<u32> = rows
+            .iter()
+            .map(|id| *self.seqs[id].all.last().unwrap())
+            .collect();
+        let mut cache_lens: Vec<usize> =
+            rows.iter().map(|id| self.seqs[id].all.len() - 1).collect();
+        let mut adapter_ids: Vec<u32> = rows
+            .iter()
+            .map(|id| self.seqs[id].req.adapter % meta.n_adapters as u32)
+            .collect();
+        let mut adapter_on: Vec<bool> = vec![true; rows.len()];
+        // pad to the bucket with inert rows
+        while tokens.len() < bucket {
+            tokens.push(0);
+            cache_lens.push(0);
+            adapter_ids.push(0);
+            adapter_on.push(false);
+        }
+
+        if self.exec.needs_data() {
+            // Batch assembly is the L3 hot path in real mode (§Perf).
+            // Re-stacking every padded slab costs ~2ms/step at bucket 8;
+            // decode batches are usually stable across steps, so when the
+            // row set is unchanged we copy only each row's newly appended
+            // positions (~100x less traffic; see EXPERIMENTS.md §Perf).
+            let row_b = meta.n_layers * meta.s_max * meta.kv_width();
+            let row_r = meta.n_layers * meta.s_max * meta.rank_max;
+            let row_keys: Vec<(u64, u32)> = rows
+                .iter()
+                .map(|id| (*id, self.seqs[id].preemptions))
+                .collect();
+            let same_batch = self.scratch_bucket == bucket
+                && self.scratch_rows == row_keys
+                && rows.iter().zip(self.scratch_filled.iter()).all(|(id, &old)| {
+                    self.seqs[id].slab.as_ref().unwrap().filled >= old
+                });
+            if !same_batch {
+                batch::stack_slabs(
+                    rows.iter().map(|id| self.seqs[id].slab.as_ref().unwrap().kb.as_slice()),
+                    row_b, bucket, &mut self.scratch_kb,
+                );
+                batch::stack_slabs(
+                    rows.iter().map(|id| self.seqs[id].slab.as_ref().unwrap().vb.as_slice()),
+                    row_b, bucket, &mut self.scratch_vb,
+                );
+                batch::stack_slabs(
+                    rows.iter().map(|id| self.seqs[id].slab.as_ref().unwrap().kr.as_slice()),
+                    row_r, bucket, &mut self.scratch_kr,
+                );
+                batch::stack_slabs(
+                    rows.iter().map(|id| self.seqs[id].slab.as_ref().unwrap().vr.as_slice()),
+                    row_r, bucket, &mut self.scratch_vr,
+                );
+            } else {
+                let wb = meta.kv_width();
+                let wr = meta.rank_max;
+                let s = meta.s_max;
+                for (i, id) in rows.iter().enumerate() {
+                    let slab = self.seqs[id].slab.as_ref().unwrap();
+                    let (from, to) = (self.scratch_filled[i], slab.filled);
+                    for l in 0..meta.n_layers {
+                        let src = (l * s + from) * wb;
+                        let len = (to - from) * wb;
+                        let dst = i * row_b + src;
+                        self.scratch_kb[dst..dst + len]
+                            .copy_from_slice(&slab.kb[src..src + len]);
+                        self.scratch_vb[dst..dst + len]
+                            .copy_from_slice(&slab.vb[src..src + len]);
+                        let src_r = (l * s + from) * wr;
+                        let len_r = (to - from) * wr;
+                        let dst_r = i * row_r + src_r;
+                        self.scratch_kr[dst_r..dst_r + len_r]
+                            .copy_from_slice(&slab.kr[src_r..src_r + len_r]);
+                        self.scratch_vr[dst_r..dst_r + len_r]
+                            .copy_from_slice(&slab.vr[src_r..src_r + len_r]);
+                    }
+                }
+            }
+            self.scratch_bucket = bucket;
+            self.scratch_rows = row_keys;
+            self.scratch_filled = rows
+                .iter()
+                .map(|id| self.seqs[id].slab.as_ref().unwrap().filled)
+                .collect();
+        }
+
+        let out = {
+            let args = DecodeArgs {
+                tokens: &tokens,
+                cache_lens: &cache_lens,
+                adapter_ids: &adapter_ids,
+                adapter_on: &adapter_on,
+                kb: &self.scratch_kb,
+                vb: &self.scratch_vb,
+                kr: &self.scratch_kr,
+                vr: &self.scratch_vr,
+            };
+            self.exec.decode(bucket, &args)?
+        };
+        self.now_us += out.elapsed_us;
+        self.metrics.decode_steps += 1;
+        self.metrics.decode_rows += rows.len() as u64;
+        self.metrics.decode_busy_us += out.elapsed_us;
+
+        // ---- apply results per row ----
+        let use_merged = !policy.uses_residual();
+        for (i, &sid) in rows.iter().enumerate() {
+            let write_pos = self.seqs[&sid].all.len() - 1;
+            if let Some(d) = &out.out {
+                let (k_src, v_src) = if use_merged { (&d.km, &d.vm) } else { (&d.kb, &d.vb) };
+                let page = self.seqs[&sid].base_pages[write_pos / pt];
+                debug_assert_eq!(
+                    self.base_pool.refcount(page),
+                    1,
+                    "decode must never write a shared page (CoW invariant)"
+                );
+                batch::scatter_token(
+                    &mut self.base_pool,
+                    page,
+                    write_pos,
+                    i,
+                    meta.n_layers,
+                    meta.kv_width(),
+                    k_src,
+                    v_src,
+                );
+                if policy.uses_residual() {
+                    let page = self.seqs[&sid].res_pages[write_pos / pt];
+                    let pool = self.res_pool.as_mut().expect("res pool");
+                    debug_assert_eq!(pool.refcount(page), 1);
+                    batch::scatter_token(
+                        pool,
+                        page,
+                        write_pos,
+                        i,
+                        meta.n_layers,
+                        meta.rank_max,
+                        &d.kr,
+                        &d.vr,
+                    );
+                }
+                let seq = self.seqs.get_mut(&sid).unwrap();
+                let slab = seq.slab.as_mut().expect("slab");
+                slab.append_decode(d, i, write_pos, bucket, use_merged);
+            }
+            // sample the next token
+            let tok = match &out.out {
+                Some(d) => argmax(&d.logits[i * meta.vocab..(i + 1) * meta.vocab]),
+                None => self.rng.token(meta.vocab),
+            };
+            let seq = self.seqs.get_mut(&sid).unwrap();
+            seq.processed = write_pos + 1;
+            seq.generated.push(tok);
+            seq.all.push(tok);
+            let eos_hit = !seq.req.ignore_eos && tok == EOS;
+            let len_hit = seq.generated.len() >= seq.req.max_new;
+            let ctx_hit = seq.all.len() >= meta.s_max;
+            if eos_hit || len_hit || ctx_hit {
+                self.finish_seq(sid);
+            }
+        }
+        Ok(true)
+    }
+
+    fn finish_seq(&mut self, sid: u64) {
+        // publish the generated span too: successor agents (ReAct) fork
+        // from prompt + previous outputs
+        self.publish(sid);
+        self.release_seq_resources(sid);
+        self.running.retain(|&id| id != sid);
+        self.waiting.retain(|&id| id != sid);
+        let seq = self.seqs.remove(&sid).expect("seq");
+        self.finished.push(FinishedRequest {
+            id: seq.req.id,
+            tag: seq.req.tag,
+            adapter: seq.req.adapter,
+            prompt_len: seq.req.tokens.len(),
+            generated: seq.generated,
+            arrival_us: seq.req.arrival_us,
+            first_token_us: seq.first_token_us.unwrap_or(self.now_us),
+            finish_us: self.now_us,
+            hit_full: seq.hit_full,
+            hit_partial: seq.hit_partial,
+            computed_prompt: seq.computed_prompt,
+            preemptions: seq.preemptions,
+            first_logits: seq.first_logits,
+        });
+    }
+
+    /// Consistency checks used by integration tests after a run.
+    pub fn check_quiescent(&self) -> Result<(), String> {
+        if !self.seqs.is_empty() {
+            return Err(format!("{} sequences still live", self.seqs.len()));
+        }
+        self.base_pool.check_invariants()?;
+        if let Some(p) = &self.res_pool {
+            p.check_invariants()?;
+        }
+        self.trees.base.check_invariants(&self.base_pool)?;
+        if let Some(p) = &self.res_pool {
+            self.trees.residual.check_invariants(p)?;
+        }
+        // all remaining pages must be owned by the trees
+        let tree_pages = self.trees.base.total_pages();
+        if self.base_pool.used_pages() != tree_pages {
+            return Err(format!(
+                "base pool has {} used pages but trees own {}",
+                self.base_pool.used_pages(),
+                tree_pages
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[derive(Clone, Copy)]
+enum Which {
+    Base,
+    Res,
+}
+
+/// Scatter chunk rows for absolute positions `[from, end)` where the chunk
+/// was computed starting at `chunk_start` (layout `[L, chunk, src_width]`).
+#[allow(clippy::too_many_arguments)]
+fn scatter_range(
+    pool: &mut BlockPool,
+    pages: &[PageId],
+    from: usize,
+    end: usize,
+    chunk_start: usize,
+    chunk: usize,
+    src_width: usize,
+    k_src: &[f32],
+    v_src: &[f32],
+) {
+    let pt = pool.spec().page_tokens;
+    let w = pool.spec().width;
+    let n_layers = pool.spec().n_layers;
+    assert!(w <= src_width);
+    for l in 0..n_layers {
+        for pos in from..end {
+            let t = pos - chunk_start;
+            let page = pages[pos / pt];
+            let slot = pos % pt;
+            let src = (l * chunk + t) * src_width;
+            let dst = slot * w;
+            pool.kv_slice_mut(page, l, 0)[dst..dst + w]
+                .copy_from_slice(&k_src[src..src + w]);
+            pool.kv_slice_mut(page, l, 1)[dst..dst + w]
+                .copy_from_slice(&v_src[src..src + w]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests;

@@ -1,0 +1,391 @@
+//! Engine unit tests over the sim executor: scheduling, fork semantics,
+//! policy-specific sharing behaviour, memory pressure, and quiescence.
+
+use super::*;
+use crate::config::{CacheConfig, CachePolicy, EngineConfig, SchedulerConfig};
+use crate::exec::SimExecutor;
+use crate::util::rng::Rng;
+
+fn engine(policy: CachePolicy, budget_mb: usize) -> Engine {
+    let cfg = EngineConfig {
+        policy,
+        cache: CacheConfig {
+            page_tokens: 16,
+            budget_bytes: budget_mb << 20,
+        },
+        sched: SchedulerConfig::default(),
+        seed: 7,
+        greedy: true,
+    };
+    let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8, 16]).unwrap();
+    Engine::new(cfg, Box::new(sim)).unwrap()
+}
+
+fn req(id: u64, adapter: u32, tokens: Vec<u32>, max_new: usize, arrival_us: u64) -> Request {
+    Request {
+        id,
+        tag: 0,
+        adapter,
+        tokens,
+        max_new,
+        arrival_us,
+        ignore_eos: true,
+    }
+}
+
+fn run_to_completion(e: &mut Engine) -> Vec<crate::metrics::FinishedRequest> {
+    let mut out = Vec::new();
+    for _ in 0..200_000 {
+        match e.tick().unwrap() {
+            Tick::Progress => out.extend(e.drain_finished()),
+            Tick::Idle => {
+                if let Some(t) = e.next_pending_arrival() {
+                    let now = e.now_us().max(t);
+                    e.now_us = now;
+                } else {
+                    break;
+                }
+            }
+        }
+    }
+    out
+}
+
+fn toks(n: usize, seed: u64) -> Vec<u32> {
+    Rng::seeded(seed).tokens(n, 2000)
+}
+
+#[test]
+fn single_request_completes() {
+    let mut e = engine(CachePolicy::Disaggregated, 32);
+    e.submit(req(1, 0, toks(100, 1), 20, 0));
+    let fin = run_to_completion(&mut e);
+    assert_eq!(fin.len(), 1);
+    assert_eq!(fin[0].generated.len(), 20);
+    assert!(fin[0].finish_us > 0);
+    assert!(fin[0].first_token_us >= fin[0].arrival_us);
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn same_agent_reuses_prefix_all_policies() {
+    for policy in [
+        CachePolicy::Disaggregated,
+        CachePolicy::UnifiedPerAdapter,
+        CachePolicy::FullReuse,
+    ] {
+        let mut e = engine(policy, 32);
+        let prompt = toks(200, 2);
+        e.submit(req(1, 3, prompt.clone(), 8, 0));
+        let fin = run_to_completion(&mut e);
+        assert_eq!(fin[0].hit_full, 0, "{policy:?}: cold start");
+
+        // same adapter, same prompt, later arrival
+        e.submit(req(2, 3, prompt.clone(), 8, e.now_us() + 1));
+        let fin = run_to_completion(&mut e);
+        assert_eq!(fin.len(), 1);
+        // everything except the (never-cached) tail is a full hit
+        assert!(
+            fin[0].hit_full >= 176,
+            "{policy:?}: hit_full {} too small",
+            fin[0].hit_full
+        );
+        e.check_quiescent().unwrap();
+    }
+}
+
+#[test]
+fn cross_adapter_fork_is_the_policy_differentiator() {
+    let prompt = toks(320, 3);
+
+    // ForkKV: agent 2 inherits agent 1's bCache => large partial hit
+    let mut e = engine(CachePolicy::Disaggregated, 32);
+    e.submit(req(1, 1, prompt.clone(), 8, 0));
+    run_to_completion(&mut e);
+    e.submit(req(2, 2, prompt.clone(), 8, e.now_us() + 1));
+    let fin = run_to_completion(&mut e);
+    assert_eq!(fin[0].hit_full, 0, "different adapter: no full hit");
+    assert!(
+        fin[0].hit_partial >= 304,
+        "bCache must be inherited cross-adapter: {}",
+        fin[0].hit_partial
+    );
+
+    // prefix caching baseline: nothing shared cross-adapter
+    let mut e = engine(CachePolicy::UnifiedPerAdapter, 32);
+    e.submit(req(1, 1, prompt.clone(), 8, 0));
+    run_to_completion(&mut e);
+    e.submit(req(2, 2, prompt.clone(), 8, e.now_us() + 1));
+    let fin = run_to_completion(&mut e);
+    assert_eq!(fin[0].hit_full, 0);
+    assert_eq!(fin[0].hit_partial, 0);
+
+    // full reuse: everything shared cross-adapter (lossy)
+    let mut e = engine(CachePolicy::FullReuse, 32);
+    e.submit(req(1, 1, prompt.clone(), 8, 0));
+    run_to_completion(&mut e);
+    e.submit(req(2, 2, prompt, 8, e.now_us() + 1));
+    let fin = run_to_completion(&mut e);
+    assert!(fin[0].hit_full >= 304, "full reuse shares everything");
+}
+
+#[test]
+fn react_chain_hits_grow_with_published_outputs() {
+    // agent k+1's prompt extends agent k's prompt+output: each fork should
+    // match the previously published span (ForkKV base tree, ns 0)
+    let mut e = engine(CachePolicy::Disaggregated, 32);
+    let shared = toks(256, 4);
+    let mut transcript = shared.clone();
+    let mut id = 0;
+    for step in 0..4u32 {
+        id += 1;
+        e.submit(req(id, step, transcript.clone(), 16, e.now_us() + 1));
+        let fin = run_to_completion(&mut e);
+        assert_eq!(fin.len(), 1);
+        if step > 0 {
+            // bCache from previous agents (different adapters) inherited
+            assert!(
+                fin[0].hit_partial + fin[0].hit_full >= (transcript.len() / 2),
+                "step {step}: inherited {} of {}",
+                fin[0].hit_partial + fin[0].hit_full,
+                transcript.len()
+            );
+        }
+        transcript.extend(fin[0].generated.iter().copied());
+        transcript.extend(Rng::seeded(step as u64).tokens(8, 2000)); // tool output
+    }
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn decode_batches_fill_under_concurrency() {
+    let mut e = engine(CachePolicy::Disaggregated, 64);
+    let shared = toks(128, 5);
+    for i in 0..8 {
+        let mut p = shared.clone();
+        p.extend(toks(8, 100 + i));
+        e.submit(req(i, i as u32, p, 32, 0));
+    }
+    run_to_completion(&mut e);
+    assert!(
+        e.metrics.avg_decode_batch() > 3.0,
+        "decode batching too small: {}",
+        e.metrics.avg_decode_batch()
+    );
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn memory_pressure_evicts_and_preempts_but_completes() {
+    // deliberately tiny budget: 2 MB for 16 concurrent agents
+    let mut e = engine(CachePolicy::UnifiedPerAdapter, 2);
+    let shared = toks(300, 6);
+    for i in 0..16 {
+        let mut p = shared.clone();
+        p.extend(toks(10, 200 + i));
+        e.submit(req(i, i as u32, p, 24, (i * 1000) as u64));
+    }
+    let fin = run_to_completion(&mut e);
+    assert_eq!(
+        fin.len() as u64 + e.metrics.oom_drops,
+        16,
+        "all requests finish or are accounted as drops"
+    );
+    assert!(fin.len() >= 12, "most requests must still complete");
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn forkkv_serves_more_agents_in_same_budget() {
+    // the core paper claim at allocator level: with a fixed budget and N
+    // agents on the same context, ForkKV sustains a much higher hit rate
+    let shared = toks(320, 7);
+    let run = |policy| {
+        let mut e = engine(policy, 4);
+        for i in 0..12 {
+            let mut p = shared.clone();
+            p.extend(toks(6, 300 + i));
+            e.submit(req(i, i as u32, p, 8, (i * 500) as u64));
+        }
+        run_to_completion(&mut e);
+        (
+            e.metrics.hit_rate()
+                + e.metrics.hit_partial_tokens as f64 / e.metrics.prompt_tokens as f64,
+            e.metrics.preemptions,
+        )
+    };
+    let (fork_shared_frac, _) = run(CachePolicy::Disaggregated);
+    let (unified_shared_frac, _) = run(CachePolicy::UnifiedPerAdapter);
+    assert!(
+        fork_shared_frac > unified_shared_frac + 0.3,
+        "forkkv shared fraction {fork_shared_frac:.2} vs unified {unified_shared_frac:.2}"
+    );
+}
+
+#[test]
+fn driver_loop_with_poisson_arrivals() {
+    struct D {
+        released: usize,
+        finished: usize,
+        next_t: u64,
+        rng: Rng,
+        shared: Vec<u32>,
+    }
+    impl Driver for D {
+        fn poll(&mut self, now: u64, fin: &[crate::metrics::FinishedRequest]) -> Vec<Request> {
+            self.finished += fin.len();
+            let mut out = Vec::new();
+            let _ = now;
+            while self.released < 10 {
+                self.released += 1;
+                let mut p = self.shared.clone();
+                p.extend(self.rng.tokens(4, 2000));
+                out.push(Request {
+                    id: self.released as u64,
+                    tag: 1,
+                    adapter: (self.released % 4) as u32,
+                    tokens: p,
+                    max_new: 8,
+                    arrival_us: self.next_t,
+                    ignore_eos: true,
+                });
+                self.next_t += (self.rng.exponential(2.0) * 1e6) as u64;
+            }
+            out
+        }
+        fn done(&self) -> bool {
+            self.released == 10 && self.finished == 10
+        }
+    }
+    let mut e = engine(CachePolicy::Disaggregated, 32);
+    let mut d = D {
+        released: 0,
+        finished: 0,
+        next_t: 0,
+        rng: Rng::seeded(9),
+        shared: toks(200, 8),
+    };
+    let fin = e.run_driver(&mut d).unwrap();
+    assert_eq!(fin.len(), 10);
+    assert!(d.done());
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn deterministic_under_fixed_seed() {
+    let run = || {
+        let mut e = engine(CachePolicy::Disaggregated, 8);
+        for i in 0..6 {
+            e.submit(req(i, i as u32, toks(150, 10 + i), 12, i * 2000));
+        }
+        let fin = run_to_completion(&mut e);
+        (
+            e.now_us(),
+            fin.iter().map(|f| f.finish_us).collect::<Vec<_>>(),
+            fin.iter()
+                .flat_map(|f| f.generated.clone())
+                .collect::<Vec<_>>(),
+        )
+    };
+    assert_eq!(run(), run());
+}
+
+// ---------------------------------------------------------------------------
+// randomized invariants (util::prop)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_engine_conservation_under_random_workloads() {
+    // every submitted request is accounted exactly once (finished or
+    // OOM-dropped), and the engine quiesces with all pages returned to
+    // pool/trees — across random policies, budgets and workload shapes
+    crate::util::prop::check("engine-conservation", 24, |rng| {
+        let policy = match rng.below(3) {
+            0 => CachePolicy::Disaggregated,
+            1 => CachePolicy::UnifiedPerAdapter,
+            _ => CachePolicy::FullReuse,
+        };
+        let budget_mb = 2 + rng.below(24);
+        let mut e = engine(policy, budget_mb);
+        let n = 3 + rng.below(10);
+        let shared_len = 32 + rng.below(12) * 16;
+        let shared = rng.fork(1).tokens(shared_len, 2000);
+        for i in 0..n {
+            let mut p = shared.clone();
+            let extra = 1 + rng.below(20);
+            p.extend(rng.tokens(extra, 2000));
+            let max_new = 1 + rng.below(24);
+            e.submit(req(
+                i as u64,
+                rng.below(6) as u32,
+                p,
+                max_new,
+                rng.below(5_000_000) as u64,
+            ));
+        }
+        let fin = run_to_completion(&mut e);
+        if fin.len() as u64 + e.metrics.oom_drops != n as u64 {
+            return Err(format!(
+                "{} finished + {} dropped != {} submitted (policy {:?}, {}MB)",
+                fin.len(),
+                e.metrics.oom_drops,
+                n,
+                policy,
+                budget_mb
+            ));
+        }
+        for f in &fin {
+            if f.generated.is_empty() {
+                return Err(format!("request {} finished without output", f.id));
+            }
+            if f.finish_us < f.first_token_us {
+                return Err("finish before first token".into());
+            }
+        }
+        e.check_quiescent()?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hits_never_exceed_prompt_and_clock_is_monotone() {
+    crate::util::prop::check("engine-hit-bounds", 16, |rng| {
+        let mut e = engine(CachePolicy::Disaggregated, 16);
+        let shared = rng.fork(2).tokens(160, 2000);
+        let n = 4 + rng.below(6);
+        for i in 0..n {
+            let mut p = shared.clone();
+            let extra = 1 + rng.below(8);
+            p.extend(rng.tokens(extra, 2000));
+            e.submit(req(i as u64, (i % 3) as u32, p, 8, (i * 700) as u64));
+        }
+        let fin = run_to_completion(&mut e);
+        let mut last_finish = 0;
+        for f in &fin {
+            if f.hit_full + f.hit_partial > f.prompt_len {
+                return Err(format!(
+                    "hits {}+{} exceed prompt {}",
+                    f.hit_full, f.hit_partial, f.prompt_len
+                ));
+            }
+            last_finish = last_finish.max(f.finish_us);
+        }
+        if e.now_us() < last_finish {
+            return Err("engine clock behind finish timestamps".into());
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn context_overflow_finishes_at_window_edge() {
+    // a request whose generation would cross s_max stops exactly at it
+    let mut e = engine(CachePolicy::Disaggregated, 64);
+    let s_max = e.meta().s_max;
+    let prompt = toks(s_max - 10, 21);
+    e.submit(req(1, 0, prompt, 10, 0));
+    let fin = run_to_completion(&mut e);
+    assert_eq!(fin.len(), 1);
+    assert!(fin[0].generated.len() <= 10);
+    e.check_quiescent().unwrap();
+}

@@ -1,0 +1,309 @@
+//! Paged KV-cache pools with copy-on-write refcounting.
+//!
+//! The disaggregated layout (paper §5.1) is realized as *two* pools with
+//! identical paging machinery but different widths:
+//!   - the **base pool** stores bCache pages: per token per layer,
+//!     `kv_width = n_kv_heads * head_dim` floats for K and again for V
+//!     (K rows are stored post-RoPE);
+//!   - the **residual pool** stores rCache pages: `rank_max` floats for
+//!     K_res and V_res each — `r/n` of the base width (Eq. 3).
+//!
+//! A page holds `page_tokens` consecutive tokens across *all* layers, laid
+//! out `[layer][k|v][slot][width]` so gather/scatter move one contiguous
+//! `page_tokens * width` run per (page, layer, k|v).
+//!
+//! "Copy-on-write" here is the fork discipline of the paper: pages are
+//! refcounted and shared read-only between the radix trees and any number
+//! of running sequences; a fork *retains* (never copies), and divergence
+//! materializes as freshly allocated tail pages. No shared page is ever
+//! written after publication.
+
+pub type PageId = u32;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolSpec {
+    pub n_pages: usize,
+    pub page_tokens: usize,
+    pub n_layers: usize,
+    /// floats per token per layer for each of K and V
+    pub width: usize,
+}
+
+impl PoolSpec {
+    pub fn floats_per_page(&self) -> usize {
+        self.n_layers * 2 * self.page_tokens * self.width
+    }
+    pub fn bytes_per_page(&self) -> usize {
+        self.floats_per_page() * 4
+    }
+    /// bytes of KV state per cached token (both K and V, all layers)
+    pub fn bytes_per_token(&self) -> usize {
+        self.n_layers * 2 * self.width * 4
+    }
+}
+
+#[derive(Debug)]
+pub struct BlockPool {
+    spec: PoolSpec,
+    data: Vec<f32>,
+    refcount: Vec<u32>,
+    free: Vec<PageId>,
+    used: usize,
+    high_water: usize,
+    total_allocs: u64,
+    alloc_failures: u64,
+}
+
+impl BlockPool {
+    pub fn new(spec: PoolSpec) -> Self {
+        let free: Vec<PageId> = (0..spec.n_pages as u32).rev().collect();
+        BlockPool {
+            data: vec![0.0; spec.n_pages * spec.floats_per_page()],
+            refcount: vec![0; spec.n_pages],
+            free,
+            used: 0,
+            high_water: 0,
+            total_allocs: 0,
+            alloc_failures: 0,
+            spec,
+        }
+    }
+
+    pub fn spec(&self) -> &PoolSpec {
+        &self.spec
+    }
+
+    /// Allocate a page with refcount 1. None when the pool is exhausted
+    /// (the engine then evicts from the radix trees and retries).
+    pub fn alloc(&mut self) -> Option<PageId> {
+        match self.free.pop() {
+            Some(p) => {
+                debug_assert_eq!(self.refcount[p as usize], 0);
+                self.refcount[p as usize] = 1;
+                self.used += 1;
+                self.high_water = self.high_water.max(self.used);
+                self.total_allocs += 1;
+                Some(p)
+            }
+            None => {
+                self.alloc_failures += 1;
+                None
+            }
+        }
+    }
+
+    /// Share an existing page (fork semantics: "map the parent's page").
+    pub fn retain(&mut self, page: PageId) {
+        let rc = &mut self.refcount[page as usize];
+        assert!(*rc > 0, "retain of free page {page}");
+        *rc += 1;
+    }
+
+    /// Drop one reference; the page returns to the free list at zero.
+    pub fn release(&mut self, page: PageId) {
+        let rc = &mut self.refcount[page as usize];
+        assert!(*rc > 0, "release of free page {page}");
+        *rc -= 1;
+        if *rc == 0 {
+            self.free.push(page);
+            self.used -= 1;
+        }
+    }
+
+    pub fn refcount(&self, page: PageId) -> u32 {
+        self.refcount[page as usize]
+    }
+
+    #[inline]
+    fn kv_offset(&self, page: PageId, layer: usize, kv: usize) -> usize {
+        debug_assert!(layer < self.spec.n_layers && kv < 2);
+        page as usize * self.spec.floats_per_page()
+            + (layer * 2 + kv) * self.spec.page_tokens * self.spec.width
+    }
+
+    /// Contiguous `[slot][width]` run for one (page, layer, K|V).
+    pub fn kv_slice(&self, page: PageId, layer: usize, kv: usize) -> &[f32] {
+        let off = self.kv_offset(page, layer, kv);
+        &self.data[off..off + self.spec.page_tokens * self.spec.width]
+    }
+
+    pub fn kv_slice_mut(&mut self, page: PageId, layer: usize, kv: usize) -> &mut [f32] {
+        let off = self.kv_offset(page, layer, kv);
+        let len = self.spec.page_tokens * self.spec.width;
+        &mut self.data[off..off + len]
+    }
+
+    // ---------------- accounting ----------------
+    pub fn used_pages(&self) -> usize {
+        self.used
+    }
+    pub fn free_pages(&self) -> usize {
+        self.free.len()
+    }
+    pub fn high_water_pages(&self) -> usize {
+        self.high_water
+    }
+    pub fn used_bytes(&self) -> usize {
+        self.used * self.spec.bytes_per_page()
+    }
+    pub fn capacity_bytes(&self) -> usize {
+        self.spec.n_pages * self.spec.bytes_per_page()
+    }
+    pub fn total_allocs(&self) -> u64 {
+        self.total_allocs
+    }
+    pub fn alloc_failures(&self) -> u64 {
+        self.alloc_failures
+    }
+    /// Test/debug invariant: used + free covers all pages exactly once.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let rc_used = self.refcount.iter().filter(|&&r| r > 0).count();
+        if rc_used != self.used {
+            return Err(format!("used={} but {} pages have rc>0", self.used, rc_used));
+        }
+        if self.used + self.free.len() != self.spec.n_pages {
+            return Err(format!(
+                "used {} + free {} != pages {}",
+                self.used,
+                self.free.len(),
+                self.spec.n_pages
+            ));
+        }
+        let mut seen = vec![false; self.spec.n_pages];
+        for &p in &self.free {
+            if seen[p as usize] {
+                return Err(format!("page {p} twice in free list"));
+            }
+            if self.refcount[p as usize] != 0 {
+                return Err(format!("free page {p} has rc>0"));
+            }
+            seen[p as usize] = true;
+        }
+        Ok(())
+    }
+}
+
+/// Pages needed to hold `tokens` at `page_tokens` granularity.
+pub fn pages_for(tokens: usize, page_tokens: usize) -> usize {
+    tokens.div_ceil(page_tokens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    fn spec() -> PoolSpec {
+        PoolSpec { n_pages: 16, page_tokens: 4, n_layers: 2, width: 8 }
+    }
+
+    #[test]
+    fn alloc_release_cycle() {
+        let mut pool = BlockPool::new(spec());
+        let a = pool.alloc().unwrap();
+        let b = pool.alloc().unwrap();
+        assert_ne!(a, b);
+        assert_eq!(pool.used_pages(), 2);
+        pool.retain(a);
+        pool.release(a);
+        assert_eq!(pool.used_pages(), 2); // still one ref on a
+        pool.release(a);
+        pool.release(b);
+        assert_eq!(pool.used_pages(), 0);
+        pool.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn exhaustion_returns_none() {
+        let mut pool = BlockPool::new(spec());
+        let pages: Vec<_> = (0..16).map(|_| pool.alloc().unwrap()).collect();
+        assert!(pool.alloc().is_none());
+        assert_eq!(pool.alloc_failures(), 1);
+        for p in pages {
+            pool.release(p);
+        }
+        assert!(pool.alloc().is_some());
+    }
+
+    #[test]
+    fn kv_slices_are_disjoint_and_writable() {
+        let mut pool = BlockPool::new(spec());
+        let p = pool.alloc().unwrap();
+        for layer in 0..2 {
+            for kv in 0..2 {
+                let val = (layer * 2 + kv) as f32 + 1.0;
+                pool.kv_slice_mut(p, layer, kv).fill(val);
+            }
+        }
+        for layer in 0..2 {
+            for kv in 0..2 {
+                let val = (layer * 2 + kv) as f32 + 1.0;
+                assert!(pool.kv_slice(p, layer, kv).iter().all(|&x| x == val));
+            }
+        }
+    }
+
+    #[test]
+    fn geometry_math() {
+        let s = PoolSpec { n_pages: 2, page_tokens: 16, n_layers: 4, width: 128 };
+        assert_eq!(s.floats_per_page(), 4 * 2 * 16 * 128);
+        assert_eq!(s.bytes_per_token(), 4 * 2 * 128 * 4);
+    }
+
+    #[test]
+    fn prop_no_leaks_no_double_free() {
+        // random interleavings of alloc / retain / release never break the
+        // used+free partition or refcount bookkeeping
+        prop::check("pool-alloc-fuzz", 64, |rng| {
+            let mut pool = BlockPool::new(PoolSpec {
+                n_pages: 8,
+                page_tokens: 2,
+                n_layers: 1,
+                width: 4,
+            });
+            let mut live: Vec<PageId> = Vec::new(); // one entry per reference
+            for _ in 0..200 {
+                match rng.below(3) {
+                    0 => {
+                        if let Some(p) = pool.alloc() {
+                            live.push(p);
+                        } else {
+                            prop_assert!(!live.is_empty(), "alloc failed on empty pool");
+                        }
+                    }
+                    1 if !live.is_empty() => {
+                        let p = live[rng.below(live.len())];
+                        pool.retain(p);
+                        live.push(p);
+                    }
+                    2 if !live.is_empty() => {
+                        let i = rng.below(live.len());
+                        let p = live.swap_remove(i);
+                        pool.release(p);
+                    }
+                    _ => {}
+                }
+                pool.check_invariants().map_err(|e| e.to_string())?;
+                // refcounts must equal outstanding references
+                for p in 0..8u32 {
+                    let expected = live.iter().filter(|&&q| q == p).count() as u32;
+                    prop_assert!(
+                        pool.refcount(p) == expected,
+                        "page {p}: rc {} != refs {expected}",
+                        pool.refcount(p)
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn pages_for_rounding() {
+        assert_eq!(pages_for(0, 16), 0);
+        assert_eq!(pages_for(1, 16), 1);
+        assert_eq!(pages_for(16, 16), 1);
+        assert_eq!(pages_for(17, 16), 2);
+    }
+}

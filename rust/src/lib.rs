@@ -1,0 +1,19 @@
+//! ForkKV: Scaling Multi-LoRA Agent Serving via Copy-on-Write Disaggregated
+//! KV Cache — full-system reproduction (see DESIGN.md).
+//!
+//! Layer map:
+//!   - L1/L2 live in `python/compile` (build time only; `make artifacts`)
+//!   - this crate is L3: the serving coordinator that loads the AOT HLO
+//!     artifacts via PJRT and owns the request path end to end.
+
+pub mod batch;
+pub mod config;
+pub mod engine;
+pub mod exec;
+pub mod kvcache;
+pub mod metrics;
+pub mod radix;
+pub mod runtime;
+pub mod server;
+pub mod util;
+pub mod workload;

@@ -1,0 +1,192 @@
+//! forkkv CLI: serve, run workloads, calibrate the sim cost model.
+//!
+//! Hand-rolled argument parsing (no clap in the offline vendor set).
+
+use std::path::PathBuf;
+
+use forkkv::config::{CacheConfig, CachePolicy, EngineConfig};
+use forkkv::engine::Engine;
+use forkkv::exec::{CostModel, Executor, PjrtExecutor};
+use forkkv::runtime::PrefillArgs;
+use forkkv::server::Server;
+use forkkv::util::json::Json;
+use forkkv::workload::{presets, WorkflowDriver, WorkflowKind, WorkloadSpec};
+
+fn usage() -> ! {
+    eprintln!(
+        "forkkv — multi-LoRA agent serving with a CoW disaggregated KV cache
+
+USAGE:
+  forkkv serve     [--artifacts DIR] [--addr HOST:PORT] [--policy P] [--budget-mb N]
+  forkkv run       [--policy P] [--model M] [--dataset D] [--workflow react|mapreduce]
+                   [--workflows N] [--requests N] [--rate R] [--budget-mb N] [--seed S]
+                   [--real --artifacts DIR]
+  forkkv calibrate [--artifacts DIR]   # measure real PJRT costs -> calibration.json
+
+  P: forkkv | prefix | full-reuse      M: llama3-8b-sim | qwen2.5-7b-sim | qwen2.5-14b-sim
+  D: loogle | narrativeqa | apigen"
+    );
+    std::process::exit(2);
+}
+
+struct Args(Vec<String>);
+
+impl Args {
+    fn flag(&self, name: &str) -> Option<String> {
+        self.0
+            .iter()
+            .position(|a| a == name)
+            .and_then(|i| self.0.get(i + 1).cloned())
+    }
+    fn has(&self, name: &str) -> bool {
+        self.0.iter().any(|a| a == name)
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let Some(cmd) = argv.first().cloned() else { usage() };
+    let args = Args(argv[1..].to_vec());
+    match cmd.as_str() {
+        "serve" => cmd_serve(&args),
+        "run" => cmd_run(&args),
+        "calibrate" => cmd_calibrate(&args),
+        _ => usage(),
+    }
+}
+
+fn engine_config(args: &Args) -> anyhow::Result<EngineConfig> {
+    let policy = CachePolicy::parse(&args.flag("--policy").unwrap_or("forkkv".into()))?;
+    let budget_mb: usize = args
+        .flag("--budget-mb")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(160);
+    let seed: u64 = args.flag("--seed").map(|v| v.parse()).transpose()?.unwrap_or(42);
+    Ok(EngineConfig {
+        policy,
+        cache: CacheConfig { page_tokens: 16, budget_bytes: budget_mb << 20 },
+        seed,
+        ..EngineConfig::default()
+    })
+}
+
+fn cmd_serve(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(
+        args.flag("--artifacts")
+            .unwrap_or("artifacts/llama3-8b-sim".into()),
+    );
+    let addr = args.flag("--addr").unwrap_or("127.0.0.1:8080".into());
+    let cfg = engine_config(args)?;
+    eprintln!("loading artifacts from {} ...", dir.display());
+    let exec = PjrtExecutor::load(&dir)?;
+    let engine = Engine::new(cfg, Box::new(exec))?;
+    let (server, handle) = Server::start(engine);
+    server.serve_http(&addr, None)?;
+    server.shutdown();
+    handle.join().ok();
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> anyhow::Result<()> {
+    let cfg = engine_config(args)?;
+    let model = args.flag("--model").unwrap_or("llama3-8b-sim".into());
+    let dataset = args.flag("--dataset").unwrap_or("loogle".into());
+    let workflows: usize = args
+        .flag("--workflows")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(8);
+    let requests: usize = args
+        .flag("--requests")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(32);
+    let rate: f64 = args.flag("--rate").map(|v| v.parse()).transpose()?.unwrap_or(2.0);
+    let kind = match args.flag("--workflow").as_deref() {
+        Some("mapreduce") => WorkflowKind::MapReduce { n_mappers: 6 },
+        _ => WorkflowKind::ReAct { n_agents: 4 },
+    };
+
+    let budget_mb = cfg.cache.budget_bytes >> 20;
+    let (mut engine, mut spec) = if args.has("--real") {
+        let dir = PathBuf::from(
+            args.flag("--artifacts")
+                .unwrap_or(format!("artifacts/{model}")),
+        );
+        let exec = PjrtExecutor::load(&dir)?;
+        let spec = WorkloadSpec::standard(&dataset, kind, workflows);
+        (Engine::new(cfg, Box::new(exec))?, spec)
+    } else {
+        let engine = presets::paper_sim_engine(&model, cfg.policy, budget_mb, 16, cfg.seed)?;
+        let spec = WorkloadSpec::paper(&dataset, kind, workflows, requests);
+        (engine, spec)
+    };
+    spec.n_requests = requests;
+    spec.arrival_rate = rate;
+    let mut driver = WorkflowDriver::new(spec);
+    engine.run_driver(&mut driver)?;
+    let mut report = driver.report();
+    if let Json::Obj(m) = &mut report {
+        m.insert("engine".into(), engine.metrics.to_json());
+        m.insert("policy".into(), Json::str(engine.cfg.policy.name()));
+    }
+    println!("{}", report.to_string());
+    Ok(())
+}
+
+/// Measure real per-op costs and write artifacts/calibration.json so the
+/// sim cost model reflects this machine (EXPERIMENTS.md §Calibration).
+fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
+    let base = PathBuf::from(args.flag("--artifacts").unwrap_or("artifacts".into()));
+    let mut out = std::collections::BTreeMap::new();
+    for entry in std::fs::read_dir(&base)? {
+        let dir = entry?.path();
+        if !dir.join("manifest.json").exists() {
+            continue;
+        }
+        let mut exec = PjrtExecutor::load(&dir)?;
+        let meta = exec.meta().clone();
+        eprintln!("calibrating {} ...", meta.name);
+        let (l, s) = (meta.n_layers, meta.s_max);
+        let (kvw, r) = (meta.kv_width(), meta.rank_max);
+        let kb = vec![0.0f32; l * s * kvw];
+        let kr = vec![0.0f32; l * s * r];
+        let tokens: Vec<u32> = (0..meta.chunk as u32).map(|i| 2 + i % 100).collect();
+
+        // prefill cost (warm): median of 5 (first call includes warmup)
+        let mut prefill_us = Vec::new();
+        for _ in 0..6 {
+            let a = PrefillArgs {
+                tokens: &tokens,
+                cache_len: 0,
+                adapter_id: 1,
+                adapter_on: true,
+                kb: &kb,
+                vb: &kb,
+                kr: &kr,
+                vr: &kr,
+            };
+            prefill_us.push(exec.prefill(&a)?.elapsed_us);
+        }
+        prefill_us.sort_unstable();
+        let prefill_med = prefill_us[prefill_us.len() / 2];
+
+        // derive sustained FLOP/s from the measured chunk
+        let mut cost = CostModel::derived(&meta);
+        let model_flops = cost.flops_per_token * meta.chunk as f64
+            + cost.attn_flops_per_qk * (meta.chunk * meta.s_max) as f64;
+        cost.sustained_flops = model_flops / (prefill_med as f64 / 1e6);
+        cost.dispatch_us = (prefill_med / 10).max(200);
+        out.insert(meta.name.clone(), cost.to_json());
+        eprintln!(
+            "  chunk={}us sustained={:.2e} FLOP/s",
+            prefill_med, cost.sustained_flops
+        );
+    }
+    let j = Json::Obj(out.into_iter().collect());
+    let path = base.join("calibration.json");
+    std::fs::write(&path, j.to_string())?;
+    eprintln!("wrote {}", path.display());
+    Ok(())
+}

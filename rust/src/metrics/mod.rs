@@ -1,0 +1,136 @@
+//! Engine metrics: the measurement layer behind every figure in the
+//! evaluation (throughput, TTFT, cache hit rate, per-agent memory, decode
+//! batch occupancy — paper Figs. 11–15).
+
+use crate::util::json::Json;
+use crate::util::stats::Series;
+
+#[derive(Debug, Default)]
+pub struct EngineMetrics {
+    // step counters
+    pub prefill_steps: u64,
+    pub decode_steps: u64,
+    pub decode_rows: u64,
+    pub prefill_busy_us: u64,
+    pub decode_busy_us: u64,
+
+    // cache effectiveness (token-granular)
+    pub prompt_tokens: u64,
+    pub hit_full_tokens: u64,
+    pub hit_partial_tokens: u64,
+    pub computed_prompt_tokens: u64,
+
+    // memory pressure events
+    pub preemptions: u64,
+    pub oom_drops: u64,
+
+    // sampled time series (one sample per engine step)
+    pub base_pool_bytes: Series,
+    pub res_pool_bytes: Series,
+    pub active_seqs: Series,
+    pub bytes_per_agent: Series,
+}
+
+impl EngineMetrics {
+    pub fn avg_decode_batch(&self) -> f64 {
+        if self.decode_steps == 0 {
+            0.0
+        } else {
+            self.decode_rows as f64 / self.decode_steps as f64
+        }
+    }
+
+    /// Fraction of prompt tokens served from cache without recompute
+    /// (full hits only — the paper's "cache hit rate").
+    pub fn hit_rate(&self) -> f64 {
+        if self.prompt_tokens == 0 {
+            0.0
+        } else {
+            self.hit_full_tokens as f64 / self.prompt_tokens as f64
+        }
+    }
+
+    pub fn sample_memory(&mut self, base_bytes: usize, res_bytes: usize, active: usize) {
+        self.base_pool_bytes.push(base_bytes as f64);
+        self.res_pool_bytes.push(res_bytes as f64);
+        self.active_seqs.push(active as f64);
+        if active > 0 {
+            self.bytes_per_agent
+                .push((base_bytes + res_bytes) as f64 / active as f64);
+        }
+    }
+
+    pub fn to_json(&mut self) -> Json {
+        Json::obj(vec![
+            ("prefill_steps", Json::num(self.prefill_steps as f64)),
+            ("decode_steps", Json::num(self.decode_steps as f64)),
+            ("avg_decode_batch", Json::num(self.avg_decode_batch())),
+            ("prefill_busy_us", Json::num(self.prefill_busy_us as f64)),
+            ("decode_busy_us", Json::num(self.decode_busy_us as f64)),
+            ("prompt_tokens", Json::num(self.prompt_tokens as f64)),
+            ("hit_full_tokens", Json::num(self.hit_full_tokens as f64)),
+            ("hit_partial_tokens", Json::num(self.hit_partial_tokens as f64)),
+            ("computed_prompt_tokens", Json::num(self.computed_prompt_tokens as f64)),
+            ("hit_rate", Json::num(self.hit_rate())),
+            ("preemptions", Json::num(self.preemptions as f64)),
+            ("oom_drops", Json::num(self.oom_drops as f64)),
+            ("base_pool_bytes", self.base_pool_bytes.summary().to_json()),
+            ("res_pool_bytes", self.res_pool_bytes.summary().to_json()),
+            ("bytes_per_agent", self.bytes_per_agent.summary().to_json()),
+            ("active_seqs", self.active_seqs.summary().to_json()),
+        ])
+    }
+}
+
+/// Per-request outcome, the unit the workload drivers aggregate.
+#[derive(Debug, Clone)]
+pub struct FinishedRequest {
+    pub id: u64,
+    pub tag: u64,
+    pub adapter: u32,
+    pub prompt_len: usize,
+    pub generated: Vec<u32>,
+    pub arrival_us: u64,
+    pub first_token_us: u64,
+    pub finish_us: u64,
+    pub hit_full: usize,
+    pub hit_partial: usize,
+    pub computed_prompt: usize,
+    pub preemptions: u32,
+    /// logits of the first generated token (quality experiments)
+    pub first_logits: Option<Vec<f32>>,
+}
+
+impl FinishedRequest {
+    pub fn ttft_us(&self) -> u64 {
+        self.first_token_us.saturating_sub(self.arrival_us)
+    }
+    pub fn latency_us(&self) -> u64 {
+        self.finish_us.saturating_sub(self.arrival_us)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ratios() {
+        let mut m = EngineMetrics::default();
+        m.decode_steps = 4;
+        m.decode_rows = 14;
+        assert!((m.avg_decode_batch() - 3.5).abs() < 1e-9);
+        m.prompt_tokens = 100;
+        m.hit_full_tokens = 40;
+        assert!((m.hit_rate() - 0.4).abs() < 1e-9);
+    }
+
+    #[test]
+    fn memory_sampling_per_agent() {
+        let mut m = EngineMetrics::default();
+        m.sample_memory(1000, 200, 4);
+        m.sample_memory(2000, 200, 2);
+        assert_eq!(m.bytes_per_agent.len(), 2);
+        assert!((m.bytes_per_agent.mean() - (300.0 + 1100.0) / 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,709 @@
+//! DualRadixTree: the paper's tree-structured cache with fork semantics
+//! (§5.2).
+//!
+//! Each tree is a page-aligned radix trie: every node owns exactly one pool
+//! page (`page_tokens` tokens) and the edge to its parent is that page's
+//! token span. Page alignment keeps tree granularity identical to allocator
+//! granularity (the same choice vLLM v1 makes for prefix caching); variable-
+//! length edges à la SGLang would change only constants, not behaviour.
+//!
+//! Namespaces realize the paper's two key schemes without duplicating code:
+//!   - the **base tree** keys purely by token ids (`ns = 0`): any agent with
+//!     the same context hits the same bCache pages (zero-copy sharing);
+//!   - the **residual tree** keys by `(adapter_id, token ids)` (`ns =
+//!     adapter`), isolating each agent's CoW rCache footprint.
+//! The unified baselines reuse the same structure: per-adapter prefix
+//! caching keys its monolithic pages by `(adapter, tokens)`; full-reuse
+//! keys by tokens only.
+//!
+//! Fork with CoW (paper Fig. 9): `match_lease` is Step 1 (prefix match +
+//! inherit shared pages, pinned by a lease and pool-retained for the
+//! sequence); the engine's fresh-page allocation for the residual tail is
+//! Step 2. Eviction is **decoupled** (paper §5.2): each tree runs its own
+//! LRU over unpinned leaves, so evicting a massive bCache node never
+//! cascades into the surviving rCache (partial hits) and vice versa.
+
+use std::collections::BinaryHeap;
+use std::collections::HashMap;
+
+use crate::kvcache::{BlockPool, PageId};
+
+type NodeId = u32;
+const NIL: NodeId = u32::MAX;
+
+#[derive(Debug)]
+struct Node {
+    /// token span of the edge from the parent (page_tokens ids)
+    key: Box<[u32]>,
+    page: PageId,
+    parent: NodeId,
+    #[allow(dead_code)]
+    ns: u32,
+    children: HashMap<Box<[u32]>, NodeId>,
+    last_access: u64,
+    /// active sequences currently holding this node's page via match_lease
+    leases: u32,
+    dead: bool,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct TreeStats {
+    pub nodes: usize,
+    pub inserted_pages: u64,
+    pub deduped_pages: u64,
+    pub evicted_pages: u64,
+    pub match_queries: u64,
+    pub matched_pages: u64,
+}
+
+/// Result of the fork's Step-1 prefix match. Pages are pool-retained for
+/// the caller; `path` must be given back via `release_path` when the
+/// sequence stops using the prefix.
+#[derive(Debug, Default)]
+pub struct MatchResult {
+    pub pages: Vec<PageId>,
+    pub tokens: usize,
+    pub path: Vec<NodeId>,
+}
+
+#[derive(Debug)]
+pub struct RadixTree {
+    nodes: Vec<Node>,
+    free_nodes: Vec<NodeId>,
+    roots: HashMap<u32, NodeId>,
+    page_tokens: usize,
+    clock: u64,
+    /// lazy min-heap of (last_access, node) eviction candidates
+    lru: BinaryHeap<std::cmp::Reverse<(u64, NodeId)>>,
+    stats: TreeStats,
+}
+
+impl RadixTree {
+    pub fn new(page_tokens: usize) -> Self {
+        assert!(page_tokens > 0);
+        RadixTree {
+            nodes: Vec::new(),
+            free_nodes: Vec::new(),
+            roots: HashMap::new(),
+            page_tokens,
+            clock: 0,
+            lru: BinaryHeap::new(),
+            stats: TreeStats::default(),
+        }
+    }
+
+    pub fn page_tokens(&self) -> usize {
+        self.page_tokens
+    }
+
+    pub fn stats(&self) -> &TreeStats {
+        &self.stats
+    }
+
+    /// Total pages currently owned by the tree.
+    pub fn total_pages(&self) -> usize {
+        self.stats.nodes
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    fn alloc_node(&mut self, node: Node) -> NodeId {
+        if let Some(id) = self.free_nodes.pop() {
+            self.nodes[id as usize] = node;
+            id
+        } else {
+            self.nodes.push(node);
+            (self.nodes.len() - 1) as NodeId
+        }
+    }
+
+    /// Step 1 of fork: longest-prefix match. Every matched node's page is
+    /// `retain`ed on `pool` for the caller and leased in the tree.
+    pub fn match_lease(
+        &mut self,
+        ns: u32,
+        tokens: &[u32],
+        pool: &mut BlockPool,
+    ) -> MatchResult {
+        self.stats.match_queries += 1;
+        let mut res = MatchResult::default();
+        let Some(&root) = self.roots.get(&ns) else {
+            return res;
+        };
+        let now = self.tick();
+        let mut cur = root;
+        let mut consumed = 0usize;
+        while consumed + self.page_tokens <= tokens.len() {
+            let chunk = &tokens[consumed..consumed + self.page_tokens];
+            let next = match self.nodes[cur as usize].children.get(chunk) {
+                Some(&n) => n,
+                None => break,
+            };
+            let node = &mut self.nodes[next as usize];
+            node.last_access = now;
+            node.leases += 1;
+            pool.retain(node.page);
+            res.pages.push(node.page);
+            res.path.push(next);
+            consumed += self.page_tokens;
+            cur = next;
+        }
+        res.tokens = consumed;
+        self.stats.matched_pages += res.pages.len() as u64;
+        res
+    }
+
+    /// Drop the leases acquired by `match_lease` (pool refs are the
+    /// caller's to release separately — sequence teardown does both).
+    pub fn release_path(&mut self, path: &[NodeId]) {
+        for &id in path {
+            let node = &mut self.nodes[id as usize];
+            debug_assert!(!node.dead, "lease release on dead node");
+            assert!(node.leases > 0, "lease underflow on node {id}");
+            node.leases -= 1;
+            if node.leases == 0 && node.children.is_empty() {
+                self.lru.push(std::cmp::Reverse((node.last_access, id)));
+            }
+        }
+    }
+
+    /// Publish `pages` (one per full page of `tokens`) into the tree.
+    /// Pages already present are deduped: the tree keeps its existing node
+    /// and ignores the caller's page (the caller still owns its own ref).
+    /// For adopted pages the tree takes its own `retain`. Returns the
+    /// number of newly adopted pages.
+    pub fn insert(
+        &mut self,
+        ns: u32,
+        tokens: &[u32],
+        pages: &[PageId],
+        pool: &mut BlockPool,
+    ) -> usize {
+        let full_pages = tokens.len() / self.page_tokens;
+        assert!(
+            pages.len() >= full_pages,
+            "insert: {} pages for {} full pages",
+            pages.len(),
+            full_pages
+        );
+        let now = self.tick();
+        let root = *self.roots.entry(ns).or_insert_with(|| NIL);
+        let mut cur = if root == NIL {
+            let id = self.alloc_node(Node {
+                key: Box::from(&[][..]),
+                page: PageId::MAX,
+                parent: NIL,
+                ns,
+                children: HashMap::new(),
+                last_access: now,
+                leases: 1, // roots are never evicted
+                dead: false,
+            });
+            self.roots.insert(ns, id);
+            id
+        } else {
+            root
+        };
+
+        let mut adopted = 0usize;
+        for (i, chunk) in tokens.chunks_exact(self.page_tokens).enumerate() {
+            let key: Box<[u32]> = chunk.into();
+            if let Some(&existing) = self.nodes[cur as usize].children.get(&key) {
+                self.nodes[existing as usize].last_access = now;
+                self.stats.deduped_pages += 1;
+                cur = existing;
+                continue;
+            }
+            let page = pages[i];
+            pool.retain(page);
+            let id = self.alloc_node(Node {
+                key: key.clone(),
+                page,
+                parent: cur,
+                ns,
+                children: HashMap::new(),
+                last_access: now,
+                leases: 0,
+                dead: false,
+            });
+            self.nodes[cur as usize].children.insert(key, id);
+            self.lru.push(std::cmp::Reverse((now, id)));
+            self.stats.nodes += 1;
+            self.stats.inserted_pages += 1;
+            adopted += 1;
+            cur = id;
+        }
+        adopted
+    }
+
+    /// Evict up to `want_pages` least-recently-used unpinned leaves,
+    /// releasing their pool refs. Returns the number of pages whose memory
+    /// was actually freed (refcount reached zero) — nodes whose pages are
+    /// still held by running sequences are *skipped*, because evicting them
+    /// frees no memory and only destroys future sharing.
+    /// Decoupled policy (paper §5.2): this touches only *this* tree/pool.
+    pub fn evict(&mut self, want_pages: usize, pool: &mut BlockPool) -> usize {
+        let mut evicted = 0;
+        let mut still_referenced: Vec<std::cmp::Reverse<(u64, NodeId)>> = Vec::new();
+        while evicted < want_pages {
+            let Some(std::cmp::Reverse((stamp, id))) = self.lru.pop() else {
+                break;
+            };
+            let node = &self.nodes[id as usize];
+            // lazy-heap validation: skip stale entries
+            if node.dead
+                || node.leases > 0
+                || !node.children.is_empty()
+                || node.last_access != stamp
+            {
+                // re-queue nodes whose stamp moved but are still evictable
+                if !node.dead
+                    && node.leases == 0
+                    && node.children.is_empty()
+                    && node.last_access != stamp
+                {
+                    let entry = std::cmp::Reverse((node.last_access, id));
+                    self.lru.push(entry);
+                }
+                continue;
+            }
+            if pool.refcount(node.page) > 1 {
+                still_referenced.push(std::cmp::Reverse((stamp, id)));
+                continue;
+            }
+            self.remove_leaf(id, pool);
+            evicted += 1;
+        }
+        // candidates that freed no memory go back for later rounds
+        for entry in still_referenced {
+            self.lru.push(entry);
+        }
+        self.stats.evicted_pages += evicted as u64;
+        evicted
+    }
+
+    fn remove_leaf(&mut self, id: NodeId, pool: &mut BlockPool) {
+        let (parent, key, page) = {
+            let node = &self.nodes[id as usize];
+            debug_assert!(node.children.is_empty() && node.leases == 0);
+            (node.parent, node.key.clone(), node.page)
+        };
+        pool.release(page);
+        self.nodes[id as usize].dead = true;
+        self.free_nodes.push(id);
+        self.stats.nodes -= 1;
+        if parent != NIL {
+            self.nodes[parent as usize].children.remove(&key);
+            let p = &self.nodes[parent as usize];
+            if p.children.is_empty() && p.leases == 0 && p.parent != NIL {
+                self.lru
+                    .push(std::cmp::Reverse((p.last_access, parent)));
+            }
+        }
+    }
+
+    /// Read-only longest-prefix probe: pages that a `match_lease` would
+    /// return, without taking leases (admission-control estimates).
+    pub fn probe_pages(&self, ns: u32, tokens: &[u32]) -> usize {
+        let Some(&root) = self.roots.get(&ns) else {
+            return 0;
+        };
+        let mut cur = root;
+        let mut pages = 0usize;
+        let mut consumed = 0usize;
+        while consumed + self.page_tokens <= tokens.len() {
+            let chunk = &tokens[consumed..consumed + self.page_tokens];
+            match self.nodes[cur as usize].children.get(chunk) {
+                Some(&n) => {
+                    cur = n;
+                    pages += 1;
+                    consumed += self.page_tokens;
+                }
+                None => break,
+            }
+        }
+        pages
+    }
+
+    /// Pages whose memory is reclaimable by (possibly cascaded) eviction:
+    /// unleased nodes whose page is referenced only by the tree.
+    pub fn reclaimable_pages(&self, pool: &BlockPool) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| {
+                !n.dead
+                    && n.page != PageId::MAX
+                    && n.leases == 0
+                    && pool.refcount(n.page) == 1
+            })
+            .count()
+    }
+
+    /// Drop the whole tree, releasing every page (used by tests/benches).
+    pub fn clear(&mut self, pool: &mut BlockPool) {
+        for node in &self.nodes {
+            if !node.dead && node.page != PageId::MAX {
+                pool.release(node.page);
+            }
+        }
+        self.nodes.clear();
+        self.free_nodes.clear();
+        self.roots.clear();
+        self.lru.clear();
+        self.stats.nodes = 0;
+    }
+
+    /// Structural invariants (tests): every live non-root node is reachable
+    /// from its ns root, child links are bidirectional, page refcounts > 0.
+    pub fn check_invariants(&self, pool: &BlockPool) -> Result<(), String> {
+        let mut live = 0usize;
+        for (id, node) in self.nodes.iter().enumerate() {
+            if node.dead {
+                continue;
+            }
+            if node.page != PageId::MAX {
+                live += 1;
+                if pool.refcount(node.page) == 0 {
+                    return Err(format!("node {id} holds freed page {}", node.page));
+                }
+                let parent = &self.nodes[node.parent as usize];
+                match parent.children.get(&node.key) {
+                    Some(&c) if c == id as NodeId => {}
+                    _ => return Err(format!("node {id} not linked from parent")),
+                }
+            }
+            for (&ref key, &child) in &node.children {
+                let c = &self.nodes[child as usize];
+                if c.dead {
+                    return Err(format!("dead child {child} reachable"));
+                }
+                if c.parent != id as NodeId || &c.key != key {
+                    return Err(format!("child {child} parent/key mismatch"));
+                }
+            }
+        }
+        if live != self.stats.nodes {
+            return Err(format!("stats.nodes {} != live {live}", self.stats.nodes));
+        }
+        Ok(())
+    }
+}
+
+/// The paper's coordinated dual-tree storage (§5.2): one tree for the
+/// globally shared bCache, one for the per-adapter rCache, with
+/// independently managed LRU lifecycles.
+#[derive(Debug)]
+pub struct DualRadixTree {
+    pub base: RadixTree,
+    pub residual: RadixTree,
+}
+
+/// Outcome of forking a new agent onto existing cache state.
+#[derive(Debug, Default)]
+pub struct ForkMatch {
+    pub base: MatchResult,
+    pub residual: MatchResult,
+}
+
+impl ForkMatch {
+    /// Tokens that can be skipped entirely (both components cached).
+    pub fn full_hit_tokens(&self) -> usize {
+        self.base.tokens.min(self.residual.tokens)
+    }
+    /// Tokens with a *partial* hit (exactly one component survives) —
+    /// the paper's decoupled-eviction win: the surviving half is reused.
+    pub fn partial_hit_tokens(&self) -> usize {
+        self.base.tokens.max(self.residual.tokens) - self.full_hit_tokens()
+    }
+}
+
+impl DualRadixTree {
+    pub fn new(page_tokens: usize) -> Self {
+        DualRadixTree {
+            base: RadixTree::new(page_tokens),
+            residual: RadixTree::new(page_tokens),
+        }
+    }
+
+    /// Fork Step 1 for a new agent: longest-prefix match in both trees.
+    /// The base match is adapter-agnostic (ns 0); the residual match is
+    /// namespaced by the adapter.
+    pub fn fork_match(
+        &mut self,
+        adapter: u32,
+        tokens: &[u32],
+        base_pool: &mut BlockPool,
+        res_pool: &mut BlockPool,
+    ) -> ForkMatch {
+        ForkMatch {
+            base: self.base.match_lease(0, tokens, base_pool),
+            residual: self.residual.match_lease(adapter, tokens, res_pool),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::PoolSpec;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn pool(pages: usize) -> BlockPool {
+        BlockPool::new(PoolSpec {
+            n_pages: pages,
+            page_tokens: 4,
+            n_layers: 1,
+            width: 2,
+        })
+    }
+
+    fn toks(n: usize, seed: u64) -> Vec<u32> {
+        let mut rng = Rng::seeded(seed);
+        rng.tokens(n, 1000)
+    }
+
+    /// allocate + publish a sequence, returning (tokens, seq refs released)
+    fn publish(tree: &mut RadixTree, ns: u32, tokens: &[u32], pool: &mut BlockPool) {
+        let n_pages = tokens.len() / tree.page_tokens();
+        let pages: Vec<PageId> = (0..n_pages).map(|_| pool.alloc().unwrap()).collect();
+        tree.insert(ns, tokens, &pages, pool);
+        for p in pages {
+            pool.release(p); // tree keeps its own refs
+        }
+    }
+
+    #[test]
+    fn match_returns_longest_cached_prefix() {
+        let mut pool = pool(32);
+        let mut tree = RadixTree::new(4);
+        let t = toks(16, 1);
+        publish(&mut tree, 0, &t, &mut pool);
+
+        // full match
+        let m = tree.match_lease(0, &t, &mut pool);
+        assert_eq!(m.tokens, 16);
+        assert_eq!(m.pages.len(), 4);
+        tree.release_path(&m.path);
+        for p in &m.pages {
+            pool.release(*p);
+        }
+
+        // diverging suffix matches only the shared prefix
+        let mut t2 = t.clone();
+        t2[9] = t2[9].wrapping_add(7); // diverge in page 2 (tokens 8..12)
+        let m2 = tree.match_lease(0, &t2, &mut pool);
+        assert_eq!(m2.tokens, 8);
+        tree.release_path(&m2.path);
+        for p in &m2.pages {
+            pool.release(*p);
+        }
+        tree.check_invariants(&pool).unwrap();
+    }
+
+    #[test]
+    fn namespaces_isolate_adapters() {
+        let mut pool = pool(32);
+        let mut tree = RadixTree::new(4);
+        let t = toks(8, 2);
+        publish(&mut tree, 1, &t, &mut pool);
+        let m_other = tree.match_lease(2, &t, &mut pool);
+        assert_eq!(m_other.tokens, 0, "adapter 2 must not see adapter 1's cache");
+        let m_same = tree.match_lease(1, &t, &mut pool);
+        assert_eq!(m_same.tokens, 8);
+        tree.release_path(&m_same.path);
+        for p in &m_same.pages {
+            pool.release(*p);
+        }
+    }
+
+    #[test]
+    fn insert_dedups_shared_prefix() {
+        let mut pool = pool(32);
+        let mut tree = RadixTree::new(4);
+        let t = toks(8, 3);
+        publish(&mut tree, 0, &t, &mut pool);
+        let used_before = pool.used_pages();
+
+        // same tokens published again by a second sequence: all deduped
+        publish(&mut tree, 0, &t, &mut pool);
+        assert_eq!(pool.used_pages(), used_before);
+        assert_eq!(tree.stats().deduped_pages, 2);
+        tree.check_invariants(&pool).unwrap();
+    }
+
+    #[test]
+    fn eviction_respects_leases_and_lru_order() {
+        let mut pool = pool(32);
+        let mut tree = RadixTree::new(4);
+        let a = toks(8, 4);
+        let b = toks(8, 5);
+        publish(&mut tree, 0, &a, &mut pool);
+        publish(&mut tree, 0, &b, &mut pool);
+        assert_eq!(tree.total_pages(), 4);
+
+        // lease `a`: its nodes must survive eviction
+        let m = tree.match_lease(0, &a, &mut pool);
+        assert_eq!(m.tokens, 8);
+        let evicted = tree.evict(10, &mut pool);
+        assert_eq!(evicted, 2, "only b's two pages are evictable");
+        let m2 = tree.match_lease(0, &b, &mut pool);
+        assert_eq!(m2.tokens, 0, "b evicted");
+        let m3 = tree.match_lease(0, &a, &mut pool);
+        assert_eq!(m3.tokens, 8, "a survived");
+        tree.release_path(&m.path);
+        tree.release_path(&m3.path);
+        for p in m.pages.iter().chain(&m3.pages) {
+            pool.release(*p);
+        }
+        // now everything is evictable
+        let evicted = tree.evict(10, &mut pool);
+        assert_eq!(evicted, 2);
+        assert_eq!(pool.used_pages(), 0);
+        tree.check_invariants(&pool).unwrap();
+    }
+
+    #[test]
+    fn dual_tree_partial_hits() {
+        let mut bpool = pool(32);
+        let mut rpool = pool(32);
+        let mut dual = DualRadixTree::new(4);
+        let t = toks(16, 6);
+
+        // agent 1 published both components over 16 tokens
+        publish(&mut dual.base, 0, &t, &mut bpool);
+        publish(&mut dual.residual, 1, &t, &mut rpool);
+
+        // fork agent 1 again: full hit on 16
+        let f = dual.fork_match(1, &t, &mut bpool, &mut rpool);
+        assert_eq!(f.full_hit_tokens(), 16);
+        assert_eq!(f.partial_hit_tokens(), 0);
+        dual.base.release_path(&f.base.path);
+        dual.residual.release_path(&f.residual.path);
+        for p in &f.base.pages {
+            bpool.release(*p);
+        }
+        for p in &f.residual.pages {
+            rpool.release(*p);
+        }
+
+        // fork agent 2: base inherited (shared!), residual cold => CoW tail
+        let f2 = dual.fork_match(2, &t, &mut bpool, &mut rpool);
+        assert_eq!(f2.base.tokens, 16);
+        assert_eq!(f2.residual.tokens, 0);
+        assert_eq!(f2.full_hit_tokens(), 0);
+        assert_eq!(f2.partial_hit_tokens(), 16);
+        dual.base.release_path(&f2.base.path);
+        for p in &f2.base.pages {
+            bpool.release(*p);
+        }
+
+        // decoupled eviction: dropping all residual pages leaves base intact
+        let evicted = dual.residual.evict(100, &mut rpool);
+        assert_eq!(evicted, 4);
+        let f3 = dual.fork_match(1, &t, &mut bpool, &mut rpool);
+        assert_eq!(f3.base.tokens, 16, "bCache survives rCache eviction");
+        assert_eq!(f3.residual.tokens, 0);
+        dual.base.release_path(&f3.base.path);
+        for p in &f3.base.pages {
+            bpool.release(*p);
+        }
+    }
+
+    #[test]
+    fn prop_radix_consistency_under_random_traffic() {
+        prop::check("radix-fuzz", 48, |rng| {
+            let mut pool = BlockPool::new(PoolSpec {
+                n_pages: 64,
+                page_tokens: 4,
+                n_layers: 1,
+                width: 2,
+            });
+            let mut tree = RadixTree::new(4);
+            // a small universe of base sequences with shared prefixes
+            let base = {
+                let mut r = rng.fork(99);
+                r.tokens(24, 50)
+            };
+            let mut outstanding: Vec<(Vec<u32>, MatchResult)> = Vec::new();
+            for _ in 0..120 {
+                match rng.below(4) {
+                    0 => {
+                        // publish a random-length prefix w/ random suffix
+                        let keep = rng.below(5) * 4;
+                        let extra = rng.below(3) * 4;
+                        let mut t = base[..keep.min(base.len())].to_vec();
+                        let mut r2 = rng.fork(7);
+                        t.extend(r2.tokens(extra, 50));
+                        let n_pages = t.len() / 4;
+                        let mut pages = Vec::new();
+                        let mut ok = true;
+                        for _ in 0..n_pages {
+                            match pool.alloc() {
+                                Some(p) => pages.push(p),
+                                None => {
+                                    ok = false;
+                                    break;
+                                }
+                            }
+                        }
+                        if ok {
+                            tree.insert(0, &t, &pages, &mut pool);
+                        }
+                        for p in pages {
+                            pool.release(p);
+                        }
+                    }
+                    1 => {
+                        let keep = rng.below(7) * 4;
+                        let t = base[..keep.min(base.len())].to_vec();
+                        let m = tree.match_lease(0, &t, &mut pool);
+                        prop_assert!(
+                            m.tokens <= t.len(),
+                            "matched more than queried"
+                        );
+                        prop_assert!(
+                            m.tokens % 4 == 0,
+                            "match not page aligned"
+                        );
+                        outstanding.push((t, m));
+                    }
+                    2 if !outstanding.is_empty() => {
+                        let i = rng.below(outstanding.len());
+                        let (_t, m) = outstanding.swap_remove(i);
+                        tree.release_path(&m.path);
+                        for p in &m.pages {
+                            pool.release(*p);
+                        }
+                    }
+                    _ => {
+                        tree.evict(rng.below(4) + 1, &mut pool);
+                    }
+                }
+                tree.check_invariants(&pool).map_err(|e| e)?;
+                pool.check_invariants().map_err(|e| e)?;
+            }
+            // leased prefixes must still be fully matchable
+            for (t, m) in &outstanding {
+                if m.tokens > 0 {
+                    let m2 = tree.match_lease(0, &t[..m.tokens], &mut pool);
+                    prop_assert!(
+                        m2.tokens == m.tokens,
+                        "leased prefix shrank: {} -> {}",
+                        m.tokens,
+                        m2.tokens
+                    );
+                    tree.release_path(&m2.path);
+                    for p in &m2.pages {
+                        pool.release(*p);
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,220 @@
+//! `manifest.json` — the AOT contract between the python compile path and
+//! this runtime. Mirrors `python/compile/aot.py`.
+
+use std::path::Path;
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone)]
+pub struct ModelMeta {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub rope_theta: f64,
+    pub qkv_bias: bool,
+    pub s_max: usize,
+    pub chunk: usize,
+    pub rank_max: usize,
+    pub n_adapters: usize,
+    pub decode_batches: Vec<usize>,
+    pub rank_effective: usize,
+}
+
+impl ModelMeta {
+    /// `n` in the paper's Eq. 3: per-layer K (or V) width of the bCache.
+    pub fn kv_width(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+    /// bCache bytes per token across all layers (K + V, f32).
+    pub fn base_bytes_per_token(&self) -> usize {
+        self.n_layers * 2 * self.kv_width() * 4
+    }
+    /// rCache bytes per token across all layers (K_res + V_res, f32),
+    /// using the *effective* rank (the padded tail is a compile-time
+    /// convenience, not real state — accounting matches the paper).
+    pub fn res_bytes_per_token(&self) -> usize {
+        self.n_layers * 2 * self.rank_effective * 4
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorEntry {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// offset in f32 elements into weights.bin
+    pub offset: usize,
+}
+
+impl TensorEntry {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelMeta,
+    pub params: Vec<TensorEntry>,
+    pub bank: Vec<TensorEntry>,
+    /// artifact key ("prefill", "decode_b4", ...) -> (file, runtime inputs, outputs)
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub key: String,
+    pub kind: String,
+    pub batch: usize,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+fn tensor_entries(j: &Json, section: &str) -> anyhow::Result<Vec<TensorEntry>> {
+    j.req_arr(section)?
+        .iter()
+        .map(|e| {
+            Ok(TensorEntry {
+                name: e.req_str("name")?.to_string(),
+                shape: e
+                    .req_arr("shape")?
+                    .iter()
+                    .map(|s| s.as_usize().unwrap_or(0))
+                    .collect(),
+                offset: e.req_usize("offset")?,
+            })
+        })
+        .collect()
+}
+
+fn io_specs(j: &Json) -> anyhow::Result<Vec<IoSpec>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("io spec not an array"))?
+        .iter()
+        .map(|e| {
+            let trip = e.as_arr().ok_or_else(|| anyhow::anyhow!("io entry"))?;
+            anyhow::ensure!(trip.len() == 3, "io entry len");
+            Ok(IoSpec {
+                name: trip[0].as_str().unwrap_or("").to_string(),
+                shape: trip[1]
+                    .as_arr()
+                    .unwrap_or(&[])
+                    .iter()
+                    .map(|s| s.as_usize().unwrap_or(0))
+                    .collect(),
+                dtype: trip[2].as_str().unwrap_or("f32").to_string(),
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let j = json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let m = j
+            .get("model")
+            .ok_or_else(|| anyhow::anyhow!("manifest missing model"))?;
+        let model = ModelMeta {
+            name: m.req_str("name")?.to_string(),
+            n_layers: m.req_usize("n_layers")?,
+            d_model: m.req_usize("d_model")?,
+            n_heads: m.req_usize("n_heads")?,
+            n_kv_heads: m.req_usize("n_kv_heads")?,
+            head_dim: m.req_usize("head_dim")?,
+            d_ff: m.req_usize("d_ff")?,
+            vocab: m.req_usize("vocab")?,
+            rope_theta: m.req_f64("rope_theta")?,
+            qkv_bias: m.get("qkv_bias").and_then(Json::as_bool).unwrap_or(false),
+            s_max: m.req_usize("s_max")?,
+            chunk: m.req_usize("chunk")?,
+            rank_max: m.req_usize("rank_max")?,
+            n_adapters: m.req_usize("n_adapters")?,
+            decode_batches: m
+                .req_arr("decode_batches")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            rank_effective: m.req_usize("rank_effective")?,
+        };
+        let ri = j
+            .get("runtime_inputs")
+            .ok_or_else(|| anyhow::anyhow!("missing runtime_inputs"))?;
+        let outs = j
+            .get("outputs")
+            .ok_or_else(|| anyhow::anyhow!("missing outputs"))?;
+        let mut artifacts = Vec::new();
+        for a in j.req_arr("artifacts")? {
+            let kind = a.req_str("kind")?.to_string();
+            let batch = a.req_usize("batch")?;
+            let key = if kind == "prefill" {
+                "prefill".to_string()
+            } else {
+                format!("decode_b{batch}")
+            };
+            artifacts.push(ArtifactEntry {
+                inputs: io_specs(ri.at(&[&key]))?,
+                outputs: io_specs(outs.at(&[&key]))?,
+                key,
+                kind,
+                batch,
+                file: a.req_str("file")?.to_string(),
+            });
+        }
+        Ok(Manifest {
+            model,
+            params: tensor_entries(&j, "params")?,
+            bank: tensor_entries(&j, "bank")?,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, key: &str) -> Option<&ArtifactEntry> {
+        self.artifacts.iter().find(|a| a.key == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_geometry() {
+        let m = ModelMeta {
+            name: "t".into(),
+            n_layers: 4,
+            d_model: 256,
+            n_heads: 8,
+            n_kv_heads: 4,
+            head_dim: 32,
+            d_ff: 704,
+            vocab: 2048,
+            rope_theta: 1e4,
+            qkv_bias: false,
+            s_max: 768,
+            chunk: 64,
+            rank_max: 32,
+            n_adapters: 16,
+            decode_batches: vec![1, 2, 4, 8],
+            rank_effective: 16,
+        };
+        assert_eq!(m.kv_width(), 128);
+        assert_eq!(m.base_bytes_per_token(), 4 * 2 * 128 * 4);
+        assert_eq!(m.res_bytes_per_token(), 4 * 2 * 16 * 4);
+        // Eq. 3 asymmetry: rCache is r/n of bCache
+        let ratio = m.res_bytes_per_token() as f64 / m.base_bytes_per_token() as f64;
+        assert!((ratio - 16.0 / 128.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,303 @@
+//! PJRT runtime: loads the AOT artifacts (`*.hlo.txt`), uploads the model
+//! weights + adapter bank once as device buffers, and exposes typed
+//! prefill/decode calls for the engine's hot path.
+//!
+//! Python never runs here — the HLO text was produced by `make artifacts`
+//! and this module replays it through the `xla` crate's PJRT CPU client
+//! (`HloModuleProto::from_text_file` → compile → `execute_b`).
+
+pub mod manifest;
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub use manifest::{ArtifactEntry, Manifest, ModelMeta};
+
+fn xe(e: xla::Error) -> anyhow::Error {
+    anyhow::anyhow!("xla: {e:?}")
+}
+
+/// Per-call inputs of one prefill chunk (single sequence).
+pub struct PrefillArgs<'a> {
+    /// real tokens of the chunk (<= chunk size; padded internally)
+    pub tokens: &'a [u32],
+    pub cache_len: usize,
+    pub adapter_id: u32,
+    pub adapter_on: bool,
+    /// padded cache slabs, layouts [L,S,KH*HD] (kb/vb) and [L,S,R] (kr/vr)
+    pub kb: &'a [f32],
+    pub vb: &'a [f32],
+    pub kr: &'a [f32],
+    pub vr: &'a [f32],
+}
+
+/// Chunk outputs; `n` below is the number of *real* tokens in the call.
+pub struct PrefillOut {
+    /// [chunk, vocab] (rows past n are padding garbage)
+    pub logits: Vec<f32>,
+    /// [L, chunk, KH*HD]
+    pub kb: Vec<f32>,
+    pub vb: Vec<f32>,
+    /// [L, chunk, R]
+    pub kr: Vec<f32>,
+    pub vr: Vec<f32>,
+    /// merged monolithic chunk KV for the unified baselines [L, chunk, KH*HD]
+    pub km: Vec<f32>,
+    pub vm: Vec<f32>,
+    /// per-layer hidden states [L, chunk, d] (Fig. 5b probe)
+    pub xs: Vec<f32>,
+}
+
+/// One decode step over `rows.len()` sequences (padded to an AOT bucket).
+pub struct DecodeArgs<'a> {
+    pub tokens: &'a [u32],
+    pub cache_lens: &'a [usize],
+    pub adapter_ids: &'a [u32],
+    pub adapter_on: &'a [bool],
+    /// [B, L, S, KH*HD] and [B, L, S, R] slabs (B = padded bucket size)
+    pub kb: &'a [f32],
+    pub vb: &'a [f32],
+    pub kr: &'a [f32],
+    pub vr: &'a [f32],
+}
+
+pub struct DecodeOut {
+    /// [B, vocab]
+    pub logits: Vec<f32>,
+    /// [B, L, KH*HD]
+    pub kb: Vec<f32>,
+    pub vb: Vec<f32>,
+    /// [B, L, R]
+    pub kr: Vec<f32>,
+    pub vr: Vec<f32>,
+    /// merged new-token KV [B, L, KH*HD]
+    pub km: Vec<f32>,
+    pub vm: Vec<f32>,
+}
+
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    /// params + bank, uploaded once, in manifest order
+    weights: Vec<xla::PjRtBuffer>,
+    prefill_exe: xla::PjRtLoadedExecutable,
+    decode_exes: BTreeMap<usize, xla::PjRtLoadedExecutable>,
+    pub dir: PathBuf,
+}
+
+impl PjrtRuntime {
+    /// Load manifest + weights + compile all artifacts from
+    /// `artifacts/<model>/`.
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xe)?;
+
+        // ---- weights.bin -> per-tensor device buffers (uploaded once) ----
+        let raw = std::fs::read(dir.join("weights.bin"))?;
+        anyhow::ensure!(raw.len() % 4 == 0, "weights.bin not f32-aligned");
+        let floats: &[f32] = unsafe {
+            std::slice::from_raw_parts(raw.as_ptr() as *const f32, raw.len() / 4)
+        };
+        let mut weights = Vec::new();
+        for entry in manifest.params.iter().chain(manifest.bank.iter()) {
+            let n = entry.elems();
+            anyhow::ensure!(
+                entry.offset + n <= floats.len(),
+                "weights.bin too small for {}",
+                entry.name
+            );
+            let data = &floats[entry.offset..entry.offset + n];
+            let buf = client
+                .buffer_from_host_buffer::<f32>(data, &entry.shape, None)
+                .map_err(xe)?;
+            weights.push(buf);
+        }
+
+        // ---- compile artifacts ----
+        let compile = |file: &str| -> anyhow::Result<xla::PjRtLoadedExecutable> {
+            let proto =
+                xla::HloModuleProto::from_text_file(dir.join(file)).map_err(xe)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            client.compile(&comp).map_err(xe)
+        };
+        let prefill_entry = manifest
+            .artifact("prefill")
+            .ok_or_else(|| anyhow::anyhow!("manifest lacks prefill artifact"))?;
+        let prefill_exe = compile(&prefill_entry.file)?;
+        let mut decode_exes = BTreeMap::new();
+        for a in &manifest.artifacts {
+            if a.kind == "decode" {
+                decode_exes.insert(a.batch, compile(&a.file)?);
+            }
+        }
+        anyhow::ensure!(!decode_exes.is_empty(), "no decode artifacts");
+        Ok(PjrtRuntime {
+            client,
+            manifest,
+            weights,
+            prefill_exe,
+            decode_exes,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn meta(&self) -> &ModelMeta {
+        &self.manifest.model
+    }
+
+    pub fn decode_buckets(&self) -> Vec<usize> {
+        self.decode_exes.keys().copied().collect()
+    }
+
+    /// Smallest compiled decode bucket that fits `rows`.
+    pub fn bucket_for(&self, rows: usize) -> anyhow::Result<usize> {
+        self.decode_exes
+            .keys()
+            .copied()
+            .find(|&b| b >= rows)
+            .ok_or_else(|| anyhow::anyhow!("no decode bucket >= {rows}"))
+    }
+
+    fn f32_buf(&self, data: &[f32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<f32>(data, dims, None)
+            .map_err(xe)
+    }
+
+    fn i32_buf(&self, data: &[i32], dims: &[usize]) -> anyhow::Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_buffer::<i32>(data, dims, None)
+            .map_err(xe)
+    }
+
+    fn run(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: Vec<xla::PjRtBuffer>,
+    ) -> anyhow::Result<Vec<xla::Literal>> {
+        let mut args: Vec<&xla::PjRtBuffer> = Vec::with_capacity(
+            self.weights.len() + inputs.len(),
+        );
+        args.extend(self.weights.iter());
+        args.extend(inputs.iter());
+        let outs = exe.execute_b(&args).map_err(xe)?;
+        anyhow::ensure!(!outs.is_empty() && !outs[0].is_empty(), "no outputs");
+        // jax lowers with return_tuple=True: a single tuple-shaped output
+        let lit = outs[0][0].to_literal_sync().map_err(xe)?;
+        let mut lit = lit;
+        lit.decompose_tuple().map_err(xe)
+    }
+
+    /// Execute one prefill chunk. `args.tokens.len()` may be < chunk; the
+    /// tail is padded with PAD ids (outputs beyond the real rows are
+    /// ignored by the caller).
+    pub fn prefill(&self, a: &PrefillArgs) -> anyhow::Result<PrefillOut> {
+        let m = self.meta();
+        let (c, s, l) = (m.chunk, m.s_max, m.n_layers);
+        let (kvw, r) = (m.kv_width(), m.rank_max);
+        anyhow::ensure!(a.tokens.len() <= c, "chunk overflow");
+        anyhow::ensure!(a.cache_len + a.tokens.len() <= s, "cache overflow");
+        anyhow::ensure!(a.kb.len() == l * s * kvw, "kb slab shape");
+        anyhow::ensure!(a.kr.len() == l * s * r, "kr slab shape");
+
+        let mut tokens = vec![0i32; c];
+        for (i, &t) in a.tokens.iter().enumerate() {
+            tokens[i] = t as i32;
+        }
+        let inputs = vec![
+            self.i32_buf(&tokens, &[c])?,
+            self.i32_buf(&[a.cache_len as i32], &[])?,
+            self.i32_buf(&[a.adapter_id as i32], &[])?,
+            self.f32_buf(&[if a.adapter_on { 1.0 } else { 0.0 }], &[])?,
+            self.f32_buf(a.kb, &[l, s, m.n_kv_heads, m.head_dim])?,
+            self.f32_buf(a.vb, &[l, s, m.n_kv_heads, m.head_dim])?,
+            self.f32_buf(a.kr, &[l, s, r])?,
+            self.f32_buf(a.vr, &[l, s, r])?,
+        ];
+        let lits = self.run(&self.prefill_exe, inputs)?;
+        anyhow::ensure!(lits.len() == 8, "prefill outputs: {}", lits.len());
+        let v = |i: usize| -> anyhow::Result<Vec<f32>> {
+            lits[i].to_vec::<f32>().map_err(xe)
+        };
+        Ok(PrefillOut {
+            logits: v(0)?,
+            kb: v(1)?,
+            vb: v(2)?,
+            kr: v(3)?,
+            vr: v(4)?,
+            km: v(5)?,
+            vm: v(6)?,
+            xs: v(7)?,
+        })
+    }
+
+    /// Execute one decode step for up to `bucket` rows (caller pads).
+    pub fn decode(&self, bucket: usize, a: &DecodeArgs) -> anyhow::Result<DecodeOut> {
+        let m = self.meta();
+        let (s, l) = (m.s_max, m.n_layers);
+        let (kvw, r) = (m.kv_width(), m.rank_max);
+        let exe = self
+            .decode_exes
+            .get(&bucket)
+            .ok_or_else(|| anyhow::anyhow!("no decode bucket {bucket}"))?;
+        let b = bucket;
+        anyhow::ensure!(a.tokens.len() == b, "decode rows != bucket");
+        anyhow::ensure!(a.kb.len() == b * l * s * kvw, "kb batch slab shape");
+        anyhow::ensure!(a.kr.len() == b * l * s * r, "kr batch slab shape");
+
+        let tokens: Vec<i32> = a.tokens.iter().map(|&t| t as i32).collect();
+        let lens: Vec<i32> = a.cache_lens.iter().map(|&x| x as i32).collect();
+        let ids: Vec<i32> = a.adapter_ids.iter().map(|&x| x as i32).collect();
+        let on: Vec<f32> = a
+            .adapter_on
+            .iter()
+            .map(|&x| if x { 1.0 } else { 0.0 })
+            .collect();
+        let inputs = vec![
+            self.i32_buf(&tokens, &[b])?,
+            self.i32_buf(&lens, &[b])?,
+            self.i32_buf(&ids, &[b])?,
+            self.f32_buf(&on, &[b])?,
+            self.f32_buf(a.kb, &[b, l, s, m.n_kv_heads, m.head_dim])?,
+            self.f32_buf(a.vb, &[b, l, s, m.n_kv_heads, m.head_dim])?,
+            self.f32_buf(a.kr, &[b, l, s, r])?,
+            self.f32_buf(a.vr, &[b, l, s, r])?,
+        ];
+        let lits = self.run(exe, inputs)?;
+        anyhow::ensure!(lits.len() == 7, "decode outputs: {}", lits.len());
+        let v = |i: usize| -> anyhow::Result<Vec<f32>> {
+            lits[i].to_vec::<f32>().map_err(xe)
+        };
+        Ok(DecodeOut {
+            logits: v(0)?,
+            kb: v(1)?,
+            vb: v(2)?,
+            kr: v(3)?,
+            vr: v(4)?,
+            km: v(5)?,
+            vm: v(6)?,
+        })
+    }
+}
+
+/// Greedy argmax over one logits row.
+pub fn argmax(row: &[f32]) -> u32 {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0, 3.0]), 1);
+        assert_eq!(argmax(&[-5.0]), 0);
+    }
+}

@@ -1,0 +1,294 @@
+//! Minimal HTTP/1.1 JSON serving front-end (hand-rolled on std::net — the
+//! offline vendor set has no hyper/axum/tokio; DESIGN.md §3).
+//!
+//! POST /generate {"prompt": "...", "adapter": 3, "max_new": 24}
+//!   -> {"tokens": [...], "text": "...", "ttft_us": ..., "latency_us": ...}
+//! GET /stats -> engine metrics JSON
+//!
+//! One engine thread owns the `Engine` and ticks it; connection threads
+//! submit requests through a channel and wait on per-request channels.
+
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc;
+use std::sync::Arc;
+
+use crate::engine::{Engine, Request, Tick};
+use crate::metrics::FinishedRequest;
+use crate::util::json::{self, Json};
+use crate::util::tokenizer::HashTokenizer;
+
+enum Cmd {
+    Submit(Request, mpsc::Sender<FinishedRequest>),
+    Stats(mpsc::Sender<Json>),
+    Shutdown,
+}
+
+pub struct Server {
+    tx: mpsc::Sender<Cmd>,
+    tokenizer: HashTokenizer,
+    max_ctx: usize,
+}
+
+impl Server {
+    /// Spawn the engine thread; returns the submission handle.
+    pub fn start(mut engine: Engine) -> (Arc<Server>, std::thread::JoinHandle<()>) {
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let tokenizer = HashTokenizer::new(engine.meta().vocab);
+        let max_ctx = engine.meta().s_max;
+        let handle = std::thread::spawn(move || {
+            let mut waiters: HashMap<u64, mpsc::Sender<FinishedRequest>> = HashMap::new();
+            let mut next_id = 1u64;
+            loop {
+                // drain the command queue
+                loop {
+                    match rx.try_recv() {
+                        Ok(Cmd::Submit(mut req, reply)) => {
+                            req.id = next_id;
+                            next_id += 1;
+                            req.arrival_us = engine.now_us();
+                            waiters.insert(req.id, reply);
+                            engine.submit(req);
+                        }
+                        Ok(Cmd::Stats(reply)) => {
+                            let _ = reply.send(engine.metrics.to_json());
+                        }
+                        Ok(Cmd::Shutdown) => return,
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => return,
+                    }
+                }
+                match engine.tick() {
+                    Ok(Tick::Progress) => {
+                        for fin in engine.drain_finished() {
+                            if let Some(w) = waiters.remove(&fin.id) {
+                                let _ = w.send(fin);
+                            }
+                        }
+                    }
+                    Ok(Tick::Idle) => {
+                        // real-time serving: block briefly for new work
+                        std::thread::sleep(std::time::Duration::from_millis(1));
+                    }
+                    Err(e) => {
+                        eprintln!("engine error: {e:#}");
+                        return;
+                    }
+                }
+            }
+        });
+        (
+            Arc::new(Server { tx, tokenizer, max_ctx }),
+            handle,
+        )
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Cmd::Shutdown);
+    }
+
+    pub fn generate(
+        &self,
+        prompt_tokens: Vec<u32>,
+        adapter: u32,
+        max_new: usize,
+    ) -> anyhow::Result<FinishedRequest> {
+        anyhow::ensure!(!prompt_tokens.is_empty(), "empty prompt");
+        anyhow::ensure!(
+            prompt_tokens.len() + max_new <= self.max_ctx,
+            "prompt+output exceeds context window {}",
+            self.max_ctx
+        );
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let req = Request {
+            id: 0, // assigned by the engine thread
+            tag: 0,
+            adapter,
+            tokens: prompt_tokens,
+            max_new,
+            arrival_us: 0,
+            ignore_eos: false,
+        };
+        self.tx
+            .send(Cmd::Submit(req, reply_tx))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("request dropped (OOM?)"))
+    }
+
+    pub fn stats(&self) -> anyhow::Result<Json> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Cmd::Stats(tx))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))
+    }
+
+    /// Blocking accept loop. `max_requests` bounds the loop for tests
+    /// (None = run forever).
+    pub fn serve_http(&self, addr: &str, max_requests: Option<usize>) -> anyhow::Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        eprintln!("forkkv serving on http://{addr}");
+        let mut served = 0usize;
+        for stream in listener.incoming() {
+            let Ok(stream) = stream else { continue };
+            if let Err(e) = self.handle_conn(stream) {
+                eprintln!("conn error: {e:#}");
+            }
+            served += 1;
+            if let Some(max) = max_requests {
+                if served >= max {
+                    break;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn handle_conn(&self, mut stream: TcpStream) -> anyhow::Result<()> {
+        stream.set_nodelay(true).ok();
+        let mut reader = BufReader::new(stream.try_clone()?);
+        let mut request_line = String::new();
+        reader.read_line(&mut request_line)?;
+        let mut parts = request_line.split_whitespace();
+        let method = parts.next().unwrap_or("").to_string();
+        let path = parts.next().unwrap_or("").to_string();
+
+        let mut content_len = 0usize;
+        loop {
+            let mut line = String::new();
+            reader.read_line(&mut line)?;
+            let line = line.trim_end();
+            if line.is_empty() {
+                break;
+            }
+            if let Some(v) = line
+                .to_ascii_lowercase()
+                .strip_prefix("content-length:")
+                .map(|v| v.trim().to_string())
+            {
+                content_len = v.parse().unwrap_or(0);
+            }
+        }
+        let mut body = vec![0u8; content_len];
+        reader.read_exact(&mut body)?;
+        let body = String::from_utf8_lossy(&body).to_string();
+
+        let (status, payload) = match (method.as_str(), path.as_str()) {
+            ("POST", "/generate") => match self.api_generate(&body) {
+                Ok(j) => ("200 OK", j),
+                Err(e) => (
+                    "400 Bad Request",
+                    Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+                ),
+            },
+            ("GET", "/stats") => match self.stats() {
+                Ok(j) => ("200 OK", j),
+                Err(e) => (
+                    "500 Internal Server Error",
+                    Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+                ),
+            },
+            ("GET", "/health") => ("200 OK", Json::obj(vec![("ok", Json::Bool(true))])),
+            _ => (
+                "404 Not Found",
+                Json::obj(vec![("error", Json::str("not found"))]),
+            ),
+        };
+        let body = payload.to_string();
+        let resp = format!(
+            "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+            body.len()
+        );
+        stream.write_all(resp.as_bytes())?;
+        Ok(())
+    }
+
+    fn api_generate(&self, body: &str) -> anyhow::Result<Json> {
+        let j = json::parse(body).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+        let prompt = j.req_str("prompt")?;
+        let adapter = j.get("adapter").and_then(Json::as_usize).unwrap_or(0) as u32;
+        let max_new = j.get("max_new").and_then(Json::as_usize).unwrap_or(16);
+        let tokens = self.tokenizer.encode(prompt);
+        let fin = self.generate(tokens, adapter, max_new)?;
+        Ok(Json::obj(vec![
+            (
+                "tokens",
+                Json::Arr(fin.generated.iter().map(|&t| Json::num(t as f64)).collect()),
+            ),
+            ("text", Json::str(self.tokenizer.decode(&fin.generated))),
+            ("prompt_tokens", Json::num(fin.prompt_len as f64)),
+            ("hit_tokens", Json::num(fin.hit_full as f64)),
+            ("ttft_us", Json::num(fin.ttft_us() as f64)),
+            ("latency_us", Json::num(fin.latency_us() as f64)),
+        ]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CacheConfig, CachePolicy, EngineConfig};
+    use crate::exec::SimExecutor;
+
+    fn sim_server() -> (Arc<Server>, std::thread::JoinHandle<()>) {
+        let cfg = EngineConfig {
+            policy: CachePolicy::Disaggregated,
+            cache: CacheConfig { page_tokens: 16, budget_bytes: 32 << 20 },
+            ..EngineConfig::default()
+        };
+        let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8]).unwrap();
+        let engine = Engine::new(cfg, Box::new(sim)).unwrap();
+        Server::start(engine)
+    }
+
+    #[test]
+    fn generate_round_trip_over_engine_thread() {
+        let (srv, handle) = sim_server();
+        let tokens: Vec<u32> = (10..90).collect();
+        let fin = srv.generate(tokens, 1, 8).unwrap();
+        assert_eq!(fin.generated.len(), 8);
+        srv.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn http_round_trip() {
+        let (srv, handle) = sim_server();
+        let srv2 = srv.clone();
+        let addr = "127.0.0.1:18731";
+        let server_thread = {
+            let srv = srv.clone();
+            let addr = addr.to_string();
+            std::thread::spawn(move || srv.serve_http(&addr, Some(2)).unwrap())
+        };
+        std::thread::sleep(std::time::Duration::from_millis(100));
+
+        let body = r#"{"prompt": "the quick brown fox jumps over the lazy dog", "adapter": 2, "max_new": 6}"#;
+        let mut conn = TcpStream::connect(addr).unwrap();
+        let req = format!(
+            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        );
+        conn.write_all(req.as_bytes()).unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        let json_body = resp.split("\r\n\r\n").nth(1).unwrap();
+        let j = json::parse(json_body).unwrap();
+        assert_eq!(j.at(&["tokens"]).as_arr().unwrap().len(), 6);
+
+        // stats endpoint
+        let mut conn = TcpStream::connect(addr).unwrap();
+        conn.write_all(b"GET /stats HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+
+        server_thread.join().unwrap();
+        srv2.shutdown();
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,10 @@
+//! In-repo substrates: the offline vendor set lacks serde / rand / criterion /
+//! proptest, so the building blocks they would provide are implemented here
+//! (DESIGN.md §3). Each is small, tested, and tailored to what the serving
+//! stack actually needs.
+
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod tokenizer;

@@ -1,0 +1,191 @@
+//! Deterministic PRNG + the distributions the workload generators need.
+//!
+//! xoshiro256** seeded via SplitMix64 — fast, well-distributed, and fully
+//! reproducible across runs (every experiment records its seed).
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+impl Rng {
+    pub fn seeded(seed: u64) -> Self {
+        let mut sm = seed;
+        Rng {
+            s: [
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+                splitmix64(&mut sm),
+            ],
+        }
+    }
+
+    /// Derive an independent child stream (for per-request generators).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::seeded(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[1]
+            .wrapping_mul(5)
+            .rotate_left(7)
+            .wrapping_mul(9);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, n).
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Uniform in [lo, hi] inclusive.
+    pub fn range(&mut self, lo: usize, hi: usize) -> usize {
+        lo + self.below(hi - lo + 1)
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Exponential with the given rate (inter-arrival times of a Poisson
+    /// process at `rate` events per unit time).
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0);
+        -self.f64().max(1e-300).ln() / rate
+    }
+
+    /// Poisson-distributed count (Knuth's method; fine for lambda <~ 30,
+    /// normal approximation above that).
+    pub fn poisson(&mut self, lambda: f64) -> usize {
+        if lambda > 30.0 {
+            let v = lambda + lambda.sqrt() * self.normal();
+            return v.max(0.0).round() as usize;
+        }
+        let l = (-lambda).exp();
+        let mut k = 0usize;
+        let mut p = 1.0;
+        loop {
+            p *= self.f64();
+            if p <= l {
+                return k;
+            }
+            k += 1;
+        }
+    }
+
+    /// Sample a token id in [2, vocab) (0/1 reserved for pad/eos).
+    pub fn token(&mut self, vocab: usize) -> u32 {
+        2 + self.below(vocab - 2) as u32
+    }
+
+    pub fn tokens(&mut self, n: usize, vocab: usize) -> Vec<u32> {
+        (0..n).map(|_| self.token(vocab)).collect()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::seeded(7);
+        let mut b = Rng::seeded(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut rng = Rng::seeded(1);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| rng.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean={mean}");
+    }
+
+    #[test]
+    fn poisson_mean_matches_lambda() {
+        let mut rng = Rng::seeded(2);
+        for &lam in &[0.5, 3.0, 12.0, 50.0] {
+            let n = 5000;
+            let mean: f64 =
+                (0..n).map(|_| rng.poisson(lam) as f64).sum::<f64>() / n as f64;
+            assert!(
+                (mean - lam).abs() < lam.max(1.0) * 0.15,
+                "lambda={lam} mean={mean}"
+            );
+        }
+    }
+
+    #[test]
+    fn exponential_mean() {
+        let mut rng = Rng::seeded(3);
+        let rate = 2.0;
+        let n = 20_000;
+        let mean: f64 =
+            (0..n).map(|_| rng.exponential(rate)).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.05, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::seeded(4);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn tokens_in_range() {
+        let mut rng = Rng::seeded(5);
+        for t in rng.tokens(1000, 128) {
+            assert!((2..128).contains(&(t as usize)));
+        }
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut root = Rng::seeded(6);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+}

@@ -1,0 +1,82 @@
+//! Deterministic hash tokenizer for the examples and the HTTP server.
+//!
+//! The sim models have a small vocab with untrained embeddings, so any
+//! injective-enough text->id mapping exercises the serving stack
+//! identically to a real BPE tokenizer: equal text spans map to equal
+//! token-id spans (which is the property prefix caching depends on).
+
+/// Reserved ids: 0 = pad, 1 = eos.
+pub const PAD: u32 = 0;
+pub const EOS: u32 = 1;
+
+#[derive(Debug, Clone)]
+pub struct HashTokenizer {
+    vocab: usize,
+}
+
+impl HashTokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab > 2);
+        Self { vocab }
+    }
+
+    /// Whitespace-split words, each hashed into [2, vocab).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace()
+            .map(|w| 2 + (fnv1a(w.as_bytes()) % (self.vocab as u64 - 2)) as u32)
+            .collect()
+    }
+
+    /// Tokens back to a printable pseudo-text (ids, since hashing is lossy).
+    pub fn decode(&self, tokens: &[u32]) -> String {
+        tokens
+            .iter()
+            .map(|t| match *t {
+                PAD => "<pad>".to_string(),
+                EOS => "<eos>".to_string(),
+                t => format!("t{t}"),
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+}
+
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn equal_text_equal_tokens() {
+        let t = HashTokenizer::new(2048);
+        let a = t.encode("the quick brown fox");
+        let b = t.encode("the quick brown fox");
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+    }
+
+    #[test]
+    fn shared_prefix_property() {
+        let t = HashTokenizer::new(2048);
+        let a = t.encode("shared context part one QUESTION alpha");
+        let b = t.encode("shared context part one QUESTION beta");
+        assert_eq!(a[..5], b[..5]);
+        assert_ne!(a[5], b[5]);
+    }
+
+    #[test]
+    fn ids_in_range() {
+        let t = HashTokenizer::new(64);
+        for tok in t.encode("a b c d e f g h i j k l") {
+            assert!((2..64).contains(&(tok as usize)));
+        }
+    }
+}

@@ -1,0 +1,188 @@
+//! Real-mode engine integration: the full L3 stack over real PJRT
+//! artifacts, verifying (a) policy equivalence where the math says they
+//! must agree, (b) cross-adapter fork correctness, and (c) determinism of
+//! the incremental decode-batch assembly against a cold engine.
+//!
+//! Skips cleanly when `make artifacts` has not run.
+
+use std::path::{Path, PathBuf};
+
+use forkkv::config::{CacheConfig, CachePolicy, EngineConfig};
+use forkkv::engine::{Engine, Request, Tick};
+use forkkv::exec::PjrtExecutor;
+use forkkv::metrics::FinishedRequest;
+use forkkv::util::rng::Rng;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/llama3-8b-sim");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn engine(policy: CachePolicy, budget_mb: usize) -> Option<Engine> {
+    let dir = artifacts_dir()?;
+    let exec = PjrtExecutor::load(&dir).expect("load artifacts");
+    let cfg = EngineConfig {
+        policy,
+        cache: CacheConfig { page_tokens: 16, budget_bytes: budget_mb << 20 },
+        seed: 3,
+        ..EngineConfig::default()
+    };
+    Some(Engine::new(cfg, Box::new(exec)).expect("engine"))
+}
+
+fn drive(e: &mut Engine, n: usize) -> Vec<FinishedRequest> {
+    let mut fin = Vec::new();
+    while fin.len() < n {
+        match e.tick().expect("tick") {
+            Tick::Progress => fin.extend(e.drain_finished()),
+            Tick::Idle => break,
+        }
+    }
+    fin.sort_by_key(|f| f.id);
+    fin
+}
+
+fn submit_stream(e: &mut Engine, shared: &[u32], n: usize, same_adapter: bool) {
+    for i in 0..n {
+        let mut tokens = shared.to_vec();
+        tokens.extend(Rng::seeded(50 + i as u64).tokens(6, 2048));
+        e.submit(Request {
+            id: i as u64,
+            tag: 0,
+            adapter: if same_adapter { 1 } else { 1 + (i % 3) as u32 },
+            tokens,
+            max_new: 10,
+            arrival_us: i as u64,
+            ignore_eos: true,
+        });
+    }
+}
+
+/// Same adapter + same prefix: ForkKV's reconstruction is mathematically
+/// exact (RoPE linearity), so its outputs must match lossless prefix
+/// caching token-for-token.
+#[test]
+fn forkkv_equals_prefix_caching_for_same_adapter() {
+    let Some(_) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let shared = Rng::seeded(9).tokens(180, 2048);
+    let run = |policy| {
+        let mut e = engine(policy, 64).unwrap();
+        submit_stream(&mut e, &shared, 4, true);
+        let fin = drive(&mut e, 4);
+        e.check_quiescent().unwrap();
+        fin.iter().map(|f| f.generated.clone()).collect::<Vec<_>>()
+    };
+    let fork = run(CachePolicy::Disaggregated);
+    let prefix = run(CachePolicy::UnifiedPerAdapter);
+    assert_eq!(fork.len(), 4);
+    let mut agree = 0;
+    let mut total = 0;
+    for (a, b) in fork.iter().zip(prefix.iter()) {
+        for (x, y) in a.iter().zip(b.iter()) {
+            total += 1;
+            agree += usize::from(x == y);
+        }
+    }
+    // same-adapter reuse is exact; tiny drift can appear only through
+    // f32 re-association in different batch shapes
+    assert!(
+        agree as f64 / total as f64 > 0.95,
+        "same-adapter forkkv must match lossless baseline: {agree}/{total}"
+    );
+}
+
+/// Cross-adapter streams: ForkKV inherits bCache (partial hits > 0)
+/// while the unified baseline shares nothing.
+#[test]
+fn cross_adapter_inheritance_happens_on_the_real_path() {
+    let Some(_) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let shared = Rng::seeded(10).tokens(160, 2048);
+
+    let mut fork = engine(CachePolicy::Disaggregated, 64).unwrap();
+    submit_stream(&mut fork, &shared, 4, false);
+    let fin = drive(&mut fork, 4);
+    assert_eq!(fin.len(), 4);
+    let partial: usize = fin.iter().map(|f| f.hit_partial).sum();
+    assert!(partial > 300, "expected bCache inheritance, got {partial}");
+
+    let mut unified = engine(CachePolicy::UnifiedPerAdapter, 64).unwrap();
+    submit_stream(&mut unified, &shared, 4, false);
+    let fin_u = drive(&mut unified, 4);
+    let shared_u: usize = fin_u.iter().map(|f| f.hit_partial + f.hit_full).sum();
+    assert!(
+        shared_u < partial,
+        "unified must share less cross-adapter ({shared_u} vs {partial})"
+    );
+    fork.check_quiescent().unwrap();
+    unified.check_quiescent().unwrap();
+}
+
+/// Full-reuse inherits everything cross-adapter (maximum sharing, lossy).
+#[test]
+fn full_reuse_shares_everything_on_the_real_path() {
+    let Some(_) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let shared = Rng::seeded(11).tokens(160, 2048);
+    let mut e = engine(CachePolicy::FullReuse, 64).unwrap();
+    submit_stream(&mut e, &shared, 3, false);
+    let fin = drive(&mut e, 3);
+    // requests 2 and 3 fully hit request 1's merged cache
+    let hits: Vec<usize> = fin.iter().map(|f| f.hit_full).collect();
+    assert_eq!(hits[0], 0);
+    assert!(hits[1] >= 144 && hits[2] >= 144, "{hits:?}");
+}
+
+/// The incremental decode-batch assembly must not change results:
+/// running requests concurrently (stable batch, incremental path) vs
+/// strictly sequentially (cold batches every time) yields the same tokens.
+#[test]
+fn incremental_batch_assembly_is_lossless() {
+    let Some(_) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let shared = Rng::seeded(12).tokens(120, 2048);
+
+    // concurrent: all arrive at once -> stable decode batch of 3
+    let mut conc = engine(CachePolicy::Disaggregated, 64).unwrap();
+    submit_stream(&mut conc, &shared, 3, false);
+    let fin_c = drive(&mut conc, 3);
+
+    // sequential: one at a time -> batch of 1, no incremental reuse
+    let mut seq = engine(CachePolicy::Disaggregated, 64).unwrap();
+    let mut fin_s = Vec::new();
+    for i in 0..3u64 {
+        let mut tokens = shared.clone();
+        tokens.extend(Rng::seeded(50 + i).tokens(6, 2048));
+        seq.submit(Request {
+            id: i,
+            tag: 0,
+            adapter: 1 + (i % 3) as u32,
+            tokens,
+            max_new: 10,
+            arrival_us: seq.now_us(),
+            ignore_eos: true,
+        });
+        fin_s.extend(drive(&mut seq, 1));
+    }
+    fin_s.sort_by_key(|f| f.id);
+
+    for (c, s) in fin_c.iter().zip(fin_s.iter()) {
+        assert_eq!(c.id, s.id);
+        // sequential mode sees more published cache (prior requests done),
+        // so hits differ; generated tokens must still agree at the start,
+        // where both attend over identical state
+        assert_eq!(
+            c.generated[0], s.generated[0],
+            "first generated token must be batch-size independent"
+        );
+    }
+}

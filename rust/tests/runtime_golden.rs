@@ -1,0 +1,222 @@
+//! Cross-language numerics contract: replay the python-side golden run
+//! (python/compile/aot.py::make_golden) through the Rust PJRT runtime and
+//! require matching values. This is the proof that the AOT bridge — HLO
+//! text, weight upload, argument order, cache layouts — is faithful.
+//!
+//! Requires `make artifacts` (skips cleanly when artifacts are absent so
+//! `cargo test` stays green on a fresh checkout).
+
+use std::path::{Path, PathBuf};
+
+use forkkv::runtime::{DecodeArgs, PjrtRuntime, PrefillArgs};
+use forkkv::util::json::{self, Json};
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/llama3-8b-sim");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn approx(a: &[f32], b: &[f64], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (&x, &y)) in a.iter().zip(b.iter()).enumerate() {
+        assert!(
+            (x - y as f32).abs() <= tol + tol * (y as f32).abs(),
+            "{what}[{i}]: rust {x} vs python {y}"
+        );
+    }
+}
+
+fn f64s(j: &Json) -> Vec<f64> {
+    j.as_arr()
+        .unwrap()
+        .iter()
+        .map(|v| v.as_f64().unwrap())
+        .collect()
+}
+
+#[test]
+fn golden_prefill_and_decode_match_python() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return;
+    };
+    let rt = PjrtRuntime::load(&dir).expect("load runtime");
+    let m = rt.meta().clone();
+    let golden = json::parse(
+        &std::fs::read_to_string(dir.join("golden.json")).expect("golden.json"),
+    )
+    .expect("parse golden");
+
+    let tokens: Vec<u32> = golden
+        .req_arr("tokens")
+        .unwrap()
+        .iter()
+        .map(|t| t.as_usize().unwrap() as u32)
+        .collect();
+    assert_eq!(tokens.len(), m.chunk);
+    let adapter = golden.req_usize("adapter_id").unwrap() as u32;
+    let n_keep = golden.req_usize("n_keep").unwrap();
+
+    // ---- prefill an empty cache ----
+    let (l, s) = (m.n_layers, m.s_max);
+    let (kvw, r) = (m.kv_width(), m.rank_max);
+    let kb = vec![0.0f32; l * s * kvw];
+    let vb = kb.clone();
+    let kr = vec![0.0f32; l * s * r];
+    let vr = kr.clone();
+    let out = rt
+        .prefill(&PrefillArgs {
+            tokens: &tokens,
+            cache_len: 0,
+            adapter_id: adapter,
+            adapter_on: true,
+            kb: &kb,
+            vb: &vb,
+            kr: &kr,
+            vr: &vr,
+        })
+        .expect("prefill");
+
+    let last8 = &out.logits[(m.chunk - 1) * m.vocab..(m.chunk - 1) * m.vocab + 8];
+    approx(last8, &f64s(golden.at(&["prefill_logits_last8"])), 2e-4, "logits");
+    approx(&out.kb[..8], &f64s(golden.at(&["prefill_kb_l0"])), 2e-4, "kb");
+    approx(&out.kr[..8], &f64s(golden.at(&["prefill_kr_l0"])), 2e-4, "kr");
+    approx(&out.km[..8], &f64s(golden.at(&["prefill_km_l0"])), 2e-4, "km");
+
+    // ---- write the first n_keep chunk tokens into the cache slabs ----
+    let mut kb2 = kb.clone();
+    let mut vb2 = vb.clone();
+    let mut kr2 = kr.clone();
+    let mut vr2 = vr.clone();
+    for li in 0..l {
+        for t in 0..n_keep {
+            let src = (li * m.chunk + t) * kvw;
+            let dst = (li * s + t) * kvw;
+            kb2[dst..dst + kvw].copy_from_slice(&out.kb[src..src + kvw]);
+            vb2[dst..dst + kvw].copy_from_slice(&out.vb[src..src + kvw]);
+            let src_r = (li * m.chunk + t) * r;
+            let dst_r = (li * s + t) * r;
+            kr2[dst_r..dst_r + r].copy_from_slice(&out.kr[src_r..src_r + r]);
+            vr2[dst_r..dst_r + r].copy_from_slice(&out.vr[src_r..src_r + r]);
+        }
+    }
+
+    // ---- one decode step (batch bucket 2, row 0 live, row 1 inert) ----
+    let bucket = 2usize;
+    let tok = golden.req_usize("decode_token").unwrap() as u32;
+    let mut bkb = vec![0.0f32; bucket * l * s * kvw];
+    let mut bvb = bkb.clone();
+    let mut bkr = vec![0.0f32; bucket * l * s * r];
+    let mut bvr = bkr.clone();
+    bkb[..l * s * kvw].copy_from_slice(&kb2);
+    bvb[..l * s * kvw].copy_from_slice(&vb2);
+    bkr[..l * s * r].copy_from_slice(&kr2);
+    bvr[..l * s * r].copy_from_slice(&vr2);
+    let dec = rt
+        .decode(
+            bucket,
+            &DecodeArgs {
+                tokens: &[tok, 0],
+                cache_lens: &[n_keep, 0],
+                adapter_ids: &[adapter, 0],
+                adapter_on: &[true, false],
+                kb: &bkb,
+                vb: &bvb,
+                kr: &bkr,
+                vr: &bvr,
+            },
+        )
+        .expect("decode");
+
+    approx(
+        &dec.logits[..8],
+        &f64s(golden.at(&["decode_logits8"])),
+        2e-4,
+        "decode logits",
+    );
+    let am = forkkv::runtime::argmax(&dec.logits[..m.vocab]);
+    assert_eq!(am as usize, golden.req_usize("decode_argmax").unwrap());
+}
+
+#[test]
+fn decode_buckets_agree_with_each_other() {
+    // the same row must produce identical logits regardless of bucket size
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let rt = PjrtRuntime::load(&dir).expect("load runtime");
+    let m = rt.meta().clone();
+    let (l, s) = (m.n_layers, m.s_max);
+    let (kvw, r) = (m.kv_width(), m.rank_max);
+
+    // build a 5-token cache via prefill
+    let tokens: Vec<u32> = (0..5).map(|i| 10 + i as u32).collect();
+    let kb = vec![0.0f32; l * s * kvw];
+    let kr = vec![0.0f32; l * s * r];
+    let out = rt
+        .prefill(&PrefillArgs {
+            tokens: &tokens,
+            cache_len: 0,
+            adapter_id: 1,
+            adapter_on: true,
+            kb: &kb,
+            vb: &kb.clone(),
+            kr: &kr,
+            vr: &kr.clone(),
+        })
+        .unwrap();
+    let mut kb2 = kb.clone();
+    let mut vb2 = kb.clone();
+    let mut kr2 = kr.clone();
+    let mut vr2 = kr.clone();
+    for li in 0..l {
+        for t in 0..5 {
+            let (srcb, dstb) = ((li * m.chunk + t) * kvw, (li * s + t) * kvw);
+            kb2[dstb..dstb + kvw].copy_from_slice(&out.kb[srcb..srcb + kvw]);
+            vb2[dstb..dstb + kvw].copy_from_slice(&out.vb[srcb..srcb + kvw]);
+            let (srcr, dstr) = ((li * m.chunk + t) * r, (li * s + t) * r);
+            kr2[dstr..dstr + r].copy_from_slice(&out.kr[srcr..srcr + r]);
+            vr2[dstr..dstr + r].copy_from_slice(&out.vr[srcr..srcr + r]);
+        }
+    }
+
+    let mut per_bucket: Vec<Vec<f32>> = Vec::new();
+    for &bucket in &[1usize, 4] {
+        let mut bkb = vec![0.0f32; bucket * l * s * kvw];
+        let mut bvb = bkb.clone();
+        let mut bkr = vec![0.0f32; bucket * l * s * r];
+        let mut bvr = bkr.clone();
+        bkb[..l * s * kvw].copy_from_slice(&kb2);
+        bvb[..l * s * kvw].copy_from_slice(&vb2);
+        bkr[..l * s * r].copy_from_slice(&kr2);
+        bvr[..l * s * r].copy_from_slice(&vr2);
+        let mut toks = vec![0u32; bucket];
+        toks[0] = 42;
+        let mut lens = vec![0usize; bucket];
+        lens[0] = 5;
+        let mut ids = vec![0u32; bucket];
+        ids[0] = 1;
+        let mut on = vec![false; bucket];
+        on[0] = true;
+        let dec = rt
+            .decode(
+                bucket,
+                &DecodeArgs {
+                    tokens: &toks,
+                    cache_lens: &lens,
+                    adapter_ids: &ids,
+                    adapter_on: &on,
+                    kb: &bkb,
+                    vb: &bvb,
+                    kr: &bkr,
+                    vr: &bvr,
+                },
+            )
+            .unwrap();
+        per_bucket.push(dec.logits[..m.vocab].to_vec());
+    }
+    for (a, b) in per_bucket[0].iter().zip(per_bucket[1].iter()) {
+        assert!((a - b).abs() < 1e-4, "bucket-size dependence: {a} vs {b}");
+    }
+}
