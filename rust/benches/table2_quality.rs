@@ -72,6 +72,10 @@ fn cosine(a: &[f32], b: &[f32]) -> f64 {
 }
 
 fn main() -> anyhow::Result<()> {
+    if !cfg!(feature = "pjrt") {
+        println!("# table2_quality: skipped (build with --features pjrt for real PJRT execution)");
+        return Ok(());
+    }
     let models = ["llama3-8b-sim", "qwen2.5-7b-sim", "qwen2.5-14b-sim"];
     let available: Vec<&str> = models
         .iter()

@@ -77,6 +77,64 @@ impl Default for SchedulerConfig {
     }
 }
 
+/// HTTP front-end knobs: how many connections are serviced concurrently and
+/// how the hand-rolled parser protects itself. The worker pool is what lets
+/// many `/generate` calls be in flight at once so the engine thread forms
+/// real multi-sequence decode batches (the serial accept loop it replaces
+/// collapsed continuous batching to batch-size-1).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// connection worker threads (each handles one HTTP request at a time)
+    pub workers: usize,
+    /// accepted connections queued ahead of the pool before accept blocks
+    /// (bounded hand-off channel: natural backpressure under overload)
+    pub accept_backlog: usize,
+    /// reject request bodies larger than this with 413 (parser guard)
+    pub max_body_bytes: usize,
+    /// engine-thread wakeup interval while idle; the loop otherwise blocks
+    /// on the command channel instead of spinning
+    pub idle_wait_ms: u64,
+    /// socket read/write timeout; a silent client can otherwise occupy a
+    /// connection worker forever (0 = no timeout)
+    pub io_timeout_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            workers: 16,
+            accept_backlog: 64,
+            max_body_bytes: 1 << 20,
+            idle_wait_ms: 50,
+            io_timeout_ms: 30_000,
+        }
+    }
+}
+
+impl ServerConfig {
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let mut cfg = ServerConfig::default();
+        if let Some(v) = j.get("workers").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "server.workers must be > 0");
+            cfg.workers = v;
+        }
+        if let Some(v) = j.get("accept_backlog").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "server.accept_backlog must be > 0");
+            cfg.accept_backlog = v;
+        }
+        if let Some(v) = j.get("max_body_bytes").and_then(Json::as_usize) {
+            cfg.max_body_bytes = v;
+        }
+        if let Some(v) = j.get("idle_wait_ms").and_then(Json::as_usize) {
+            cfg.idle_wait_ms = v as u64;
+        }
+        if let Some(v) = j.get("io_timeout_ms").and_then(Json::as_usize) {
+            cfg.io_timeout_ms = v as u64;
+        }
+        Ok(cfg)
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct EngineConfig {
     pub policy: CachePolicy,
@@ -151,6 +209,26 @@ mod tests {
         assert_eq!(cfg.cache.budget_bytes, 16 << 20);
         assert_eq!(cfg.sched.max_running, 4);
         assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn server_config_from_json() {
+        let j = json::parse(
+            r#"{"workers":4,"accept_backlog":8,"max_body_bytes":4096,
+                "idle_wait_ms":5,"io_timeout_ms":1000}"#,
+        )
+        .unwrap();
+        let cfg = ServerConfig::from_json(&j).unwrap();
+        assert_eq!(cfg.workers, 4);
+        assert_eq!(cfg.accept_backlog, 8);
+        assert_eq!(cfg.max_body_bytes, 4096);
+        assert_eq!(cfg.idle_wait_ms, 5);
+        assert_eq!(cfg.io_timeout_ms, 1000);
+        // zero workers is rejected, absent fields keep defaults
+        assert!(ServerConfig::from_json(&json::parse(r#"{"workers":0}"#).unwrap()).is_err());
+        let d = ServerConfig::from_json(&json::parse("{}").unwrap()).unwrap();
+        assert_eq!(d.workers, ServerConfig::default().workers);
+        assert_eq!(d.max_body_bytes, 1 << 20);
     }
 
     #[test]

@@ -31,7 +31,7 @@ use crate::batch::{self, SeqSlab, SlabSpec};
 use crate::config::{CachePolicy, EngineConfig};
 use crate::exec::Executor;
 use crate::kvcache::{pages_for, BlockPool, PageId, PoolSpec};
-use crate::metrics::{EngineMetrics, FinishedRequest};
+use crate::metrics::{DropReason, DroppedRequest, EngineMetrics, FinishedRequest};
 use crate::radix::{DualRadixTree, MatchResult};
 use crate::runtime::{argmax, DecodeArgs, PrefillArgs};
 use crate::util::rng::Rng;
@@ -168,6 +168,7 @@ pub struct Engine {
     rng: Rng,
     pub metrics: EngineMetrics,
     finished: Vec<FinishedRequest>,
+    dropped: Vec<DroppedRequest>,
     pub collect_first_logits: bool,
     max_bucket: usize,
     // reusable decode scratch slabs + incremental-assembly state
@@ -228,6 +229,7 @@ impl Engine {
             now_us: 0,
             metrics: EngineMetrics::default(),
             finished: Vec::new(),
+            dropped: Vec::new(),
             collect_first_logits: false,
             max_bucket,
             scratch_kb: Vec::new(),
@@ -279,6 +281,14 @@ impl Engine {
 
     pub fn drain_finished(&mut self) -> Vec<FinishedRequest> {
         std::mem::take(&mut self.finished)
+    }
+
+    /// Requests the engine evicted without completing (OOM deadlock
+    /// breaking). The serving layer must drain these alongside
+    /// `drain_finished` — every submitted request produces exactly one
+    /// terminal record across the two queues.
+    pub fn drain_dropped(&mut self) -> Vec<DroppedRequest> {
+        std::mem::take(&mut self.dropped)
     }
 
     pub fn next_pending_arrival(&self) -> Option<u64> {
@@ -354,6 +364,10 @@ impl Engine {
             }
             match self.tick()? {
                 Tick::Progress => {
+                    // driver mode has no waiter to notify: drop records are
+                    // already counted in metrics.oom_drops, so discard them
+                    // instead of letting the vec grow for the process life
+                    self.dropped.clear();
                     let fin = self.drain_finished();
                     if !fin.is_empty() {
                         delivered.extend(fin.iter().cloned());
@@ -370,7 +384,9 @@ impl Engine {
                     }
                     anyhow::ensure!(
                         !delivered.is_empty(),
-                        "driver stalled: not done, nothing pending or in flight"
+                        "driver stalled: not done, nothing pending or in flight \
+                         ({} requests dropped under memory pressure)",
+                        self.metrics.oom_drops
                     );
                 }
             }
@@ -382,6 +398,8 @@ impl Engine {
         let res = self.res_pool.as_ref().map_or(0, |p| p.used_bytes());
         self.metrics
             .sample_memory(self.base_pool.used_bytes(), res, self.seqs.len());
+        self.metrics
+            .sample_queue_depth(self.waiting.len() + self.pending.len());
     }
 
     // -----------------------------------------------------------------
@@ -510,7 +528,20 @@ impl Engine {
         self.release_seq_resources(sid);
         self.waiting.retain(|&id| id != sid);
         self.running.retain(|&id| id != sid);
-        self.seqs.remove(&sid);
+        if let Some(seq) = self.seqs.remove(&sid) {
+            // the waiter on this request must learn its fate: record the
+            // drop so drain_dropped surfaces it (a silent delete left
+            // Server::generate blocked on its reply channel forever)
+            self.dropped.push(DroppedRequest {
+                id: seq.req.id,
+                tag: seq.req.tag,
+                adapter: seq.req.adapter,
+                prompt_len: seq.req.tokens.len(),
+                arrival_us: seq.req.arrival_us,
+                drop_us: self.now_us,
+                reason: DropReason::OutOfMemory,
+            });
+        }
         self.metrics.oom_drops += 1;
     }
 
@@ -1003,6 +1034,7 @@ impl Engine {
         self.metrics.decode_steps += 1;
         self.metrics.decode_rows += rows.len() as u64;
         self.metrics.decode_busy_us += out.elapsed_us;
+        self.metrics.record_decode_batch(rows.len());
 
         // ---- apply results per row ----
         let use_merged = !policy.uses_residual();
@@ -1072,6 +1104,7 @@ impl Engine {
         self.running.retain(|&id| id != sid);
         self.waiting.retain(|&id| id != sid);
         let seq = self.seqs.remove(&sid).expect("seq");
+        self.metrics.completed += 1;
         self.finished.push(FinishedRequest {
             id: seq.req.id,
             tag: seq.req.tag,

@@ -206,6 +206,12 @@ pub struct SimExecutor {
     meta: ModelMeta,
     cost: CostModel,
     buckets: Vec<usize>,
+    /// wall-clock sleep per executed op (0 = pure virtual time). Lets the
+    /// sim backend stand in for real hardware behind the HTTP server:
+    /// concurrent clients then overlap in wall time and co-batch exactly
+    /// as they would against PJRT, instead of the first request racing to
+    /// completion in microseconds.
+    wall_pace_us: u64,
 }
 
 impl SimExecutor {
@@ -214,12 +220,25 @@ impl SimExecutor {
     pub fn new(name: &str, buckets: Vec<usize>) -> anyhow::Result<Self> {
         let meta = synthetic_meta(name)?;
         let cost = CostModel::derived(&meta);
-        Ok(SimExecutor { meta, cost, buckets })
+        Ok(SimExecutor { meta, cost, buckets, wall_pace_us: 0 })
     }
 
     pub fn with_meta(meta: ModelMeta, buckets: Vec<usize>) -> Self {
         let cost = CostModel::derived(&meta);
-        SimExecutor { meta, cost, buckets }
+        SimExecutor { meta, cost, buckets, wall_pace_us: 0 }
+    }
+
+    /// Sleep this many wall-clock microseconds inside every prefill/decode
+    /// call (serving-mode realism; virtual time is unaffected).
+    pub fn with_wall_pace_us(mut self, us: u64) -> Self {
+        self.wall_pace_us = us;
+        self
+    }
+
+    fn pace(&self) {
+        if self.wall_pace_us > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(self.wall_pace_us));
+        }
     }
 
     pub fn with_cost(mut self, cost: CostModel) -> Self {
@@ -288,6 +307,7 @@ impl Executor for SimExecutor {
         self.buckets.clone()
     }
     fn prefill(&mut self, args: &PrefillArgs) -> anyhow::Result<ExecPrefill> {
+        self.pace();
         Ok(ExecPrefill {
             elapsed_us: self.cost.prefill_cost_us(args.tokens.len(), args.cache_len)
                 + self.cost.step_overhead_us,
@@ -295,6 +315,7 @@ impl Executor for SimExecutor {
         })
     }
     fn decode(&mut self, _bucket: usize, args: &DecodeArgs) -> anyhow::Result<ExecDecode> {
+        self.pace();
         // only live rows cost FLOPs (padding rows are masked out)
         let live: Vec<usize> = args
             .adapter_on

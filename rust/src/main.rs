@@ -4,24 +4,30 @@
 
 use std::path::PathBuf;
 
-use forkkv::config::{CacheConfig, CachePolicy, EngineConfig};
+use forkkv::config::{CacheConfig, CachePolicy, EngineConfig, ServerConfig};
 use forkkv::engine::Engine;
-use forkkv::exec::{CostModel, Executor, PjrtExecutor};
+use forkkv::exec::{CostModel, Executor, PjrtExecutor, SimExecutor};
 use forkkv::runtime::PrefillArgs;
 use forkkv::server::Server;
 use forkkv::util::json::Json;
-use forkkv::workload::{presets, WorkflowDriver, WorkflowKind, WorkloadSpec};
+use forkkv::workload::{
+    presets, run_http_load, HttpLoadSpec, WorkflowDriver, WorkflowKind, WorkloadSpec,
+};
 
 fn usage() -> ! {
     eprintln!(
         "forkkv — multi-LoRA agent serving with a CoW disaggregated KV cache
 
 USAGE:
-  forkkv serve     [--artifacts DIR] [--addr HOST:PORT] [--policy P] [--budget-mb N]
-  forkkv run       [--policy P] [--model M] [--dataset D] [--workflow react|mapreduce]
-                   [--workflows N] [--requests N] [--rate R] [--budget-mb N] [--seed S]
-                   [--real --artifacts DIR]
-  forkkv calibrate [--artifacts DIR]   # measure real PJRT costs -> calibration.json
+  forkkv serve      [--artifacts DIR] [--addr HOST:PORT] [--policy P] [--budget-mb N]
+                    [--workers N] [--max-body-kb N]
+  forkkv run        [--policy P] [--model M] [--dataset D] [--workflow react|mapreduce]
+                    [--workflows N] [--requests N] [--rate R] [--budget-mb N] [--seed S]
+                    [--real --artifacts DIR]
+  forkkv bench-http [--clients N] [--requests-per-client N] [--policy P] [--model M]
+                    [--budget-mb N] [--max-new N] [--workers N] [--pace-us U]
+                    # closed-loop concurrent HTTP load against a sim-backed server
+  forkkv calibrate  [--artifacts DIR]   # measure real PJRT costs -> calibration.json
 
   P: forkkv | prefix | full-reuse      M: llama3-8b-sim | qwen2.5-7b-sim | qwen2.5-14b-sim
   D: loogle | narrativeqa | apigen"
@@ -50,9 +56,25 @@ fn main() -> anyhow::Result<()> {
     match cmd.as_str() {
         "serve" => cmd_serve(&args),
         "run" => cmd_run(&args),
+        "bench-http" => cmd_bench_http(&args),
         "calibrate" => cmd_calibrate(&args),
         _ => usage(),
     }
+}
+
+fn server_config(args: &Args) -> anyhow::Result<ServerConfig> {
+    let mut cfg = ServerConfig::default();
+    if let Some(v) = args.flag("--workers") {
+        cfg.workers = v.parse()?;
+        anyhow::ensure!(cfg.workers > 0, "--workers must be > 0");
+    }
+    if let Some(v) = args.flag("--max-body-kb") {
+        let kb: usize = v.parse()?;
+        cfg.max_body_bytes = kb
+            .checked_mul(1024)
+            .ok_or_else(|| anyhow::anyhow!("--max-body-kb {kb} too large"))?;
+    }
+    Ok(cfg)
 }
 
 fn engine_config(args: &Args) -> anyhow::Result<EngineConfig> {
@@ -78,13 +100,70 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     );
     let addr = args.flag("--addr").unwrap_or("127.0.0.1:8080".into());
     let cfg = engine_config(args)?;
+    let scfg = server_config(args)?;
     eprintln!("loading artifacts from {} ...", dir.display());
     let exec = PjrtExecutor::load(&dir)?;
     let engine = Engine::new(cfg, Box::new(exec))?;
-    let (server, handle) = Server::start(engine);
+    let (server, handle) = Server::start_with(engine, scfg);
     server.serve_http(&addr, None)?;
     server.shutdown();
     handle.join().ok();
+    Ok(())
+}
+
+/// Closed-loop concurrent HTTP benchmark over the sim backend: stands up a
+/// wall-paced sim server on an ephemeral port, drives it with N closed-loop
+/// clients, and reports client-side latency plus the engine's decode-batch
+/// occupancy — the direct measurement of front-end concurrency.
+fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
+    let cfg = engine_config(args)?;
+    let scfg = server_config(args)?;
+    let model = args.flag("--model").unwrap_or("llama3-8b-sim".into());
+    let clients: usize = args.flag("--clients").map(|v| v.parse()).transpose()?.unwrap_or(8);
+    let per_client: usize = args
+        .flag("--requests-per-client")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(4);
+    let max_new: usize = args.flag("--max-new").map(|v| v.parse()).transpose()?.unwrap_or(32);
+    let pace_us: u64 = args.flag("--pace-us").map(|v| v.parse()).transpose()?.unwrap_or(500);
+
+    let sim = SimExecutor::new(&model, presets::SIM_BUCKETS.to_vec())?
+        .with_wall_pace_us(pace_us);
+    let policy = cfg.policy;
+    let engine = Engine::new(cfg, Box::new(sim))?;
+    let (server, engine_handle) = Server::start_with(engine, scfg);
+
+    let listener = std::net::TcpListener::bind(
+        args.flag("--addr").unwrap_or("127.0.0.1:0".into()),
+    )?;
+    let addr = listener.local_addr()?.to_string();
+    eprintln!("bench-http: {clients} clients x {per_client} requests -> http://{addr}");
+    // serve unbounded on a detached thread: the load below completes only
+    // once every client got its response, and capping the accept count
+    // would hang the bench if any connect attempt failed (those are
+    // counted as errors in the report instead)
+    let _serve = {
+        let server = server.clone();
+        std::thread::spawn(move || server.serve_listener(listener, None))
+    };
+
+    let spec = HttpLoadSpec {
+        clients,
+        requests_per_client: per_client,
+        max_new,
+        ..HttpLoadSpec::default()
+    };
+    let mut report = run_http_load(&addr, &spec)?;
+    if let Json::Obj(m) = &mut report {
+        m.insert("engine".into(), server.stats()?);
+        m.insert("policy".into(), Json::str(policy.name()));
+        m.insert("workers".into(), Json::num(server.config().workers as f64));
+        m.insert("pace_us".into(), Json::num(pace_us as f64));
+    }
+    server.shutdown();
+    engine_handle.join().ok();
+    println!("{}", report.to_string());
     Ok(())
 }
 

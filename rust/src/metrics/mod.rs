@@ -20,15 +20,24 @@ pub struct EngineMetrics {
     pub hit_partial_tokens: u64,
     pub computed_prompt_tokens: u64,
 
-    // memory pressure events
+    // request outcome counters: every submitted request terminates as
+    // exactly one of these (the engine<->server reply protocol relies on
+    // this accounting — no silent terminal state)
+    pub completed: u64,
     pub preemptions: u64,
     pub oom_drops: u64,
+
+    // decode-batch occupancy (rows per decode step) and its observed peak
+    pub decode_batch: Series,
+    pub max_decode_batch: u64,
 
     // sampled time series (one sample per engine step)
     pub base_pool_bytes: Series,
     pub res_pool_bytes: Series,
     pub active_seqs: Series,
     pub bytes_per_agent: Series,
+    /// requests admitted or pending but not yet running (scheduler backlog)
+    pub queue_depth: Series,
 }
 
 impl EngineMetrics {
@@ -60,6 +69,16 @@ impl EngineMetrics {
         }
     }
 
+    pub fn sample_queue_depth(&mut self, depth: usize) {
+        self.queue_depth.push(depth as f64);
+    }
+
+    /// Record one decode step's occupancy (live rows, not the padded bucket).
+    pub fn record_decode_batch(&mut self, rows: usize) {
+        self.decode_batch.push(rows as f64);
+        self.max_decode_batch = self.max_decode_batch.max(rows as u64);
+    }
+
     pub fn to_json(&mut self) -> Json {
         Json::obj(vec![
             ("prefill_steps", Json::num(self.prefill_steps as f64)),
@@ -72,12 +91,16 @@ impl EngineMetrics {
             ("hit_partial_tokens", Json::num(self.hit_partial_tokens as f64)),
             ("computed_prompt_tokens", Json::num(self.computed_prompt_tokens as f64)),
             ("hit_rate", Json::num(self.hit_rate())),
+            ("completed", Json::num(self.completed as f64)),
             ("preemptions", Json::num(self.preemptions as f64)),
             ("oom_drops", Json::num(self.oom_drops as f64)),
+            ("decode_batch", self.decode_batch.summary().to_json()),
+            ("max_decode_batch", Json::num(self.max_decode_batch as f64)),
             ("base_pool_bytes", self.base_pool_bytes.summary().to_json()),
             ("res_pool_bytes", self.res_pool_bytes.summary().to_json()),
             ("bytes_per_agent", self.bytes_per_agent.summary().to_json()),
             ("active_seqs", self.active_seqs.summary().to_json()),
+            ("queue_depth", self.queue_depth.summary().to_json()),
         ])
     }
 }
@@ -110,6 +133,53 @@ impl FinishedRequest {
     }
 }
 
+/// Why the engine evicted a request without completing it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DropReason {
+    /// memory deadlock breaker: every schedulable unit was blocked on pages
+    /// held by blocked sequences, and this request was the chosen victim
+    OutOfMemory,
+}
+
+impl DropReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DropReason::OutOfMemory => "out of memory",
+        }
+    }
+}
+
+/// A request the engine gave up on. Carries enough identity for the serving
+/// layer to route the failure back to the right waiter.
+#[derive(Debug, Clone)]
+pub struct DroppedRequest {
+    pub id: u64,
+    pub tag: u64,
+    pub adapter: u32,
+    pub prompt_len: usize,
+    pub arrival_us: u64,
+    pub drop_us: u64,
+    pub reason: DropReason,
+}
+
+/// Every terminal engine state for a request — completion (max_new or EOS)
+/// or an engine-initiated drop. The server replies to its waiter with
+/// exactly one of these, so no client ever blocks forever.
+#[derive(Debug, Clone)]
+pub enum RequestOutcome {
+    Finished(FinishedRequest),
+    Dropped(DroppedRequest),
+}
+
+impl RequestOutcome {
+    pub fn id(&self) -> u64 {
+        match self {
+            RequestOutcome::Finished(f) => f.id,
+            RequestOutcome::Dropped(d) => d.id,
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +202,36 @@ mod tests {
         m.sample_memory(2000, 200, 2);
         assert_eq!(m.bytes_per_agent.len(), 2);
         assert!((m.bytes_per_agent.mean() - (300.0 + 1100.0) / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_batch_and_queue_depth_tracking() {
+        let mut m = EngineMetrics::default();
+        m.record_decode_batch(1);
+        m.record_decode_batch(6);
+        m.record_decode_batch(3);
+        assert_eq!(m.max_decode_batch, 6);
+        assert_eq!(m.decode_batch.len(), 3);
+        m.sample_queue_depth(5);
+        m.sample_queue_depth(0);
+        assert_eq!(m.queue_depth.len(), 2);
+        let j = m.to_json();
+        assert_eq!(j.at(&["max_decode_batch"]).as_usize().unwrap(), 6);
+        assert_eq!(j.at(&["queue_depth", "n"]).as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn outcome_identity() {
+        let d = DroppedRequest {
+            id: 9,
+            tag: 1,
+            adapter: 2,
+            prompt_len: 10,
+            arrival_us: 0,
+            drop_us: 5,
+            reason: DropReason::OutOfMemory,
+        };
+        assert_eq!(RequestOutcome::Dropped(d).id(), 9);
+        assert_eq!(DropReason::OutOfMemory.as_str(), "out of memory");
     }
 }

@@ -5,14 +5,24 @@
 //! Python never runs here — the HLO text was produced by `make artifacts`
 //! and this module replays it through the `xla` crate's PJRT CPU client
 //! (`HloModuleProto::from_text_file` → compile → `execute_b`).
+//!
+//! The `xla` crate only exists in environments carrying the vendored XLA
+//! bindings, so the real runtime is gated behind the off-by-default `pjrt`
+//! cargo feature. Without it, `PjrtRuntime::load` returns a descriptive
+//! error and every other code path (sim executor, engine, server, CLI)
+//! works unchanged.
 
 pub mod manifest;
 
+#[cfg(feature = "pjrt")]
 use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
 
 pub use manifest::{ArtifactEntry, Manifest, ModelMeta};
 
+#[cfg(feature = "pjrt")]
 fn xe(e: xla::Error) -> anyhow::Error {
     anyhow::anyhow!("xla: {e:?}")
 }
@@ -75,6 +85,7 @@ pub struct DecodeOut {
     pub vm: Vec<f32>,
 }
 
+#[cfg(feature = "pjrt")]
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
@@ -85,6 +96,43 @@ pub struct PjrtRuntime {
     pub dir: PathBuf,
 }
 
+/// Built without the `pjrt` feature: a never-constructible placeholder with
+/// the same API, so callers (executor, CLI, tests) compile unchanged and get
+/// a clear error from `load` at runtime.
+#[cfg(not(feature = "pjrt"))]
+pub struct PjrtRuntime {
+    never: std::convert::Infallible,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl PjrtRuntime {
+    pub fn load(_dir: &Path) -> anyhow::Result<Self> {
+        anyhow::bail!(
+            "forkkv was built without the `pjrt` feature: real PJRT execution \
+             needs the vendored `xla` crate. Use the sim backend (`forkkv run` \
+             / `forkkv bench-http`), or add the `xla` dependency in \
+             rust/Cargo.toml and rebuild with `--features pjrt` (see \
+             rust/README.md)."
+        )
+    }
+    pub fn meta(&self) -> &ModelMeta {
+        match self.never {}
+    }
+    pub fn decode_buckets(&self) -> Vec<usize> {
+        match self.never {}
+    }
+    pub fn bucket_for(&self, _rows: usize) -> anyhow::Result<usize> {
+        match self.never {}
+    }
+    pub fn prefill(&self, _a: &PrefillArgs) -> anyhow::Result<PrefillOut> {
+        match self.never {}
+    }
+    pub fn decode(&self, _bucket: usize, _a: &DecodeArgs) -> anyhow::Result<DecodeOut> {
+        match self.never {}
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl PjrtRuntime {
     /// Load manifest + weights + compile all artifacts from
     /// `artifacts/<model>/`.

@@ -5,22 +5,35 @@
 //!   -> {"tokens": [...], "text": "...", "ttft_us": ..., "latency_us": ...}
 //! GET /stats -> engine metrics JSON
 //!
-//! One engine thread owns the `Engine` and ticks it; connection threads
-//! submit requests through a channel and wait on per-request channels.
+//! Concurrency model: one engine thread owns the `Engine` and ticks it; a
+//! bounded pool of connection workers (`ServerConfig::workers`) parses HTTP
+//! and submits requests through a command channel, waiting on per-request
+//! reply channels. Because many `/generate` calls are in flight at once,
+//! the engine's continuous batching forms real multi-sequence decode
+//! batches — a serial accept loop would collapse it to batch-size-1.
+//!
+//! Reply protocol: the engine thread answers every submitted request with a
+//! `RequestOutcome` — `Finished` (max_new or EOS) or `Dropped` (OOM
+//! eviction) — so a waiter can never hang on a request the engine gave up
+//! on. The engine thread itself is event-driven: it blocks on the command
+//! channel (`recv_timeout`) whenever the engine reports `Tick::Idle`
+//! instead of spinning on a sleep loop.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
+use crate::config::ServerConfig;
 use crate::engine::{Engine, Request, Tick};
-use crate::metrics::FinishedRequest;
+use crate::metrics::{FinishedRequest, RequestOutcome};
 use crate::util::json::{self, Json};
 use crate::util::tokenizer::HashTokenizer;
 
 enum Cmd {
-    Submit(Request, mpsc::Sender<FinishedRequest>),
+    Submit(Request, mpsc::Sender<RequestOutcome>),
     Stats(mpsc::Sender<Json>),
     Shutdown,
 }
@@ -29,57 +42,111 @@ pub struct Server {
     tx: mpsc::Sender<Cmd>,
     tokenizer: HashTokenizer,
     max_ctx: usize,
+    cfg: ServerConfig,
+}
+
+/// Apply one command on the engine thread; false = shutdown requested.
+fn handle_cmd(
+    engine: &mut Engine,
+    waiters: &mut HashMap<u64, mpsc::Sender<RequestOutcome>>,
+    next_id: &mut u64,
+    cmd: Cmd,
+) -> bool {
+    match cmd {
+        Cmd::Submit(mut req, reply) => {
+            req.id = *next_id;
+            *next_id += 1;
+            req.arrival_us = engine.now_us();
+            waiters.insert(req.id, reply);
+            engine.submit(req);
+            true
+        }
+        Cmd::Stats(reply) => {
+            let _ = reply.send(engine.metrics.to_json());
+            true
+        }
+        Cmd::Shutdown => false,
+    }
+}
+
+/// Route every terminal outcome back to its waiter (completions and drops).
+fn deliver(engine: &mut Engine, waiters: &mut HashMap<u64, mpsc::Sender<RequestOutcome>>) {
+    for fin in engine.drain_finished() {
+        if let Some(w) = waiters.remove(&fin.id) {
+            let _ = w.send(RequestOutcome::Finished(fin));
+        }
+    }
+    for d in engine.drain_dropped() {
+        if let Some(w) = waiters.remove(&d.id) {
+            let _ = w.send(RequestOutcome::Dropped(d));
+        }
+    }
 }
 
 impl Server {
+    /// Spawn the engine thread with default `ServerConfig`.
+    pub fn start(engine: Engine) -> (Arc<Server>, std::thread::JoinHandle<()>) {
+        Self::start_with(engine, ServerConfig::default())
+    }
+
     /// Spawn the engine thread; returns the submission handle.
-    pub fn start(mut engine: Engine) -> (Arc<Server>, std::thread::JoinHandle<()>) {
+    pub fn start_with(
+        mut engine: Engine,
+        cfg: ServerConfig,
+    ) -> (Arc<Server>, std::thread::JoinHandle<()>) {
         let (tx, rx) = mpsc::channel::<Cmd>();
         let tokenizer = HashTokenizer::new(engine.meta().vocab);
         let max_ctx = engine.meta().s_max;
-        let handle = std::thread::spawn(move || {
-            let mut waiters: HashMap<u64, mpsc::Sender<FinishedRequest>> = HashMap::new();
-            let mut next_id = 1u64;
-            loop {
-                // drain the command queue
-                loop {
-                    match rx.try_recv() {
-                        Ok(Cmd::Submit(mut req, reply)) => {
-                            req.id = next_id;
-                            next_id += 1;
-                            req.arrival_us = engine.now_us();
-                            waiters.insert(req.id, reply);
-                            engine.submit(req);
+        let idle_wait = Duration::from_millis(cfg.idle_wait_ms.max(1));
+        let handle = std::thread::Builder::new()
+            .name("forkkv-engine".into())
+            .spawn(move || {
+                let mut waiters: HashMap<u64, mpsc::Sender<RequestOutcome>> = HashMap::new();
+                let mut next_id = 1u64;
+                'run: loop {
+                    // drain every queued command so concurrent submissions
+                    // enter the same scheduling step and co-batch
+                    loop {
+                        match rx.try_recv() {
+                            Ok(cmd) => {
+                                if !handle_cmd(&mut engine, &mut waiters, &mut next_id, cmd) {
+                                    break 'run;
+                                }
+                            }
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => break 'run,
                         }
-                        Ok(Cmd::Stats(reply)) => {
-                            let _ = reply.send(engine.metrics.to_json());
-                        }
-                        Ok(Cmd::Shutdown) => return,
-                        Err(mpsc::TryRecvError::Empty) => break,
-                        Err(mpsc::TryRecvError::Disconnected) => return,
                     }
-                }
-                match engine.tick() {
-                    Ok(Tick::Progress) => {
-                        for fin in engine.drain_finished() {
-                            if let Some(w) = waiters.remove(&fin.id) {
-                                let _ = w.send(fin);
+                    match engine.tick() {
+                        Ok(Tick::Progress) => deliver(&mut engine, &mut waiters),
+                        Ok(Tick::Idle) => {
+                            // event-driven: block until work arrives rather
+                            // than spinning; the timeout only bounds how
+                            // stale a raced command can get
+                            match rx.recv_timeout(idle_wait) {
+                                Ok(cmd) => {
+                                    if !handle_cmd(&mut engine, &mut waiters, &mut next_id, cmd)
+                                    {
+                                        break 'run;
+                                    }
+                                }
+                                Err(mpsc::RecvTimeoutError::Timeout) => {}
+                                Err(mpsc::RecvTimeoutError::Disconnected) => break 'run,
                             }
                         }
-                    }
-                    Ok(Tick::Idle) => {
-                        // real-time serving: block briefly for new work
-                        std::thread::sleep(std::time::Duration::from_millis(1));
-                    }
-                    Err(e) => {
-                        eprintln!("engine error: {e:#}");
-                        return;
+                        Err(e) => {
+                            eprintln!("engine error: {e:#}");
+                            break 'run;
+                        }
                     }
                 }
-            }
-        });
+                // final drain so no waiter hangs across shutdown; the map
+                // (and thus every remaining reply channel) drops after this
+                deliver(&mut engine, &mut waiters);
+            })
+            .expect("spawn engine thread");
         (
-            Arc::new(Server { tx, tokenizer, max_ctx }),
+            Arc::new(Server { tx, tokenizer, max_ctx, cfg }),
             handle,
         )
     }
@@ -88,18 +155,32 @@ impl Server {
         let _ = self.tx.send(Cmd::Shutdown);
     }
 
-    pub fn generate(
-        &self,
-        prompt_tokens: Vec<u32>,
-        adapter: u32,
-        max_new: usize,
-    ) -> anyhow::Result<FinishedRequest> {
+    pub fn config(&self) -> &ServerConfig {
+        &self.cfg
+    }
+
+    /// Request limits shared by every entry point (direct and HTTP): the
+    /// single source of truth for what the engine will accept.
+    fn validate_request(&self, prompt_tokens: &[u32], max_new: usize) -> anyhow::Result<()> {
         anyhow::ensure!(!prompt_tokens.is_empty(), "empty prompt");
         anyhow::ensure!(
             prompt_tokens.len() + max_new <= self.max_ctx,
             "prompt+output exceeds context window {}",
             self.max_ctx
         );
+        Ok(())
+    }
+
+    /// Submit and wait for the request's terminal outcome (completion or
+    /// engine-initiated drop). Errors only when the request never reached
+    /// the engine or the engine thread died.
+    pub fn generate_outcome(
+        &self,
+        prompt_tokens: Vec<u32>,
+        adapter: u32,
+        max_new: usize,
+    ) -> anyhow::Result<RequestOutcome> {
+        self.validate_request(&prompt_tokens, max_new)?;
         let (reply_tx, reply_rx) = mpsc::channel();
         let req = Request {
             id: 0, // assigned by the engine thread
@@ -115,7 +196,23 @@ impl Server {
             .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
         reply_rx
             .recv()
-            .map_err(|_| anyhow::anyhow!("request dropped (OOM?)"))
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))
+    }
+
+    pub fn generate(
+        &self,
+        prompt_tokens: Vec<u32>,
+        adapter: u32,
+        max_new: usize,
+    ) -> anyhow::Result<FinishedRequest> {
+        match self.generate_outcome(prompt_tokens, adapter, max_new)? {
+            RequestOutcome::Finished(fin) => Ok(fin),
+            RequestOutcome::Dropped(d) => Err(anyhow::anyhow!(
+                "request dropped by engine ({}): prompt {} tokens evicted under memory pressure",
+                d.reason.as_str(),
+                d.prompt_len
+            )),
+        }
     }
 
     pub fn stats(&self) -> anyhow::Result<Json> {
@@ -126,40 +223,92 @@ impl Server {
         rx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))
     }
 
-    /// Blocking accept loop. `max_requests` bounds the loop for tests
-    /// (None = run forever).
+    /// Bind `addr` and serve until `max_requests` connections were accepted
+    /// (None = run forever). Blocking; connections are handled by the
+    /// bounded worker pool.
     pub fn serve_http(&self, addr: &str, max_requests: Option<usize>) -> anyhow::Result<()> {
         let listener = TcpListener::bind(addr)?;
-        eprintln!("forkkv serving on http://{addr}");
-        let mut served = 0usize;
-        for stream in listener.incoming() {
-            let Ok(stream) = stream else { continue };
-            if let Err(e) = self.handle_conn(stream) {
-                eprintln!("conn error: {e:#}");
+        eprintln!("forkkv serving on http://{}", listener.local_addr()?);
+        self.serve_listener(listener, max_requests)
+    }
+
+    /// Serve an already-bound listener (tests bind port 0 and read the
+    /// actual address before calling this). Accepted connections are handed
+    /// to `cfg.workers` scoped worker threads over a bounded channel, so up
+    /// to `workers` requests are parsed/submitted concurrently and the
+    /// accept loop backpressures at `cfg.accept_backlog` queued
+    /// connections. Returns once the accept loop ends AND every accepted
+    /// connection has been fully served (the scope joins the pool).
+    pub fn serve_listener(
+        &self,
+        listener: TcpListener,
+        max_requests: Option<usize>,
+    ) -> anyhow::Result<()> {
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(self.cfg.accept_backlog.max(1));
+        let conn_rx = Mutex::new(conn_rx);
+        std::thread::scope(|scope| {
+            for _ in 0..self.cfg.workers.max(1) {
+                scope.spawn(|| loop {
+                    // hold the lock only while waiting for the next
+                    // connection; handling happens unlocked so workers
+                    // service clients in parallel
+                    let next = {
+                        let guard = conn_rx.lock().unwrap_or_else(|e| e.into_inner());
+                        guard.recv()
+                    };
+                    match next {
+                        Ok(stream) => {
+                            if let Err(e) = self.handle_conn(stream) {
+                                eprintln!("conn error: {e:#}");
+                            }
+                        }
+                        Err(_) => break, // accept loop done, queue drained
+                    }
+                });
             }
-            served += 1;
-            if let Some(max) = max_requests {
-                if served >= max {
+            let mut accepted = 0usize;
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                if conn_tx.send(stream).is_err() {
                     break;
                 }
+                accepted += 1;
+                if let Some(max) = max_requests {
+                    if accepted >= max {
+                        break;
+                    }
+                }
             }
-        }
+            // closing the channel is what lets the workers drain and exit;
+            // the scope then joins them before returning
+            drop(conn_tx);
+        });
         Ok(())
     }
 
     fn handle_conn(&self, mut stream: TcpStream) -> anyhow::Result<()> {
         stream.set_nodelay(true).ok();
+        // a silent or stalled client must not occupy a worker forever
+        let io_timeout = (self.cfg.io_timeout_ms > 0)
+            .then(|| Duration::from_millis(self.cfg.io_timeout_ms));
+        stream.set_read_timeout(io_timeout).ok();
+        stream.set_write_timeout(io_timeout).ok();
         let mut reader = BufReader::new(stream.try_clone()?);
-        let mut request_line = String::new();
-        reader.read_line(&mut request_line)?;
+
+        // cap the request-line + header section so an endless header stream
+        // cannot exhaust memory (the body has its own max_body_bytes cap)
+        let mut header_budget = MAX_HEADER_BYTES;
+        let (request_line, truncated) = read_capped_line(&mut reader, &mut header_budget)?;
         let mut parts = request_line.split_whitespace();
         let method = parts.next().unwrap_or("").to_string();
         let path = parts.next().unwrap_or("").to_string();
 
         let mut content_len = 0usize;
-        loop {
-            let mut line = String::new();
-            reader.read_line(&mut line)?;
+        let mut bad_content_len = false;
+        let mut header_truncated = truncated;
+        while !header_truncated {
+            let (line, truncated) = read_capped_line(&mut reader, &mut header_budget)?;
+            header_truncated = truncated;
             let line = line.trim_end();
             if line.is_empty() {
                 break;
@@ -169,21 +318,32 @@ impl Server {
                 .strip_prefix("content-length:")
                 .map(|v| v.trim().to_string())
             {
-                content_len = v.parse().unwrap_or(0);
+                match v.parse::<usize>() {
+                    Ok(n) => content_len = n,
+                    // a malformed length used to fall back to 0 and read an
+                    // empty body — report it instead of mis-parsing
+                    Err(_) => bad_content_len = true,
+                }
             }
+        }
+        if header_truncated {
+            return self.reject(&mut stream, &mut reader, "431 Request Header Fields Too Large",
+                format!("header section exceeds {MAX_HEADER_BYTES} bytes"));
+        }
+        if bad_content_len {
+            return self.reject(&mut stream, &mut reader, "400 Bad Request",
+                "invalid Content-Length header".to_string());
+        }
+        if content_len > self.cfg.max_body_bytes {
+            return self.reject(&mut stream, &mut reader, "413 Payload Too Large",
+                format!("body of {content_len} bytes exceeds limit {}", self.cfg.max_body_bytes));
         }
         let mut body = vec![0u8; content_len];
         reader.read_exact(&mut body)?;
         let body = String::from_utf8_lossy(&body).to_string();
 
         let (status, payload) = match (method.as_str(), path.as_str()) {
-            ("POST", "/generate") => match self.api_generate(&body) {
-                Ok(j) => ("200 OK", j),
-                Err(e) => (
-                    "400 Bad Request",
-                    Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
-                ),
-            },
+            ("POST", "/generate") => self.api_generate(&body),
             ("GET", "/stats") => match self.stats() {
                 Ok(j) => ("200 OK", j),
                 Err(e) => (
@@ -197,34 +357,144 @@ impl Server {
                 Json::obj(vec![("error", Json::str("not found"))]),
             ),
         };
-        let body = payload.to_string();
-        let resp = format!(
-            "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-            body.len()
-        );
-        stream.write_all(resp.as_bytes())?;
+        write_response(&mut stream, status, &payload)
+    }
+
+    /// Early rejection: answer, then discard (a bounded amount of) any
+    /// in-flight request bytes so closing the socket doesn't RST the
+    /// response away before the client reads it. The drain runs under a
+    /// short read timeout: it clears what's already on the wire without
+    /// stalling on a client that sends nothing further.
+    fn reject(
+        &self,
+        stream: &mut TcpStream,
+        reader: &mut BufReader<TcpStream>,
+        status: &'static str,
+        error: String,
+    ) -> anyhow::Result<()> {
+        write_response(stream, status, &Json::obj(vec![("error", Json::str(error))]))?;
+        stream
+            .set_read_timeout(Some(Duration::from_millis(250)))
+            .ok();
+        let limit = (self.cfg.max_body_bytes as u64).max(64 << 10);
+        let _ = std::io::copy(&mut reader.by_ref().take(limit), &mut std::io::sink());
         Ok(())
     }
 
-    fn api_generate(&self, body: &str) -> anyhow::Result<Json> {
-        let j = json::parse(body).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
-        let prompt = j.req_str("prompt")?;
+    /// Returns (status line, payload); an engine-side drop is a capacity
+    /// failure (503, retryable), not a client error.
+    fn api_generate(&self, body: &str) -> (&'static str, Json) {
+        fn err(status: &'static str, msg: String) -> (&'static str, Json) {
+            (status, Json::obj(vec![("error", Json::str(msg))]))
+        }
+        let j = match json::parse(body) {
+            Ok(j) => j,
+            Err(e) => return err("400 Bad Request", format!("bad json: {e}")),
+        };
+        let prompt = match j.req_str("prompt") {
+            Ok(p) => p,
+            Err(e) => return err("400 Bad Request", format!("{e:#}")),
+        };
         let adapter = j.get("adapter").and_then(Json::as_usize).unwrap_or(0) as u32;
         let max_new = j.get("max_new").and_then(Json::as_usize).unwrap_or(16);
         let tokens = self.tokenizer.encode(prompt);
-        let fin = self.generate(tokens, adapter, max_new)?;
-        Ok(Json::obj(vec![
-            (
-                "tokens",
-                Json::Arr(fin.generated.iter().map(|&t| Json::num(t as f64)).collect()),
+        if let Err(e) = self.validate_request(&tokens, max_new) {
+            return err("400 Bad Request", format!("{e:#}"));
+        }
+        match self.generate_outcome(tokens, adapter, max_new) {
+            Ok(RequestOutcome::Finished(fin)) => (
+                "200 OK",
+                Json::obj(vec![
+                    (
+                        "tokens",
+                        Json::Arr(
+                            fin.generated.iter().map(|&t| Json::num(t as f64)).collect(),
+                        ),
+                    ),
+                    ("text", Json::str(self.tokenizer.decode(&fin.generated))),
+                    ("prompt_tokens", Json::num(fin.prompt_len as f64)),
+                    ("hit_tokens", Json::num(fin.hit_full as f64)),
+                    ("ttft_us", Json::num(fin.ttft_us() as f64)),
+                    ("latency_us", Json::num(fin.latency_us() as f64)),
+                ]),
             ),
-            ("text", Json::str(self.tokenizer.decode(&fin.generated))),
-            ("prompt_tokens", Json::num(fin.prompt_len as f64)),
-            ("hit_tokens", Json::num(fin.hit_full as f64)),
-            ("ttft_us", Json::num(fin.ttft_us() as f64)),
-            ("latency_us", Json::num(fin.latency_us() as f64)),
-        ]))
+            Ok(RequestOutcome::Dropped(d)) => err(
+                "503 Service Unavailable",
+                format!("request dropped by engine ({}); retry later", d.reason.as_str()),
+            ),
+            Err(e) => err("500 Internal Server Error", format!("{e:#}")),
+        }
     }
+}
+
+/// Cap on the request-line + header section of one request.
+const MAX_HEADER_BYTES: usize = 16 << 10;
+
+/// `read_line` bounded by a shared byte budget; the bool reports that the
+/// budget was exhausted before a newline arrived (header section too big).
+fn read_capped_line(
+    reader: &mut BufReader<TcpStream>,
+    budget: &mut usize,
+) -> std::io::Result<(String, bool)> {
+    let mut line = String::new();
+    reader.by_ref().take(*budget as u64).read_line(&mut line)?;
+    *budget -= line.len().min(*budget);
+    let truncated = !line.ends_with('\n') && *budget == 0;
+    Ok((line, truncated))
+}
+
+fn write_response(stream: &mut TcpStream, status: &str, payload: &Json) -> anyhow::Result<()> {
+    let body = payload.to_string();
+    let resp = format!(
+        "HTTP/1.1 {status}\r\nContent-Type: application/json\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// minimal HTTP client (tests + closed-loop workload driver)
+// ---------------------------------------------------------------------------
+
+/// One-shot HTTP/1.1 request against the hand-rolled server; returns
+/// (status code, body). Relies on `Connection: close` framing.
+pub fn http_request(
+    addr: &str,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> anyhow::Result<(u16, String)> {
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let req = match body {
+        Some(b) => format!(
+            "{method} {path} HTTP/1.1\r\nHost: forkkv\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{b}",
+            b.len()
+        ),
+        None => format!("{method} {path} HTTP/1.1\r\nHost: forkkv\r\nConnection: close\r\n\r\n"),
+    };
+    stream.write_all(req.as_bytes())?;
+    let mut resp = String::new();
+    BufReader::new(stream).read_to_string(&mut resp)?;
+    let status: u16 = resp
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .ok_or_else(|| anyhow::anyhow!("malformed http response: {resp:?}"))?;
+    let body = resp
+        .split_once("\r\n\r\n")
+        .map(|(_, b)| b.to_string())
+        .unwrap_or_default();
+    Ok((status, body))
+}
+
+pub fn http_post(addr: &str, path: &str, body: &str) -> anyhow::Result<(u16, String)> {
+    http_request(addr, "POST", path, Some(body))
+}
+
+pub fn http_get(addr: &str, path: &str) -> anyhow::Result<(u16, String)> {
+    http_request(addr, "GET", path, None)
 }
 
 #[cfg(test)]
@@ -232,16 +502,36 @@ mod tests {
     use super::*;
     use crate::config::{CacheConfig, CachePolicy, EngineConfig};
     use crate::exec::SimExecutor;
+    use crate::workload::{run_http_load, HttpLoadSpec};
 
-    fn sim_server() -> (Arc<Server>, std::thread::JoinHandle<()>) {
+    fn sim_engine(budget_bytes: usize, wall_pace_us: u64) -> Engine {
         let cfg = EngineConfig {
             policy: CachePolicy::Disaggregated,
-            cache: CacheConfig { page_tokens: 16, budget_bytes: 32 << 20 },
+            cache: CacheConfig { page_tokens: 16, budget_bytes },
             ..EngineConfig::default()
         };
-        let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8]).unwrap();
-        let engine = Engine::new(cfg, Box::new(sim)).unwrap();
-        Server::start(engine)
+        let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8])
+            .unwrap()
+            .with_wall_pace_us(wall_pace_us);
+        Engine::new(cfg, Box::new(sim)).unwrap()
+    }
+
+    fn sim_server() -> (Arc<Server>, std::thread::JoinHandle<()>) {
+        Server::start(sim_engine(32 << 20, 0))
+    }
+
+    /// Bind port 0 (no fixed-port collisions under parallel `cargo test`)
+    /// and serve `max` connections on a background thread.
+    fn spawn_server(
+        srv: &Arc<Server>,
+        max: usize,
+    ) -> (String, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let srv = srv.clone();
+        let handle =
+            std::thread::spawn(move || srv.serve_listener(listener, Some(max)).unwrap());
+        (addr, handle)
     }
 
     #[test]
@@ -257,38 +547,127 @@ mod tests {
     #[test]
     fn http_round_trip() {
         let (srv, handle) = sim_server();
-        let srv2 = srv.clone();
-        let addr = "127.0.0.1:18731";
-        let server_thread = {
-            let srv = srv.clone();
-            let addr = addr.to_string();
-            std::thread::spawn(move || srv.serve_http(&addr, Some(2)).unwrap())
-        };
-        std::thread::sleep(std::time::Duration::from_millis(100));
+        let (addr, server_thread) = spawn_server(&srv, 2);
 
         let body = r#"{"prompt": "the quick brown fox jumps over the lazy dog", "adapter": 2, "max_new": 6}"#;
-        let mut conn = TcpStream::connect(addr).unwrap();
-        let req = format!(
-            "POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
-            body.len()
-        );
-        conn.write_all(req.as_bytes()).unwrap();
-        let mut resp = String::new();
-        conn.read_to_string(&mut resp).unwrap();
-        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
-        let json_body = resp.split("\r\n\r\n").nth(1).unwrap();
-        let j = json::parse(json_body).unwrap();
+        let (status, resp_body) = http_post(&addr, "/generate", body).unwrap();
+        assert_eq!(status, 200, "{resp_body}");
+        let j = json::parse(&resp_body).unwrap();
         assert_eq!(j.at(&["tokens"]).as_arr().unwrap().len(), 6);
 
-        // stats endpoint
-        let mut conn = TcpStream::connect(addr).unwrap();
-        conn.write_all(b"GET /stats HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
-        let mut resp = String::new();
-        conn.read_to_string(&mut resp).unwrap();
-        assert!(resp.starts_with("HTTP/1.1 200"), "{resp}");
+        let (status, stats_body) = http_get(&addr, "/stats").unwrap();
+        assert_eq!(status, 200, "{stats_body}");
+        json::parse(&stats_body).unwrap();
 
         server_thread.join().unwrap();
-        srv2.shutdown();
+        srv.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn malformed_content_length_is_rejected_not_misparsed() {
+        let (srv, handle) = sim_server();
+        let (addr, server_thread) = spawn_server(&srv, 1);
+
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.write_all(b"POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: banana\r\n\r\n")
+            .unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 400"), "{resp}");
+        assert!(resp.contains("invalid Content-Length"), "{resp}");
+
+        server_thread.join().unwrap();
+        srv.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn oversized_body_is_rejected_with_413() {
+        let (srv, handle) = sim_server();
+        let (addr, server_thread) = spawn_server(&srv, 1);
+
+        let too_big = srv.config().max_body_bytes + 1;
+        let mut conn = TcpStream::connect(&addr).unwrap();
+        conn.write_all(
+            format!("POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: {too_big}\r\n\r\n")
+                .as_bytes(),
+        )
+        .unwrap();
+        let mut resp = String::new();
+        conn.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 413"), "{resp}");
+
+        server_thread.join().unwrap();
+        srv.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn oom_drop_unblocks_waiter_with_error() {
+        // budget of one base page: the request's lifetime footprint can
+        // never be admitted, so the deadlock breaker must OOM-drop it —
+        // and the waiter must get an error, not block forever
+        let (srv, handle) = Server::start(sim_engine(64 << 10, 0));
+        let tokens: Vec<u32> = (10..90).collect();
+        let err = srv.generate(tokens, 0, 8).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("dropped"), "unexpected error: {msg}");
+
+        // through HTTP the drop is a capacity failure: 503, not 400
+        let (addr, server_thread) = spawn_server(&srv, 1);
+        let prompt: String = (0..80).map(|i| format!("w{i}")).collect::<Vec<_>>().join(" ");
+        let body = format!(r#"{{"prompt": "{prompt}", "max_new": 8}}"#);
+        let (status, resp) = http_post(&addr, "/generate", &body).unwrap();
+        assert_eq!(status, 503, "{resp}");
+        assert!(resp.contains("dropped"), "{resp}");
+        server_thread.join().unwrap();
+
+        let stats = srv.stats().unwrap();
+        assert!(
+            stats.at(&["oom_drops"]).as_f64().unwrap() >= 2.0,
+            "drops not accounted: {stats:?}"
+        );
+        srv.shutdown();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_clients_cobatch_through_http() {
+        // 8 simultaneous closed-loop HTTP clients against a wall-paced sim:
+        // all must complete, and the engine must have decoded real
+        // multi-sequence batches (occupancy > 1), proving the worker pool
+        // actually overlaps requests end to end
+        let engine = sim_engine(64 << 20, 2_000);
+        let (srv, handle) = Server::start_with(
+            engine,
+            ServerConfig { workers: 8, ..ServerConfig::default() },
+        );
+        let (addr, server_thread) = spawn_server(&srv, 8);
+
+        let spec = HttpLoadSpec {
+            clients: 8,
+            requests_per_client: 1,
+            shared_words: 120,
+            unique_words: 4,
+            max_new: 64,
+            adapters: 4,
+        };
+        let report = run_http_load(&addr, &spec).unwrap();
+        assert_eq!(report.at(&["ok"]).as_usize().unwrap(), 8, "{report:?}");
+        assert_eq!(report.at(&["errors"]).as_usize().unwrap(), 0, "{report:?}");
+
+        server_thread.join().unwrap();
+
+        let stats = srv.stats().unwrap();
+        let avg = stats.at(&["avg_decode_batch"]).as_f64().unwrap();
+        let max = stats.at(&["max_decode_batch"]).as_f64().unwrap();
+        assert!(avg > 1.0, "decode occupancy collapsed to serial: avg {avg}");
+        assert!(max >= 2.0, "no multi-sequence decode batch formed: max {max}");
+        assert_eq!(stats.at(&["completed"]).as_usize().unwrap(), 8);
+        assert_eq!(stats.at(&["oom_drops"]).as_usize().unwrap(), 0);
+
+        srv.shutdown();
         handle.join().unwrap();
     }
 }

@@ -16,6 +16,12 @@ impl Series {
         self.sorted = false;
     }
 
+    /// Merge another series' samples (per-thread collection, then combine).
+    pub fn extend_from(&mut self, other: &Series) {
+        self.values.extend_from_slice(&other.values);
+        self.sorted = false;
+    }
+
     pub fn len(&self) -> usize {
         self.values.len()
     }
@@ -110,6 +116,17 @@ mod tests {
         assert_eq!(s.percentile(50.0), 51.0);
         assert_eq!(s.percentile(100.0), 100.0);
         assert!((s.mean() - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn extend_from_merges() {
+        let mut a = Series::new();
+        a.push(1.0);
+        let mut b = Series::new();
+        b.push(3.0);
+        a.extend_from(&b);
+        assert_eq!(a.len(), 2);
+        assert!((a.mean() - 2.0).abs() < 1e-9);
     }
 
     #[test]

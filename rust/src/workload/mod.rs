@@ -450,6 +450,110 @@ impl Driver for WorkflowDriver {
     }
 }
 
+// ---------------------------------------------------------------------------
+// closed-loop HTTP load (exercises the real socket -> worker pool -> engine
+// path rather than the in-process Driver interface)
+// ---------------------------------------------------------------------------
+
+/// Closed-loop multi-client HTTP scenario: `clients` threads each issue
+/// `requests_per_client` sequential `POST /generate` calls with zero think
+/// time. Prompts share a static context (so the cache layer sees the
+/// paper's reuse pattern) plus a small per-request unique suffix. This is
+/// the measurement harness for front-end concurrency: with a serial accept
+/// loop the engine's decode occupancy pins at 1; with the worker pool the
+/// clients co-batch.
+#[derive(Debug, Clone)]
+pub struct HttpLoadSpec {
+    pub clients: usize,
+    pub requests_per_client: usize,
+    /// words in the shared static context prefix
+    pub shared_words: usize,
+    /// per-request unique words appended after the shared prefix
+    pub unique_words: usize,
+    pub max_new: usize,
+    /// adapters are assigned round-robin over clients
+    pub adapters: usize,
+}
+
+impl Default for HttpLoadSpec {
+    fn default() -> Self {
+        HttpLoadSpec {
+            clients: 8,
+            requests_per_client: 4,
+            shared_words: 160,
+            unique_words: 4,
+            max_new: 32,
+            adapters: 8,
+        }
+    }
+}
+
+/// Run the closed-loop load against a serving address; returns a JSON
+/// report (counts, client-side wall latency summary, throughput).
+pub fn run_http_load(addr: &str, spec: &HttpLoadSpec) -> anyhow::Result<Json> {
+    anyhow::ensure!(spec.clients > 0, "need at least one client");
+    anyhow::ensure!(spec.requests_per_client > 0, "need at least one request per client");
+    let shared: String = (0..spec.shared_words)
+        .map(|i| format!("ctx{i}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for c in 0..spec.clients {
+        let addr = addr.to_string();
+        let shared = shared.clone();
+        let spec = spec.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut latency = Series::new();
+            let (mut ok, mut errors) = (0usize, 0usize);
+            for r in 0..spec.requests_per_client {
+                let unique: String = (0..spec.unique_words)
+                    .map(|w| format!("u{c}x{r}x{w}"))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                let body = Json::obj(vec![
+                    ("prompt", Json::str(format!("{shared} {unique}"))),
+                    ("adapter", Json::num((c % spec.adapters.max(1)) as f64)),
+                    ("max_new", Json::num(spec.max_new as f64)),
+                ])
+                .to_string();
+                let start = std::time::Instant::now();
+                match crate::server::http_post(&addr, "/generate", &body) {
+                    Ok((200, _)) => {
+                        ok += 1;
+                        latency.push(start.elapsed().as_micros() as f64);
+                    }
+                    Ok(_) | Err(_) => errors += 1,
+                }
+            }
+            (latency, ok, errors)
+        }));
+    }
+    let mut latency = Series::new();
+    let (mut ok, mut errors) = (0usize, 0usize);
+    for h in handles {
+        let (l, o, e) = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("http load client panicked"))?;
+        latency.extend_from(&l);
+        ok += o;
+        errors += e;
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok(Json::obj(vec![
+        ("clients", Json::num(spec.clients as f64)),
+        (
+            "requests",
+            Json::num((spec.clients * spec.requests_per_client) as f64),
+        ),
+        ("ok", Json::num(ok as f64)),
+        ("errors", Json::num(errors as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("throughput_req_per_s", Json::num(ok as f64 / wall_s)),
+        ("latency_us", latency.summary().to_json()),
+    ]))
+}
+
 /// Standard engine builders shared by tests, benches and the CLI.
 pub mod presets {
     use crate::config::{CacheConfig, CachePolicy, EngineConfig};

@@ -14,6 +14,11 @@ use forkkv::metrics::FinishedRequest;
 use forkkv::util::rng::Rng;
 
 fn artifacts_dir() -> Option<PathBuf> {
+    // without the `pjrt` feature the runtime cannot load artifacts even
+    // when they exist on disk — skip rather than fail
+    if !cfg!(feature = "pjrt") {
+        return None;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/llama3-8b-sim");
     dir.join("manifest.json").exists().then_some(dir)
 }

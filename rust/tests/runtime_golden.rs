@@ -12,6 +12,11 @@ use forkkv::runtime::{DecodeArgs, PjrtRuntime, PrefillArgs};
 use forkkv::util::json::{self, Json};
 
 fn artifacts_dir() -> Option<PathBuf> {
+    // without the `pjrt` feature the runtime cannot load artifacts even
+    // when they exist on disk — skip rather than fail
+    if !cfg!(feature = "pjrt") {
+        return None;
+    }
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/llama3-8b-sim");
     dir.join("manifest.json").exists().then_some(dir)
 }

@@ -1,0 +1,175 @@
+//! Offline stand-in for the `anyhow` crate (the container has no crates.io
+//! registry access, so the serving crate vendors the small subset it uses).
+//!
+//! Implemented surface — exactly what the forkkv sources call:
+//!   - `anyhow::Error`: opaque error with an optional source chain
+//!   - `anyhow::Result<T>` with defaulted error type
+//!   - `anyhow!`, `bail!`, `ensure!` macros (format-string style)
+//!   - `From<E: std::error::Error + Send + Sync + 'static>` so `?` converts
+//!     io/parse/etc. errors, mirroring the real crate's blanket conversion
+//!
+//! Like the real crate, `Error` deliberately does NOT implement
+//! `std::error::Error` (that would make the blanket `From` impl overlap
+//! with the identity conversion). `{:#}` formatting appends the source
+//! chain; `{:?}` prints a "Caused by:" report.
+
+use std::error::Error as StdError;
+use std::fmt;
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Construct from a displayable message (what `anyhow!` expands to).
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Construct from a concrete error, keeping it as the source.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Self {
+        Error { msg: error.to_string(), source: Some(Box::new(error)) }
+    }
+
+    /// Prepend higher-level context, demoting self's message into the chain.
+    pub fn context<M: fmt::Display>(self, message: M) -> Self {
+        Error { msg: format!("{message}: {}", self.msg), source: self.source }
+    }
+
+    /// Root-most error in the chain (self's message when there is none).
+    pub fn root_cause(&self) -> String {
+        let mut cur: Option<&(dyn StdError + 'static)> = match &self.source {
+            Some(b) => Some(&**b),
+            None => None,
+        };
+        let mut last = self.msg.clone();
+        while let Some(s) = cur {
+            last = s.to_string();
+            cur = s.source();
+        }
+        last
+    }
+
+    fn chain_below_top(&self) -> impl Iterator<Item = &(dyn StdError + 'static)> + '_ {
+        // `msg` already renders the boxed source itself; the interesting
+        // remainder of the chain starts at its own source.
+        let mut cur: Option<&(dyn StdError + 'static)> =
+            self.source.as_deref().and_then(|s| s.source());
+        std::iter::from_fn(move || {
+            let item = cur?;
+            cur = item.source();
+            Some(item)
+        })
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        if f.alternate() {
+            for s in self.chain_below_top() {
+                write!(f, ": {s}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)?;
+        let mut first = true;
+        for s in self.chain_below_top() {
+            if first {
+                write!(f, "\n\nCaused by:")?;
+                first = false;
+            }
+            write!(f, "\n    {s}")?;
+        }
+        Ok(())
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Self {
+        Error::new(error)
+    }
+}
+
+/// Create an [`Error`] from format arguments: `anyhow!("bad value {v}")`.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)+) => {
+        $crate::Error::msg(::std::format!($($arg)+))
+    };
+}
+
+/// Return early with an error: `bail!("no decode bucket {b}")`.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(
+                ::std::concat!("condition failed: `", ::std::stringify!($cond), "`"),
+            ));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        Err(std::io::Error::new(std::io::ErrorKind::NotFound, "gone"))?;
+        Ok(())
+    }
+
+    fn guarded(x: usize) -> Result<usize> {
+        ensure!(x < 10, "x too big: {x}");
+        Ok(x)
+    }
+
+    fn bails() -> Result<()> {
+        bail!("nope: {}", 7);
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(e.to_string().contains("gone"), "{e}");
+    }
+
+    #[test]
+    fn macros_format() {
+        assert_eq!(guarded(3).unwrap(), 3);
+        assert_eq!(guarded(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(bails().unwrap_err().to_string(), "nope: 7");
+        let e: Error = anyhow!("v={}", 1);
+        assert_eq!(format!("{e}"), "v=1");
+        assert_eq!(format!("{e:#}"), "v=1");
+    }
+
+    #[test]
+    fn context_prepends() {
+        let e = anyhow!("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+        assert_eq!(e.root_cause(), "outer: inner");
+    }
+}
