@@ -88,11 +88,23 @@ impl SeqSlab {
     /// The pool stores only `rank_effective` floats per row (honest memory
     /// accounting, paper Eq. 3); the slab rows are `rank_max` wide with a
     /// zero tail, so rows are copied individually.
+    ///
+    /// Contract: unlike [`SeqSlab::load_base_pages`], this **never
+    /// advances `filled`**. The two inherited coverages are independent —
+    /// a fork can match more residual than base pages (or vice versa) —
+    /// and `filled` must end up at the *joint* coverage the decode path
+    /// may attend over, which only the caller knows. `Engine::admit_fork`
+    /// therefore loads both components and then sets `filled` explicitly
+    /// to `min(base_cached, res_cached)`; if this method bumped `filled`
+    /// to `n_tokens`, a residual-heavy fork would attend over base rows
+    /// that were never materialized.
     pub fn load_res_pages(&mut self, pool: &BlockPool, pages: &[PageId], n_tokens: usize) {
         let pt = pool.spec().page_tokens;
         let wp = pool.spec().width;
         let ws = self.spec.res_width;
         assert!(wp <= ws, "pool res width exceeds slab rank_max");
+        assert!(n_tokens <= pages.len() * pt, "residual pages cover n_tokens");
+        let filled_before = self.filled;
         for l in 0..self.spec.n_layers {
             for (pi, &page) in pages.iter().enumerate() {
                 let start = pi * pt;
@@ -109,6 +121,10 @@ impl SeqSlab {
                 }
             }
         }
+        debug_assert_eq!(
+            self.filled, filled_before,
+            "load_res_pages must not advance filled (joint coverage is the caller's call)"
+        );
     }
 
     /// Append a prefill chunk's outputs at `start` (= cache_len of the
@@ -180,8 +196,10 @@ impl SeqSlab {
 // scatter: persist computed KV into pool pages
 // ---------------------------------------------------------------------------
 
-/// Write `n` token rows from a prefill chunk (layout `[L, chunk, src_width]`)\n/// persisting only the pool-width prefix of each row (the residual pool\n/// stores `rank_effective` of `rank_max` — honest Eq. 3 accounting).
-/// into `pages`, starting at absolute token position `start`. Pages must
+/// Write `n` token rows from a prefill chunk (layout `[L, chunk, src_width]`)
+/// into `pages`, starting at absolute token position `start`, persisting
+/// only the pool-width prefix of each row (the residual pool stores
+/// `rank_effective` of `rank_max` — honest Eq. 3 accounting). Pages must
 /// cover positions `[start, start+n)`; `pages[i]` holds tokens
 /// `[i*pt, (i+1)*pt)`.
 pub fn scatter_chunk(
@@ -305,9 +323,52 @@ mod tests {
         let v = k.clone();
         scatter_token(&mut pool, p1, 5, 1, nl, w, &k, &v);
         let got = pool.kv_slice(p1, 0, 0);
-        let src = (1 * nl + 0) * w;
-        assert_eq!(&got[1 * w..2 * w], &k[src..src + w]);
+        let src = nl * w; // row 1, layer 0
+        assert_eq!(&got[w..2 * w], &k[src..src + w]);
         let _ = p0;
+    }
+
+    #[test]
+    fn fork_inheriting_residual_pages_leaves_filled_to_the_caller() {
+        // Regression for the load_res_pages contract: a fork that inherits
+        // MORE residual than base coverage must not see `filled` jump to
+        // the residual coverage — base rows beyond `filled` were never
+        // materialized. Mirrors Engine::admit_fork: load base (4 tokens),
+        // load residual (8 tokens), then the caller pins `filled` to the
+        // joint coverage min(4, 8) = 4.
+        let base_pool = {
+            let mut p = mk_pool();
+            let pages = vec![p.alloc().unwrap()];
+            let k: Vec<f32> = (0..2 * 8 * 3).map(|i| i as f32).collect();
+            scatter_chunk(&mut p, &pages, 0, 4, 8, 3, &k, &k);
+            (p, pages)
+        };
+        // slab residual rows are res_width=2 wide; the pool stores only
+        // width 1 (rank_effective < rank_max), exercising the zero tail
+        let mut res_pool =
+            BlockPool::new(PoolSpec { n_pages: 8, page_tokens: 4, n_layers: 2, width: 1 });
+        let res_pages: Vec<PageId> = (0..2).map(|_| res_pool.alloc().unwrap()).collect();
+        let kr: Vec<f32> = (0..2 * 8).map(|i| 500.0 + i as f32).collect();
+        scatter_chunk(&mut res_pool, &res_pages, 0, 8, 8, 1, &kr, &kr);
+
+        let mut slab = SeqSlab::new(spec());
+        let (bpool, bpages) = &base_pool;
+        slab.load_base_pages(bpool, bpages, 4);
+        assert_eq!(slab.filled, 4, "base load advances filled");
+        slab.load_res_pages(&res_pool, &res_pages, 8);
+        assert_eq!(slab.filled, 4, "residual load must NOT advance filled");
+        // residual rows materialized for all 8 inherited tokens, with the
+        // rank tail beyond the pool width still zero
+        let s = spec();
+        for t in 0..8 {
+            let dst = (s.s_max + t) * s.res_width; // layer 1, token t
+            let src = (8 + t) as f32; // layer 1 stride in the 8-token chunk
+            assert_eq!(slab.kr[dst], 500.0 + src, "layer 1 token {t}");
+            assert_eq!(slab.kr[dst + 1], 0.0, "rank tail must stay zero");
+        }
+        // the engine then pins filled to the joint coverage
+        slab.filled = 4.min(8);
+        assert_eq!(slab.filled, 4);
     }
 
     #[test]
@@ -330,11 +391,11 @@ mod tests {
         slab.append_prefill(&out, 4, 5, chunk, false);
         assert_eq!(slab.filled, 9);
         // layer 1, token 2 of the chunk lands at position 6
-        let dst = (1 * s.s_max + 6) * s.base_width;
-        let src = (1 * chunk + 2) * s.base_width;
+        let dst = (s.s_max + 6) * s.base_width;
+        let src = (chunk + 2) * s.base_width;
         assert_eq!(slab.kb[dst], out.kb[src]);
-        let dst_r = (1 * s.s_max + 6) * s.res_width;
-        let src_r = (1 * chunk + 2) * s.res_width;
+        let dst_r = (s.s_max + 6) * s.res_width;
+        let src_r = (chunk + 2) * s.res_width;
         assert_eq!(slab.kr[dst_r], out.kr[src_r]);
 
         // merged variant routes km/vm into the base lanes
@@ -358,8 +419,8 @@ mod tests {
             vm: vec![9.5; b * s.n_layers * s.base_width],
         };
         slab.append_decode(&out, 2, 7, b, false);
-        let dst = (0 * s.s_max + 7) * s.base_width;
-        let src = (2 * s.n_layers + 0) * s.base_width;
+        let dst = 7 * s.base_width; // layer 0, position 7
+        let src = 2 * s.n_layers * s.base_width; // row 2, layer 0
         assert_eq!(slab.kb[dst], out.kb[src]);
         assert_eq!(slab.filled, 8);
     }

@@ -2,6 +2,7 @@
 //! workloads, loadable from JSON (`--config file.json`) with defaults that
 //! match the paper's evaluation setup scaled to this substrate.
 
+use crate::router::RoutePolicy;
 use crate::util::json::Json;
 
 /// Which KV-cache sharing policy the engine runs (DESIGN.md §3).
@@ -79,7 +80,7 @@ impl Default for SchedulerConfig {
 
 /// HTTP front-end knobs: how many connections are serviced concurrently and
 /// how the hand-rolled parser protects itself. The worker pool is what lets
-/// many `/generate` calls be in flight at once so the engine thread forms
+/// many `/generate` calls be in flight at once so the engine shards form
 /// real multi-sequence decode batches (the serial accept loop it replaces
 /// collapsed continuous batching to batch-size-1).
 #[derive(Debug, Clone)]
@@ -97,6 +98,17 @@ pub struct ServerConfig {
     /// socket read/write timeout; a silent client can otherwise occupy a
     /// connection worker forever (0 = no timeout)
     pub io_timeout_ms: u64,
+    /// engine shards behind the front-end; each shard owns an independent
+    /// `Engine` (pools, trees, executor) with the byte budget split N ways
+    pub shards: usize,
+    /// how requests are placed onto shards (`affinity` co-locates shared
+    /// prefixes; `round_robin` is the placement-oblivious baseline)
+    pub route_policy: RoutePolicy,
+    /// affinity spill threshold: a request spills off its home shard when
+    /// the home's in-flight depth exceeds `imbalance_factor * (min_depth
+    /// + 1)` across the pool (the +1 keeps a near-idle pool from spilling
+    /// off a depth-1 home shard)
+    pub imbalance_factor: f64,
 }
 
 impl Default for ServerConfig {
@@ -107,6 +119,9 @@ impl Default for ServerConfig {
             max_body_bytes: 1 << 20,
             idle_wait_ms: 50,
             io_timeout_ms: 30_000,
+            shards: 1,
+            route_policy: RoutePolicy::Affinity,
+            imbalance_factor: 2.0,
         }
     }
 }
@@ -130,6 +145,17 @@ impl ServerConfig {
         }
         if let Some(v) = j.get("io_timeout_ms").and_then(Json::as_usize) {
             cfg.io_timeout_ms = v as u64;
+        }
+        if let Some(v) = j.get("shards").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "server.shards must be > 0");
+            cfg.shards = v;
+        }
+        if let Some(v) = j.get("route").and_then(Json::as_str) {
+            cfg.route_policy = RoutePolicy::parse(v)?;
+        }
+        if let Some(v) = j.get("imbalance_factor").and_then(Json::as_f64) {
+            anyhow::ensure!(v >= 1.0, "server.imbalance_factor must be >= 1.0");
+            cfg.imbalance_factor = v;
         }
         Ok(cfg)
     }
@@ -158,6 +184,22 @@ impl Default for EngineConfig {
 }
 
 impl EngineConfig {
+    /// The per-shard slice of this configuration for a pool of `shards`
+    /// engines: the byte budget and residency cap are split N ways (the
+    /// pool as a whole spends one "GPU memory" budget) and the seed is
+    /// decorrelated per shard so peer engines don't sample in lockstep.
+    pub fn shard_slice(&self, shard: usize, shards: usize) -> EngineConfig {
+        assert!(shards > 0, "shard pool must be non-empty");
+        assert!(shard < shards, "shard index {shard} out of range {shards}");
+        let mut cfg = self.clone();
+        cfg.cache.budget_bytes = (self.cache.budget_bytes / shards).max(1);
+        cfg.sched.max_running = (self.sched.max_running / shards).max(1);
+        cfg.seed = self
+            .seed
+            .wrapping_add((shard as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
+        cfg
+    }
+
     pub fn from_json(j: &Json) -> anyhow::Result<Self> {
         let mut cfg = EngineConfig::default();
         if let Some(p) = j.get("policy").and_then(Json::as_str) {
@@ -215,7 +257,8 @@ mod tests {
     fn server_config_from_json() {
         let j = json::parse(
             r#"{"workers":4,"accept_backlog":8,"max_body_bytes":4096,
-                "idle_wait_ms":5,"io_timeout_ms":1000}"#,
+                "idle_wait_ms":5,"io_timeout_ms":1000,"shards":4,
+                "route":"round_robin","imbalance_factor":3.5}"#,
         )
         .unwrap();
         let cfg = ServerConfig::from_json(&j).unwrap();
@@ -224,11 +267,41 @@ mod tests {
         assert_eq!(cfg.max_body_bytes, 4096);
         assert_eq!(cfg.idle_wait_ms, 5);
         assert_eq!(cfg.io_timeout_ms, 1000);
-        // zero workers is rejected, absent fields keep defaults
+        assert_eq!(cfg.shards, 4);
+        assert_eq!(cfg.route_policy, RoutePolicy::RoundRobin);
+        assert!((cfg.imbalance_factor - 3.5).abs() < 1e-9);
+        // zero workers / zero shards / sub-1 imbalance are rejected,
+        // absent fields keep defaults
         assert!(ServerConfig::from_json(&json::parse(r#"{"workers":0}"#).unwrap()).is_err());
+        assert!(ServerConfig::from_json(&json::parse(r#"{"shards":0}"#).unwrap()).is_err());
+        assert!(ServerConfig::from_json(
+            &json::parse(r#"{"imbalance_factor":0.5}"#).unwrap()
+        )
+        .is_err());
         let d = ServerConfig::from_json(&json::parse("{}").unwrap()).unwrap();
         assert_eq!(d.workers, ServerConfig::default().workers);
         assert_eq!(d.max_body_bytes, 1 << 20);
+        assert_eq!(d.shards, 1);
+        assert_eq!(d.route_policy, RoutePolicy::Affinity);
+    }
+
+    #[test]
+    fn shard_slice_splits_budget_and_decorrelates_seeds() {
+        let cfg = EngineConfig {
+            cache: CacheConfig { page_tokens: 16, budget_bytes: 64 << 20 },
+            seed: 42,
+            ..EngineConfig::default()
+        };
+        let a = cfg.shard_slice(0, 4);
+        let b = cfg.shard_slice(3, 4);
+        assert_eq!(a.cache.budget_bytes, 16 << 20);
+        assert_eq!(b.cache.budget_bytes, 16 << 20);
+        assert_eq!(a.sched.max_running, cfg.sched.max_running / 4);
+        assert_ne!(a.seed, b.seed);
+        assert_ne!(a.seed, cfg.seed);
+        // degenerate single-shard slice is the whole budget
+        let whole = cfg.shard_slice(0, 1);
+        assert_eq!(whole.cache.budget_bytes, 64 << 20);
     }
 
     #[test]

@@ -19,6 +19,15 @@
 //! `PjrtExecutor` it advances by measured execution time — the same
 //! scheduler code path either way.
 //!
+//! Replication: the engine is deliberately single-owner — no interior
+//! locking, no shared caches. The serving layer scales it by running N
+//! `Engine` instances as peer *shards* (`server::Server::start_sharded`),
+//! each with its own executor, pools and trees and a 1/N slice of the
+//! byte budget (`EngineConfig::shard_slice`); the `router` module decides
+//! which shard a request's prefix affinity lands it on. Per-shard
+//! determinism is preserved: a shard's event stream depends only on the
+//! requests routed to it.
+//!
 //! CoW invariant (checked by debug assertions + tests): a page is written
 //! only while its refcount is 1. Fork inheritance is page-aligned, the
 //! final prompt token is never served from cache, and only full pages are
@@ -625,6 +634,10 @@ impl Engine {
             if let Some(pool) = self.res_pool.as_ref() {
                 slab.load_res_pages(pool, &seq.res_pages, seq.res_cached);
             }
+            // the load calls fill rows but only the base load moves
+            // `filled` (see the load_res_pages contract): the coverage
+            // decode may attend over is the *joint* one — min(base, res),
+            // which is what `processed` was set to above
             slab.filled = seq.processed;
             self.seqs.get_mut(&sid).unwrap().slab = Some(slab);
         }

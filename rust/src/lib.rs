@@ -13,6 +13,7 @@ pub mod exec;
 pub mod kvcache;
 pub mod metrics;
 pub mod radix;
+pub mod router;
 pub mod runtime;
 pub mod server;
 pub mod util;

@@ -7,11 +7,13 @@ use std::path::PathBuf;
 use forkkv::config::{CacheConfig, CachePolicy, EngineConfig, ServerConfig};
 use forkkv::engine::Engine;
 use forkkv::exec::{CostModel, Executor, PjrtExecutor, SimExecutor};
+use forkkv::router::RoutePolicy;
 use forkkv::runtime::PrefillArgs;
 use forkkv::server::Server;
 use forkkv::util::json::Json;
 use forkkv::workload::{
-    presets, run_http_load, HttpLoadSpec, WorkflowDriver, WorkflowKind, WorkloadSpec,
+    presets, run_http_load, run_multi_workflow_load, HttpLoadSpec, MultiWorkflowHttpSpec,
+    WorkflowDriver, WorkflowKind, WorkloadSpec,
 };
 
 fn usage() -> ! {
@@ -20,17 +22,22 @@ fn usage() -> ! {
 
 USAGE:
   forkkv serve      [--artifacts DIR] [--addr HOST:PORT] [--policy P] [--budget-mb N]
-                    [--workers N] [--max-body-kb N]
+                    [--workers N] [--max-body-kb N] [--shards N] [--route R]
+                    [--imbalance F]
   forkkv run        [--policy P] [--model M] [--dataset D] [--workflow react|mapreduce]
                     [--workflows N] [--requests N] [--rate R] [--budget-mb N] [--seed S]
                     [--real --artifacts DIR]
   forkkv bench-http [--clients N] [--requests-per-client N] [--policy P] [--model M]
                     [--budget-mb N] [--max-new N] [--workers N] [--pace-us U]
-                    # closed-loop concurrent HTTP load against a sim-backed server
+                    [--shards N] [--route R] [--imbalance F]
+                    [--workflows K --agents-per-workflow M]
+                    # closed-loop concurrent HTTP load against a sim-backed server;
+                    # with --workflows, K workflows of M agents fork shared contexts
+                    # (the multi-shard placement scenario)
   forkkv calibrate  [--artifacts DIR]   # measure real PJRT costs -> calibration.json
 
   P: forkkv | prefix | full-reuse      M: llama3-8b-sim | qwen2.5-7b-sim | qwen2.5-14b-sim
-  D: loogle | narrativeqa | apigen"
+  D: loogle | narrativeqa | apigen     R: affinity | round_robin"
     );
     std::process::exit(2);
 }
@@ -74,11 +81,23 @@ fn server_config(args: &Args) -> anyhow::Result<ServerConfig> {
             .checked_mul(1024)
             .ok_or_else(|| anyhow::anyhow!("--max-body-kb {kb} too large"))?;
     }
+    if let Some(v) = args.flag("--shards") {
+        cfg.shards = v.parse()?;
+        anyhow::ensure!(cfg.shards > 0, "--shards must be > 0");
+    }
+    if let Some(v) = args.flag("--route") {
+        cfg.route_policy = RoutePolicy::parse(&v)?;
+    }
+    if let Some(v) = args.flag("--imbalance") {
+        cfg.imbalance_factor = v.parse()?;
+        anyhow::ensure!(cfg.imbalance_factor >= 1.0, "--imbalance must be >= 1.0");
+    }
     Ok(cfg)
 }
 
 fn engine_config(args: &Args) -> anyhow::Result<EngineConfig> {
-    let policy = CachePolicy::parse(&args.flag("--policy").unwrap_or("forkkv".into()))?;
+    let policy =
+        CachePolicy::parse(&args.flag("--policy").unwrap_or_else(|| "forkkv".into()))?;
     let budget_mb: usize = args
         .flag("--budget-mb")
         .map(|v| v.parse())
@@ -93,32 +112,53 @@ fn engine_config(args: &Args) -> anyhow::Result<EngineConfig> {
     })
 }
 
+/// Build the engine shard pool: `shards` peer engines, each owning a
+/// 1/N slice of the byte budget (and its own executor built by `mk`).
+fn build_shards(
+    cfg: &EngineConfig,
+    shards: usize,
+    mut mk: impl FnMut() -> anyhow::Result<Box<dyn Executor>>,
+) -> anyhow::Result<Vec<Engine>> {
+    (0..shards)
+        .map(|i| Engine::new(cfg.shard_slice(i, shards), mk()?))
+        .collect()
+}
+
 fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let dir = PathBuf::from(
         args.flag("--artifacts")
-            .unwrap_or("artifacts/llama3-8b-sim".into()),
+            .unwrap_or_else(|| "artifacts/llama3-8b-sim".into()),
     );
-    let addr = args.flag("--addr").unwrap_or("127.0.0.1:8080".into());
+    let addr = args
+        .flag("--addr")
+        .unwrap_or_else(|| "127.0.0.1:8080".into());
     let cfg = engine_config(args)?;
     let scfg = server_config(args)?;
     eprintln!("loading artifacts from {} ...", dir.display());
-    let exec = PjrtExecutor::load(&dir)?;
-    let engine = Engine::new(cfg, Box::new(exec))?;
-    let (server, handle) = Server::start_with(engine, scfg);
+    let engines = build_shards(&cfg, scfg.shards, || {
+        Ok(Box::new(PjrtExecutor::load(&dir)?) as Box<dyn Executor>)
+    })?;
+    let (server, handles) = Server::start_sharded(engines, scfg);
     server.serve_http(&addr, None)?;
     server.shutdown();
-    handle.join().ok();
+    for h in handles {
+        h.join().ok();
+    }
     Ok(())
 }
 
 /// Closed-loop concurrent HTTP benchmark over the sim backend: stands up a
-/// wall-paced sim server on an ephemeral port, drives it with N closed-loop
-/// clients, and reports client-side latency plus the engine's decode-batch
-/// occupancy — the direct measurement of front-end concurrency.
+/// wall-paced sim shard pool on an ephemeral port, drives it with either N
+/// plain closed-loop clients or (with `--workflows`) K workflows of M
+/// agents forking shared contexts, and reports client-side latency plus
+/// each shard's decode-batch occupancy — the direct measurement of
+/// front-end concurrency and router placement quality.
 fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
     let cfg = engine_config(args)?;
     let scfg = server_config(args)?;
-    let model = args.flag("--model").unwrap_or("llama3-8b-sim".into());
+    let model = args
+        .flag("--model")
+        .unwrap_or_else(|| "llama3-8b-sim".into());
     let clients: usize = args.flag("--clients").map(|v| v.parse()).transpose()?.unwrap_or(8);
     let per_client: usize = args
         .flag("--requests-per-client")
@@ -127,18 +167,36 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         .unwrap_or(4);
     let max_new: usize = args.flag("--max-new").map(|v| v.parse()).transpose()?.unwrap_or(32);
     let pace_us: u64 = args.flag("--pace-us").map(|v| v.parse()).transpose()?.unwrap_or(500);
+    let workflows: Option<usize> = args.flag("--workflows").map(|v| v.parse()).transpose()?;
+    let agents: usize = args
+        .flag("--agents-per-workflow")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(3);
 
-    let sim = SimExecutor::new(&model, presets::SIM_BUCKETS.to_vec())?
-        .with_wall_pace_us(pace_us);
     let policy = cfg.policy;
-    let engine = Engine::new(cfg, Box::new(sim))?;
-    let (server, engine_handle) = Server::start_with(engine, scfg);
+    let engines = build_shards(&cfg, scfg.shards, || {
+        let sim = SimExecutor::new(&model, presets::SIM_BUCKETS.to_vec())?
+            .with_wall_pace_us(pace_us);
+        Ok(Box::new(sim) as Box<dyn Executor>)
+    })?;
+    let (server, shard_handles) = Server::start_sharded(engines, scfg);
 
     let listener = std::net::TcpListener::bind(
-        args.flag("--addr").unwrap_or("127.0.0.1:0".into()),
+        args.flag("--addr")
+            .unwrap_or_else(|| "127.0.0.1:0".into()),
     )?;
     let addr = listener.local_addr()?.to_string();
-    eprintln!("bench-http: {clients} clients x {per_client} requests -> http://{addr}");
+    match workflows {
+        Some(k) => eprintln!(
+            "bench-http: {k} workflows x {agents} agents over {} shard(s) -> http://{addr}",
+            server.config().shards
+        ),
+        None => eprintln!(
+            "bench-http: {clients} clients x {per_client} requests over {} shard(s) -> http://{addr}",
+            server.config().shards
+        ),
+    }
     // serve unbounded on a detached thread: the load below completes only
     // once every client got its response, and capping the accept count
     // would hang the bench if any connect attempt failed (those are
@@ -148,29 +206,54 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         std::thread::spawn(move || server.serve_listener(listener, None))
     };
 
-    let spec = HttpLoadSpec {
-        clients,
-        requests_per_client: per_client,
-        max_new,
-        ..HttpLoadSpec::default()
+    let mut report = match workflows {
+        Some(k) => {
+            let spec = MultiWorkflowHttpSpec {
+                workflows: k,
+                agents_per_workflow: agents,
+                max_new,
+                ..MultiWorkflowHttpSpec::default()
+            };
+            run_multi_workflow_load(&addr, &spec)?
+        }
+        None => {
+            let spec = HttpLoadSpec {
+                clients,
+                requests_per_client: per_client,
+                max_new,
+                ..HttpLoadSpec::default()
+            };
+            run_http_load(&addr, &spec)?
+        }
     };
-    let mut report = run_http_load(&addr, &spec)?;
     if let Json::Obj(m) = &mut report {
-        m.insert("engine".into(), server.stats()?);
+        // one snapshot for both views, so the aggregate always equals the
+        // sum of the per-shard entries even if stragglers are still active
+        let per_shard = server.shard_stats()?;
+        m.insert("engine".into(), forkkv::metrics::aggregate_stats(&per_shard));
+        m.insert("per_shard".into(), Json::Arr(per_shard));
+        m.insert(
+            "route".into(),
+            Json::str(server.config().route_policy.name()),
+        );
         m.insert("policy".into(), Json::str(policy.name()));
         m.insert("workers".into(), Json::num(server.config().workers as f64));
         m.insert("pace_us".into(), Json::num(pace_us as f64));
     }
     server.shutdown();
-    engine_handle.join().ok();
-    println!("{}", report.to_string());
+    for h in shard_handles {
+        h.join().ok();
+    }
+    println!("{report}");
     Ok(())
 }
 
 fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let cfg = engine_config(args)?;
-    let model = args.flag("--model").unwrap_or("llama3-8b-sim".into());
-    let dataset = args.flag("--dataset").unwrap_or("loogle".into());
+    let model = args
+        .flag("--model")
+        .unwrap_or_else(|| "llama3-8b-sim".into());
+    let dataset = args.flag("--dataset").unwrap_or_else(|| "loogle".into());
     let workflows: usize = args
         .flag("--workflows")
         .map(|v| v.parse())
@@ -191,7 +274,7 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     let (mut engine, mut spec) = if args.has("--real") {
         let dir = PathBuf::from(
             args.flag("--artifacts")
-                .unwrap_or(format!("artifacts/{model}")),
+                .unwrap_or_else(|| format!("artifacts/{model}")),
         );
         let exec = PjrtExecutor::load(&dir)?;
         let spec = WorkloadSpec::standard(&dataset, kind, workflows);
@@ -210,14 +293,15 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
         m.insert("engine".into(), engine.metrics.to_json());
         m.insert("policy".into(), Json::str(engine.cfg.policy.name()));
     }
-    println!("{}", report.to_string());
+    println!("{report}");
     Ok(())
 }
 
 /// Measure real per-op costs and write artifacts/calibration.json so the
 /// sim cost model reflects this machine (EXPERIMENTS.md §Calibration).
 fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
-    let base = PathBuf::from(args.flag("--artifacts").unwrap_or("artifacts".into()));
+    let base =
+        PathBuf::from(args.flag("--artifacts").unwrap_or_else(|| "artifacts".into()));
     let mut out = std::collections::BTreeMap::new();
     for entry in std::fs::read_dir(&base)? {
         let dir = entry?.path();

@@ -79,10 +79,14 @@ impl EngineMetrics {
         self.max_decode_batch = self.max_decode_batch.max(rows as u64);
     }
 
+    /// JSON snapshot. Takes `&mut self` (unlike the `to_*` convention)
+    /// because the percentile summaries sort their series in place.
+    #[allow(clippy::wrong_self_convention)]
     pub fn to_json(&mut self) -> Json {
         Json::obj(vec![
             ("prefill_steps", Json::num(self.prefill_steps as f64)),
             ("decode_steps", Json::num(self.decode_steps as f64)),
+            ("decode_rows", Json::num(self.decode_rows as f64)),
             ("avg_decode_batch", Json::num(self.avg_decode_batch())),
             ("prefill_busy_us", Json::num(self.prefill_busy_us as f64)),
             ("decode_busy_us", Json::num(self.decode_busy_us as f64)),
@@ -103,6 +107,74 @@ impl EngineMetrics {
             ("queue_depth", self.queue_depth.summary().to_json()),
         ])
     }
+}
+
+/// Keys summed across shards by [`aggregate_stats`]. Series summaries are
+/// deliberately absent: percentiles don't compose across shards, so those
+/// stay in the per-shard snapshots.
+const SUMMED_KEYS: [&str; 12] = [
+    "prefill_steps",
+    "decode_steps",
+    "decode_rows",
+    "prefill_busy_us",
+    "decode_busy_us",
+    "prompt_tokens",
+    "hit_full_tokens",
+    "hit_partial_tokens",
+    "computed_prompt_tokens",
+    "completed",
+    "preemptions",
+    "oom_drops",
+];
+
+/// Combine per-shard stats snapshots (as produced by
+/// [`EngineMetrics::to_json`]) into pool-level totals: counters sum,
+/// `max_decode_batch` takes the max, and the ratio metrics
+/// (`avg_decode_batch`, `hit_rate`, `matched_rate`) are re-derived from the
+/// summed numerators/denominators — averaging per-shard ratios would weight
+/// an idle shard the same as a saturated one.
+pub fn aggregate_stats(shards: &[Json]) -> Json {
+    fn sum(shards: &[Json], key: &str) -> f64 {
+        shards
+            .iter()
+            .filter_map(|s| s.get(key).and_then(Json::as_f64))
+            .sum()
+    }
+    let mut pairs: Vec<(&str, Json)> =
+        vec![("shards", Json::num(shards.len() as f64))];
+    for key in SUMMED_KEYS {
+        pairs.push((key, Json::num(sum(shards, key))));
+    }
+    let decode_steps = sum(shards, "decode_steps");
+    let decode_rows = sum(shards, "decode_rows");
+    pairs.push((
+        "avg_decode_batch",
+        Json::num(if decode_steps > 0.0 { decode_rows / decode_steps } else { 0.0 }),
+    ));
+    pairs.push((
+        "max_decode_batch",
+        Json::num(
+            shards
+                .iter()
+                .filter_map(|s| s.get("max_decode_batch").and_then(Json::as_f64))
+                .fold(0.0, f64::max),
+        ),
+    ));
+    let prompt = sum(shards, "prompt_tokens");
+    let hit_full = sum(shards, "hit_full_tokens");
+    let hit_partial = sum(shards, "hit_partial_tokens");
+    pairs.push((
+        "hit_rate",
+        Json::num(if prompt > 0.0 { hit_full / prompt } else { 0.0 }),
+    ));
+    // fraction of prompt tokens served from *any* cached pages (base or
+    // residual) — the router's figure of merit: affinity placement raises
+    // this, round-robin scatters it
+    pairs.push((
+        "matched_rate",
+        Json::num(if prompt > 0.0 { (hit_full + hit_partial) / prompt } else { 0.0 }),
+    ));
+    Json::obj(pairs)
 }
 
 /// Per-request outcome, the unit the workload drivers aggregate.
@@ -186,12 +258,14 @@ mod tests {
 
     #[test]
     fn ratios() {
-        let mut m = EngineMetrics::default();
-        m.decode_steps = 4;
-        m.decode_rows = 14;
+        let m = EngineMetrics {
+            decode_steps: 4,
+            decode_rows: 14,
+            prompt_tokens: 100,
+            hit_full_tokens: 40,
+            ..EngineMetrics::default()
+        };
         assert!((m.avg_decode_batch() - 3.5).abs() < 1e-9);
-        m.prompt_tokens = 100;
-        m.hit_full_tokens = 40;
         assert!((m.hit_rate() - 0.4).abs() < 1e-9);
     }
 
@@ -218,6 +292,43 @@ mod tests {
         let j = m.to_json();
         assert_eq!(j.at(&["max_decode_batch"]).as_usize().unwrap(), 6);
         assert_eq!(j.at(&["queue_depth", "n"]).as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn aggregate_sums_counters_and_rederives_ratios() {
+        let mut a = EngineMetrics {
+            decode_steps: 10,
+            decode_rows: 40, // avg 4.0
+            max_decode_batch: 6,
+            prompt_tokens: 100,
+            hit_full_tokens: 80,
+            hit_partial_tokens: 10,
+            completed: 3,
+            ..EngineMetrics::default()
+        };
+        let mut b = EngineMetrics {
+            decode_steps: 90,
+            decode_rows: 90, // avg 1.0
+            max_decode_batch: 2,
+            prompt_tokens: 900,
+            oom_drops: 2,
+            ..EngineMetrics::default()
+        };
+        let agg = aggregate_stats(&[a.to_json(), b.to_json()]);
+        assert_eq!(agg.at(&["shards"]).as_usize().unwrap(), 2);
+        assert_eq!(agg.at(&["decode_steps"]).as_usize().unwrap(), 100);
+        assert_eq!(agg.at(&["completed"]).as_usize().unwrap(), 3);
+        assert_eq!(agg.at(&["oom_drops"]).as_usize().unwrap(), 2);
+        assert_eq!(agg.at(&["max_decode_batch"]).as_usize().unwrap(), 6);
+        // weighted by steps, not the mean of per-shard averages (2.5)
+        assert!((agg.at(&["avg_decode_batch"]).as_f64().unwrap() - 1.3).abs() < 1e-9);
+        // weighted by prompt tokens, not the mean of per-shard rates (0.4)
+        assert!((agg.at(&["hit_rate"]).as_f64().unwrap() - 0.08).abs() < 1e-9);
+        assert!((agg.at(&["matched_rate"]).as_f64().unwrap() - 0.09).abs() < 1e-9);
+        // empty pool degrades to zeros, not NaN
+        let empty = aggregate_stats(&[]);
+        assert_eq!(empty.at(&["avg_decode_batch"]).as_f64().unwrap(), 0.0);
+        assert_eq!(empty.at(&["hit_rate"]).as_f64().unwrap(), 0.0);
     }
 
     #[test]

@@ -1,0 +1,279 @@
+//! Request placement across the engine shard pool.
+//!
+//! With N independent engine shards, *where* a request lands determines
+//! whether it can fork from cached pages: the DualRadixTree is shard-local,
+//! so two agents sharing a context only reuse KV if they are co-located.
+//! KVFlow (workflow-aware prefix caching) and TokenDance (collective KV
+//! sharing across agents) both observe that placement, not capacity, is
+//! what bounds the hit rate in multi-agent serving — this module encodes
+//! that observation as a routing policy.
+//!
+//! Policies:
+//!   - `Affinity` (default): hash a fingerprint of the request's shared
+//!     prefix — the first `page_tokens`-aligned window of the prompt —
+//!     mixed with the workflow `tag` onto a shard, so every agent forking
+//!     the same context lands on the shard that already holds its bCache
+//!     pages. When the affinity shard's queue grows past
+//!     `imbalance_factor * (least-loaded depth + 1)`, the request spills
+//!     to the least-loaded shard (capacity beats affinity under overload;
+//!     the spilled request recomputes its prefix there).
+//!   - `RoundRobin`: the placement-oblivious baseline — even load, no
+//!     cache locality. Kept so benchmarks can isolate the affinity win.
+//!
+//! The router is intentionally stateless about cache *contents*: it never
+//! asks a shard what it holds. Affinity is a pure function of the request,
+//! which keeps placement O(window) and makes identical prompts land on the
+//! same shard across the whole process lifetime.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::util::{fnv1a_from, FNV_OFFSET};
+
+/// How the server maps a request onto an engine shard.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RoutePolicy {
+    /// Cycle over shards regardless of content (baseline).
+    RoundRobin,
+    /// Prefix-affinity hashing with least-queue-depth spill.
+    Affinity,
+}
+
+impl RoutePolicy {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "round-robin" | "round_robin" | "rr" => RoutePolicy::RoundRobin,
+            "affinity" => RoutePolicy::Affinity,
+            other => anyhow::bail!("unknown route policy {other:?}"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            RoutePolicy::RoundRobin => "round_robin",
+            RoutePolicy::Affinity => "affinity",
+        }
+    }
+}
+
+/// Places requests onto `shards` engine shards (see module docs).
+#[derive(Debug)]
+pub struct Router {
+    policy: RoutePolicy,
+    shards: usize,
+    /// affinity fingerprint window (one cache page of tokens): requests
+    /// that would share their first bCache page share their home shard
+    page_tokens: usize,
+    /// spill threshold: the request leaves its affinity shard once that
+    /// shard's in-flight depth exceeds `imbalance_factor * (min_depth + 1)`
+    imbalance_factor: f64,
+    rr: AtomicUsize,
+}
+
+impl Router {
+    pub fn new(
+        policy: RoutePolicy,
+        shards: usize,
+        page_tokens: usize,
+        imbalance_factor: f64,
+    ) -> Self {
+        assert!(shards > 0, "router needs at least one shard");
+        assert!(page_tokens > 0, "page_tokens must be > 0");
+        assert!(
+            imbalance_factor >= 1.0,
+            "imbalance_factor < 1 would spill even from an idle shard"
+        );
+        Router {
+            policy,
+            shards,
+            page_tokens,
+            imbalance_factor,
+            rr: AtomicUsize::new(0),
+        }
+    }
+
+    /// Content fingerprint: FNV-1a over the first `page_tokens` prompt
+    /// tokens (the first page-aligned window — exactly the granularity at
+    /// which the radix trees share pages) mixed with the workflow tag.
+    /// Prompts that fork the same context agree on this window, so they
+    /// agree on the fingerprint; divergence later in the prompt (agent
+    /// instructions, prior outputs) does not scatter the workflow.
+    pub fn fingerprint(&self, tokens: &[u32], tag: u64) -> u64 {
+        let window = &tokens[..tokens.len().min(self.page_tokens)];
+        fnv1a_from(
+            FNV_OFFSET ^ tag.wrapping_mul(0x9E3779B97F4A7C15),
+            window.iter().flat_map(|t| t.to_le_bytes()),
+        )
+    }
+
+    /// The shard this request's prefix hashes to, ignoring load.
+    pub fn affinity_shard(&self, tokens: &[u32], tag: u64) -> usize {
+        (self.fingerprint(tokens, tag) % self.shards as u64) as usize
+    }
+
+    /// Place one request. `depths[i]` is shard i's current in-flight
+    /// request count (the server's load signal).
+    pub fn place(&self, tokens: &[u32], tag: u64, depths: &[usize]) -> usize {
+        debug_assert_eq!(depths.len(), self.shards);
+        match self.policy {
+            RoutePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % self.shards,
+            RoutePolicy::Affinity => {
+                let home = self.affinity_shard(tokens, tag);
+                let min = depths.iter().copied().min().unwrap_or(0);
+                // the +1 keeps the rule meaningful when the pool is idle:
+                // a depth-1 home shard is never "overloaded" vs depth 0
+                if (depths[home] as f64) > self.imbalance_factor * (min as f64 + 1.0) {
+                    depths
+                        .iter()
+                        .enumerate()
+                        .min_by_key(|&(_, &d)| d)
+                        .map(|(i, _)| i)
+                        .unwrap_or(home)
+                } else {
+                    home
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn affinity(shards: usize) -> Router {
+        Router::new(RoutePolicy::Affinity, shards, 16, 2.0)
+    }
+
+    #[test]
+    fn policy_parsing_and_names() {
+        assert_eq!(RoutePolicy::parse("rr").unwrap(), RoutePolicy::RoundRobin);
+        assert_eq!(
+            RoutePolicy::parse("round-robin").unwrap(),
+            RoutePolicy::RoundRobin
+        );
+        assert_eq!(RoutePolicy::parse("affinity").unwrap(), RoutePolicy::Affinity);
+        assert!(RoutePolicy::parse("random").is_err());
+        assert_eq!(RoutePolicy::Affinity.name(), "affinity");
+        assert_eq!(RoutePolicy::RoundRobin.name(), "round_robin");
+    }
+
+    #[test]
+    fn round_robin_cycles_evenly() {
+        let r = Router::new(RoutePolicy::RoundRobin, 3, 16, 2.0);
+        let depths = [0usize; 3];
+        let seq: Vec<usize> = (0..6).map(|_| r.place(&[1, 2, 3], 0, &depths)).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+    }
+
+    #[test]
+    fn prop_identical_prompts_always_colocate_under_affinity() {
+        // the affinity invariant: placement is a pure function of
+        // (prefix window, tag) whenever no shard is overloaded — the
+        // round-robin counter, prompt tail, and balanced queue depths
+        // must all be irrelevant
+        crate::util::prop::check("router-affinity-stable", 64, |rng| {
+            let shards = 2 + rng.below(7);
+            let r = affinity(shards);
+            let len = 1 + rng.below(200);
+            let tokens = rng.tokens(len, 2048);
+            let tag = rng.next_u64() % 32;
+            let depth = rng.below(4);
+            let depths = vec![depth; shards];
+            let first = r.place(&tokens, tag, &depths);
+            // same prompt, different tail beyond the fingerprint window
+            let mut longer = tokens.clone();
+            longer.extend(rng.tokens(1 + rng.below(50), 2048));
+            for _ in 0..8 {
+                let again = r.place(&tokens, tag, &depths);
+                if again != first {
+                    return Err(format!("placement moved {first} -> {again}"));
+                }
+            }
+            if tokens.len() >= 16 {
+                let tail = r.place(&longer, tag, &depths);
+                if tail != first {
+                    return Err(format!(
+                        "tail divergence changed placement {first} -> {tail}"
+                    ));
+                }
+            }
+            // a fresh router agrees: no hidden state in the fingerprint
+            let r2 = affinity(shards);
+            if r2.place(&tokens, tag, &depths) != first {
+                return Err("fresh router disagrees with original".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn overload_spills_to_least_loaded_shard() {
+        let r = affinity(4);
+        let tokens: Vec<u32> = (10..40).collect();
+        let home = r.affinity_shard(&tokens, 7);
+        // balanced: stays home
+        assert_eq!(r.place(&tokens, 7, &[1, 1, 1, 1]), home);
+        // mildly imbalanced (within factor 2 of min+1): still home
+        let mut depths = [0usize; 4];
+        depths[home] = 2;
+        assert_eq!(r.place(&tokens, 7, &depths), home);
+        // overloaded: spills to the least-loaded shard, not just "not home"
+        let mut depths = [5usize, 6, 7, 8];
+        depths[home] = 20;
+        let spilled = r.place(&tokens, 7, &depths);
+        assert_ne!(spilled, home);
+        assert_eq!(
+            depths[spilled],
+            *depths
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| i != home)
+                .map(|(_, d)| d)
+                .min()
+                .unwrap()
+        );
+    }
+
+    #[test]
+    fn prop_spill_only_when_home_is_overloaded() {
+        crate::util::prop::check("router-spill-rule", 64, |rng| {
+            let shards = 2 + rng.below(6);
+            let r = affinity(shards);
+            let tokens = rng.tokens(1 + rng.below(64), 2048);
+            let tag = rng.next_u64();
+            let depths: Vec<usize> = (0..shards).map(|_| rng.below(12)).collect();
+            let home = r.affinity_shard(&tokens, tag);
+            let min = *depths.iter().min().unwrap();
+            let placed = r.place(&tokens, tag, &depths);
+            let overloaded = depths[home] as f64 > 2.0 * (min as f64 + 1.0);
+            if overloaded {
+                if depths[placed] != min {
+                    return Err(format!(
+                        "overloaded home {home} (depth {}) spilled to {placed} \
+                         (depth {}) which is not least-loaded (min {min})",
+                        depths[home], depths[placed]
+                    ));
+                }
+            } else if placed != home {
+                return Err(format!(
+                    "home {home} (depth {}, min {min}) not overloaded but \
+                     request went to {placed}",
+                    depths[home]
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn distinct_tags_separate_identical_prefixes() {
+        // tag participates in the fingerprint: two workflows that happen
+        // to share opening tokens can still be spread apart
+        let r = affinity(8);
+        let tokens = Rng::seeded(3).tokens(32, 2048);
+        let spread: std::collections::HashSet<usize> =
+            (0..32).map(|tag| r.affinity_shard(&tokens, tag)).collect();
+        assert!(spread.len() > 1, "all 32 tags landed on one shard");
+    }
+}

@@ -1,34 +1,44 @@
 //! Minimal HTTP/1.1 JSON serving front-end (hand-rolled on std::net — the
 //! offline vendor set has no hyper/axum/tokio; DESIGN.md §3).
 //!
-//! POST /generate {"prompt": "...", "adapter": 3, "max_new": 24}
+//! POST /generate {"prompt": "...", "adapter": 3, "max_new": 24, "tag": 0}
 //!   -> {"tokens": [...], "text": "...", "ttft_us": ..., "latency_us": ...}
-//! GET /stats -> engine metrics JSON
+//! GET /stats   -> aggregated pool metrics JSON
+//! GET /metrics -> per-shard snapshots + the same aggregate + route policy
 //!
-//! Concurrency model: one engine thread owns the `Engine` and ticks it; a
-//! bounded pool of connection workers (`ServerConfig::workers`) parses HTTP
-//! and submits requests through a command channel, waiting on per-request
-//! reply channels. Because many `/generate` calls are in flight at once,
-//! the engine's continuous batching forms real multi-sequence decode
-//! batches — a serial accept loop would collapse it to batch-size-1.
+//! Concurrency model: an **engine shard pool** owns the serving core — N
+//! independent `Engine` instances (each with its own executor, pools and
+//! radix trees, byte budget split N ways), one event-driven thread per
+//! shard. A bounded pool of connection workers (`ServerConfig::workers`)
+//! parses HTTP and submits each request to the shard chosen by the
+//! `router` module: `affinity` placement hashes the prompt's first
+//! page-aligned window (plus the workflow tag) so agents forking a shared
+//! context land on the shard that already holds its bCache pages, spilling
+//! to the least-loaded shard past `imbalance_factor`; `round_robin` is the
+//! placement-oblivious baseline. Because many `/generate` calls are in
+//! flight at once, each shard's continuous batching forms real
+//! multi-sequence decode batches.
 //!
-//! Reply protocol: the engine thread answers every submitted request with a
+//! Reply protocol: a shard answers every submitted request with a
 //! `RequestOutcome` — `Finished` (max_new or EOS) or `Dropped` (OOM
 //! eviction) — so a waiter can never hang on a request the engine gave up
-//! on. The engine thread itself is event-driven: it blocks on the command
-//! channel (`recv_timeout`) whenever the engine reports `Tick::Idle`
-//! instead of spinning on a sleep loop.
+//! on. Each shard thread is event-driven: it blocks on its command channel
+//! (`recv_timeout`) whenever the engine reports `Tick::Idle` instead of
+//! spinning on a sleep loop. The per-shard in-flight count doubles as the
+//! router's load signal.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::config::ServerConfig;
 use crate::engine::{Engine, Request, Tick};
-use crate::metrics::{FinishedRequest, RequestOutcome};
+use crate::metrics::{self, FinishedRequest, RequestOutcome};
+use crate::router::Router;
 use crate::util::json::{self, Json};
 use crate::util::tokenizer::HashTokenizer;
 
@@ -38,14 +48,22 @@ enum Cmd {
     Shutdown,
 }
 
-pub struct Server {
+/// The server's handle on one engine shard: its command channel plus the
+/// in-flight request count the router reads as the shard's load.
+struct ShardHandle {
     tx: mpsc::Sender<Cmd>,
+    depth: Arc<AtomicUsize>,
+}
+
+pub struct Server {
+    shards: Vec<ShardHandle>,
+    router: Router,
     tokenizer: HashTokenizer,
     max_ctx: usize,
     cfg: ServerConfig,
 }
 
-/// Apply one command on the engine thread; false = shutdown requested.
+/// Apply one command on a shard thread; false = shutdown requested.
 fn handle_cmd(
     engine: &mut Engine,
     waiters: &mut HashMap<u64, mpsc::Sender<RequestOutcome>>,
@@ -69,90 +87,150 @@ fn handle_cmd(
     }
 }
 
-/// Route every terminal outcome back to its waiter (completions and drops).
-fn deliver(engine: &mut Engine, waiters: &mut HashMap<u64, mpsc::Sender<RequestOutcome>>) {
+/// Route every terminal outcome back to its waiter (completions and
+/// drops), releasing the shard's depth slot *before* the reply so a
+/// routing decision racing the reply never sees phantom load.
+fn deliver(
+    engine: &mut Engine,
+    waiters: &mut HashMap<u64, mpsc::Sender<RequestOutcome>>,
+    depth: &AtomicUsize,
+) {
     for fin in engine.drain_finished() {
         if let Some(w) = waiters.remove(&fin.id) {
+            depth.fetch_sub(1, Ordering::Relaxed);
             let _ = w.send(RequestOutcome::Finished(fin));
         }
     }
     for d in engine.drain_dropped() {
         if let Some(w) = waiters.remove(&d.id) {
+            depth.fetch_sub(1, Ordering::Relaxed);
             let _ = w.send(RequestOutcome::Dropped(d));
         }
     }
 }
 
+/// One shard's event loop: the engine-thread driver extracted so N copies
+/// run as peers. Owns its `Engine` exclusively; the only shared state is
+/// the command channel and the atomic depth counter.
+fn run_shard(
+    mut engine: Engine,
+    rx: mpsc::Receiver<Cmd>,
+    depth: Arc<AtomicUsize>,
+    idle_wait: Duration,
+) {
+    let mut waiters: HashMap<u64, mpsc::Sender<RequestOutcome>> = HashMap::new();
+    let mut next_id = 1u64;
+    'run: loop {
+        // drain every queued command so concurrent submissions enter the
+        // same scheduling step and co-batch
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => {
+                    if !handle_cmd(&mut engine, &mut waiters, &mut next_id, cmd) {
+                        break 'run;
+                    }
+                }
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => break 'run,
+            }
+        }
+        match engine.tick() {
+            Ok(Tick::Progress) => deliver(&mut engine, &mut waiters, &depth),
+            Ok(Tick::Idle) => {
+                // event-driven: block until work arrives rather than
+                // spinning; the timeout only bounds how stale a raced
+                // command can get
+                match rx.recv_timeout(idle_wait) {
+                    Ok(cmd) => {
+                        if !handle_cmd(&mut engine, &mut waiters, &mut next_id, cmd) {
+                            break 'run;
+                        }
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => break 'run,
+                }
+            }
+            Err(e) => {
+                eprintln!("engine shard error: {e:#}");
+                break 'run;
+            }
+        }
+    }
+    // final drain so no waiter hangs across shutdown; the map (and thus
+    // every remaining reply channel) drops after this
+    deliver(&mut engine, &mut waiters, &depth);
+}
+
 impl Server {
-    /// Spawn the engine thread with default `ServerConfig`.
+    /// Spawn a single-shard pool with default `ServerConfig`.
     pub fn start(engine: Engine) -> (Arc<Server>, std::thread::JoinHandle<()>) {
         Self::start_with(engine, ServerConfig::default())
     }
 
-    /// Spawn the engine thread; returns the submission handle.
+    /// Spawn a single-shard pool around one engine (`cfg.shards` is
+    /// overridden to 1; multi-shard pools go through `start_sharded`).
     pub fn start_with(
-        mut engine: Engine,
+        engine: Engine,
         cfg: ServerConfig,
     ) -> (Arc<Server>, std::thread::JoinHandle<()>) {
-        let (tx, rx) = mpsc::channel::<Cmd>();
-        let tokenizer = HashTokenizer::new(engine.meta().vocab);
-        let max_ctx = engine.meta().s_max;
+        let (srv, mut handles) = Self::start_sharded(vec![engine], cfg);
+        (srv, handles.pop().expect("one shard"))
+    }
+
+    /// Spawn one event-driven thread per engine shard; returns the
+    /// submission handle plus every shard's join handle. The engines must
+    /// agree on model geometry (vocab / context window / page size) —
+    /// they are peers serving one logical model.
+    pub fn start_sharded(
+        engines: Vec<Engine>,
+        mut cfg: ServerConfig,
+    ) -> (Arc<Server>, Vec<std::thread::JoinHandle<()>>) {
+        assert!(!engines.is_empty(), "shard pool needs at least one engine");
+        cfg.shards = engines.len();
+        let meta = engines[0].meta().clone();
+        let page_tokens = engines[0].cfg.cache.page_tokens;
+        for e in &engines {
+            assert_eq!(e.meta().vocab, meta.vocab, "shards must share a vocab");
+            assert_eq!(e.meta().s_max, meta.s_max, "shards must share s_max");
+            assert_eq!(
+                e.cfg.cache.page_tokens, page_tokens,
+                "shards must share page geometry (the affinity window)"
+            );
+        }
         let idle_wait = Duration::from_millis(cfg.idle_wait_ms.max(1));
-        let handle = std::thread::Builder::new()
-            .name("forkkv-engine".into())
-            .spawn(move || {
-                let mut waiters: HashMap<u64, mpsc::Sender<RequestOutcome>> = HashMap::new();
-                let mut next_id = 1u64;
-                'run: loop {
-                    // drain every queued command so concurrent submissions
-                    // enter the same scheduling step and co-batch
-                    loop {
-                        match rx.try_recv() {
-                            Ok(cmd) => {
-                                if !handle_cmd(&mut engine, &mut waiters, &mut next_id, cmd) {
-                                    break 'run;
-                                }
-                            }
-                            Err(mpsc::TryRecvError::Empty) => break,
-                            Err(mpsc::TryRecvError::Disconnected) => break 'run,
-                        }
-                    }
-                    match engine.tick() {
-                        Ok(Tick::Progress) => deliver(&mut engine, &mut waiters),
-                        Ok(Tick::Idle) => {
-                            // event-driven: block until work arrives rather
-                            // than spinning; the timeout only bounds how
-                            // stale a raced command can get
-                            match rx.recv_timeout(idle_wait) {
-                                Ok(cmd) => {
-                                    if !handle_cmd(&mut engine, &mut waiters, &mut next_id, cmd)
-                                    {
-                                        break 'run;
-                                    }
-                                }
-                                Err(mpsc::RecvTimeoutError::Timeout) => {}
-                                Err(mpsc::RecvTimeoutError::Disconnected) => break 'run,
-                            }
-                        }
-                        Err(e) => {
-                            eprintln!("engine error: {e:#}");
-                            break 'run;
-                        }
-                    }
-                }
-                // final drain so no waiter hangs across shutdown; the map
-                // (and thus every remaining reply channel) drops after this
-                deliver(&mut engine, &mut waiters);
-            })
-            .expect("spawn engine thread");
-        (
-            Arc::new(Server { tx, tokenizer, max_ctx, cfg }),
-            handle,
-        )
+        let mut shards = Vec::with_capacity(engines.len());
+        let mut handles = Vec::with_capacity(engines.len());
+        for (i, engine) in engines.into_iter().enumerate() {
+            let (tx, rx) = mpsc::channel::<Cmd>();
+            let depth = Arc::new(AtomicUsize::new(0));
+            let thread_depth = depth.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("forkkv-shard-{i}"))
+                .spawn(move || run_shard(engine, rx, thread_depth, idle_wait))
+                .expect("spawn engine shard thread");
+            shards.push(ShardHandle { tx, depth });
+            handles.push(handle);
+        }
+        let router = Router::new(
+            cfg.route_policy,
+            shards.len(),
+            page_tokens,
+            cfg.imbalance_factor,
+        );
+        let srv = Arc::new(Server {
+            shards,
+            router,
+            tokenizer: HashTokenizer::new(meta.vocab),
+            max_ctx: meta.s_max,
+            cfg,
+        });
+        (srv, handles)
     }
 
     pub fn shutdown(&self) {
-        let _ = self.tx.send(Cmd::Shutdown);
+        for shard in &self.shards {
+            let _ = shard.tx.send(Cmd::Shutdown);
+        }
     }
 
     pub fn config(&self) -> &ServerConfig {
@@ -160,7 +238,7 @@ impl Server {
     }
 
     /// Request limits shared by every entry point (direct and HTTP): the
-    /// single source of truth for what the engine will accept.
+    /// single source of truth for what the engines will accept.
     fn validate_request(&self, prompt_tokens: &[u32], max_new: usize) -> anyhow::Result<()> {
         anyhow::ensure!(!prompt_tokens.is_empty(), "empty prompt");
         anyhow::ensure!(
@@ -171,41 +249,67 @@ impl Server {
         Ok(())
     }
 
-    /// Submit and wait for the request's terminal outcome (completion or
-    /// engine-initiated drop). Errors only when the request never reached
-    /// the engine or the engine thread died.
-    pub fn generate_outcome(
+    /// Submit to the routed shard and wait for the request's terminal
+    /// outcome (completion or engine-initiated drop). Errors only when the
+    /// request never reached a shard or the shard thread died.
+    pub fn generate_outcome_tagged(
         &self,
         prompt_tokens: Vec<u32>,
         adapter: u32,
         max_new: usize,
+        tag: u64,
     ) -> anyhow::Result<RequestOutcome> {
         self.validate_request(&prompt_tokens, max_new)?;
+        let depths: Vec<usize> = self
+            .shards
+            .iter()
+            .map(|s| s.depth.load(Ordering::Relaxed))
+            .collect();
+        let shard = self.router.place(&prompt_tokens, tag, &depths);
         let (reply_tx, reply_rx) = mpsc::channel();
         let req = Request {
-            id: 0, // assigned by the engine thread
-            tag: 0,
+            id: 0, // assigned by the shard thread
+            tag,
             adapter,
             tokens: prompt_tokens,
             max_new,
             arrival_us: 0,
             ignore_eos: false,
         };
-        self.tx
-            .send(Cmd::Submit(req, reply_tx))
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        reply_rx
-            .recv()
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))
+        let handle = &self.shards[shard];
+        handle.depth.fetch_add(1, Ordering::Relaxed);
+        if handle.tx.send(Cmd::Submit(req, reply_tx)).is_err() {
+            // a dead shard must not look idle to the router: poison its
+            // depth so affinity spills away and least-loaded never picks
+            // it (re-routing the request itself is a ROADMAP open item)
+            handle.depth.store(usize::MAX, Ordering::Relaxed);
+            anyhow::bail!("engine shard {shard} gone");
+        }
+        reply_rx.recv().map_err(|_| {
+            // the shard died holding our request: same poisoning, or its
+            // stuck depth would advertise the dead shard as least-loaded
+            handle.depth.store(usize::MAX, Ordering::Relaxed);
+            anyhow::anyhow!("engine shard {shard} gone")
+        })
     }
 
-    pub fn generate(
+    pub fn generate_outcome(
         &self,
         prompt_tokens: Vec<u32>,
         adapter: u32,
         max_new: usize,
+    ) -> anyhow::Result<RequestOutcome> {
+        self.generate_outcome_tagged(prompt_tokens, adapter, max_new, 0)
+    }
+
+    pub fn generate_tagged(
+        &self,
+        prompt_tokens: Vec<u32>,
+        adapter: u32,
+        max_new: usize,
+        tag: u64,
     ) -> anyhow::Result<FinishedRequest> {
-        match self.generate_outcome(prompt_tokens, adapter, max_new)? {
+        match self.generate_outcome_tagged(prompt_tokens, adapter, max_new, tag)? {
             RequestOutcome::Finished(fin) => Ok(fin),
             RequestOutcome::Dropped(d) => Err(anyhow::anyhow!(
                 "request dropped by engine ({}): prompt {} tokens evicted under memory pressure",
@@ -215,12 +319,52 @@ impl Server {
         }
     }
 
+    pub fn generate(
+        &self,
+        prompt_tokens: Vec<u32>,
+        adapter: u32,
+        max_new: usize,
+    ) -> anyhow::Result<FinishedRequest> {
+        self.generate_tagged(prompt_tokens, adapter, max_new, 0)
+    }
+
+    /// One stats snapshot per shard, in shard order. All `Cmd::Stats` go
+    /// out before the first receive so busy shards snapshot concurrently
+    /// (latency is the max per-shard tick wait, not the sum).
+    pub fn shard_stats(&self) -> anyhow::Result<Vec<Json>> {
+        let mut pending = Vec::with_capacity(self.shards.len());
+        for (i, shard) in self.shards.iter().enumerate() {
+            let (tx, rx) = mpsc::channel();
+            shard
+                .tx
+                .send(Cmd::Stats(tx))
+                .map_err(|_| anyhow::anyhow!("engine shard {i} gone"))?;
+            pending.push((i, rx));
+        }
+        pending
+            .into_iter()
+            .map(|(i, rx)| {
+                rx.recv()
+                    .map_err(|_| anyhow::anyhow!("engine shard {i} gone"))
+            })
+            .collect()
+    }
+
+    /// Pool-level aggregate (counters summed across shards, ratio metrics
+    /// re-derived) — what `GET /stats` serves.
     pub fn stats(&self) -> anyhow::Result<Json> {
-        let (tx, rx) = mpsc::channel();
-        self.tx
-            .send(Cmd::Stats(tx))
-            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
-        rx.recv().map_err(|_| anyhow::anyhow!("engine thread gone"))
+        Ok(metrics::aggregate_stats(&self.shard_stats()?))
+    }
+
+    /// Full observability payload: aggregate + per-shard snapshots + the
+    /// active route policy — what `GET /metrics` serves.
+    pub fn metrics_json(&self) -> anyhow::Result<Json> {
+        let per_shard = self.shard_stats()?;
+        Ok(Json::obj(vec![
+            ("aggregate", metrics::aggregate_stats(&per_shard)),
+            ("route", Json::str(self.cfg.route_policy.name())),
+            ("per_shard", Json::Arr(per_shard)),
+        ]))
     }
 
     /// Bind `addr` and serve until `max_requests` connections were accepted
@@ -327,16 +471,31 @@ impl Server {
             }
         }
         if header_truncated {
-            return self.reject(&mut stream, &mut reader, "431 Request Header Fields Too Large",
-                format!("header section exceeds {MAX_HEADER_BYTES} bytes"));
+            return self.reject(
+                &mut stream,
+                &mut reader,
+                "431 Request Header Fields Too Large",
+                format!("header section exceeds {MAX_HEADER_BYTES} bytes"),
+            );
         }
         if bad_content_len {
-            return self.reject(&mut stream, &mut reader, "400 Bad Request",
-                "invalid Content-Length header".to_string());
+            return self.reject(
+                &mut stream,
+                &mut reader,
+                "400 Bad Request",
+                "invalid Content-Length header".to_string(),
+            );
         }
         if content_len > self.cfg.max_body_bytes {
-            return self.reject(&mut stream, &mut reader, "413 Payload Too Large",
-                format!("body of {content_len} bytes exceeds limit {}", self.cfg.max_body_bytes));
+            return self.reject(
+                &mut stream,
+                &mut reader,
+                "413 Payload Too Large",
+                format!(
+                    "body of {content_len} bytes exceeds limit {}",
+                    self.cfg.max_body_bytes
+                ),
+            );
         }
         let mut body = vec![0u8; content_len];
         reader.read_exact(&mut body)?;
@@ -345,6 +504,13 @@ impl Server {
         let (status, payload) = match (method.as_str(), path.as_str()) {
             ("POST", "/generate") => self.api_generate(&body),
             ("GET", "/stats") => match self.stats() {
+                Ok(j) => ("200 OK", j),
+                Err(e) => (
+                    "500 Internal Server Error",
+                    Json::obj(vec![("error", Json::str(format!("{e:#}")))]),
+                ),
+            },
+            ("GET", "/metrics") => match self.metrics_json() {
                 Ok(j) => ("200 OK", j),
                 Err(e) => (
                     "500 Internal Server Error",
@@ -397,11 +563,14 @@ impl Server {
         };
         let adapter = j.get("adapter").and_then(Json::as_usize).unwrap_or(0) as u32;
         let max_new = j.get("max_new").and_then(Json::as_usize).unwrap_or(16);
+        // opaque workflow id: feeds the affinity fingerprint so one
+        // workflow's agents co-locate even across HTTP connections
+        let tag = j.get("tag").and_then(Json::as_usize).unwrap_or(0) as u64;
         let tokens = self.tokenizer.encode(prompt);
         if let Err(e) = self.validate_request(&tokens, max_new) {
             return err("400 Bad Request", format!("{e:#}"));
         }
-        match self.generate_outcome(tokens, adapter, max_new) {
+        match self.generate_outcome_tagged(tokens, adapter, max_new, tag) {
             Ok(RequestOutcome::Finished(fin)) => (
                 "200 OK",
                 Json::obj(vec![
@@ -502,6 +671,7 @@ mod tests {
     use super::*;
     use crate::config::{CacheConfig, CachePolicy, EngineConfig};
     use crate::exec::SimExecutor;
+    use crate::router::RoutePolicy;
     use crate::workload::{run_http_load, HttpLoadSpec};
 
     fn sim_engine(budget_bytes: usize, wall_pace_us: u64) -> Engine {
@@ -547,7 +717,7 @@ mod tests {
     #[test]
     fn http_round_trip() {
         let (srv, handle) = sim_server();
-        let (addr, server_thread) = spawn_server(&srv, 2);
+        let (addr, server_thread) = spawn_server(&srv, 3);
 
         let body = r#"{"prompt": "the quick brown fox jumps over the lazy dog", "adapter": 2, "max_new": 6}"#;
         let (status, resp_body) = http_post(&addr, "/generate", body).unwrap();
@@ -557,7 +727,14 @@ mod tests {
 
         let (status, stats_body) = http_get(&addr, "/stats").unwrap();
         assert_eq!(status, 200, "{stats_body}");
-        json::parse(&stats_body).unwrap();
+        let stats = json::parse(&stats_body).unwrap();
+        assert_eq!(stats.at(&["shards"]).as_usize().unwrap(), 1);
+
+        let (status, metrics_body) = http_get(&addr, "/metrics").unwrap();
+        assert_eq!(status, 200, "{metrics_body}");
+        let m = json::parse(&metrics_body).unwrap();
+        assert_eq!(m.at(&["per_shard"]).as_arr().unwrap().len(), 1);
+        assert_eq!(m.at(&["route"]).as_str().unwrap(), "affinity");
 
         server_thread.join().unwrap();
         srv.shutdown();
@@ -669,5 +846,90 @@ mod tests {
 
         srv.shutdown();
         handle.join().unwrap();
+    }
+
+    #[test]
+    fn sharded_pool_cobatches_on_every_shard() {
+        // two wall-paced shards under round-robin: 8 closed-loop clients
+        // split across the shards, so EACH shard must form multi-sequence
+        // decode batches — the whole point of replicating the engine
+        let engines: Vec<Engine> = (0..2).map(|_| sim_engine(32 << 20, 2_000)).collect();
+        let scfg = ServerConfig {
+            workers: 8,
+            route_policy: RoutePolicy::RoundRobin,
+            ..ServerConfig::default()
+        };
+        let (srv, handles) = Server::start_sharded(engines, scfg);
+        let (addr, server_thread) = spawn_server(&srv, 16);
+
+        let spec = HttpLoadSpec {
+            clients: 8,
+            requests_per_client: 2,
+            shared_words: 120,
+            unique_words: 4,
+            max_new: 48,
+            adapters: 4,
+        };
+        let report = run_http_load(&addr, &spec).unwrap();
+        assert_eq!(report.at(&["ok"]).as_usize().unwrap(), 16, "{report:?}");
+        assert_eq!(report.at(&["errors"]).as_usize().unwrap(), 0, "{report:?}");
+        server_thread.join().unwrap();
+
+        let per_shard = srv.shard_stats().unwrap();
+        assert_eq!(per_shard.len(), 2);
+        for (i, s) in per_shard.iter().enumerate() {
+            let avg = s.at(&["avg_decode_batch"]).as_f64().unwrap();
+            let completed = s.at(&["completed"]).as_usize().unwrap();
+            assert!(completed > 0, "shard {i} served nothing");
+            assert!(avg > 1.0, "shard {i} decode occupancy collapsed: {avg}");
+        }
+        let agg = srv.stats().unwrap();
+        assert_eq!(agg.at(&["completed"]).as_usize().unwrap(), 16);
+        assert_eq!(agg.at(&["shards"]).as_usize().unwrap(), 2);
+
+        // /metrics exposes the same per-shard split over HTTP
+        let (addr2, t2) = spawn_server(&srv, 1);
+        let (status, body) = http_get(&addr2, "/metrics").unwrap();
+        assert_eq!(status, 200, "{body}");
+        let m = json::parse(&body).unwrap();
+        assert_eq!(m.at(&["per_shard"]).as_arr().unwrap().len(), 2);
+        assert_eq!(m.at(&["route"]).as_str().unwrap(), "round_robin");
+        t2.join().unwrap();
+
+        srv.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn affinity_pins_shared_context_to_one_shard() {
+        // same prompt + same tag, sequential (no overload): every request
+        // must land on the same shard, and that shard's tree must serve
+        // the repeats from cache
+        let engines: Vec<Engine> = (0..4).map(|_| sim_engine(32 << 20, 0)).collect();
+        let (srv, handles) = Server::start_sharded(engines, ServerConfig::default());
+        let tokens: Vec<u32> = (100..260).collect();
+        for _ in 0..4 {
+            srv.generate_tagged(tokens.clone(), 3, 8, 9).unwrap();
+        }
+        let per_shard = srv.shard_stats().unwrap();
+        let serving: Vec<usize> = per_shard
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.at(&["completed"]).as_usize().unwrap() > 0)
+            .map(|(i, _)| i)
+            .collect();
+        assert_eq!(serving.len(), 1, "affinity scattered one context: {serving:?}");
+        let agg = srv.stats().unwrap();
+        assert_eq!(agg.at(&["completed"]).as_usize().unwrap(), 4);
+        assert!(
+            agg.at(&["hit_rate"]).as_f64().unwrap() > 0.5,
+            "repeats did not hit the pinned shard's cache: {agg:?}"
+        );
+        srv.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

@@ -114,12 +114,6 @@ impl Json {
     }
 
     // ---------------- serialization ----------------
-    pub fn to_string(&self) -> String {
-        let mut out = String::new();
-        self.write(&mut out);
-        out
-    }
-
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -155,6 +149,15 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+/// Compact JSON serialization (`format!("{j}")` / `j.to_string()`).
+impl std::fmt::Display for Json {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let mut out = String::new();
+        self.write(&mut out);
+        f.write_str(&out)
     }
 }
 
@@ -195,7 +198,7 @@ struct Parser<'a> {
     pos: usize,
 }
 
-impl<'a> Parser<'a> {
+impl Parser<'_> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError {
             pos: self.pos,

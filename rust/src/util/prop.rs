@@ -8,6 +8,7 @@
 //! by construction.
 
 use crate::util::rng::Rng;
+use crate::util::{fnv1a_from, FNV_OFFSET};
 
 pub const DEFAULT_CASES: usize = 64;
 
@@ -18,7 +19,7 @@ where
 {
     // Base seed is stable per property name so failures are reproducible
     // across runs, while distinct properties explore distinct streams.
-    let base = fnv1a(name.as_bytes());
+    let base = fnv1a_from(FNV_OFFSET, name.bytes());
     for case in 0..cases {
         let seed = base.wrapping_add(case as u64).wrapping_mul(0x2545F4914F6CDD1D);
         let mut rng = Rng::seeded(seed);
@@ -47,15 +48,6 @@ macro_rules! prop_assert {
             return Err(format!($($fmt)*));
         }
     };
-}
-
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 #[cfg(test)]

@@ -5,6 +5,8 @@
 //! identically to a real BPE tokenizer: equal text spans map to equal
 //! token-id spans (which is the property prefix caching depends on).
 
+use crate::util::{fnv1a_from, FNV_OFFSET};
+
 /// Reserved ids: 0 = pad, 1 = eos.
 pub const PAD: u32 = 0;
 pub const EOS: u32 = 1;
@@ -23,7 +25,7 @@ impl HashTokenizer {
     /// Whitespace-split words, each hashed into [2, vocab).
     pub fn encode(&self, text: &str) -> Vec<u32> {
         text.split_whitespace()
-            .map(|w| 2 + (fnv1a(w.as_bytes()) % (self.vocab as u64 - 2)) as u32)
+            .map(|w| 2 + (fnv1a_from(FNV_OFFSET, w.bytes()) % (self.vocab as u64 - 2)) as u32)
             .collect()
     }
 
@@ -39,15 +41,6 @@ impl HashTokenizer {
             .collect::<Vec<_>>()
             .join(" ")
     }
-}
-
-fn fnv1a(bytes: &[u8]) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for &b in bytes {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 #[cfg(test)]

@@ -554,6 +554,124 @@ pub fn run_http_load(addr: &str, spec: &HttpLoadSpec) -> anyhow::Result<Json> {
     ]))
 }
 
+// ---------------------------------------------------------------------------
+// multi-workflow HTTP load (the router's measurement harness)
+// ---------------------------------------------------------------------------
+
+/// K workflows of M agents, each workflow forking its own large shared
+/// context: the placement-sensitive scenario behind the engine shard pool.
+/// Every workflow runs on its own closed-loop client thread and issues its
+/// agents **sequentially** (agent k+1 starts after agent k finished, the
+/// ReAct shape), tagging each request with the workflow id. Under
+/// `affinity` routing all of a workflow's agents land on the shard that
+/// already holds the context's bCache pages; under `round_robin` they
+/// scatter and every shard recomputes the context from scratch — the gap
+/// shows up directly in the pool's `matched_rate`.
+#[derive(Debug, Clone)]
+pub struct MultiWorkflowHttpSpec {
+    /// K: concurrent workflows, one client thread each
+    pub workflows: usize,
+    /// M: agents per workflow, issued sequentially within the workflow
+    pub agents_per_workflow: usize,
+    /// words in each workflow's private shared context
+    pub shared_words: usize,
+    /// per-agent unique words appended after the shared context
+    pub unique_words: usize,
+    pub max_new: usize,
+}
+
+impl Default for MultiWorkflowHttpSpec {
+    fn default() -> Self {
+        MultiWorkflowHttpSpec {
+            workflows: 8,
+            agents_per_workflow: 3,
+            shared_words: 120,
+            unique_words: 4,
+            max_new: 24,
+        }
+    }
+}
+
+/// The prompt text agent `agent` of workflow `workflow` submits: the
+/// workflow's shared context plus a small agent-unique suffix. Public so
+/// in-process tests can issue the identical token streams without HTTP.
+pub fn multi_workflow_prompt(
+    spec: &MultiWorkflowHttpSpec,
+    workflow: usize,
+    agent: usize,
+) -> String {
+    let mut words: Vec<String> = (0..spec.shared_words)
+        .map(|i| format!("wf{workflow}ctx{i}"))
+        .collect();
+    words.extend((0..spec.unique_words).map(|k| format!("wf{workflow}a{agent}u{k}")));
+    words.join(" ")
+}
+
+/// Run the multi-workflow scenario against a serving address; returns a
+/// JSON report (counts, client-side latency summary, throughput).
+pub fn run_multi_workflow_load(
+    addr: &str,
+    spec: &MultiWorkflowHttpSpec,
+) -> anyhow::Result<Json> {
+    anyhow::ensure!(spec.workflows > 0, "need at least one workflow");
+    anyhow::ensure!(spec.agents_per_workflow > 0, "need at least one agent per workflow");
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for w in 0..spec.workflows {
+        let addr = addr.to_string();
+        let spec = spec.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut latency = Series::new();
+            let (mut ok, mut errors) = (0usize, 0usize);
+            for a in 0..spec.agents_per_workflow {
+                let body = Json::obj(vec![
+                    ("prompt", Json::str(multi_workflow_prompt(&spec, w, a))),
+                    (
+                        "adapter",
+                        Json::num(((w * spec.agents_per_workflow + a) % 64) as f64),
+                    ),
+                    ("max_new", Json::num(spec.max_new as f64)),
+                    ("tag", Json::num(w as f64)),
+                ])
+                .to_string();
+                let start = std::time::Instant::now();
+                match crate::server::http_post(&addr, "/generate", &body) {
+                    Ok((200, _)) => {
+                        ok += 1;
+                        latency.push(start.elapsed().as_micros() as f64);
+                    }
+                    Ok(_) | Err(_) => errors += 1,
+                }
+            }
+            (latency, ok, errors)
+        }));
+    }
+    let mut latency = Series::new();
+    let (mut ok, mut errors) = (0usize, 0usize);
+    for h in handles {
+        let (l, o, e) = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("workflow client panicked"))?;
+        latency.extend_from(&l);
+        ok += o;
+        errors += e;
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok(Json::obj(vec![
+        ("workflows", Json::num(spec.workflows as f64)),
+        ("agents_per_workflow", Json::num(spec.agents_per_workflow as f64)),
+        (
+            "requests",
+            Json::num((spec.workflows * spec.agents_per_workflow) as f64),
+        ),
+        ("ok", Json::num(ok as f64)),
+        ("errors", Json::num(errors as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("throughput_req_per_s", Json::num(ok as f64 / wall_s)),
+        ("latency_us", latency.summary().to_json()),
+    ]))
+}
+
 /// Standard engine builders shared by tests, benches and the CLI.
 pub mod presets {
     use crate::config::{CacheConfig, CachePolicy, EngineConfig};
@@ -711,6 +829,21 @@ mod tests {
             fork_tps > unified_tps,
             "forkkv {fork_tps:.2} tasks/s <= prefix caching {unified_tps:.2} tasks/s"
         );
+    }
+
+    #[test]
+    fn multi_workflow_prompts_share_within_and_differ_across_workflows() {
+        let spec = MultiWorkflowHttpSpec::default();
+        let t = crate::util::tokenizer::HashTokenizer::new(2048);
+        let a0 = t.encode(&multi_workflow_prompt(&spec, 0, 0));
+        let a1 = t.encode(&multi_workflow_prompt(&spec, 0, 1));
+        let b0 = t.encode(&multi_workflow_prompt(&spec, 1, 0));
+        // same workflow: identical shared context, distinct suffix
+        assert_eq!(a0[..spec.shared_words], a1[..spec.shared_words]);
+        assert_ne!(a0[spec.shared_words..], a1[spec.shared_words..]);
+        // different workflow: contexts diverge from the first word,
+        // so the router's first-page fingerprint separates them
+        assert_ne!(a0[0], b0[0]);
     }
 
     #[test]
