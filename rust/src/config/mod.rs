@@ -109,6 +109,21 @@ pub struct ServerConfig {
     /// + 1)` across the pool (the +1 keeps a near-idle pool from spilling
     /// off a depth-1 home shard)
     pub imbalance_factor: f64,
+    /// cross-shard page migration on spill: probe the home shard for the
+    /// spilled request's cached pages and copy them to the target shard
+    /// when the cost model says bandwidth beats recompute
+    pub migrate: bool,
+    /// migrations allowed in flight at once (the bounded migration
+    /// queue): past this, a spill proceeds without migration so page
+    /// copies never back up the shard decode loops
+    pub migration_max_inflight: usize,
+    /// assumed shard-to-shard copy bandwidth (bytes/s) for the
+    /// migrate-vs-recompute decision; overridden by calibration
+    pub migration_bandwidth_bytes_per_s: f64,
+    /// fully calibrated cost model for the migration decision (the CLI
+    /// loads `calibration.json` into this); None = derive the FLOP terms
+    /// from the model geometry and use `migration_bandwidth_bytes_per_s`
+    pub migration_cost: Option<crate::exec::CostModel>,
 }
 
 impl Default for ServerConfig {
@@ -122,6 +137,10 @@ impl Default for ServerConfig {
             shards: 1,
             route_policy: RoutePolicy::Affinity,
             imbalance_factor: 2.0,
+            migrate: true,
+            migration_max_inflight: 4,
+            migration_bandwidth_bytes_per_s: crate::exec::DEFAULT_MIGRATION_BANDWIDTH,
+            migration_cost: None,
         }
     }
 }
@@ -156,6 +175,23 @@ impl ServerConfig {
         if let Some(v) = j.get("imbalance_factor").and_then(Json::as_f64) {
             anyhow::ensure!(v >= 1.0, "server.imbalance_factor must be >= 1.0");
             cfg.imbalance_factor = v;
+        }
+        if let Some(v) = j.get("migrate").and_then(Json::as_bool) {
+            cfg.migrate = v;
+        }
+        if let Some(v) = j.get("migration_max_inflight").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "server.migration_max_inflight must be > 0");
+            cfg.migration_max_inflight = v;
+        }
+        if let Some(v) = j
+            .get("migration_bandwidth_bytes_per_s")
+            .and_then(Json::as_f64)
+        {
+            anyhow::ensure!(
+                v > 0.0,
+                "server.migration_bandwidth_bytes_per_s must be > 0"
+            );
+            cfg.migration_bandwidth_bytes_per_s = v;
         }
         Ok(cfg)
     }
@@ -258,7 +294,9 @@ mod tests {
         let j = json::parse(
             r#"{"workers":4,"accept_backlog":8,"max_body_bytes":4096,
                 "idle_wait_ms":5,"io_timeout_ms":1000,"shards":4,
-                "route":"round_robin","imbalance_factor":3.5}"#,
+                "route":"round_robin","imbalance_factor":3.5,
+                "migrate":false,"migration_max_inflight":2,
+                "migration_bandwidth_bytes_per_s":1e9}"#,
         )
         .unwrap();
         let cfg = ServerConfig::from_json(&j).unwrap();
@@ -270,6 +308,9 @@ mod tests {
         assert_eq!(cfg.shards, 4);
         assert_eq!(cfg.route_policy, RoutePolicy::RoundRobin);
         assert!((cfg.imbalance_factor - 3.5).abs() < 1e-9);
+        assert!(!cfg.migrate);
+        assert_eq!(cfg.migration_max_inflight, 2);
+        assert!((cfg.migration_bandwidth_bytes_per_s - 1e9).abs() < 1.0);
         // zero workers / zero shards / sub-1 imbalance are rejected,
         // absent fields keep defaults
         assert!(ServerConfig::from_json(&json::parse(r#"{"workers":0}"#).unwrap()).is_err());
@@ -278,11 +319,17 @@ mod tests {
             &json::parse(r#"{"imbalance_factor":0.5}"#).unwrap()
         )
         .is_err());
+        assert!(ServerConfig::from_json(
+            &json::parse(r#"{"migration_max_inflight":0}"#).unwrap()
+        )
+        .is_err());
         let d = ServerConfig::from_json(&json::parse("{}").unwrap()).unwrap();
         assert_eq!(d.workers, ServerConfig::default().workers);
         assert_eq!(d.max_body_bytes, 1 << 20);
         assert_eq!(d.shards, 1);
         assert_eq!(d.route_policy, RoutePolicy::Affinity);
+        assert!(d.migrate, "migration defaults on");
+        assert_eq!(d.migration_max_inflight, 4);
     }
 
     #[test]

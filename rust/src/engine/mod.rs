@@ -41,6 +41,7 @@ use crate::config::{CachePolicy, EngineConfig};
 use crate::exec::Executor;
 use crate::kvcache::{pages_for, BlockPool, PageId, PoolSpec};
 use crate::metrics::{DropReason, DroppedRequest, EngineMetrics, FinishedRequest};
+use crate::migrate::{export_component, MigrationEstimate, MigrationPayload};
 use crate::radix::{DualRadixTree, MatchResult};
 use crate::runtime::{argmax, DecodeArgs, PrefillArgs};
 use crate::util::rng::Rng;
@@ -180,6 +181,12 @@ pub struct Engine {
     dropped: Vec<DroppedRequest>,
     pub collect_first_logits: bool,
     max_bucket: usize,
+    /// executor bucket ladder, cached (`Executor::decode_buckets`
+    /// allocates a fresh Vec — not something to pay per decode step)
+    buckets: Vec<usize>,
+    /// executor geometry scalars, cached for the same reason: cloning
+    /// `ModelMeta` heap-allocates its name/bucket list every step
+    scal: MetaScalars,
     // reusable decode scratch slabs + incremental-assembly state
     scratch_kb: Vec<f32>,
     scratch_vb: Vec<f32>,
@@ -191,6 +198,30 @@ pub struct Engine {
     scratch_rows: Vec<(u64, u32)>,
     scratch_filled: Vec<usize>,
     scratch_bucket: usize,
+    // per-tick gather scratch: every decode step used to rebuild these
+    // as fresh Vecs; they are now engine-owned and only cleared, so a
+    // steady decode loop performs zero heap allocation (asserted by
+    // `decode_steady_state_does_not_grow_scratch`)
+    scratch_run: Vec<u64>,
+    scratch_rows_now: Vec<u64>,
+    scratch_tokens: Vec<u32>,
+    scratch_cache_lens: Vec<usize>,
+    scratch_adapter_ids: Vec<u32>,
+    scratch_adapter_on: Vec<bool>,
+    scratch_row_keys: Vec<(u64, u32)>,
+}
+
+/// The executor-geometry scalars the per-step hot paths need, copied out
+/// of `ModelMeta` once at construction (see the `scal` field).
+#[derive(Debug, Clone, Copy)]
+struct MetaScalars {
+    n_layers: usize,
+    s_max: usize,
+    kv_width: usize,
+    rank_max: usize,
+    vocab: usize,
+    n_adapters: usize,
+    chunk: usize,
 }
 
 impl Engine {
@@ -222,7 +253,17 @@ impl Engine {
         } else {
             None
         };
-        let max_bucket = exec.decode_buckets().into_iter().max().unwrap_or(1);
+        let buckets = exec.decode_buckets();
+        let max_bucket = buckets.iter().copied().max().unwrap_or(1);
+        let scal = MetaScalars {
+            n_layers: meta.n_layers,
+            s_max: meta.s_max,
+            kv_width: meta.kv_width(),
+            rank_max: meta.rank_max,
+            vocab: meta.vocab,
+            n_adapters: meta.n_adapters,
+            chunk: meta.chunk,
+        };
         Ok(Engine {
             rng: Rng::seeded(cfg.seed ^ 0xF0F0),
             cfg,
@@ -241,6 +282,8 @@ impl Engine {
             dropped: Vec::new(),
             collect_first_logits: false,
             max_bucket,
+            buckets,
+            scal,
             scratch_kb: Vec::new(),
             scratch_vb: Vec::new(),
             scratch_kr: Vec::new(),
@@ -248,6 +291,13 @@ impl Engine {
             scratch_rows: Vec::new(),
             scratch_filled: Vec::new(),
             scratch_bucket: 0,
+            scratch_run: Vec::new(),
+            scratch_rows_now: Vec::new(),
+            scratch_tokens: Vec::new(),
+            scratch_cache_lens: Vec::new(),
+            scratch_adapter_ids: Vec::new(),
+            scratch_adapter_on: Vec::new(),
+            scratch_row_keys: Vec::new(),
         })
     }
 
@@ -686,7 +736,7 @@ impl Engine {
             self.admit_fork(sid);
         }
         let policy = self.cfg.policy;
-        let meta = self.exec.meta().clone();
+        let meta = self.scal;
         let pt = self.cfg.cache.page_tokens;
 
         let (start, end, target) = {
@@ -774,7 +824,7 @@ impl Engine {
                     end,
                     start,
                     meta.chunk,
-                    meta.kv_width(),
+                    meta.kv_width,
                     k_src,
                     v_src,
                 );
@@ -890,14 +940,24 @@ impl Engine {
 
     /// Returns Ok(false) when no decode row could be scheduled (all blocked
     /// on memory or preempted) — the caller breaks the deadlock.
+    ///
+    /// Hot-path contract: in steady state (stable row set) this performs
+    /// no heap allocation — every per-step buffer lives on the engine
+    /// (`scratch_*`) and is cleared, not rebuilt.
     fn decode_tick(&mut self) -> anyhow::Result<bool> {
-        let meta = self.exec.meta().clone();
+        let meta = self.scal;
         let pt = self.cfg.cache.page_tokens;
         let policy = self.cfg.policy;
 
         // ---- pick rows; ensure page capacity for the incoming token ----
-        let mut rows: Vec<u64> = Vec::new();
-        for sid in self.running.clone() {
+        // snapshot `running` into a reusable buffer: the alloc path below
+        // may preempt (mutating `running`) while we iterate
+        let mut snapshot = std::mem::take(&mut self.scratch_run);
+        snapshot.clear();
+        snapshot.extend_from_slice(&self.running);
+        let mut rows = std::mem::take(&mut self.scratch_rows_now);
+        rows.clear();
+        for &sid in &snapshot {
             if rows.len() >= self.max_bucket {
                 break;
             }
@@ -933,28 +993,34 @@ impl Engine {
                 && self.seqs.get(&sid).is_some_and(|s| s.phase == Phase::Decode && s.admitted)
         });
         if rows.is_empty() {
+            self.scratch_run = snapshot;
+            self.scratch_rows_now = rows;
             return Ok(false); // nothing schedulable this step
         }
 
         let bucket = self
-            .exec
-            .decode_buckets()
-            .into_iter()
+            .buckets
+            .iter()
+            .copied()
             .find(|&b| b >= rows.len())
             .unwrap_or(self.max_bucket);
 
-        // ---- assemble args ----
-        let mut tokens: Vec<u32> = rows
-            .iter()
-            .map(|id| *self.seqs[id].all.last().unwrap())
-            .collect();
-        let mut cache_lens: Vec<usize> =
-            rows.iter().map(|id| self.seqs[id].all.len() - 1).collect();
-        let mut adapter_ids: Vec<u32> = rows
-            .iter()
-            .map(|id| self.seqs[id].req.adapter % meta.n_adapters as u32)
-            .collect();
-        let mut adapter_on: Vec<bool> = vec![true; rows.len()];
+        // ---- assemble args (engine-owned buffers, cleared not rebuilt) ----
+        let mut tokens = std::mem::take(&mut self.scratch_tokens);
+        tokens.clear();
+        tokens.extend(rows.iter().map(|id| *self.seqs[id].all.last().unwrap()));
+        let mut cache_lens = std::mem::take(&mut self.scratch_cache_lens);
+        cache_lens.clear();
+        cache_lens.extend(rows.iter().map(|id| self.seqs[id].all.len() - 1));
+        let mut adapter_ids = std::mem::take(&mut self.scratch_adapter_ids);
+        adapter_ids.clear();
+        adapter_ids.extend(
+            rows.iter()
+                .map(|id| self.seqs[id].req.adapter % meta.n_adapters as u32),
+        );
+        let mut adapter_on = std::mem::take(&mut self.scratch_adapter_on);
+        adapter_on.clear();
+        adapter_on.resize(rows.len(), true);
         // pad to the bucket with inert rows
         while tokens.len() < bucket {
             tokens.push(0);
@@ -969,12 +1035,11 @@ impl Engine {
             // decode batches are usually stable across steps, so when the
             // row set is unchanged we copy only each row's newly appended
             // positions (~100x less traffic; see EXPERIMENTS.md §Perf).
-            let row_b = meta.n_layers * meta.s_max * meta.kv_width();
+            let row_b = meta.n_layers * meta.s_max * meta.kv_width;
             let row_r = meta.n_layers * meta.s_max * meta.rank_max;
-            let row_keys: Vec<(u64, u32)> = rows
-                .iter()
-                .map(|id| (*id, self.seqs[id].preemptions))
-                .collect();
+            let mut row_keys = std::mem::take(&mut self.scratch_row_keys);
+            row_keys.clear();
+            row_keys.extend(rows.iter().map(|id| (*id, self.seqs[id].preemptions)));
             let same_batch = self.scratch_bucket == bucket
                 && self.scratch_rows == row_keys
                 && rows.iter().zip(self.scratch_filled.iter()).all(|(id, &old)| {
@@ -998,7 +1063,7 @@ impl Engine {
                     row_r, bucket, &mut self.scratch_vr,
                 );
             } else {
-                let wb = meta.kv_width();
+                let wb = meta.kv_width;
                 let wr = meta.rank_max;
                 let s = meta.s_max;
                 for (i, id) in rows.iter().enumerate() {
@@ -1023,11 +1088,15 @@ impl Engine {
                 }
             }
             self.scratch_bucket = bucket;
-            self.scratch_rows = row_keys;
-            self.scratch_filled = rows
-                .iter()
-                .map(|id| self.seqs[id].slab.as_ref().unwrap().filled)
-                .collect();
+            // swap: `scratch_rows` becomes this batch's keys, and last
+            // batch's key buffer is retained for the next tick
+            std::mem::swap(&mut self.scratch_rows, &mut row_keys);
+            self.scratch_row_keys = row_keys;
+            self.scratch_filled.clear();
+            self.scratch_filled.extend(
+                rows.iter()
+                    .map(|id| self.seqs[id].slab.as_ref().unwrap().filled),
+            );
         }
 
         let out = {
@@ -1067,7 +1136,7 @@ impl Engine {
                     write_pos,
                     i,
                     meta.n_layers,
-                    meta.kv_width(),
+                    meta.kv_width,
                     k_src,
                     v_src,
                 );
@@ -1106,6 +1175,13 @@ impl Engine {
                 self.finish_seq(sid);
             }
         }
+        // hand the gather buffers back for the next tick (capacity kept)
+        self.scratch_run = snapshot;
+        self.scratch_rows_now = rows;
+        self.scratch_tokens = tokens;
+        self.scratch_cache_lens = cache_lens;
+        self.scratch_adapter_ids = adapter_ids;
+        self.scratch_adapter_on = adapter_on;
         Ok(true)
     }
 
@@ -1158,6 +1234,232 @@ impl Engine {
             ));
         }
         Ok(())
+    }
+
+    // -----------------------------------------------------------------
+    // cross-shard page migration (spill costs bandwidth, not FLOPs)
+    // -----------------------------------------------------------------
+
+    /// Probe half of the migration protocol: what would an export of
+    /// this prompt move? Read-only (`RadixTree::probe_pages` — no
+    /// leases, no copies), so the home shard can be asked cheaply before
+    /// any bytes change hands. `tokens` should be the prompt minus its
+    /// final token, mirroring `admit_fork`'s match window.
+    pub fn migration_probe(&self, adapter: u32, tokens: &[u32]) -> MigrationEstimate {
+        let ns = base_ns(self.cfg.policy, adapter);
+        let pt = self.cfg.cache.page_tokens;
+        let base_pages = self.trees.base.probe_pages(ns, tokens);
+        let base_bytes = base_pages * self.base_pool.spec().bytes_per_page();
+        let (res_pages, res_bytes, tokens_saved) = match &self.res_pool {
+            Some(pool) => {
+                let n = self.trees.residual.probe_pages(adapter, tokens);
+                // fork admission skips the *joint* coverage
+                (n, n * pool.spec().bytes_per_page(), base_pages.min(n) * pt)
+            }
+            None => (0, 0, base_pages * pt),
+        };
+        MigrationEstimate {
+            base_pages,
+            res_pages,
+            bytes: base_bytes + res_bytes,
+            tokens_saved,
+        }
+    }
+
+    /// Export half: snapshot the matched pages' bytes plus their token
+    /// path. The pages are leased (`match_lease`) for the duration of
+    /// the copy so the LRU cannot evict them mid-export; both leases and
+    /// pool refs are dropped before returning — the payload owns plain
+    /// buffers, fully decoupled from this shard's pool.
+    pub fn export_pages(&mut self, adapter: u32, tokens: &[u32]) -> MigrationPayload {
+        let ns = base_ns(self.cfg.policy, adapter);
+        let base = export_component(&mut self.trees.base, &mut self.base_pool, ns, tokens);
+        let residual = self.res_pool.as_mut().map(|pool| {
+            export_component(&mut self.trees.residual, pool, adapter, tokens)
+        });
+        let payload = MigrationPayload {
+            page_tokens: self.cfg.cache.page_tokens,
+            base,
+            residual,
+        };
+        self.metrics.exported_pages += payload.pages() as u64;
+        payload
+    }
+
+    /// Import half: adopt a peer shard's snapshot into this shard's
+    /// pools and trees so the spilled request's `fork_match` hits
+    /// locally. Refcount-correct: freshly allocated pages are handed to
+    /// `RadixTree::insert` (which retains what it adopts and ignores
+    /// chunks it already holds), then this method's own allocation refs
+    /// are released — the tree ends up the sole owner either way.
+    /// Allocation respects the byte budget and may evict this shard's
+    /// own LRU tail, but never preempts running sequences; under
+    /// pressure only a prefix of the payload is adopted (a prefix is
+    /// still a valid radix path).
+    ///
+    /// Returns the number of pages *newly adopted* — pages the tree
+    /// already held are deduplicated and do NOT count, so the migration
+    /// metrics report only savings that were actually at risk (a repeat
+    /// import of a payload the shard already holds reports 0).
+    pub fn import_pages(&mut self, payload: &MigrationPayload) -> usize {
+        let pt = self.cfg.cache.page_tokens;
+        if payload.page_tokens != pt {
+            return 0; // geometry mismatch: refuse rather than corrupt
+        }
+        let covered_before = self.joint_payload_coverage(payload);
+        let adopted_base = self.import_component(Which::Base, &payload.base);
+        let adopted_res = match &payload.residual {
+            Some(res) if self.cfg.policy.uses_residual() => {
+                self.import_component(Which::Res, res)
+            }
+            _ => 0,
+        };
+        let adopted = adopted_base + adopted_res;
+        // recompute protection actually *gained*: joint coverage over
+        // the payload's token path after minus before the import.
+        // Coverage the target already had (a previous migration, its own
+        // traffic) is never banked twice.
+        let saved = self
+            .joint_payload_coverage(payload)
+            .saturating_sub(covered_before);
+        let bytes = adopted_base * self.base_pool.spec().bytes_per_page()
+            + self
+                .res_pool
+                .as_ref()
+                .map_or(0, |p| adopted_res * p.spec().bytes_per_page());
+        self.metrics.migrated_pages += adopted as u64;
+        self.metrics.migrated_bytes += bytes as u64;
+        self.metrics.recompute_tokens_saved += saved as u64;
+        adopted
+    }
+
+    /// Joint (base ∧ residual) cached coverage of this shard's trees
+    /// over a payload's token paths, in tokens — what fork admission
+    /// would skip for a request carrying that prefix. Both component
+    /// paths are prefixes of one request window, so the page-wise min is
+    /// exactly the joint coverage.
+    fn joint_payload_coverage(&self, payload: &MigrationPayload) -> usize {
+        let pt = self.cfg.cache.page_tokens;
+        let base = self
+            .trees
+            .base
+            .probe_pages(payload.base.ns, &payload.base.tokens);
+        match (&payload.residual, self.cfg.policy.uses_residual()) {
+            (Some(r), true) => {
+                base.min(self.trees.residual.probe_pages(r.ns, &r.tokens)) * pt
+            }
+            _ => base * pt,
+        }
+    }
+
+    /// Returns the number of pages *newly adopted* by the tree — pages
+    /// it already held are deduplicated (and this method's redundant
+    /// copies freed), so the count can be below the payload prefix that
+    /// was walked.
+    fn import_component(&mut self, which: Which, c: &crate::migrate::ComponentExport) -> usize {
+        let pt = self.cfg.cache.page_tokens;
+        if c.tokens.len() < c.pages.len() * pt {
+            return 0; // malformed payload: refuse
+        }
+        let expect = match which {
+            Which::Base => self.base_pool.spec().floats_per_page(),
+            Which::Res => self
+                .res_pool
+                .as_ref()
+                .expect("res pool")
+                .spec()
+                .floats_per_page(),
+        };
+        let mut pages: Vec<PageId> = Vec::with_capacity(c.pages.len());
+        for data in &c.pages {
+            if data.len() != expect {
+                break; // page-size mismatch past here: keep the valid prefix
+            }
+            let Some(p) = self.alloc_import_page(which) else {
+                break; // budget exhausted: keep the prefix we could afford
+            };
+            let pool = match which {
+                Which::Base => &mut self.base_pool,
+                Which::Res => self.res_pool.as_mut().expect("res pool"),
+            };
+            pool.page_data_mut(p).copy_from_slice(data);
+            pages.push(p);
+        }
+        let n = pages.len();
+        let mut adopted = 0;
+        if n > 0 {
+            let (tree, pool) = match which {
+                Which::Base => (&mut self.trees.base, &mut self.base_pool),
+                Which::Res => (
+                    &mut self.trees.residual,
+                    self.res_pool.as_mut().expect("res pool"),
+                ),
+            };
+            adopted = tree.insert(c.ns, &c.tokens[..n * pt], &pages, pool);
+            for p in pages {
+                pool.release(p); // tree holds its own refs now (dedup
+                                 // frees the redundant copies here)
+            }
+        }
+        adopted
+    }
+
+    /// Budget-respecting single-page allocation for imports: evicts this
+    /// tree's own LRU tail under pressure, but never preempts sequences
+    /// — a migration must not cannibalize running work to speed up
+    /// future work.
+    fn alloc_import_page(&mut self, which: Which) -> Option<PageId> {
+        loop {
+            let page_bytes = match which {
+                Which::Base => self.base_pool.spec().bytes_per_page(),
+                Which::Res => self
+                    .res_pool
+                    .as_ref()
+                    .expect("res pool")
+                    .spec()
+                    .bytes_per_page(),
+            };
+            if self.used_cache_bytes() + page_bytes <= self.cfg.cache.budget_bytes {
+                let pool = match which {
+                    Which::Base => &mut self.base_pool,
+                    Which::Res => self.res_pool.as_mut().expect("res pool"),
+                };
+                if let Some(p) = pool.alloc() {
+                    return Some(p);
+                }
+            }
+            let evicted = match which {
+                Which::Base => self.trees.base.evict(1, &mut self.base_pool),
+                Which::Res => self
+                    .trees
+                    .residual
+                    .evict(1, self.res_pool.as_mut().expect("res pool")),
+            };
+            if evicted == 0 {
+                return None;
+            }
+        }
+    }
+
+    /// Test hook: capacities of every per-tick gather buffer — the
+    /// steady-state decode loop must not grow any of them.
+    #[cfg(test)]
+    pub(crate) fn decode_scratch_caps(&self) -> Vec<usize> {
+        vec![
+            self.scratch_run.capacity(),
+            self.scratch_rows_now.capacity(),
+            self.scratch_tokens.capacity(),
+            self.scratch_cache_lens.capacity(),
+            self.scratch_adapter_ids.capacity(),
+            self.scratch_adapter_on.capacity(),
+            self.scratch_row_keys.capacity(),
+            self.scratch_rows.capacity(),
+            self.scratch_filled.capacity(),
+            self.scratch_kb.capacity(),
+            self.scratch_vb.capacity(),
+            self.scratch_kr.capacity(),
+            self.scratch_vr.capacity(),
+        ]
     }
 }
 

@@ -290,6 +290,129 @@ fn deterministic_under_fixed_seed() {
     assert_eq!(run(), run());
 }
 
+#[test]
+fn migration_export_import_moves_cache_hits_across_engines() {
+    // two peer shards: prime one, migrate its pages to the other, and
+    // the "spilled" request must hit there as if it had stayed home
+    let mut home = engine(CachePolicy::Disaggregated, 32);
+    let mut target = engine(CachePolicy::Disaggregated, 32);
+    let prompt = toks(200, 30);
+    home.submit(req(1, 3, prompt.clone(), 8, 0));
+    run_to_completion(&mut home);
+
+    // probe over the admit_fork match window (prompt minus final token)
+    let window = &prompt[..prompt.len() - 1];
+    let est = home.migration_probe(3, window);
+    assert!(est.base_pages >= 12, "home not primed: {est:?}");
+    assert_eq!(est.res_pages, est.base_pages, "both components published");
+    assert_eq!(est.tokens_saved, est.base_pages * 16);
+    assert!(est.bytes > 0);
+    let cold = target.migration_probe(3, window);
+    assert_eq!(cold.tokens_saved, 0, "target starts cold");
+
+    // export -> import round trip
+    let payload = home.export_pages(3, window);
+    assert_eq!(payload.pages(), est.base_pages + est.res_pages);
+    assert_eq!(payload.tokens_saved(), est.tokens_saved);
+    assert_eq!(home.metrics.exported_pages, payload.pages() as u64);
+    let imported = target.import_pages(&payload);
+    assert_eq!(imported, payload.pages());
+    assert_eq!(target.metrics.migrated_pages, imported as u64);
+    assert!(target.metrics.migrated_bytes > 0);
+    assert_eq!(
+        target.metrics.recompute_tokens_saved as usize,
+        payload.tokens_saved()
+    );
+
+    // re-import of the same payload dedups against the tree: no double
+    // adoption, no refcount drift — and crucially no metric inflation
+    // (savings already banked must not be reported twice)
+    let used_before = target.base_pool().used_pages();
+    let (pages_before, saved_before, bytes_before) = (
+        target.metrics.migrated_pages,
+        target.metrics.recompute_tokens_saved,
+        target.metrics.migrated_bytes,
+    );
+    assert_eq!(target.import_pages(&payload), 0, "repeat import adopts nothing");
+    assert_eq!(target.base_pool().used_pages(), used_before);
+    assert_eq!(target.metrics.migrated_pages, pages_before);
+    assert_eq!(target.metrics.recompute_tokens_saved, saved_before);
+    assert_eq!(target.metrics.migrated_bytes, bytes_before);
+
+    // the spilled request now forks locally instead of recomputing
+    target.submit(req(9, 3, prompt.clone(), 8, 0));
+    let fin = run_to_completion(&mut target);
+    assert_eq!(fin.len(), 1);
+    assert!(
+        fin[0].hit_full >= est.tokens_saved,
+        "spilled request missed the migrated pages: hit {} < saved {}",
+        fin[0].hit_full,
+        est.tokens_saved
+    );
+    target.check_quiescent().unwrap();
+    home.check_quiescent().unwrap();
+}
+
+#[test]
+fn migration_import_respects_budget_without_preempting() {
+    // a tiny target shard adopts only the payload prefix that fits its
+    // budget — and never corrupts its pool doing so
+    let mut home = engine(CachePolicy::Disaggregated, 32);
+    let mut target = engine(CachePolicy::Disaggregated, 1);
+    let prompt = toks(400, 33);
+    home.submit(req(1, 2, prompt.clone(), 8, 0));
+    run_to_completion(&mut home);
+    let window = &prompt[..prompt.len() - 1];
+    let payload = home.export_pages(2, window);
+    assert!(payload.pages() > 0);
+    let imported = target.import_pages(&payload);
+    assert!(imported > 0, "nothing fit a 1 MB budget?");
+    assert!(
+        imported < payload.pages(),
+        "a 1 MB shard cannot hold the whole payload ({} pages)",
+        payload.pages()
+    );
+    assert!(
+        target.used_cache_bytes() <= 1 << 20,
+        "import blew the byte budget"
+    );
+    target.base_pool().check_invariants().unwrap();
+    target.trees().base.check_invariants(target.base_pool()).unwrap();
+    // a geometry-mismatched payload is refused outright
+    let mut wrong = payload.clone();
+    wrong.page_tokens += 1;
+    assert_eq!(target.import_pages(&wrong), 0);
+}
+
+#[test]
+fn decode_steady_state_does_not_grow_scratch() {
+    // the per-tick gather path must reuse engine-owned buffers: once the
+    // decode loop reaches steady state, no scratch vector may grow
+    let mut e = engine(CachePolicy::Disaggregated, 64);
+    let shared = toks(96, 31);
+    for i in 0..6 {
+        let mut p = shared.clone();
+        p.extend(toks(8, 400 + i));
+        e.submit(req(i, i as u32, p, 48, 0));
+    }
+    let mut warm = 0;
+    while warm < 400 && e.metrics.decode_steps < 10 {
+        assert_eq!(e.tick().unwrap(), Tick::Progress, "workload stalled");
+        warm += 1;
+    }
+    assert!(e.metrics.decode_steps >= 10, "never reached steady decode");
+    let caps = e.decode_scratch_caps();
+    for step in 0..30 {
+        assert_eq!(e.tick().unwrap(), Tick::Progress);
+        assert_eq!(
+            e.decode_scratch_caps(),
+            caps,
+            "per-decode-step heap growth at step {step}"
+        );
+    }
+    e.drain_finished();
+}
+
 // ---------------------------------------------------------------------------
 // randomized invariants (util::prop)
 // ---------------------------------------------------------------------------

@@ -105,7 +105,15 @@ pub struct CostModel {
     pub dispatch_us: u64,
     /// fixed per-step scheduling/gather overhead
     pub step_overhead_us: u64,
+    /// sustained shard-to-shard copy bandwidth for bCache page migration
+    /// (bytes/s); calibrated by `forkkv calibrate` alongside the FLOP
+    /// terms, and the denominator of the migrate-vs-recompute decision
+    pub migration_bandwidth_bytes_per_s: f64,
 }
+
+/// Default inter-shard copy bandwidth when no calibration is present:
+/// conservative host-memory memcpy territory (same-box shards).
+pub const DEFAULT_MIGRATION_BANDWIDTH: f64 = 8.0e9;
 
 impl CostModel {
     pub fn derived(meta: &ModelMeta) -> Self {
@@ -115,6 +123,7 @@ impl CostModel {
             sustained_flops: 6.0e9,
             dispatch_us: 600,
             step_overhead_us: 150,
+            migration_bandwidth_bytes_per_s: DEFAULT_MIGRATION_BANDWIDTH,
         }
     }
 
@@ -125,6 +134,12 @@ impl CostModel {
             sustained_flops: j.req_f64("sustained_flops")?,
             dispatch_us: j.req_usize("dispatch_us")? as u64,
             step_overhead_us: j.req_usize("step_overhead_us")? as u64,
+            // optional so calibration files written before the migration
+            // subsystem keep loading
+            migration_bandwidth_bytes_per_s: j
+                .get("migration_bandwidth_bytes_per_s")
+                .and_then(Json::as_f64)
+                .unwrap_or(DEFAULT_MIGRATION_BANDWIDTH),
         })
     }
 
@@ -135,7 +150,18 @@ impl CostModel {
             ("sustained_flops", Json::num(self.sustained_flops)),
             ("dispatch_us", Json::num(self.dispatch_us as f64)),
             ("step_overhead_us", Json::num(self.step_overhead_us as f64)),
+            (
+                "migration_bandwidth_bytes_per_s",
+                Json::num(self.migration_bandwidth_bytes_per_s),
+            ),
         ])
+    }
+
+    /// Virtual time to copy `bytes` of KV pages between two shards (one
+    /// fixed dispatch for the transfer, then pure bandwidth).
+    pub fn migrate_cost_us(&self, bytes: usize) -> u64 {
+        (bytes as f64 / self.migration_bandwidth_bytes_per_s.max(1.0) * 1e6) as u64
+            + self.dispatch_us
     }
 
     /// One prefill chunk of `n` tokens attending over `cache_len + n` slots.
@@ -358,6 +384,33 @@ mod tests {
         let c2 = CostModel::from_json(&j).unwrap();
         assert_eq!(c.dispatch_us, c2.dispatch_us);
         assert!((c.flops_per_token - c2.flops_per_token).abs() < 1.0);
+        assert!(
+            (c.migration_bandwidth_bytes_per_s - c2.migration_bandwidth_bytes_per_s).abs()
+                < 1.0
+        );
+        // calibration files that predate the migration subsystem load
+        // with the default bandwidth
+        let mut legacy = j.clone();
+        if let Json::Obj(m) = &mut legacy {
+            m.remove("migration_bandwidth_bytes_per_s");
+        }
+        let c3 = CostModel::from_json(&legacy).unwrap();
+        assert_eq!(c3.migration_bandwidth_bytes_per_s, DEFAULT_MIGRATION_BANDWIDTH);
+    }
+
+    #[test]
+    fn migrate_cost_scales_with_bytes_and_bandwidth() {
+        let m = synthetic_meta("llama3-8b-sim").unwrap();
+        let mut c = CostModel::derived(&m);
+        let small = c.migrate_cost_us(64 << 10);
+        let big = c.migrate_cost_us(64 << 20);
+        assert!(big > small);
+        c.migration_bandwidth_bytes_per_s /= 100.0;
+        assert!(c.migrate_cost_us(64 << 20) > big, "slower link costs more");
+        // on a same-box link, moving a few pages is far cheaper than
+        // re-prefilling the tokens they hold
+        let c = CostModel::derived(&m);
+        assert!(c.migrate_cost_us(100 << 10) < c.prefill_cost_us(144, 0));
     }
 
     #[test]

@@ -133,6 +133,21 @@ impl BlockPool {
         &mut self.data[off..off + len]
     }
 
+    /// One page's full contiguous run (`[layer][k|v][slot][width]`,
+    /// `floats_per_page` floats) — the unit cross-shard migration
+    /// snapshots and restores.
+    pub fn page_data(&self, page: PageId) -> &[f32] {
+        let fpp = self.spec.floats_per_page();
+        let off = page as usize * fpp;
+        &self.data[off..off + fpp]
+    }
+
+    pub fn page_data_mut(&mut self, page: PageId) -> &mut [f32] {
+        let fpp = self.spec.floats_per_page();
+        let off = page as usize * fpp;
+        &mut self.data[off..off + fpp]
+    }
+
     // ---------------- accounting ----------------
     pub fn used_pages(&self) -> usize {
         self.used
@@ -242,6 +257,40 @@ mod tests {
                 assert!(pool.kv_slice(p, layer, kv).iter().all(|&x| x == val));
             }
         }
+    }
+
+    #[test]
+    fn page_data_covers_every_kv_slice_once() {
+        // the migration snapshot unit must be exactly the page's kv
+        // slices laid end to end, in (layer, k|v) order
+        let mut pool = BlockPool::new(spec());
+        let p = pool.alloc().unwrap();
+        for layer in 0..2 {
+            for kv in 0..2 {
+                pool.kv_slice_mut(p, layer, kv).fill((layer * 2 + kv) as f32);
+            }
+        }
+        let data: Vec<f32> = pool.page_data(p).to_vec();
+        assert_eq!(data.len(), pool.spec().floats_per_page());
+        let run = pool.spec().page_tokens * pool.spec().width;
+        for layer in 0..2 {
+            for kv in 0..2 {
+                let off = (layer * 2 + kv) * run;
+                assert!(data[off..off + run]
+                    .iter()
+                    .all(|&x| x == (layer * 2 + kv) as f32));
+            }
+        }
+        // restoring into a different page round-trips
+        let q = pool.alloc().unwrap();
+        pool.page_data_mut(q).copy_from_slice(&data);
+        for layer in 0..2 {
+            for kv in 0..2 {
+                assert_eq!(pool.kv_slice(q, layer, kv), pool.kv_slice(p, layer, kv));
+            }
+        }
+        pool.release(p);
+        pool.release(q);
     }
 
     #[test]

@@ -12,6 +12,7 @@ pub mod engine;
 pub mod exec;
 pub mod kvcache;
 pub mod metrics;
+pub mod migrate;
 pub mod radix;
 pub mod router;
 pub mod runtime;

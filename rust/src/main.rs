@@ -2,7 +2,7 @@
 //!
 //! Hand-rolled argument parsing (no clap in the offline vendor set).
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use forkkv::config::{CacheConfig, CachePolicy, EngineConfig, ServerConfig};
 use forkkv::engine::Engine;
@@ -12,8 +12,8 @@ use forkkv::runtime::PrefillArgs;
 use forkkv::server::Server;
 use forkkv::util::json::Json;
 use forkkv::workload::{
-    presets, run_http_load, run_multi_workflow_load, HttpLoadSpec, MultiWorkflowHttpSpec,
-    WorkflowDriver, WorkflowKind, WorkloadSpec,
+    presets, run_http_load, run_multi_workflow_load, run_skewed_workflow_load, HttpLoadSpec,
+    MultiWorkflowHttpSpec, SkewedWorkflowHttpSpec, WorkflowDriver, WorkflowKind, WorkloadSpec,
 };
 
 fn usage() -> ! {
@@ -23,7 +23,8 @@ fn usage() -> ! {
 USAGE:
   forkkv serve      [--artifacts DIR] [--addr HOST:PORT] [--policy P] [--budget-mb N]
                     [--workers N] [--max-body-kb N] [--shards N] [--route R]
-                    [--imbalance F]
+                    [--imbalance F] [--migrate on|off] [--migrate-gbps F]
+                    [--migrate-max-inflight N]
   forkkv run        [--policy P] [--model M] [--dataset D] [--workflow react|mapreduce]
                     [--workflows N] [--requests N] [--rate R] [--budget-mb N] [--seed S]
                     [--real --artifacts DIR]
@@ -31,10 +32,15 @@ USAGE:
                     [--budget-mb N] [--max-new N] [--workers N] [--pace-us U]
                     [--shards N] [--route R] [--imbalance F]
                     [--workflows K --agents-per-workflow M]
+                    [--hot-agents N --stagger-ms T]
+                    [--migrate on|off] [--migrate-gbps F]
                     # closed-loop concurrent HTTP load against a sim-backed server;
                     # with --workflows, K workflows of M agents fork shared contexts
-                    # (the multi-shard placement scenario)
-  forkkv calibrate  [--artifacts DIR]   # measure real PJRT costs -> calibration.json
+                    # (the multi-shard placement scenario); with --hot-agents, one
+                    # hot workflow bursts N parallel agents so spills are forced and
+                    # cross-shard page migration (--migrate) is exercised
+  forkkv calibrate  [--artifacts DIR]   # measure real PJRT costs + inter-shard copy
+                                        # bandwidth -> calibration.json
 
   P: forkkv | prefix | full-reuse      M: llama3-8b-sim | qwen2.5-7b-sim | qwen2.5-14b-sim
   D: loogle | narrativeqa | apigen     R: affinity | round_robin"
@@ -92,6 +98,25 @@ fn server_config(args: &Args) -> anyhow::Result<ServerConfig> {
         cfg.imbalance_factor = v.parse()?;
         anyhow::ensure!(cfg.imbalance_factor >= 1.0, "--imbalance must be >= 1.0");
     }
+    if let Some(v) = args.flag("--migrate") {
+        cfg.migrate = match v.as_str() {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => anyhow::bail!("--migrate takes on|off, got {other:?}"),
+        };
+    }
+    if let Some(v) = args.flag("--migrate-gbps") {
+        let gbps: f64 = v.parse()?;
+        anyhow::ensure!(gbps > 0.0, "--migrate-gbps must be > 0");
+        cfg.migration_bandwidth_bytes_per_s = gbps * 1e9;
+    }
+    if let Some(v) = args.flag("--migrate-max-inflight") {
+        cfg.migration_max_inflight = v.parse()?;
+        anyhow::ensure!(
+            cfg.migration_max_inflight > 0,
+            "--migrate-max-inflight must be > 0"
+        );
+    }
     Ok(cfg)
 }
 
@@ -110,6 +135,39 @@ fn engine_config(args: &Args) -> anyhow::Result<EngineConfig> {
         seed,
         ..EngineConfig::default()
     })
+}
+
+/// Feed `forkkv calibrate`'s measured cost model (real FLOP terms + the
+/// memcpy bandwidth probe) into the server's migrate-vs-recompute
+/// decision. No calibration file, no entry for this model, or a parse
+/// failure all silently keep the derived defaults; an explicit
+/// `--migrate-gbps` flag still overrides the calibrated bandwidth.
+fn apply_calibration(scfg: &mut ServerConfig, args: &Args, cal_dir: &Path, model: &str) {
+    let path = cal_dir.join("calibration.json");
+    let Ok(text) = std::fs::read_to_string(&path) else {
+        return;
+    };
+    let Ok(j) = forkkv::util::json::parse(&text) else {
+        return;
+    };
+    let Some(per_model) = j.get(model) else {
+        return;
+    };
+    let Ok(mut cost) = CostModel::from_json(per_model) else {
+        return;
+    };
+    if args.flag("--migrate-gbps").is_some() {
+        cost.migration_bandwidth_bytes_per_s = scfg.migration_bandwidth_bytes_per_s;
+    } else {
+        scfg.migration_bandwidth_bytes_per_s = cost.migration_bandwidth_bytes_per_s;
+    }
+    eprintln!(
+        "migration cost model for {model} calibrated from {} ({:.2e} FLOP/s, {:.2e} B/s)",
+        path.display(),
+        cost.sustained_flops,
+        cost.migration_bandwidth_bytes_per_s
+    );
+    scfg.migration_cost = Some(cost);
 }
 
 /// Build the engine shard pool: `shards` peer engines, each owning a
@@ -133,11 +191,17 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
         .flag("--addr")
         .unwrap_or_else(|| "127.0.0.1:8080".into());
     let cfg = engine_config(args)?;
-    let scfg = server_config(args)?;
+    let mut scfg = server_config(args)?;
     eprintln!("loading artifacts from {} ...", dir.display());
     let engines = build_shards(&cfg, scfg.shards, || {
         Ok(Box::new(PjrtExecutor::load(&dir)?) as Box<dyn Executor>)
     })?;
+    // calibrate writes calibration.json next to the per-model artifact
+    // dirs (the parent of --artifacts here)
+    let model = engines[0].meta().name.clone();
+    if let Some(parent) = dir.parent() {
+        apply_calibration(&mut scfg, args, parent, &model);
+    }
     let (server, handles) = Server::start_sharded(engines, scfg);
     server.serve_http(&addr, None)?;
     server.shutdown();
@@ -155,10 +219,11 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// front-end concurrency and router placement quality.
 fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
     let cfg = engine_config(args)?;
-    let scfg = server_config(args)?;
+    let mut scfg = server_config(args)?;
     let model = args
         .flag("--model")
         .unwrap_or_else(|| "llama3-8b-sim".into());
+    apply_calibration(&mut scfg, args, Path::new("artifacts"), &model);
     let clients: usize = args.flag("--clients").map(|v| v.parse()).transpose()?.unwrap_or(8);
     let per_client: usize = args
         .flag("--requests-per-client")
@@ -173,6 +238,12 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         .map(|v| v.parse())
         .transpose()?
         .unwrap_or(3);
+    let hot_agents: Option<usize> = args.flag("--hot-agents").map(|v| v.parse()).transpose()?;
+    let stagger_ms: u64 = args
+        .flag("--stagger-ms")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(4);
 
     let policy = cfg.policy;
     let engines = build_shards(&cfg, scfg.shards, || {
@@ -187,12 +258,19 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
             .unwrap_or_else(|| "127.0.0.1:0".into()),
     )?;
     let addr = listener.local_addr()?.to_string();
-    match workflows {
-        Some(k) => eprintln!(
+    match (hot_agents, workflows) {
+        (Some(n), _) => eprintln!(
+            "bench-http: skewed load, {n} hot agents (+{} cold) over {} shard(s), \
+             migrate={} -> http://{addr}",
+            workflows.unwrap_or(3),
+            server.config().shards,
+            server.config().migrate,
+        ),
+        (None, Some(k)) => eprintln!(
             "bench-http: {k} workflows x {agents} agents over {} shard(s) -> http://{addr}",
             server.config().shards
         ),
-        None => eprintln!(
+        (None, None) => eprintln!(
             "bench-http: {clients} clients x {per_client} requests over {} shard(s) -> http://{addr}",
             server.config().shards
         ),
@@ -206,8 +284,18 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         std::thread::spawn(move || server.serve_listener(listener, None))
     };
 
-    let mut report = match workflows {
-        Some(k) => {
+    let mut report = match (hot_agents, workflows) {
+        (Some(n), _) => {
+            let spec = SkewedWorkflowHttpSpec {
+                hot_agents: n,
+                stagger_ms,
+                cold_workflows: workflows.unwrap_or(3),
+                max_new,
+                ..SkewedWorkflowHttpSpec::default()
+            };
+            run_skewed_workflow_load(&addr, &spec)?
+        }
+        (None, Some(k)) => {
             let spec = MultiWorkflowHttpSpec {
                 workflows: k,
                 agents_per_workflow: agents,
@@ -216,7 +304,7 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
             };
             run_multi_workflow_load(&addr, &spec)?
         }
-        None => {
+        (None, None) => {
             let spec = HttpLoadSpec {
                 clients,
                 requests_per_client: per_client,
@@ -236,6 +324,7 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
             "route".into(),
             Json::str(server.config().route_policy.name()),
         );
+        m.insert("router".into(), server.router_stats());
         m.insert("policy".into(), Json::str(policy.name()));
         m.insert("workers".into(), Json::num(server.config().workers as f64));
         m.insert("pace_us".into(), Json::num(pace_us as f64));
@@ -297,6 +386,22 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Measured host copy bandwidth (bytes/s): the rate at which one shard's
+/// page bytes move into a peer pool on this machine — the denominator of
+/// the migrate-vs-recompute decision (`CostModel::migrate_cost_us`).
+fn measure_copy_bandwidth() -> f64 {
+    let src = vec![1.0f32; 4 << 20]; // 16 MiB
+    let mut dst = vec![0.0f32; 4 << 20];
+    let reps = 8;
+    let t = std::time::Instant::now();
+    for _ in 0..reps {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(&mut dst);
+    }
+    let secs = t.elapsed().as_secs_f64().max(1e-9);
+    (src.len() * 4 * reps) as f64 / secs
+}
+
 /// Measure real per-op costs and write artifacts/calibration.json so the
 /// sim cost model reflects this machine (EXPERIMENTS.md §Calibration).
 fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
@@ -341,10 +446,13 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
             + cost.attn_flops_per_qk * (meta.chunk * meta.s_max) as f64;
         cost.sustained_flops = model_flops / (prefill_med as f64 / 1e6);
         cost.dispatch_us = (prefill_med / 10).max(200);
+        // inter-shard page-copy bandwidth: shards live in one process on
+        // this substrate, so migration moves at host memcpy speed
+        cost.migration_bandwidth_bytes_per_s = measure_copy_bandwidth();
         out.insert(meta.name.clone(), cost.to_json());
         eprintln!(
-            "  chunk={}us sustained={:.2e} FLOP/s",
-            prefill_med, cost.sustained_flops
+            "  chunk={}us sustained={:.2e} FLOP/s migrate={:.2e} B/s",
+            prefill_med, cost.sustained_flops, cost.migration_bandwidth_bytes_per_s
         );
     }
     let j = Json::Obj(out.into_iter().collect());

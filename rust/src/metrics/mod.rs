@@ -27,6 +27,15 @@ pub struct EngineMetrics {
     pub preemptions: u64,
     pub oom_drops: u64,
 
+    // cross-shard page migration (spill-path bandwidth-for-FLOPs trade):
+    // import side — pages/bytes adopted into this shard's pool + trees,
+    // and the prompt tokens those pages spare this shard from prefilling
+    pub migrated_pages: u64,
+    pub migrated_bytes: u64,
+    pub recompute_tokens_saved: u64,
+    /// export side — pages snapshotted out of this shard for a peer
+    pub exported_pages: u64,
+
     // decode-batch occupancy (rows per decode step) and its observed peak
     pub decode_batch: Series,
     pub max_decode_batch: u64,
@@ -98,6 +107,13 @@ impl EngineMetrics {
             ("completed", Json::num(self.completed as f64)),
             ("preemptions", Json::num(self.preemptions as f64)),
             ("oom_drops", Json::num(self.oom_drops as f64)),
+            ("migrated_pages", Json::num(self.migrated_pages as f64)),
+            ("migrated_bytes", Json::num(self.migrated_bytes as f64)),
+            (
+                "recompute_tokens_saved",
+                Json::num(self.recompute_tokens_saved as f64),
+            ),
+            ("exported_pages", Json::num(self.exported_pages as f64)),
             ("decode_batch", self.decode_batch.summary().to_json()),
             ("max_decode_batch", Json::num(self.max_decode_batch as f64)),
             ("base_pool_bytes", self.base_pool_bytes.summary().to_json()),
@@ -112,7 +128,7 @@ impl EngineMetrics {
 /// Keys summed across shards by [`aggregate_stats`]. Series summaries are
 /// deliberately absent: percentiles don't compose across shards, so those
 /// stay in the per-shard snapshots.
-const SUMMED_KEYS: [&str; 12] = [
+const SUMMED_KEYS: [&str; 16] = [
     "prefill_steps",
     "decode_steps",
     "decode_rows",
@@ -125,6 +141,10 @@ const SUMMED_KEYS: [&str; 12] = [
     "completed",
     "preemptions",
     "oom_drops",
+    "migrated_pages",
+    "migrated_bytes",
+    "recompute_tokens_saved",
+    "exported_pages",
 ];
 
 /// Combine per-shard stats snapshots (as produced by
@@ -304,6 +324,9 @@ mod tests {
             hit_full_tokens: 80,
             hit_partial_tokens: 10,
             completed: 3,
+            migrated_pages: 5,
+            migrated_bytes: 5 * 65536,
+            recompute_tokens_saved: 80,
             ..EngineMetrics::default()
         };
         let mut b = EngineMetrics {
@@ -312,6 +335,9 @@ mod tests {
             max_decode_batch: 2,
             prompt_tokens: 900,
             oom_drops: 2,
+            migrated_pages: 2,
+            recompute_tokens_saved: 32,
+            exported_pages: 5,
             ..EngineMetrics::default()
         };
         let agg = aggregate_stats(&[a.to_json(), b.to_json()]);
@@ -320,6 +346,10 @@ mod tests {
         assert_eq!(agg.at(&["completed"]).as_usize().unwrap(), 3);
         assert_eq!(agg.at(&["oom_drops"]).as_usize().unwrap(), 2);
         assert_eq!(agg.at(&["max_decode_batch"]).as_usize().unwrap(), 6);
+        assert_eq!(agg.at(&["migrated_pages"]).as_usize().unwrap(), 7);
+        assert_eq!(agg.at(&["migrated_bytes"]).as_usize().unwrap(), 5 * 65536);
+        assert_eq!(agg.at(&["recompute_tokens_saved"]).as_usize().unwrap(), 112);
+        assert_eq!(agg.at(&["exported_pages"]).as_usize().unwrap(), 5);
         // weighted by steps, not the mean of per-shard averages (2.5)
         assert!((agg.at(&["avg_decode_batch"]).as_f64().unwrap() - 1.3).abs() < 1e-9);
         // weighted by prompt tokens, not the mean of per-shard rates (0.4)

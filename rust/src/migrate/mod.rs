@@ -1,0 +1,234 @@
+//! Cross-shard bCache page migration: spill costs bandwidth, not FLOPs.
+//!
+//! PR 2's affinity router keeps forked agents on the shard that already
+//! caches their shared context, but a request spilled for load balance
+//! used to recompute its whole prefix on the target shard — the exact
+//! redundant prefill ForkKV's CoW fork exists to eliminate, reintroduced
+//! at the pool layer. This module is the fix (TokenDance-style collective
+//! KV sharing / KVFlow-style workflow cache management, adapted to the
+//! shard pool): before a spilled request prefills, the server
+//!
+//!   1. **Probe**s the home shard (`Engine::migration_probe`, a read-only
+//!      `RadixTree::probe_pages` walk over the page-aligned prompt
+//!      window) for how many bCache/rCache pages the request would have
+//!      matched there;
+//!   2. asks [`MigrationPolicy::should_migrate`] whether moving those
+//!      bytes beats recomputing those tokens (calibrated
+//!      bandwidth-vs-FLOPs cost model, `exec::CostModel`), and probes
+//!      the *target* the same way — a target already covering the home
+//!      shard's match (an earlier migration of the same hot context)
+//!      skips the transfer outright;
+//!   3. **Export**s a snapshot of the matched pages' bytes plus their
+//!      token path out of the home shard (`Engine::export_pages` — pages
+//!      are leased during the copy, so the home LRU cannot evict them
+//!      mid-export);
+//!   4. **Import**s the snapshot into the target shard's pool and
+//!      `DualRadixTree` (`Engine::import_pages`, refcount-correct
+//!      insertion) ahead of the request's submission on the same FIFO
+//!      command channel — so its `fork_match` hits locally and only the
+//!      unmatched tail is computed.
+//!
+//! The payload types here are plain owned buffers: a snapshot is
+//! decoupled from the source pool the moment it is taken, which is what
+//! makes the export lease short (copy time, not transfer time) and lets
+//! the server move the payload between shard threads without aliasing
+//! either engine's memory.
+
+use crate::exec::CostModel;
+use crate::kvcache::BlockPool;
+use crate::radix::RadixTree;
+
+/// One tree component (base or residual) of a migration snapshot: the
+/// page-aligned token path plus each matched page's raw bytes, in path
+/// order. `tokens.len() == pages.len() * page_tokens` always holds.
+#[derive(Debug, Clone)]
+pub struct ComponentExport {
+    /// radix namespace the pages were exported from (and must be
+    /// imported into): `base_ns(policy, adapter)` for the base tree,
+    /// the adapter id for the residual tree
+    pub ns: u32,
+    /// the matched token path, page aligned
+    pub tokens: Vec<u32>,
+    /// raw page contents (`BlockPool::page_data` runs), one per page
+    pub pages: Vec<Vec<f32>>,
+}
+
+impl ComponentExport {
+    pub fn bytes(&self) -> usize {
+        self.pages.iter().map(|p| p.len() * 4).sum()
+    }
+}
+
+/// A full shard-to-shard page snapshot for one spilled request.
+#[derive(Debug, Clone)]
+pub struct MigrationPayload {
+    /// page granularity of the exporting shard (importers verify it
+    /// matches their own before touching their pool)
+    pub page_tokens: usize,
+    pub base: ComponentExport,
+    /// present only under the disaggregated policy
+    pub residual: Option<ComponentExport>,
+}
+
+impl MigrationPayload {
+    pub fn bytes(&self) -> usize {
+        self.base.bytes() + self.residual.as_ref().map_or(0, ComponentExport::bytes)
+    }
+
+    pub fn pages(&self) -> usize {
+        self.base.pages.len() + self.residual.as_ref().map_or(0, |r| r.pages.len())
+    }
+
+    /// Prompt tokens the importing shard will skip at admission: the
+    /// *joint* coverage (fork admission skips `min(base, residual)`
+    /// under the disaggregated policy, base coverage otherwise).
+    pub fn tokens_saved(&self) -> usize {
+        match &self.residual {
+            Some(r) => self.base.tokens.len().min(r.tokens.len()),
+            None => self.base.tokens.len(),
+        }
+    }
+}
+
+/// Snapshot one tree component's longest cached prefix of `tokens`.
+///
+/// Eviction safety: the matched pages are *leased* (`match_lease`) for
+/// the duration of the byte copy — `RadixTree::evict` skips leased
+/// nodes, so an LRU pass racing the export (in engine terms: queued
+/// right behind it on the shard's command channel) can never free a
+/// page mid-snapshot. The leases and pool refs are dropped before
+/// returning; the result owns plain buffers with no ties to the pool.
+pub fn export_component(
+    tree: &mut RadixTree,
+    pool: &mut BlockPool,
+    ns: u32,
+    tokens: &[u32],
+) -> ComponentExport {
+    let m = tree.match_lease(ns, tokens, pool);
+    let pages: Vec<Vec<f32>> = m
+        .pages
+        .iter()
+        .map(|&p| pool.page_data(p).to_vec())
+        .collect();
+    let path_tokens = tokens[..m.tokens].to_vec();
+    tree.release_path(&m.path);
+    for &p in &m.pages {
+        pool.release(p);
+    }
+    ComponentExport { ns, tokens: path_tokens, pages }
+}
+
+/// What a home-shard probe found: enough to price the migration without
+/// copying a byte.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MigrationEstimate {
+    pub base_pages: usize,
+    pub res_pages: usize,
+    /// total bytes a full export of those pages would move
+    pub bytes: usize,
+    /// prompt tokens the import would save from recompute (joint
+    /// coverage, as in [`MigrationPayload::tokens_saved`])
+    pub tokens_saved: usize,
+}
+
+/// The migrate-vs-recompute decision, priced by the calibrated cost
+/// model: copying `bytes` over the inter-shard link vs re-prefilling
+/// `tokens_saved` tokens on the target shard.
+#[derive(Debug, Clone)]
+pub struct MigrationPolicy {
+    pub enabled: bool,
+    pub cost: CostModel,
+}
+
+impl MigrationPolicy {
+    pub fn new(enabled: bool, cost: CostModel) -> Self {
+        MigrationPolicy { enabled, cost }
+    }
+
+    /// Virtual microseconds to move the estimate's bytes between shards.
+    pub fn migrate_cost_us(&self, est: &MigrationEstimate) -> u64 {
+        self.cost.migrate_cost_us(est.bytes)
+    }
+
+    /// Virtual microseconds the target shard would spend recomputing the
+    /// matched prefix (it sits at the front of the prompt: cache_len 0).
+    pub fn recompute_cost_us(&self, est: &MigrationEstimate) -> u64 {
+        self.cost.prefill_cost_us(est.tokens_saved, 0)
+    }
+
+    /// Migrate exactly when the copy is cheaper than the recompute it
+    /// saves (and there is anything to save at all).
+    pub fn should_migrate(&self, est: &MigrationEstimate) -> bool {
+        self.enabled
+            && est.tokens_saved > 0
+            && self.migrate_cost_us(est) < self.recompute_cost_us(est)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::synthetic_meta;
+
+    fn policy(bandwidth: f64) -> MigrationPolicy {
+        let meta = synthetic_meta("llama3-8b-sim").unwrap();
+        let mut cost = CostModel::derived(&meta);
+        cost.migration_bandwidth_bytes_per_s = bandwidth;
+        MigrationPolicy::new(true, cost)
+    }
+
+    fn est(pages: usize, bytes: usize, tokens: usize) -> MigrationEstimate {
+        MigrationEstimate {
+            base_pages: pages,
+            res_pages: 0,
+            bytes,
+            tokens_saved: tokens,
+        }
+    }
+
+    #[test]
+    fn payload_accounting() {
+        let base = ComponentExport {
+            ns: 0,
+            tokens: (0..32).collect(),
+            pages: vec![vec![0.0; 64]; 2],
+        };
+        let res = ComponentExport {
+            ns: 3,
+            tokens: (0..16).collect(),
+            pages: vec![vec![0.0; 8]; 1],
+        };
+        let p = MigrationPayload {
+            page_tokens: 16,
+            base: base.clone(),
+            residual: Some(res),
+        };
+        assert_eq!(p.pages(), 3);
+        assert_eq!(p.bytes(), 2 * 64 * 4 + 8 * 4);
+        // joint coverage: min(32 base, 16 residual)
+        assert_eq!(p.tokens_saved(), 16);
+        let merged = MigrationPayload { page_tokens: 16, base, residual: None };
+        assert_eq!(merged.tokens_saved(), 32);
+    }
+
+    #[test]
+    fn fast_link_migrates_slow_link_recomputes() {
+        // a realistic interconnect: moving ~100 KB beats re-prefilling
+        // 144 tokens by orders of magnitude
+        let fast = policy(8e9);
+        assert!(fast.should_migrate(&est(9, 100 << 10, 144)));
+        // a catastrophically slow link (1 KB/s): recompute wins
+        let slow = policy(1e3);
+        assert!(!slow.should_migrate(&est(9, 100 << 10, 144)));
+        assert!(slow.migrate_cost_us(&est(9, 100 << 10, 144))
+            > slow.recompute_cost_us(&est(9, 100 << 10, 144)));
+    }
+
+    #[test]
+    fn empty_or_disabled_never_migrates() {
+        let p = policy(8e9);
+        assert!(!p.should_migrate(&est(0, 0, 0)), "nothing matched");
+        let off = MigrationPolicy::new(false, p.cost.clone());
+        assert!(!off.should_migrate(&est(9, 100 << 10, 144)), "disabled");
+    }
+}

@@ -615,6 +615,162 @@ mod tests {
     }
 
     #[test]
+    fn fork_match_stops_at_page_boundary_mid_page() {
+        // a query whose length (or divergence point) falls mid-page must
+        // match only whole pages — fork coverage is page-aligned
+        let mut bpool = pool(32);
+        let mut rpool = pool(32);
+        let mut dual = DualRadixTree::new(4);
+        let t = toks(16, 40);
+        publish(&mut dual.base, 0, &t, &mut bpool);
+        publish(&mut dual.residual, 1, &t, &mut rpool);
+
+        // query ends mid-page: 10 tokens -> 2 full pages = 8 tokens
+        let f = dual.fork_match(1, &t[..10], &mut bpool, &mut rpool);
+        assert_eq!(f.base.tokens, 8);
+        assert_eq!(f.residual.tokens, 8);
+        assert_eq!(f.base.pages.len(), 2);
+        assert_eq!(f.full_hit_tokens(), 8);
+        assert_eq!(f.partial_hit_tokens(), 0);
+        dual.base.release_path(&f.base.path);
+        dual.residual.release_path(&f.residual.path);
+        for p in &f.base.pages {
+            bpool.release(*p);
+        }
+        for p in &f.residual.pages {
+            rpool.release(*p);
+        }
+
+        // divergence mid-page 3 (token 10): match stops after page 2
+        let mut t2 = t.clone();
+        t2[10] = t2[10].wrapping_add(13);
+        let f2 = dual.fork_match(1, &t2, &mut bpool, &mut rpool);
+        assert_eq!(f2.base.tokens, 8);
+        assert_eq!(f2.residual.tokens, 8);
+        dual.base.release_path(&f2.base.path);
+        dual.residual.release_path(&f2.residual.path);
+        for p in &f2.base.pages {
+            bpool.release(*p);
+        }
+        for p in &f2.residual.pages {
+            rpool.release(*p);
+        }
+        dual.base.check_invariants(&bpool).unwrap();
+        dual.residual.check_invariants(&rpool).unwrap();
+    }
+
+    #[test]
+    fn fork_match_zero_length_residual_is_pure_partial() {
+        // base cached, residual namespace completely cold: the fork is
+        // all partial hit, zero full hit — and the residual MatchResult
+        // must be truly empty (no pages, no path to release)
+        let mut bpool = pool(32);
+        let mut rpool = pool(32);
+        let mut dual = DualRadixTree::new(4);
+        let t = toks(12, 41);
+        publish(&mut dual.base, 0, &t, &mut bpool);
+
+        let f = dual.fork_match(5, &t, &mut bpool, &mut rpool);
+        assert_eq!(f.base.tokens, 12);
+        assert_eq!(f.residual.tokens, 0);
+        assert!(f.residual.pages.is_empty());
+        assert!(f.residual.path.is_empty());
+        assert_eq!(f.full_hit_tokens(), 0);
+        assert_eq!(f.partial_hit_tokens(), 12);
+        assert_eq!(rpool.used_pages(), 0, "cold residual must not allocate");
+        dual.base.release_path(&f.base.path);
+        for p in &f.base.pages {
+            bpool.release(*p);
+        }
+    }
+
+    #[test]
+    fn fork_match_residual_only_hit_after_base_eviction() {
+        // decoupled eviction can leave the rCache alive with the bCache
+        // gone: the surviving residual half must still be matched
+        let mut bpool = pool(32);
+        let mut rpool = pool(32);
+        let mut dual = DualRadixTree::new(4);
+        let t = toks(12, 42);
+        publish(&mut dual.base, 0, &t, &mut bpool);
+        publish(&mut dual.residual, 7, &t, &mut rpool);
+        assert_eq!(dual.base.evict(100, &mut bpool), 3, "drop the whole base");
+
+        let f = dual.fork_match(7, &t, &mut bpool, &mut rpool);
+        assert_eq!(f.base.tokens, 0, "base gone");
+        assert!(f.base.pages.is_empty() && f.base.path.is_empty());
+        assert_eq!(f.residual.tokens, 12, "residual survives alone");
+        assert_eq!(f.full_hit_tokens(), 0);
+        assert_eq!(f.partial_hit_tokens(), 12);
+        dual.residual.release_path(&f.residual.path);
+        for p in &f.residual.pages {
+            rpool.release(*p);
+        }
+    }
+
+    #[test]
+    fn evict_refuses_pages_leased_by_inflight_export() {
+        // a migration export leases its matched pages for the duration of
+        // the byte copy (migrate::export_component); an LRU pass landing
+        // between the lease and the release must not free them
+        let mut pool = pool(32);
+        let mut tree = RadixTree::new(4);
+        let t = toks(12, 43);
+        publish(&mut tree, 0, &t, &mut pool);
+        assert_eq!(tree.total_pages(), 3);
+
+        // "in-flight export": lease held, bytes being copied
+        let export_lease = tree.match_lease(0, &t, &mut pool);
+        assert_eq!(export_lease.tokens, 12);
+        assert_eq!(tree.evict(100, &mut pool), 0, "leased pages must survive");
+        let still = tree.match_lease(0, &t, &mut pool);
+        assert_eq!(still.tokens, 12, "export source intact under pressure");
+        tree.release_path(&still.path);
+        for p in &still.pages {
+            pool.release(*p);
+        }
+
+        // export done: leases released, pages evictable again
+        tree.release_path(&export_lease.path);
+        for p in &export_lease.pages {
+            pool.release(*p);
+        }
+        assert_eq!(tree.evict(100, &mut pool), 3);
+        assert_eq!(pool.used_pages(), 0);
+        tree.check_invariants(&pool).unwrap();
+    }
+
+    #[test]
+    fn export_component_snapshots_without_leaking() {
+        // the real export path end to end: bytes captured while leased,
+        // then every lease and pool ref dropped — the tree/pool state is
+        // exactly as before the export
+        let mut pool = pool(32);
+        let mut tree = RadixTree::new(4);
+        let t = toks(12, 44);
+        // make page contents distinguishable
+        let pages: Vec<PageId> = (0..3).map(|_| pool.alloc().unwrap()).collect();
+        for (i, &p) in pages.iter().enumerate() {
+            pool.page_data_mut(p).fill(i as f32 + 1.0);
+        }
+        tree.insert(0, &t, &pages, &mut pool);
+        for p in pages {
+            pool.release(p);
+        }
+        let used_before = pool.used_pages();
+
+        let export = crate::migrate::export_component(&mut tree, &mut pool, 0, &t[..10]);
+        assert_eq!(export.tokens, t[..8], "page-aligned prefix of the query");
+        assert_eq!(export.pages.len(), 2);
+        assert!(export.pages[0].iter().all(|&x| x == 1.0));
+        assert!(export.pages[1].iter().all(|&x| x == 2.0));
+        assert_eq!(pool.used_pages(), used_before, "no refs leaked");
+        tree.check_invariants(&pool).unwrap();
+        // everything is evictable again (no lingering leases)
+        assert_eq!(tree.evict(100, &mut pool), 3);
+    }
+
+    #[test]
     fn prop_radix_consistency_under_random_traffic() {
         prop::check("radix-fuzz", 48, |rng| {
             let mut pool = BlockPool::new(PoolSpec {

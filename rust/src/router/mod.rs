@@ -113,27 +113,53 @@ impl Router {
     /// Place one request. `depths[i]` is shard i's current in-flight
     /// request count (the server's load signal).
     pub fn place(&self, tokens: &[u32], tag: u64, depths: &[usize]) -> usize {
+        self.place_spill(tokens, tag, depths).shard
+    }
+
+    /// Like [`Router::place`], but reports *why*: when an affinity
+    /// request spills off an overloaded home shard, `spilled_from` names
+    /// the home — the shard that (probably) holds the request's cached
+    /// pages, and therefore the source the migration subsystem should
+    /// probe. Round-robin placement never reports a spill (there is no
+    /// home to migrate from).
+    pub fn place_spill(&self, tokens: &[u32], tag: u64, depths: &[usize]) -> Placement {
         debug_assert_eq!(depths.len(), self.shards);
         match self.policy {
-            RoutePolicy::RoundRobin => self.rr.fetch_add(1, Ordering::Relaxed) % self.shards,
+            RoutePolicy::RoundRobin => Placement {
+                shard: self.rr.fetch_add(1, Ordering::Relaxed) % self.shards,
+                spilled_from: None,
+            },
             RoutePolicy::Affinity => {
                 let home = self.affinity_shard(tokens, tag);
                 let min = depths.iter().copied().min().unwrap_or(0);
                 // the +1 keeps the rule meaningful when the pool is idle:
                 // a depth-1 home shard is never "overloaded" vs depth 0
                 if (depths[home] as f64) > self.imbalance_factor * (min as f64 + 1.0) {
-                    depths
+                    let shard = depths
                         .iter()
                         .enumerate()
                         .min_by_key(|&(_, &d)| d)
                         .map(|(i, _)| i)
-                        .unwrap_or(home)
+                        .unwrap_or(home);
+                    Placement {
+                        shard,
+                        spilled_from: (shard != home).then_some(home),
+                    }
                 } else {
-                    home
+                    Placement { shard: home, spilled_from: None }
                 }
             }
         }
     }
+}
+
+/// A routing decision plus its spill provenance (see
+/// [`Router::place_spill`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Placement {
+    pub shard: usize,
+    /// the overloaded home shard this request was spilled away from
+    pub spilled_from: Option<usize>,
 }
 
 #[cfg(test)]
@@ -233,6 +259,16 @@ mod tests {
                 .min()
                 .unwrap()
         );
+        // the spill-aware variant agrees on the shard and names the home
+        let p = r.place_spill(&tokens, 7, &depths);
+        assert_eq!(p.shard, spilled);
+        assert_eq!(p.spilled_from, Some(home));
+        // a balanced pool reports no spill
+        let p = r.place_spill(&tokens, 7, &[1, 1, 1, 1]);
+        assert_eq!(p, Placement { shard: home, spilled_from: None });
+        // round-robin never has a home to spill from
+        let rr = Router::new(RoutePolicy::RoundRobin, 4, 16, 2.0);
+        assert_eq!(rr.place_spill(&tokens, 7, &depths).spilled_from, None);
     }
 
     #[test]

@@ -26,24 +26,55 @@
 //! (`recv_timeout`) whenever the engine reports `Tick::Idle` instead of
 //! spinning on a sleep loop. The per-shard in-flight count doubles as the
 //! router's load signal.
+//!
+//! Spill = bandwidth, not FLOPs: when the router spills a request off an
+//! overloaded home shard, the worker first runs the migration pipeline
+//! (`Cmd::Probe` → cost model → `Cmd::Export` → `Cmd::Import`, see
+//! `try_migrate` and the `migrate` module) so the target shard holds the
+//! request's cached pages before its `Cmd::Submit` arrives on the same
+//! FIFO channel. Dead shards are routed around: a failed submission is
+//! re-routed to the least-loaded live shard (`rerouted` in `/metrics`)
+//! and `/metrics` reports `{"dead": true}` per dead shard instead of
+//! failing the snapshot.
 
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
 use crate::config::ServerConfig;
 use crate::engine::{Engine, Request, Tick};
+use crate::exec::CostModel;
 use crate::metrics::{self, FinishedRequest, RequestOutcome};
+use crate::migrate::{MigrationEstimate, MigrationPayload, MigrationPolicy};
 use crate::router::Router;
 use crate::util::json::{self, Json};
 use crate::util::tokenizer::HashTokenizer;
 
 enum Cmd {
     Submit(Request, mpsc::Sender<RequestOutcome>),
+    /// Migration step 1: how many cached pages would this prompt match
+    /// on this shard? Read-only — prices the migration before any bytes
+    /// move.
+    Probe {
+        adapter: u32,
+        tokens: Vec<u32>,
+        reply: mpsc::Sender<MigrationEstimate>,
+    },
+    /// Migration step 2: snapshot the matched pages (bytes + token
+    /// path) out of this shard's pool, under eviction-safe leases.
+    Export {
+        adapter: u32,
+        tokens: Vec<u32>,
+        reply: mpsc::Sender<MigrationPayload>,
+    },
+    /// Migration step 3: adopt a peer shard's snapshot into this
+    /// shard's pool + trees. Enqueued on the same FIFO channel as the
+    /// spilled request's Submit, so the pages are in place by admission.
+    Import(Box<MigrationPayload>),
     Stats(mpsc::Sender<Json>),
     Shutdown,
 }
@@ -55,12 +86,55 @@ struct ShardHandle {
     depth: Arc<AtomicUsize>,
 }
 
+/// Depths at or above this mark a dead shard. A *range* rather than the
+/// exact `usize::MAX` poison value, because a poisoned depth can drift:
+/// the dying shard's final drain still `fetch_sub`s per outstanding
+/// waiter (`MAX - k`), and a racing submitter's `fetch_add` can nudge it
+/// up — any of those must still classify as dead, and real queue depths
+/// (bounded by sockets/workers) never come near it.
+const DEPTH_POISONED: usize = usize::MAX / 2;
+
+impl ShardHandle {
+    fn is_poisoned(&self) -> bool {
+        self.depth.load(Ordering::Relaxed) >= DEPTH_POISONED
+    }
+}
+
 pub struct Server {
     shards: Vec<ShardHandle>,
     router: Router,
+    /// migrate-vs-recompute decision for spilled requests
+    migration: MigrationPolicy,
+    /// migrations currently in flight (the bounded migration queue)
+    mig_inflight: AtomicUsize,
+    counters: RouteCounters,
     tokenizer: HashTokenizer,
     max_ctx: usize,
     cfg: ServerConfig,
+}
+
+/// Pool-level routing/migration outcome counters (served by `/metrics`).
+#[derive(Default)]
+struct RouteCounters {
+    /// requests placed off their affinity home for load balance
+    spills: AtomicU64,
+    /// spills whose cached pages were migrated to the target shard
+    migrations: AtomicU64,
+    /// spills that proceeded without migration (queue full, nothing
+    /// cached, cost model said recompute, target already warm, or the
+    /// home shard was gone)
+    migration_skipped: AtomicU64,
+    /// submissions re-routed off a dead shard to a live one
+    rerouted: AtomicU64,
+}
+
+/// Decrement-on-drop slot guard for the bounded migration queue.
+struct MigSlot<'a>(&'a AtomicUsize);
+
+impl Drop for MigSlot<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::Relaxed);
+    }
 }
 
 /// Apply one command on a shard thread; false = shutdown requested.
@@ -77,6 +151,18 @@ fn handle_cmd(
             req.arrival_us = engine.now_us();
             waiters.insert(req.id, reply);
             engine.submit(req);
+            true
+        }
+        Cmd::Probe { adapter, tokens, reply } => {
+            let _ = reply.send(engine.migration_probe(adapter, &tokens));
+            true
+        }
+        Cmd::Export { adapter, tokens, reply } => {
+            let _ = reply.send(engine.export_pages(adapter, &tokens));
+            true
+        }
+        Cmd::Import(payload) => {
+            engine.import_pages(&payload);
             true
         }
         Cmd::Stats(reply) => {
@@ -217,9 +303,22 @@ impl Server {
             page_tokens,
             cfg.imbalance_factor,
         );
+        // the migrate-vs-recompute price list: a calibrated cost model
+        // when the CLI loaded one (measured FLOPs + memcpy bandwidth
+        // from `forkkv calibrate`), else model-derived FLOP terms with
+        // the configured inter-shard bandwidth
+        let cost = cfg.migration_cost.clone().unwrap_or_else(|| {
+            let mut c = CostModel::derived(&meta);
+            c.migration_bandwidth_bytes_per_s = cfg.migration_bandwidth_bytes_per_s;
+            c
+        });
+        let migration = MigrationPolicy::new(cfg.migrate && shards.len() > 1, cost);
         let srv = Arc::new(Server {
             shards,
             router,
+            migration,
+            mig_inflight: AtomicUsize::new(0),
+            counters: RouteCounters::default(),
             tokenizer: HashTokenizer::new(meta.vocab),
             max_ctx: meta.s_max,
             cfg,
@@ -231,6 +330,16 @@ impl Server {
         for shard in &self.shards {
             let _ = shard.tx.send(Cmd::Shutdown);
         }
+    }
+
+    /// Drain one shard out of rotation (maintenance / tests): stop its
+    /// thread and poison its depth so the router routes around it. New
+    /// submissions that would have landed there are re-routed (counted
+    /// as `rerouted` in `/metrics`); its in-flight requests still get
+    /// terminal replies from the thread's final drain.
+    pub fn shutdown_shard(&self, shard: usize) {
+        let _ = self.shards[shard].tx.send(Cmd::Shutdown);
+        self.shards[shard].depth.store(usize::MAX, Ordering::Relaxed);
     }
 
     pub fn config(&self) -> &ServerConfig {
@@ -250,8 +359,11 @@ impl Server {
     }
 
     /// Submit to the routed shard and wait for the request's terminal
-    /// outcome (completion or engine-initiated drop). Errors only when the
-    /// request never reached a shard or the shard thread died.
+    /// outcome (completion or engine-initiated drop). A spill off an
+    /// overloaded home shard first runs the page-migration pipeline (see
+    /// `try_migrate`), and a submission to a dead shard is re-routed to
+    /// a live one. Errors only when the request never reached any live
+    /// shard or its shard died mid-flight.
     pub fn generate_outcome_tagged(
         &self,
         prompt_tokens: Vec<u32>,
@@ -265,9 +377,16 @@ impl Server {
             .iter()
             .map(|s| s.depth.load(Ordering::Relaxed))
             .collect();
-        let shard = self.router.place(&prompt_tokens, tag, &depths);
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let req = Request {
+        let placement = self.router.place_spill(&prompt_tokens, tag, &depths);
+        let mut shard = placement.shard;
+        if let Some(home) = placement.spilled_from {
+            self.counters.spills.fetch_add(1, Ordering::Relaxed);
+            // make the spill cost bandwidth instead of FLOPs: copy the
+            // home shard's cached pages ahead of this Submit
+            self.try_migrate(home, shard, adapter, &prompt_tokens);
+        }
+        let (mut reply_tx, reply_rx) = mpsc::channel();
+        let mut req = Request {
             id: 0, // assigned by the shard thread
             tag,
             adapter,
@@ -276,21 +395,161 @@ impl Server {
             arrival_us: 0,
             ignore_eos: false,
         };
-        let handle = &self.shards[shard];
-        handle.depth.fetch_add(1, Ordering::Relaxed);
-        if handle.tx.send(Cmd::Submit(req, reply_tx)).is_err() {
-            // a dead shard must not look idle to the router: poison its
-            // depth so affinity spills away and least-loaded never picks
-            // it (re-routing the request itself is a ROADMAP open item)
-            handle.depth.store(usize::MAX, Ordering::Relaxed);
-            anyhow::bail!("engine shard {shard} gone");
+        let mut attempts = 0;
+        loop {
+            let handle = &self.shards[shard];
+            // a shard already known dead is re-routed WITHOUT touching
+            // its depth: fetch_add on the poison value would wrap it
+            // toward 0 and transiently advertise the dead shard as the
+            // idlest in the pool to every racing placement
+            if !handle.is_poisoned() {
+                handle.depth.fetch_add(1, Ordering::Relaxed);
+                match handle.tx.send(Cmd::Submit(req, reply_tx)) {
+                    Ok(()) => break,
+                    Err(mpsc::SendError(cmd)) => {
+                        // a dead shard must not look idle to the router:
+                        // poison its depth so affinity spills away and
+                        // least-loaded never picks it; then re-route
+                        // this (still unsubmitted) request
+                        handle.depth.store(usize::MAX, Ordering::Relaxed);
+                        let Cmd::Submit(r, t) = cmd else {
+                            unreachable!("send echoes back the submit")
+                        };
+                        req = r;
+                        reply_tx = t;
+                    }
+                }
+            }
+            attempts += 1;
+            match self.live_least_loaded(shard) {
+                Some(next) if attempts <= self.shards.len() => {
+                    self.counters.rerouted.fetch_add(1, Ordering::Relaxed);
+                    shard = next;
+                }
+                _ => anyhow::bail!(
+                    "engine shard {shard} gone (no live shard to re-route to)"
+                ),
+            }
         }
+        let handle = &self.shards[shard];
         reply_rx.recv().map_err(|_| {
-            // the shard died holding our request: same poisoning, or its
-            // stuck depth would advertise the dead shard as least-loaded
+            // the shard died holding our request: same poisoning. The
+            // request itself is not replayed — re-routing covers new
+            // submissions only (a half-executed request may have side
+            // effects in flight-tracking the caller must see fail).
             handle.depth.store(usize::MAX, Ordering::Relaxed);
             anyhow::anyhow!("engine shard {shard} gone")
         })
+    }
+
+    /// The least-loaded shard still believed alive (depth below the
+    /// poison range), excluding `except`. None when every other shard is
+    /// dead.
+    fn live_least_loaded(&self, except: usize) -> Option<usize> {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|&(i, s)| i != except && !s.is_poisoned())
+            .min_by_key(|&(_, s)| s.depth.load(Ordering::Relaxed))
+            .map(|(i, _)| i)
+    }
+
+    /// The spilled-request migration pipeline: Probe the home shard →
+    /// price migrate-vs-recompute → Probe the target (skip if it is
+    /// already warm) → Export the matched pages → Import them on the
+    /// target, all ahead of the request's Submit on the target's FIFO
+    /// command channel. Best-effort by design: on any failure (home
+    /// shard dead, bounded queue full, nothing cached, copy dearer than
+    /// recompute, target already covered) the spill simply proceeds
+    /// down the recompute path it always had.
+    fn try_migrate(&self, home: usize, target: usize, adapter: u32, tokens: &[u32]) {
+        let skipped = || {
+            self.counters
+                .migration_skipped
+                .fetch_add(1, Ordering::Relaxed);
+        };
+        if !self.migration.enabled || home == target || tokens.len() < 2 {
+            skipped();
+            return;
+        }
+        // bounded migration queue: page copies run on the shard threads,
+        // so cap how many can be outstanding before spills fall back to
+        // recompute — a spill storm must not back up the decode loops
+        let slots = self.cfg.migration_max_inflight.max(1);
+        if self.mig_inflight.fetch_add(1, Ordering::Relaxed) >= slots {
+            self.mig_inflight.fetch_sub(1, Ordering::Relaxed);
+            skipped();
+            return;
+        }
+        let _slot = MigSlot(&self.mig_inflight);
+        // the match window: everything but the final prompt token, which
+        // is never served from cache (mirrors Engine::admit_fork)
+        let window = &tokens[..tokens.len() - 1];
+        let (probe_tx, probe_rx) = mpsc::channel();
+        let probe = Cmd::Probe {
+            adapter,
+            tokens: window.to_vec(),
+            reply: probe_tx,
+        };
+        if self.shards[home].tx.send(probe).is_err() {
+            skipped();
+            return;
+        }
+        let Ok(est) = probe_rx.recv() else {
+            skipped();
+            return;
+        };
+        if !self.migration.should_migrate(&est) {
+            skipped();
+            return;
+        }
+        // target-side warmth check: an earlier migration of the same hot
+        // context (or the target's own traffic) may already cover what
+        // the home would send — re-shipping it would burn a full export
+        // + import copy on both shard threads only to be deduplicated
+        let (tgt_tx, tgt_rx) = mpsc::channel();
+        let target_probe = Cmd::Probe {
+            adapter,
+            tokens: window.to_vec(),
+            reply: tgt_tx,
+        };
+        if self.shards[target].tx.send(target_probe).is_err() {
+            skipped();
+            return;
+        }
+        let Ok(target_est) = tgt_rx.recv() else {
+            skipped();
+            return;
+        };
+        if target_est.tokens_saved >= est.tokens_saved {
+            skipped(); // already warm: nothing worth moving
+            return;
+        }
+        let (exp_tx, exp_rx) = mpsc::channel();
+        let export = Cmd::Export {
+            adapter,
+            tokens: window.to_vec(),
+            reply: exp_tx,
+        };
+        if self.shards[home].tx.send(export).is_err() {
+            skipped();
+            return;
+        }
+        let Ok(payload) = exp_rx.recv() else {
+            skipped();
+            return;
+        };
+        // the home shard may have evicted between probe and export
+        if payload.pages() == 0
+            || self.shards[target]
+                .tx
+                .send(Cmd::Import(Box::new(payload)))
+                .is_err()
+        {
+            skipped();
+            return;
+        }
+        self.counters.migrations.fetch_add(1, Ordering::Relaxed);
     }
 
     pub fn generate_outcome(
@@ -330,24 +589,22 @@ impl Server {
 
     /// One stats snapshot per shard, in shard order. All `Cmd::Stats` go
     /// out before the first receive so busy shards snapshot concurrently
-    /// (latency is the max per-shard tick wait, not the sum).
+    /// (latency is the max per-shard tick wait, not the sum). A dead
+    /// shard yields `{"dead": true}` instead of failing the whole
+    /// snapshot — observability must survive a drained/crashed shard.
     pub fn shard_stats(&self) -> anyhow::Result<Vec<Json>> {
         let mut pending = Vec::with_capacity(self.shards.len());
-        for (i, shard) in self.shards.iter().enumerate() {
+        for shard in &self.shards {
             let (tx, rx) = mpsc::channel();
-            shard
-                .tx
-                .send(Cmd::Stats(tx))
-                .map_err(|_| anyhow::anyhow!("engine shard {i} gone"))?;
-            pending.push((i, rx));
+            pending.push(shard.tx.send(Cmd::Stats(tx)).ok().map(|()| rx));
         }
-        pending
+        Ok(pending
             .into_iter()
-            .map(|(i, rx)| {
-                rx.recv()
-                    .map_err(|_| anyhow::anyhow!("engine shard {i} gone"))
+            .map(|rx| match rx.and_then(|rx| rx.recv().ok()) {
+                Some(stats) => stats,
+                None => Json::obj(vec![("dead", Json::Bool(true))]),
             })
-            .collect()
+            .collect())
     }
 
     /// Pool-level aggregate (counters summed across shards, ratio metrics
@@ -356,13 +613,38 @@ impl Server {
         Ok(metrics::aggregate_stats(&self.shard_stats()?))
     }
 
+    /// Routing + migration outcome counters (the `router` object of
+    /// `GET /metrics`).
+    pub fn router_stats(&self) -> Json {
+        let c = &self.counters;
+        Json::obj(vec![
+            ("policy", Json::str(self.cfg.route_policy.name())),
+            ("migrate", Json::Bool(self.migration.enabled)),
+            ("spills", Json::num(c.spills.load(Ordering::Relaxed) as f64)),
+            (
+                "migrations",
+                Json::num(c.migrations.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "migration_skipped",
+                Json::num(c.migration_skipped.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "rerouted",
+                Json::num(c.rerouted.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+
     /// Full observability payload: aggregate + per-shard snapshots + the
-    /// active route policy — what `GET /metrics` serves.
+    /// active route policy and its spill/migration/reroute counters —
+    /// what `GET /metrics` serves.
     pub fn metrics_json(&self) -> anyhow::Result<Json> {
         let per_shard = self.shard_stats()?;
         Ok(Json::obj(vec![
             ("aggregate", metrics::aggregate_stats(&per_shard)),
             ("route", Json::str(self.cfg.route_policy.name())),
+            ("router", self.router_stats()),
             ("per_shard", Json::Arr(per_shard)),
         ]))
     }
@@ -896,6 +1178,42 @@ mod tests {
         assert_eq!(m.at(&["route"]).as_str().unwrap(), "round_robin");
         t2.join().unwrap();
 
+        srv.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn dead_shard_submissions_reroute_to_live_shard() {
+        // two shards under round-robin: kill shard 0 outright, then every
+        // request the rr counter lands there must be re-routed to the
+        // live shard instead of failing the client
+        let engines: Vec<Engine> = (0..2).map(|_| sim_engine(32 << 20, 0)).collect();
+        let scfg = ServerConfig {
+            route_policy: RoutePolicy::RoundRobin,
+            ..ServerConfig::default()
+        };
+        let (srv, mut handles) = Server::start_sharded(engines, scfg);
+        srv.shutdown_shard(0);
+        handles.remove(0).join().unwrap(); // thread gone: channel closed
+
+        for _ in 0..4 {
+            let fin = srv.generate((10..60).collect(), 0, 4).unwrap();
+            assert_eq!(fin.generated.len(), 4);
+        }
+        let m = srv.metrics_json().unwrap();
+        assert!(
+            m.at(&["router", "rerouted"]).as_usize().unwrap() >= 1,
+            "re-routes not counted: {m:?}"
+        );
+        // observability survives the dead shard: it is reported, the
+        // live shard's numbers still aggregate
+        let per = m.at(&["per_shard"]).as_arr().unwrap();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].at(&["dead"]).as_bool(), Some(true));
+        assert_eq!(per[1].at(&["completed"]).as_usize().unwrap(), 4);
+        assert_eq!(m.at(&["aggregate", "completed"]).as_usize().unwrap(), 4);
         srv.shutdown();
         for h in handles {
             h.join().unwrap();

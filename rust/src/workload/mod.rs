@@ -672,6 +672,182 @@ pub fn run_multi_workflow_load(
     ]))
 }
 
+// ---------------------------------------------------------------------------
+// skewed hot-workflow HTTP load (the migration measurement harness)
+// ---------------------------------------------------------------------------
+
+/// One *hot* workflow whose agents arrive in a parallel burst, plus a few
+/// cold background workflows: the spill-forcing scenario behind
+/// cross-shard page migration. All hot agents share tag 0, the same
+/// shared context AND the same adapter (one specialized agent role
+/// fanned out, the MapReduce-mapper shape) — so affinity routes them to
+/// one home shard where both their bCache and rCache coverage live. The
+/// burst drives that shard's in-flight depth past `imbalance_factor` and
+/// the later agents spill. Without migration every spilled agent
+/// re-prefills the hot context on its target shard; with `--migrate` the
+/// matched pages travel instead, and the savings show up as
+/// `migrated_pages` / `recompute_tokens_saved` in the engine aggregate.
+#[derive(Debug, Clone)]
+pub struct SkewedWorkflowHttpSpec {
+    /// parallel agents of the hot workflow (the burst)
+    pub hot_agents: usize,
+    /// per-agent submit stagger: agent `k` waits `k * stagger_ms` so the
+    /// router sees the home shard's depth ramp (a simultaneous burst
+    /// could outrun the depth signal and never spill)
+    pub stagger_ms: u64,
+    /// cold background workflows (one sequential agent each, own tags)
+    pub cold_workflows: usize,
+    /// words in the hot workflow's shared context
+    pub shared_words: usize,
+    /// per-agent unique words appended after the shared context
+    pub unique_words: usize,
+    pub max_new: usize,
+}
+
+impl Default for SkewedWorkflowHttpSpec {
+    fn default() -> Self {
+        SkewedWorkflowHttpSpec {
+            hot_agents: 8,
+            stagger_ms: 4,
+            cold_workflows: 3,
+            shared_words: 160,
+            unique_words: 4,
+            max_new: 24,
+        }
+    }
+}
+
+impl SkewedWorkflowHttpSpec {
+    /// The adapter every hot agent serves under (shared: the joint
+    /// bCache+rCache coverage is what makes a spill migratable).
+    pub const HOT_ADAPTER: usize = 7;
+
+    /// The hot workflow's shared-context prompt for burst agent `agent`
+    /// (reuses the multi-workflow prompt shape: workflow id 0 is hot).
+    pub fn hot_prompt(&self, agent: usize) -> String {
+        multi_workflow_prompt(&self.as_multi(), 0, agent)
+    }
+
+    /// Cold workflow `w` (1-based ids so they never collide with hot).
+    pub fn cold_prompt(&self, w: usize) -> String {
+        multi_workflow_prompt(&self.as_multi(), w, 0)
+    }
+
+    fn as_multi(&self) -> MultiWorkflowHttpSpec {
+        MultiWorkflowHttpSpec {
+            workflows: self.cold_workflows + 1,
+            // large enough that every hot agent (plus the primer) gets a
+            // distinct suffix index
+            agents_per_workflow: self.hot_agents + 1,
+            shared_words: self.shared_words,
+            unique_words: self.unique_words,
+            max_new: self.max_new,
+        }
+    }
+}
+
+/// Run the skewed scenario against a serving address. A *primer* request
+/// (hot agent index `hot_agents`) runs to completion first so the home
+/// shard has the hot context cached and published before the burst —
+/// otherwise the spilled agents' probes would race the initial prefill.
+/// Returns a JSON report (counts, latency summary, throughput).
+pub fn run_skewed_workflow_load(
+    addr: &str,
+    spec: &SkewedWorkflowHttpSpec,
+) -> anyhow::Result<Json> {
+    anyhow::ensure!(spec.hot_agents > 0, "need at least one hot agent");
+    let post = |prompt: String, adapter: usize, tag: usize, max_new: usize| {
+        let body = Json::obj(vec![
+            ("prompt", Json::str(prompt)),
+            ("adapter", Json::num((adapter % 64) as f64)),
+            ("max_new", Json::num(max_new as f64)),
+            ("tag", Json::num(tag as f64)),
+        ])
+        .to_string();
+        crate::server::http_post(addr, "/generate", &body)
+    };
+    let t0 = std::time::Instant::now();
+    // prime the home shard with the hot context (same adapter as the
+    // burst, so both cache components are published before any spill)
+    let (status, body) = post(
+        spec.hot_prompt(spec.hot_agents),
+        SkewedWorkflowHttpSpec::HOT_ADAPTER,
+        0,
+        spec.max_new,
+    )?;
+    anyhow::ensure!(status == 200, "primer request failed ({status}): {body}");
+
+    let mut handles = Vec::new();
+    for a in 0..spec.hot_agents {
+        let addr = addr.to_string();
+        let spec = spec.clone();
+        handles.push(std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(
+                a as u64 * spec.stagger_ms,
+            ));
+            let body = Json::obj(vec![
+                ("prompt", Json::str(spec.hot_prompt(a))),
+                (
+                    "adapter",
+                    Json::num(SkewedWorkflowHttpSpec::HOT_ADAPTER as f64),
+                ),
+                ("max_new", Json::num(spec.max_new as f64)),
+                ("tag", Json::num(0.0)),
+            ])
+            .to_string();
+            let start = std::time::Instant::now();
+            match crate::server::http_post(&addr, "/generate", &body) {
+                Ok((200, _)) => (Some(start.elapsed().as_micros() as f64), 1usize, 0usize),
+                Ok(_) | Err(_) => (None, 0, 1),
+            }
+        }));
+    }
+    for w in 1..=spec.cold_workflows {
+        let addr = addr.to_string();
+        let spec = spec.clone();
+        handles.push(std::thread::spawn(move || {
+            let body = Json::obj(vec![
+                ("prompt", Json::str(spec.cold_prompt(w))),
+                ("adapter", Json::num((w % 64) as f64)),
+                ("max_new", Json::num(spec.max_new as f64)),
+                ("tag", Json::num(w as f64)),
+            ])
+            .to_string();
+            let start = std::time::Instant::now();
+            match crate::server::http_post(&addr, "/generate", &body) {
+                Ok((200, _)) => (Some(start.elapsed().as_micros() as f64), 1usize, 0usize),
+                Ok(_) | Err(_) => (None, 0, 1),
+            }
+        }));
+    }
+    let mut latency = Series::new();
+    let (mut ok, mut errors) = (1usize, 0usize); // primer counted
+    for h in handles {
+        let (l, o, e) = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("skewed load client panicked"))?;
+        if let Some(us) = l {
+            latency.push(us);
+        }
+        ok += o;
+        errors += e;
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok(Json::obj(vec![
+        ("hot_agents", Json::num(spec.hot_agents as f64)),
+        ("cold_workflows", Json::num(spec.cold_workflows as f64)),
+        (
+            "requests",
+            Json::num((1 + spec.hot_agents + spec.cold_workflows) as f64),
+        ),
+        ("ok", Json::num(ok as f64)),
+        ("errors", Json::num(errors as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("throughput_req_per_s", Json::num(ok as f64 / wall_s)),
+        ("latency_us", latency.summary().to_json()),
+    ]))
+}
+
 /// Standard engine builders shared by tests, benches and the CLI.
 pub mod presets {
     use crate::config::{CacheConfig, CachePolicy, EngineConfig};
@@ -844,6 +1020,25 @@ mod tests {
         // different workflow: contexts diverge from the first word,
         // so the router's first-page fingerprint separates them
         assert_ne!(a0[0], b0[0]);
+    }
+
+    #[test]
+    fn skewed_prompts_share_hot_context_and_isolate_cold() {
+        let spec = SkewedWorkflowHttpSpec::default();
+        let t = crate::util::tokenizer::HashTokenizer::new(2048);
+        let h0 = t.encode(&spec.hot_prompt(0));
+        let h1 = t.encode(&spec.hot_prompt(1));
+        let primer = t.encode(&spec.hot_prompt(spec.hot_agents));
+        let c1 = t.encode(&spec.cold_prompt(1));
+        // every hot agent (primer included) forks the same shared context
+        assert_eq!(h0[..spec.shared_words], h1[..spec.shared_words]);
+        assert_eq!(h0[..spec.shared_words], primer[..spec.shared_words]);
+        // but has a distinct suffix (a real fork, not a repeat)
+        assert_ne!(h0[spec.shared_words..], h1[spec.shared_words..]);
+        assert_ne!(h0[spec.shared_words..], primer[spec.shared_words..]);
+        // cold workflows diverge from the first token, so the affinity
+        // fingerprint separates them from the hot home shard
+        assert_ne!(h0[0], c1[0]);
     }
 
     #[test]

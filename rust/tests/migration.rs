@@ -1,0 +1,184 @@
+//! Cross-shard page migration integration: a spill must cost bandwidth,
+//! not FLOPs. One hot workflow bursts parallel agents (shared context,
+//! shared adapter, one tag) at a 4-shard pool: affinity pins them to one
+//! home shard until its depth crosses `imbalance_factor` and the later
+//! agents spill. With `migrate: true` the spilled agents' cached pages
+//! travel ahead of them, so they keep a matched-page rate on par with the
+//! home shard and the pool prefills far fewer tokens than with
+//! `migrate: false` — both asserted from the `/metrics` payload.
+
+use std::sync::Arc;
+
+use forkkv::config::{CacheConfig, CachePolicy, EngineConfig, ServerConfig};
+use forkkv::engine::Engine;
+use forkkv::exec::SimExecutor;
+use forkkv::router::{RoutePolicy, Router};
+use forkkv::server::Server;
+use forkkv::util::json::Json;
+use forkkv::util::tokenizer::HashTokenizer;
+use forkkv::workload::SkewedWorkflowHttpSpec;
+
+const SHARDS: usize = 4;
+const PAGE_TOKENS: usize = 16;
+const MAX_NEW: usize = 32;
+const HOT_AGENTS: usize = 8;
+const STAGGER_MS: u64 = 5;
+
+fn pool(migrate: bool) -> (Arc<Server>, Vec<std::thread::JoinHandle<()>>) {
+    let base = EngineConfig {
+        policy: CachePolicy::Disaggregated,
+        cache: CacheConfig { page_tokens: PAGE_TOKENS, budget_bytes: 128 << 20 },
+        ..EngineConfig::default()
+    };
+    let engines: Vec<Engine> = (0..SHARDS)
+        .map(|i| {
+            // wall-paced sim: requests overlap in wall time, so the
+            // router's depth signal sees the burst and actually spills
+            let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8])
+                .unwrap()
+                .with_wall_pace_us(2_500);
+            Engine::new(base.shard_slice(i, SHARDS), Box::new(sim)).unwrap()
+        })
+        .collect();
+    let scfg = ServerConfig {
+        migrate,
+        migration_max_inflight: 8,
+        ..ServerConfig::default()
+    };
+    Server::start_sharded(engines, scfg)
+}
+
+/// Drive the forced-spill skewed load in-process (same prompts/adapters
+/// the HTTP harness sends) and return the `/metrics` payload.
+fn run_skewed(migrate: bool) -> Json {
+    let (srv, handles) = pool(migrate);
+    let spec = SkewedWorkflowHttpSpec {
+        hot_agents: HOT_AGENTS,
+        stagger_ms: STAGGER_MS,
+        cold_workflows: 0,
+        max_new: MAX_NEW,
+        ..SkewedWorkflowHttpSpec::default()
+    };
+    let tok = HashTokenizer::new(2048); // sim model vocab
+    let adapter = SkewedWorkflowHttpSpec::HOT_ADAPTER as u32;
+
+    // primer: runs alone so the home shard has the hot context published
+    // (both cache components) before the burst can spill anyone
+    let primer = tok.encode(&spec.hot_prompt(spec.hot_agents));
+    srv.generate_tagged(primer, adapter, MAX_NEW, 0).unwrap();
+
+    // the burst: staggered so the home shard's in-flight depth is
+    // visible to each successive placement decision
+    let mut clients = Vec::new();
+    for a in 0..spec.hot_agents {
+        let srv = srv.clone();
+        let tokens = tok.encode(&spec.hot_prompt(a));
+        clients.push(std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(a as u64 * STAGGER_MS));
+            srv.generate_tagged(tokens, adapter, MAX_NEW, 0).unwrap();
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+
+    let metrics = srv.metrics_json().unwrap();
+    assert_eq!(
+        metrics.at(&["aggregate", "completed"]).as_usize().unwrap(),
+        1 + spec.hot_agents,
+        "migrate={migrate}: every request must complete"
+    );
+    srv.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+    metrics
+}
+
+/// The hot context's affinity home: same pure function the server's
+/// router computes (policy, shard count, page window and factor all
+/// match the pool under test).
+fn home_shard(spec: &SkewedWorkflowHttpSpec) -> usize {
+    let tok = HashTokenizer::new(2048);
+    let tokens = tok.encode(&spec.hot_prompt(0));
+    Router::new(RoutePolicy::Affinity, SHARDS, PAGE_TOKENS, 2.0).affinity_shard(&tokens, 0)
+}
+
+/// (matched-page rate of the home shard, matched-page rate across every
+/// spilled-to shard, total prefilled tokens) from one `/metrics` payload.
+fn digest(metrics: &Json) -> (f64, f64, f64) {
+    let home = home_shard(&SkewedWorkflowHttpSpec::default());
+    let per_shard = metrics.at(&["per_shard"]).as_arr().unwrap();
+    assert_eq!(per_shard.len(), SHARDS);
+    let matched = |s: &Json| {
+        let prompt = s.at(&["prompt_tokens"]).as_f64().unwrap_or(0.0);
+        let hit = s.at(&["hit_full_tokens"]).as_f64().unwrap_or(0.0)
+            + s.at(&["hit_partial_tokens"]).as_f64().unwrap_or(0.0);
+        (hit, prompt)
+    };
+    let (home_hit, home_prompt) = matched(&per_shard[home]);
+    assert!(home_prompt > 0.0, "home shard {home} served nothing");
+    let (mut spill_hit, mut spill_prompt) = (0.0, 0.0);
+    for (i, s) in per_shard.iter().enumerate() {
+        if i != home {
+            let (h, p) = matched(s);
+            spill_hit += h;
+            spill_prompt += p;
+        }
+    }
+    assert!(
+        spill_prompt > 0.0,
+        "no request spilled off the home shard — the load failed to force a spill \
+         (per_shard: {per_shard:?})"
+    );
+    let computed = metrics
+        .at(&["aggregate", "computed_prompt_tokens"])
+        .as_f64()
+        .unwrap();
+    (home_hit / home_prompt, spill_hit / spill_prompt, computed)
+}
+
+#[test]
+fn migration_keeps_spilled_matched_rate_and_cuts_prefill() {
+    let on = run_skewed(true);
+    let off = run_skewed(false);
+
+    // migration actually ran and moved real pages
+    let migrated = on.at(&["aggregate", "migrated_pages"]).as_f64().unwrap();
+    let saved = on
+        .at(&["aggregate", "recompute_tokens_saved"])
+        .as_f64()
+        .unwrap();
+    assert!(migrated > 0.0, "no pages migrated: {on:?}");
+    assert!(saved > 0.0, "no recompute saved: {on:?}");
+    assert!(on.at(&["aggregate", "migrated_bytes"]).as_f64().unwrap() > 0.0);
+    assert!(on.at(&["router", "spills"]).as_f64().unwrap() > 0.0);
+    assert!(on.at(&["router", "migrations"]).as_f64().unwrap() > 0.0);
+
+    // with migration off, spills exist but nothing moves
+    assert_eq!(off.at(&["aggregate", "migrated_pages"]).as_f64().unwrap(), 0.0);
+    assert!(off.at(&["router", "spills"]).as_f64().unwrap() > 0.0);
+    assert_eq!(off.at(&["router", "migrations"]).as_f64().unwrap(), 0.0);
+
+    // spilled requests match like home requests once their pages follow
+    let (home_rate, spill_rate, computed_on) = digest(&on);
+    assert!(
+        spill_rate >= home_rate * 0.9,
+        "spilled matched-page rate {spill_rate:.3} not within 10% of home rate \
+         {home_rate:.3}: {on:?}"
+    );
+
+    // and the pool prefills measurably fewer tokens than recompute
+    let (_, off_spill_rate, computed_off) = digest(&off);
+    assert!(
+        computed_on < computed_off,
+        "migration did not reduce prefilled tokens: {computed_on} vs {computed_off}"
+    );
+    // sanity on the baseline: without migration the spilled requests
+    // recompute cold (their matched rate collapses)
+    assert!(
+        off_spill_rate < spill_rate,
+        "migrate off should not match like migrate on \
+         ({off_spill_rate:.3} vs {spill_rate:.3})"
+    );
+}
