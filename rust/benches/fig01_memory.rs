@@ -24,6 +24,7 @@ fn peak_bytes(policy: CachePolicy, n_agents: usize, ctx: &[u32]) -> (usize, usiz
             max_new: 8,
             arrival_us: 0,
             ignore_eos: true,
+            fan: 0,
         });
     }
     let mut peak_base = 0usize;

@@ -51,6 +51,7 @@ fn run_policy(
             max_new: 16,
             arrival_us: i as u64, // strictly sequential admission order
             ignore_eos: true,
+            fan: 0,
         });
     }
     let mut fin = Vec::new();

@@ -66,6 +66,19 @@ pub struct SchedulerConfig {
     pub max_running: usize,
     /// evict this many pages extra when under pressure (hysteresis)
     pub evict_slack_pages: usize,
+    /// workflow-aware (gang) scheduling: admit a workflow's queued fan
+    /// together (tag-grouped, warm-prefix-first admission, bounded by
+    /// `max_running`) and defer evicting pages a queued fork of the tag
+    /// still needs. Tag 0 (the HTTP default) is *untagged* traffic: it
+    /// forms no gang and takes no fan holds, so plain deployments keep
+    /// plain FCFS. Off = FCFS admission and untagged LRU for everyone —
+    /// the A/B baseline (`--gang off`).
+    pub gang: bool,
+    /// how long (ms, virtual engine time) admission holds a fork whose
+    /// declared `fan` width has not fully arrived before releasing the
+    /// partial fan; a hold never stalls an otherwise idle shard (the
+    /// engine fast-forwards to the deadline)
+    pub gang_hold_ms: u64,
 }
 
 impl Default for SchedulerConfig {
@@ -74,6 +87,8 @@ impl Default for SchedulerConfig {
             decode_buckets: vec![1, 2, 4, 8],
             max_running: 64,
             evict_slack_pages: 4,
+            gang: true,
+            gang_hold_ms: 25,
         }
     }
 }
@@ -107,7 +122,10 @@ pub struct ServerConfig {
     /// affinity spill threshold: a request spills off its home shard when
     /// the home's in-flight depth exceeds `imbalance_factor * (min_depth
     /// + 1)` across the pool (the +1 keeps a near-idle pool from spilling
-    /// off a depth-1 home shard)
+    /// off a depth-1 home shard). Default 1.5 — lowered from 2.0 once
+    /// cross-shard migration made a spill cost bandwidth instead of a
+    /// full re-prefill (see the README's "Choosing `imbalance_factor`"
+    /// A/B note)
     pub imbalance_factor: f64,
     /// cross-shard page migration on spill: probe the home shard for the
     /// spilled request's cached pages and copy them to the target shard
@@ -136,7 +154,7 @@ impl Default for ServerConfig {
             io_timeout_ms: 30_000,
             shards: 1,
             route_policy: RoutePolicy::Affinity,
-            imbalance_factor: 2.0,
+            imbalance_factor: 1.5,
             migrate: true,
             migration_max_inflight: 4,
             migration_bandwidth_bytes_per_s: crate::exec::DEFAULT_MIGRATION_BANDWIDTH,
@@ -253,6 +271,12 @@ impl EngineConfig {
             if let Some(v) = s.get("max_running").and_then(Json::as_usize) {
                 cfg.sched.max_running = v;
             }
+            if let Some(v) = s.get("gang").and_then(Json::as_bool) {
+                cfg.sched.gang = v;
+            }
+            if let Some(v) = s.get("gang_hold_ms").and_then(Json::as_usize) {
+                cfg.sched.gang_hold_ms = v as u64;
+            }
         }
         if let Some(v) = j.get("seed").and_then(Json::as_f64) {
             cfg.seed = v as u64;
@@ -278,7 +302,7 @@ mod tests {
     fn engine_config_from_json() {
         let j = json::parse(
             r#"{"policy":"prefix","cache":{"page_tokens":8,"budget_mb":16},
-                "sched":{"max_running":4},"seed":7}"#,
+                "sched":{"max_running":4,"gang":false,"gang_hold_ms":7},"seed":7}"#,
         )
         .unwrap();
         let cfg = EngineConfig::from_json(&j).unwrap();
@@ -286,7 +310,13 @@ mod tests {
         assert_eq!(cfg.cache.page_tokens, 8);
         assert_eq!(cfg.cache.budget_bytes, 16 << 20);
         assert_eq!(cfg.sched.max_running, 4);
+        assert!(!cfg.sched.gang);
+        assert_eq!(cfg.sched.gang_hold_ms, 7);
         assert_eq!(cfg.seed, 7);
+        // absent sched knobs keep the gang defaults (on, 25 ms hold)
+        let d = EngineConfig::from_json(&json::parse("{}").unwrap()).unwrap();
+        assert!(d.sched.gang, "gang scheduling defaults on");
+        assert_eq!(d.sched.gang_hold_ms, 25);
     }
 
     #[test]
@@ -328,6 +358,8 @@ mod tests {
         assert_eq!(d.max_body_bytes, 1 << 20);
         assert_eq!(d.shards, 1);
         assert_eq!(d.route_policy, RoutePolicy::Affinity);
+        // lowered from 2.0 when migration made spills cheap (README A/B)
+        assert!((d.imbalance_factor - 1.5).abs() < 1e-9);
         assert!(d.migrate, "migration defaults on");
         assert_eq!(d.migration_max_inflight, 4);
     }

@@ -42,7 +42,8 @@ use crate::exec::Executor;
 use crate::kvcache::{pages_for, BlockPool, PageId, PoolSpec};
 use crate::metrics::{DropReason, DroppedRequest, EngineMetrics, FinishedRequest};
 use crate::migrate::{export_component, MigrationEstimate, MigrationPayload};
-use crate::radix::{DualRadixTree, MatchResult};
+use crate::radix::{DualRadixTree, MatchResult, PinPath};
+use crate::util::json::Json;
 use crate::runtime::{argmax, DecodeArgs, PrefillArgs};
 use crate::util::rng::Rng;
 use crate::util::tokenizer::EOS;
@@ -59,13 +60,22 @@ fn base_ns(policy: CachePolicy, adapter: u32) -> u32 {
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
-    /// opaque grouping tag (workflow id) carried into FinishedRequest
+    /// opaque grouping tag (workflow id) carried into FinishedRequest.
+    /// Tag 0 means *untagged* (the HTTP default): it names no workflow,
+    /// so the gang scheduler gives it no tag preference and counts it in
+    /// no gang metrics — plain serving traffic keeps plain FCFS.
     pub tag: u64,
     pub adapter: u32,
     pub tokens: Vec<u32>,
     pub max_new: usize,
     pub arrival_us: u64,
     pub ignore_eos: bool,
+    /// declared fan width of this request's workflow step (gang-admission
+    /// hint): with `sched.gang` on, admission briefly holds this tag until
+    /// `fan` requests of the tag are present — or `gang_hold_ms` elapses —
+    /// so a MapReduce fan admits together. 0/1 = no hint, never held;
+    /// requires a nonzero `tag` (untagged members cannot be counted).
+    pub fan: usize,
 }
 
 #[derive(Debug, PartialEq, Eq, Clone, Copy)]
@@ -156,6 +166,26 @@ pub enum Tick {
     Idle,
 }
 
+/// Outcome of the admission scan (`Engine::next_prefill`): which waiting
+/// sequence to prefill, and — when every queued candidate is fan-held —
+/// the earliest hold deadline so the idle path can fast-forward to it
+/// instead of stalling.
+struct AdmissionPick {
+    sid: Option<u64>,
+    hold_until: Option<u64>,
+}
+
+/// Per-tag admission state assembled by each `next_prefill` scan (kept
+/// in an engine-owned scratch map — cleared, not reallocated): live
+/// member count, whether any member is admitted, and the earliest
+/// waiting arrival (the fan hold's clock base).
+#[derive(Clone, Copy)]
+struct TagState {
+    live: usize,
+    admitted: bool,
+    first_wait: u64,
+}
+
 /// Workload driver: releases requests over (virtual) time and observes
 /// completions (the agent-workflow layer implements this).
 pub trait Driver {
@@ -172,6 +202,14 @@ pub struct Engine {
     seqs: HashMap<u64, Seq>,
     pending: BinaryHeap<std::cmp::Reverse<(u64, u64)>>, // (arrival, id)
     pending_reqs: HashMap<u64, Request>,
+    /// workflow-eviction pins held on behalf of *queued* (unadmitted)
+    /// forks: sid -> (base PinPath, residual PinPath). Taken when a fork
+    /// enters the waiting queue, dropped at admission (real leases take
+    /// over) or teardown — `check_quiescent` asserts no leaks.
+    seq_pins: HashMap<u64, (PinPath, PinPath)>,
+    /// `next_prefill` per-tag scratch (cleared each scan, capacity
+    /// retained — the admission scan must not allocate per tick)
+    scratch_tags: HashMap<u64, TagState>,
     waiting: VecDeque<u64>,
     running: Vec<u64>,
     now_us: u64,
@@ -274,6 +312,8 @@ impl Engine {
             seqs: HashMap::new(),
             pending: BinaryHeap::new(),
             pending_reqs: HashMap::new(),
+            seq_pins: HashMap::new(),
+            scratch_tags: HashMap::new(),
             waiting: VecDeque::new(),
             running: Vec::new(),
             now_us: 0,
@@ -363,16 +403,66 @@ impl Engine {
             let req = self.pending_reqs.remove(&id).expect("pending req");
             self.seqs.insert(id, Seq::new(req));
             self.waiting.push_back(id);
+            // workflow-aware eviction: mark the queued fork's cached
+            // prefix so LRU pressure takes it last
+            self.pin_seq(id);
+        }
+    }
+
+    /// Workflow-eviction pin for a queued fork (gang mode): mark the
+    /// longest cached prefix of its prompt in both trees so eviction
+    /// defers those pages until this fork admits — the KVFlow-style
+    /// "a queued step of this tag still needs this prefix" signal. Pins
+    /// are advisory (second-pass evictable), so they can never deadlock
+    /// allocation; see `RadixTree::pin_prefix`.
+    fn pin_seq(&mut self, sid: u64) {
+        if !self.cfg.sched.gang {
+            return;
+        }
+        let Some(seq) = self.seqs.get(&sid) else {
+            return;
+        };
+        if seq.all.len() < 2 {
+            return;
+        }
+        // the fork's match window: everything but the final token. Read
+        // in place — `seqs` and `trees` are disjoint fields, so no copy
+        // of a potentially huge prompt is needed on this (preemption-
+        // frequented) path.
+        let window = &seq.all[..seq.all.len() - 1];
+        let adapter = seq.req.adapter;
+        let ns = base_ns(self.cfg.policy, adapter);
+        let base = self.trees.base.pin_prefix(ns, window);
+        let res = if self.cfg.policy.uses_residual() {
+            self.trees.residual.pin_prefix(adapter, window)
+        } else {
+            Vec::new()
+        };
+        if !base.is_empty() || !res.is_empty() {
+            self.seq_pins.insert(sid, (base, res));
+        }
+    }
+
+    /// Drop a queued fork's eviction pins (admission, drop, or preempt
+    /// teardown). No-op if the sequence holds none.
+    fn unpin_seq(&mut self, sid: u64) {
+        if let Some((base, res)) = self.seq_pins.remove(&sid) {
+            self.trees.base.unpin_path(&base);
+            self.trees.residual.unpin_path(&res);
         }
     }
 
     /// One scheduling decision: prefill-first (vLLM default); a prefill
     /// blocked on memory falls through to decode so running sequences keep
     /// draining and eventually release the memory the head is waiting for.
+    /// With `sched.gang` on, *which* queued fork prefills next is chosen
+    /// workflow-aware (`next_prefill`): a workflow's fan admits together
+    /// instead of interleaving with unrelated workflows.
     pub fn tick(&mut self) -> anyhow::Result<Tick> {
         self.admit_pending();
         let mut prefill_blocked = false;
-        if let Some(&sid) = self.waiting.front() {
+        let pick = self.next_prefill();
+        if let Some(sid) = pick.sid {
             if self.prefill_tick(sid)? {
                 self.sample_memory();
                 return Ok(Tick::Progress);
@@ -382,6 +472,20 @@ impl Engine {
         if !self.running.is_empty() && self.decode_tick()? {
             self.sample_memory();
             return Ok(Tick::Progress);
+        }
+        if !prefill_blocked && self.running.is_empty() {
+            if let Some(hold) = pick.hold_until {
+                // everything admissible is a fan waiting for stragglers:
+                // fast-forward the virtual clock to the next event that
+                // can change the decision (hold deadline or a pending
+                // arrival, whichever is first) — discrete-event idling,
+                // so a partial fan never stalls an otherwise idle shard
+                let t = self.next_pending_arrival().map_or(hold, |p| p.min(hold));
+                debug_assert!(t > self.now_us);
+                self.now_us = self.now_us.max(t);
+                self.sample_memory();
+                return Ok(Tick::Progress);
+            }
         }
         if prefill_blocked || !self.running.is_empty() {
             // Memory deadlock: every schedulable unit is blocked on pages
@@ -406,6 +510,157 @@ impl Engine {
             }
         }
         Ok(Tick::Idle)
+    }
+
+    /// Pick the waiting sequence to prefill this tick (see
+    /// `AdmissionPick`). Gang off reproduces the pre-gang scheduler
+    /// exactly: plain FCFS on the waiting queue. Gang on adds, in
+    /// priority order:
+    ///   1. **continuation** — a mid-prefill (admitted) fork always
+    ///      finishes before anything new starts;
+    ///   2. **fan holds** — a fork declaring `fan = K` waits (bounded by
+    ///      `gang_hold_ms`) until K requests of its tag are present, so
+    ///      the whole fan admits back to back; a fan with an *admitted*
+    ///      member never holds (stragglers co-admit with their in-flight
+    ///      mates instead of waiting on a stale head-count);
+    ///   3. **gang preference** — forks whose tag already has an admitted
+    ///      member, then forks whose shared prefix is resident, then cold
+    ///      forks; FCFS within a class. New admissions are bounded by
+    ///      `max_running`. A starvation guard returns to strict FCFS for
+    ///      any older lower-class fork (warm bypassed by gang, cold
+    ///      bypassed by either) that has waited far past the hold window.
+    ///
+    /// Tag 0 is untagged traffic (the HTTP default): it takes no tag
+    /// preference, no fan holds, and no gang accounting — a plain
+    /// deployment that never sets `tag` keeps plain FCFS (modulo the
+    /// content-based warm-prefix preference, which is tag-free).
+    fn next_prefill(&mut self) -> AdmissionPick {
+        // gang off: the pre-gang O(1) scheduler, verbatim. FCFS only
+        // ever admits (and chunk-continues) the queue head, so an
+        // admitted sequence — if one exists — is always at the front;
+        // no scan is needed.
+        if !self.cfg.sched.gang {
+            return AdmissionPick { sid: self.waiting.front().copied(), hold_until: None };
+        }
+        if self.waiting.is_empty() {
+            return AdmissionPick { sid: None, hold_until: None };
+        }
+        // continuation first: an admitted fork holds leases + chunk state
+        if let Some(&sid) = self
+            .waiting
+            .iter()
+            .find(|&&sid| self.seqs[&sid].admitted)
+        {
+            return AdmissionPick { sid: Some(sid), hold_until: None };
+        }
+        let resident = self.seqs.values().filter(|s| s.admitted).count();
+        if resident >= self.cfg.sched.max_running {
+            return AdmissionPick { sid: None, hold_until: None };
+        }
+        let now = self.now_us;
+        let hold_us = self.cfg.sched.gang_hold_ms.saturating_mul(1000);
+        // per-tag admission state, in engine-owned scratch (a decode
+        // tick with a memory-blocked queue head runs through here too —
+        // the scan must clear, not reallocate): live member counts (fan
+        // satisfaction), admitted members (gang preference), earliest
+        // waiting arrival (the fan hold's clock base)
+        let mut tags = std::mem::take(&mut self.scratch_tags);
+        tags.clear();
+        for s in self.seqs.values() {
+            let st = tags.entry(s.req.tag).or_insert(TagState {
+                live: 0,
+                admitted: false,
+                first_wait: u64::MAX,
+            });
+            st.live += 1;
+            st.admitted |= s.admitted;
+        }
+        for &sid in &self.waiting {
+            let s = &self.seqs[&sid];
+            let st = tags.get_mut(&s.req.tag).expect("waiting seq is live");
+            st.first_wait = st.first_wait.min(s.req.arrival_us);
+        }
+        let mut best: Option<(u8, u64, u64)> = None; // (class, arrival, id)
+        let mut best_sid = None;
+        let mut hold_until: Option<u64> = None;
+        // oldest non-held candidate by plain FCFS, with its class — the
+        // starvation guard's fallback pick
+        let mut oldest: Option<(u64, u64, u64, u8)> = None; // (arrival, id, sid, class)
+        for &sid in &self.waiting {
+            let s = &self.seqs[&sid];
+            let tag = s.req.tag;
+            // tag 0 is untagged (the HTTP default): it names no workflow,
+            // so it earns no gang preference and fan hints cannot count
+            // its members — untagged traffic schedules plain FCFS/warmth
+            let untagged = tag == 0;
+            let st = tags[&tag];
+            // fan hold — but never once the fan is partially admitted: a
+            // straggler joining in-flight mates should co-admit now, not
+            // wait for a head-count its admitted (or already finished)
+            // mates no longer satisfy
+            if !untagged && !st.admitted && s.req.fan > 1 && st.live < s.req.fan {
+                let deadline = st.first_wait.saturating_add(hold_us);
+                if now < deadline {
+                    hold_until = Some(hold_until.map_or(deadline, |t: u64| t.min(deadline)));
+                    continue;
+                }
+            }
+            let class: u8 = if !untagged && st.admitted {
+                0 // gang: co-admit with the tag's in-flight members
+            } else if self.prefix_resident(s) {
+                1 // warm: this workflow's shared pages are resident
+            } else {
+                2 // cold
+            };
+            let key = (class, s.req.arrival_us, s.req.id);
+            let better = match best {
+                None => true,
+                Some(b) => key < b,
+            };
+            if better {
+                best = Some(key);
+                best_sid = Some(sid);
+            }
+            let older = match oldest {
+                None => true,
+                Some((a, i, _, _)) => (s.req.arrival_us, s.req.id) < (a, i),
+            };
+            if older {
+                oldest = Some((s.req.arrival_us, s.req.id, sid, class));
+            }
+        }
+        // starvation guard: class preference must not bypass an *older*
+        // lower-class fork forever — warm behind a continuous gang
+        // stream, or cold behind either. A bypassed head aged far past
+        // the hold window wins on plain FCFS.
+        if let (Some((best_class, arr, _)), Some((old_arr, _, old_sid, old_class))) =
+            (best, oldest)
+        {
+            let age_cap = hold_us.saturating_mul(8).max(250_000);
+            if old_class > best_class
+                && old_arr < arr
+                && now.saturating_sub(old_arr) > age_cap
+            {
+                best_sid = Some(old_sid);
+            }
+        }
+        self.scratch_tags = tags;
+        AdmissionPick {
+            sid: best_sid,
+            hold_until: if best_sid.is_none() { hold_until } else { None },
+        }
+    }
+
+    /// Cheap warmth probe for admission classing: is the first page of
+    /// this fork's prompt resident in the base tree? One child-map lookup
+    /// — deliberately not a full prefix walk.
+    fn prefix_resident(&self, seq: &Seq) -> bool {
+        let pt = self.cfg.cache.page_tokens;
+        if seq.all.len() < pt + 1 {
+            return false; // match window (prompt minus tail) has no full page
+        }
+        let ns = base_ns(self.cfg.policy, seq.req.adapter);
+        self.trees.base.probe_pages(ns, &seq.all[..pt]) > 0
     }
 
     /// Drive to completion against a workload driver (discrete-event loop).
@@ -554,11 +809,16 @@ impl Engine {
         if !self.waiting.contains(&vid) {
             self.waiting.push_back(vid);
         }
+        // back in the queue: re-pin whatever of its prefix is still
+        // cached so eviction keeps its re-admission warm
+        self.pin_seq(vid);
         true
     }
 
-    /// Release every cache resource a sequence holds (teardown/preempt).
+    /// Release every cache resource a sequence holds (teardown/preempt),
+    /// including any queued-fork eviction pins.
     fn release_seq_resources(&mut self, sid: u64) {
+        self.unpin_seq(sid);
         let Some(seq) = self.seqs.get_mut(&sid) else {
             return;
         };
@@ -612,8 +872,10 @@ impl Engine {
     /// shared pages; the chunk loop below performs Step 2's CoW
     /// allocations for the un-cached tail.
     fn admit_fork(&mut self, sid: u64) {
+        // the real leases below supersede the queued-fork eviction pins
+        self.unpin_seq(sid);
         let policy = self.cfg.policy;
-        let (match_tokens, adapter, prompt_len) = {
+        let (match_tokens, adapter, prompt_len, tag) = {
             let seq = &self.seqs[&sid];
             // never serve the newest token from cache: its logits (fresh
             // seq) or its KV-write (resumed seq) must be recomputed
@@ -621,8 +883,15 @@ impl Engine {
                 seq.all[..seq.all.len() - 1].to_vec(),
                 seq.req.adapter,
                 seq.req.tokens.len(),
+                seq.req.tag,
             )
         };
+        // gang accounting: is this fork joining a workflow that already
+        // has an admitted member on this shard? (evaluated before this
+        // sequence is marked admitted, so it never counts itself; tag 0
+        // is untagged traffic and forms no workflow)
+        let gang_mate =
+            tag != 0 && self.seqs.values().any(|s| s.admitted && s.req.tag == tag);
         let ns = base_ns(policy, adapter);
         let bm: MatchResult =
             self.trees
@@ -673,8 +942,18 @@ impl Engine {
         }
         if first_admission {
             self.metrics.prompt_tokens += prompt_len as u64;
-            self.metrics.hit_full_tokens += self.seqs[&sid].hit_full as u64;
-            self.metrics.hit_partial_tokens += self.seqs[&sid].hit_partial as u64;
+            let (hit_full, hit_partial) = {
+                let s = &self.seqs[&sid];
+                (s.hit_full as u64, s.hit_partial as u64)
+            };
+            self.metrics.hit_full_tokens += hit_full;
+            self.metrics.hit_partial_tokens += hit_partial;
+            // per-workflow observability: this tag's matched fraction
+            self.metrics
+                .record_tag_hit(tag, prompt_len as u64, hit_full + hit_partial);
+            if self.cfg.sched.gang && gang_mate {
+                self.metrics.gang_admitted += 1;
+            }
         }
 
         if needs_data {
@@ -1211,10 +1490,34 @@ impl Engine {
         });
     }
 
+    /// Full per-shard stats snapshot: the engine metrics plus the
+    /// tree-derived eviction counters — what `Cmd::Stats` (and therefore
+    /// `/stats` and `/metrics`) serve per shard.
+    pub fn stats_json(&mut self) -> Json {
+        let deferred = self.trees.base.stats().deferred_evictions
+            + self.trees.residual.stats().deferred_evictions;
+        let mut j = self.metrics.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("evictions_deferred".into(), Json::num(deferred as f64));
+        }
+        j
+    }
+
     /// Consistency checks used by integration tests after a run.
     pub fn check_quiescent(&self) -> Result<(), String> {
         if !self.seqs.is_empty() {
             return Err(format!("{} sequences still live", self.seqs.len()));
+        }
+        if !self.seq_pins.is_empty() {
+            return Err(format!(
+                "{} queued-fork eviction pin sets leaked",
+                self.seq_pins.len()
+            ));
+        }
+        let pinned =
+            self.trees.base.pinned_nodes() + self.trees.residual.pinned_nodes();
+        if pinned != 0 {
+            return Err(format!("{pinned} tree nodes still workflow-pinned"));
         }
         self.base_pool.check_invariants()?;
         if let Some(p) = &self.res_pool {

@@ -21,6 +21,26 @@ fn engine(policy: CachePolicy, budget_mb: usize) -> Engine {
     Engine::new(cfg, Box::new(sim)).unwrap()
 }
 
+/// `engine` with explicit gang-scheduler knobs (A/B tests).
+fn engine_with(policy: CachePolicy, budget_mb: usize, gang: bool, hold_ms: u64) -> Engine {
+    let cfg = EngineConfig {
+        policy,
+        cache: CacheConfig {
+            page_tokens: 16,
+            budget_bytes: budget_mb << 20,
+        },
+        sched: SchedulerConfig {
+            gang,
+            gang_hold_ms: hold_ms,
+            ..SchedulerConfig::default()
+        },
+        seed: 7,
+        greedy: true,
+    };
+    let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8, 16]).unwrap();
+    Engine::new(cfg, Box::new(sim)).unwrap()
+}
+
 fn req(id: u64, adapter: u32, tokens: Vec<u32>, max_new: usize, arrival_us: u64) -> Request {
     Request {
         id,
@@ -30,6 +50,29 @@ fn req(id: u64, adapter: u32, tokens: Vec<u32>, max_new: usize, arrival_us: u64)
         max_new,
         arrival_us,
         ignore_eos: true,
+        fan: 0,
+    }
+}
+
+/// `req` with an explicit workflow tag + declared fan width (gang tests).
+fn tagged_req(
+    id: u64,
+    tag: u64,
+    fan: usize,
+    adapter: u32,
+    tokens: Vec<u32>,
+    max_new: usize,
+    arrival_us: u64,
+) -> Request {
+    Request {
+        id,
+        tag,
+        adapter,
+        tokens,
+        max_new,
+        arrival_us,
+        ignore_eos: true,
+        fan,
     }
 }
 
@@ -248,6 +291,7 @@ fn driver_loop_with_poisson_arrivals() {
                     max_new: 8,
                     arrival_us: self.next_t,
                     ignore_eos: true,
+                    fan: 0,
                 });
                 self.next_t += (self.rng.exponential(2.0) * 1e6) as u64;
             }
@@ -411,6 +455,204 @@ fn decode_steady_state_does_not_grow_scratch() {
         );
     }
     e.drain_finished();
+}
+
+// ---------------------------------------------------------------------------
+// workflow-aware (gang) admission & eviction
+// ---------------------------------------------------------------------------
+
+/// Drive a primed K-fork fan whose members arrive interleaved with cold
+/// singleton workflows; returns (fan first-token times, cold first-token
+/// times, gang_admitted, max_decode_batch).
+fn run_fan_vs_cold(gang: bool, k: usize) -> (Vec<u64>, Vec<u64>, u64, u64) {
+    let mut e = engine_with(CachePolicy::Disaggregated, 64, gang, 25);
+    let shared = toks(160, 90);
+    // primer publishes the workflow's shared context (tag 9)
+    let mut primer = shared.clone();
+    primer.extend(toks(4, 91));
+    e.submit(tagged_req(1, 9, 0, 7, primer, 4, 0));
+    run_to_completion(&mut e);
+    let t0 = e.now_us();
+    // unfavourable arrival order: each fan member is chased by a cold
+    // workflow's agent that arrives right behind it
+    let mut id = 10;
+    for i in 0..k as u64 {
+        let mut member = shared.clone();
+        member.extend(toks(6, 400 + i));
+        e.submit(tagged_req(id, 9, 0, 10 + i as u32, member, 4, t0 + 2 * i + 1));
+        id += 1;
+        let cold = toks(180, 300 + i);
+        e.submit(tagged_req(id, 100 + i, 0, 20 + i as u32, cold, 4, t0 + 2 * i + 2));
+        id += 1;
+    }
+    let fin = run_to_completion(&mut e);
+    assert_eq!(fin.len(), 2 * k, "gang={gang}: all requests must finish");
+    e.check_quiescent().unwrap();
+    let fan: Vec<u64> = fin.iter().filter(|f| f.tag == 9).map(|f| f.first_token_us).collect();
+    let cold: Vec<u64> = fin.iter().filter(|f| f.tag != 9).map(|f| f.first_token_us).collect();
+    assert_eq!(fan.len(), k);
+    (fan, cold, e.metrics.gang_admitted, e.metrics.max_decode_batch)
+}
+
+#[test]
+fn gang_coadmits_fan_ahead_of_cold_interleaving() {
+    let k = 4;
+    // gang on: once the first member admits, the rest of the fan follows
+    // back to back (warm prefix + admitted tag-mate preference) — every
+    // fan first-token precedes every cold first-token, and the whole fan
+    // is decode-resident together
+    let (fan, cold, gang_admitted, max_batch) = run_fan_vs_cold(true, k);
+    let fan_last = *fan.iter().max().unwrap();
+    let cold_first = *cold.iter().min().unwrap();
+    assert!(
+        fan_last < cold_first,
+        "gang interleaved the fan with cold work: fan {fan:?} cold {cold:?}"
+    );
+    assert!(
+        gang_admitted >= (k - 1) as u64,
+        "co-admissions not counted: {gang_admitted}"
+    );
+    assert!(
+        max_batch >= k as u64,
+        "decode occupancy never covered the whole fan: {max_batch}"
+    );
+
+    // gang off (the A/B baseline): plain FCFS interleaves the arrivals,
+    // so some cold agent prefills in the middle of the fan
+    let (fan, cold, gang_admitted, _) = run_fan_vs_cold(false, k);
+    assert_eq!(gang_admitted, 0, "counter must be inert with gang off");
+    let fan_last = *fan.iter().max().unwrap();
+    let cold_first = *cold.iter().min().unwrap();
+    assert!(
+        cold_first < fan_last,
+        "FCFS unexpectedly kept the fan together: fan {fan:?} cold {cold:?}"
+    );
+}
+
+#[test]
+fn gang_hold_releases_partial_fan_on_timeout() {
+    let run = |fan: usize| {
+        let mut e = engine_with(CachePolicy::Disaggregated, 32, true, 5);
+        // two members of a declared fan of `fan` arrive; for fan > 2 the
+        // stragglers never come, so only the 5 ms hold can release them
+        e.submit(tagged_req(1, 3, fan, 1, toks(80, 500), 4, 0));
+        e.submit(tagged_req(2, 3, fan, 2, toks(80, 501), 4, 1));
+        // a cold late-comer: under an active hold it overtakes the fan
+        e.submit(tagged_req(3, 8, 0, 3, toks(100, 502), 4, 2));
+        let fin = run_to_completion(&mut e);
+        assert_eq!(fin.len(), 3, "a hold must never lose requests");
+        e.check_quiescent().unwrap();
+        let first = |tag: u64| {
+            fin.iter()
+                .filter(|f| f.tag == tag)
+                .map(|f| f.first_token_us)
+                .min()
+                .unwrap()
+        };
+        (first(3), first(8))
+    };
+    // declared fan of 4, only 2 ever arrive: the hold lets the cold
+    // request jump ahead, and the partial fan is released no earlier
+    // than the 5 ms deadline — never stranded
+    let (fan_first, cold_first) = run(4);
+    assert!(
+        cold_first < fan_first,
+        "hold did not let the cold request ahead ({cold_first} vs {fan_first})"
+    );
+    assert!(
+        fan_first >= 5_000,
+        "partial fan released before gang_hold_ms: {fan_first}"
+    );
+    // control: the declared fan actually arrives (2 of 2) — admission
+    // releases on arrival and stays FCFS, no timeout involved
+    let (fan_first, cold_first) = run(2);
+    assert!(
+        fan_first < cold_first,
+        "satisfied fan should admit FCFS ({fan_first} vs {cold_first})"
+    );
+}
+
+#[test]
+fn straggler_of_admitted_fan_coadmits_without_hold() {
+    // a fan member arriving after its mates already admitted must join
+    // them immediately — the hold is for assembling a fan, not for
+    // re-counting one that is already in flight (or partly finished)
+    // hold far above the ~100ms (virtual) the straggler's own prefill
+    // costs, so "held" and "not held" separate unambiguously
+    let hold_ms = 200u64;
+    let mut e = engine_with(CachePolicy::Disaggregated, 32, true, hold_ms);
+    // the first member arrives alone (fan 3, stragglers pending): the
+    // hold times out via idle fast-forward and it admits partially
+    e.submit(tagged_req(1, 6, 3, 1, toks(80, 700), 64, 0));
+    let mut guard = 0;
+    while e.metrics.decode_steps == 0 {
+        assert_eq!(e.tick().unwrap(), Tick::Progress, "member 1 never admitted");
+        guard += 1;
+        assert!(guard < 10_000, "stalled waiting for member 1");
+    }
+    // member 2 arrives while member 1 decodes: live count (2) is still
+    // below the declared fan (3), but an admitted mate exists — no hold
+    let arrival = e.now_us();
+    e.submit(tagged_req(2, 6, 3, 2, toks(80, 701), 4, arrival));
+    let fin = run_to_completion(&mut e);
+    assert_eq!(fin.len(), 2);
+    let m2 = fin.iter().find(|f| f.id == 2).unwrap();
+    assert!(
+        m2.ttft_us() < hold_ms * 1000,
+        "straggler was held despite an admitted mate: ttft {}us",
+        m2.ttft_us()
+    );
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn untagged_requests_form_no_gang() {
+    // tag 0 is plain serving traffic: concurrent untagged requests must
+    // not be classed as one workflow or counted as co-admissions
+    let mut e = engine(CachePolicy::Disaggregated, 32); // req() uses tag 0
+    let shared = toks(120, 710);
+    for i in 0..4u64 {
+        let mut p = shared.clone();
+        p.extend(toks(6, 720 + i));
+        e.submit(req(i + 1, i as u32, p, 8, i));
+    }
+    let fin = run_to_completion(&mut e);
+    assert_eq!(fin.len(), 4);
+    assert_eq!(
+        e.metrics.gang_admitted, 0,
+        "untagged traffic must not inflate gang_admitted"
+    );
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn queued_fork_pins_parent_pages_until_admission() {
+    let mut e = engine_with(CachePolicy::Disaggregated, 32, true, 25);
+    let shared = toks(160, 95);
+    let mut primer = shared.clone();
+    primer.extend(toks(4, 96));
+    e.submit(tagged_req(1, 4, 0, 1, primer, 4, 0));
+    run_to_completion(&mut e);
+    assert_eq!(e.trees().base.pinned_nodes(), 0);
+    let t0 = e.now_us();
+    // a long cold request takes the prefill stream, and a fork of tag 4
+    // queues behind it (held: it declares a fan of 2 that never fills) —
+    // its shared prefix must be pinned the moment it enters the queue
+    e.submit(tagged_req(2, 50, 0, 2, toks(256, 97), 4, t0));
+    let mut fork = shared.clone();
+    fork.extend(toks(6, 98));
+    e.submit(tagged_req(3, 4, 2, 3, fork, 4, t0));
+    e.tick().unwrap();
+    assert!(
+        e.trees().base.pinned_nodes() > 0,
+        "queued fork left no eviction pins"
+    );
+    // the hold times out, the fork admits (pins -> leases), all complete
+    let fin = run_to_completion(&mut e);
+    assert_eq!(fin.len(), 2);
+    assert_eq!(e.trees().base.pinned_nodes(), 0, "pins leaked");
+    assert_eq!(e.trees().residual.pinned_nodes(), 0, "residual pins leaked");
+    e.check_quiescent().unwrap();
 }
 
 // ---------------------------------------------------------------------------

@@ -18,21 +18,30 @@
 //! materializes as freshly allocated tail pages. No shared page is ever
 //! written after publication.
 
+#![warn(missing_docs)]
+
+/// Index of a page within its pool (dense, recycled via the free list).
 pub type PageId = u32;
 
+/// Geometry of one paged pool (see module docs for the layout).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PoolSpec {
+    /// pages in the pool (sizes the page table and backing buffer)
     pub n_pages: usize,
+    /// consecutive tokens per page (allocator + radix granularity)
     pub page_tokens: usize,
+    /// transformer layers stored per page
     pub n_layers: usize,
     /// floats per token per layer for each of K and V
     pub width: usize,
 }
 
 impl PoolSpec {
+    /// f32 slots one page occupies (`[layer][k|v][slot][width]`).
     pub fn floats_per_page(&self) -> usize {
         self.n_layers * 2 * self.page_tokens * self.width
     }
+    /// Bytes one page occupies (4 bytes per float).
     pub fn bytes_per_page(&self) -> usize {
         self.floats_per_page() * 4
     }
@@ -42,6 +51,7 @@ impl PoolSpec {
     }
 }
 
+/// One refcounted paged KV pool (base or residual; see module docs).
 #[derive(Debug)]
 pub struct BlockPool {
     spec: PoolSpec,
@@ -55,6 +65,7 @@ pub struct BlockPool {
 }
 
 impl BlockPool {
+    /// Pool with every page free and its backing buffer zeroed.
     pub fn new(spec: PoolSpec) -> Self {
         let free: Vec<PageId> = (0..spec.n_pages as u32).rev().collect();
         BlockPool {
@@ -69,6 +80,7 @@ impl BlockPool {
         }
     }
 
+    /// The pool's immutable geometry.
     pub fn spec(&self) -> &PoolSpec {
         &self.spec
     }
@@ -110,6 +122,7 @@ impl BlockPool {
         }
     }
 
+    /// Current reference count of `page` (0 = free).
     pub fn refcount(&self, page: PageId) -> u32 {
         self.refcount[page as usize]
     }
@@ -127,6 +140,8 @@ impl BlockPool {
         &self.data[off..off + self.spec.page_tokens * self.spec.width]
     }
 
+    /// Mutable variant of [`BlockPool::kv_slice`] (CoW discipline: only
+    /// call on pages with refcount 1).
     pub fn kv_slice_mut(&mut self, page: PageId, layer: usize, kv: usize) -> &mut [f32] {
         let off = self.kv_offset(page, layer, kv);
         let len = self.spec.page_tokens * self.spec.width;
@@ -142,6 +157,7 @@ impl BlockPool {
         &self.data[off..off + fpp]
     }
 
+    /// Mutable variant of [`BlockPool::page_data`] (migration restore).
     pub fn page_data_mut(&mut self, page: PageId) -> &mut [f32] {
         let fpp = self.spec.floats_per_page();
         let off = page as usize * fpp;
@@ -149,24 +165,31 @@ impl BlockPool {
     }
 
     // ---------------- accounting ----------------
+    /// Pages with refcount > 0.
     pub fn used_pages(&self) -> usize {
         self.used
     }
+    /// Pages on the free list.
     pub fn free_pages(&self) -> usize {
         self.free.len()
     }
+    /// Peak concurrent `used_pages` over the pool's lifetime.
     pub fn high_water_pages(&self) -> usize {
         self.high_water
     }
+    /// Bytes currently held by used pages.
     pub fn used_bytes(&self) -> usize {
         self.used * self.spec.bytes_per_page()
     }
+    /// Total bytes the pool could hold if every page were used.
     pub fn capacity_bytes(&self) -> usize {
         self.spec.n_pages * self.spec.bytes_per_page()
     }
+    /// Lifetime successful allocations.
     pub fn total_allocs(&self) -> u64 {
         self.total_allocs
     }
+    /// Lifetime allocations that found the pool exhausted.
     pub fn alloc_failures(&self) -> u64 {
         self.alloc_failures
     }

@@ -24,21 +24,24 @@ USAGE:
   forkkv serve      [--artifacts DIR] [--addr HOST:PORT] [--policy P] [--budget-mb N]
                     [--workers N] [--max-body-kb N] [--shards N] [--route R]
                     [--imbalance F] [--migrate on|off] [--migrate-gbps F]
-                    [--migrate-max-inflight N]
+                    [--migrate-max-inflight N] [--gang on|off] [--gang-hold-ms T]
   forkkv run        [--policy P] [--model M] [--dataset D] [--workflow react|mapreduce]
                     [--workflows N] [--requests N] [--rate R] [--budget-mb N] [--seed S]
-                    [--real --artifacts DIR]
+                    [--gang on|off] [--real --artifacts DIR]
   forkkv bench-http [--clients N] [--requests-per-client N] [--policy P] [--model M]
                     [--budget-mb N] [--max-new N] [--workers N] [--pace-us U]
                     [--shards N] [--route R] [--imbalance F]
-                    [--workflows K --agents-per-workflow M]
+                    [--workflows K --agents-per-workflow M] [--fan-parallel]
                     [--hot-agents N --stagger-ms T]
                     [--migrate on|off] [--migrate-gbps F]
+                    [--gang on|off] [--gang-hold-ms T]
                     # closed-loop concurrent HTTP load against a sim-backed server;
                     # with --workflows, K workflows of M agents fork shared contexts
-                    # (the multi-shard placement scenario); with --hot-agents, one
-                    # hot workflow bursts N parallel agents so spills are forced and
-                    # cross-shard page migration (--migrate) is exercised
+                    # (the multi-shard placement scenario; add --fan-parallel to
+                    # burst agents 1..M as a declared fan and exercise gang
+                    # admission); with --hot-agents, one hot workflow bursts N
+                    # parallel agents so spills are forced and cross-shard page
+                    # migration (--migrate) is exercised
   forkkv calibrate  [--artifacts DIR]   # measure real PJRT costs + inter-shard copy
                                         # bandwidth -> calibration.json
 
@@ -129,12 +132,23 @@ fn engine_config(args: &Args) -> anyhow::Result<EngineConfig> {
         .transpose()?
         .unwrap_or(160);
     let seed: u64 = args.flag("--seed").map(|v| v.parse()).transpose()?.unwrap_or(42);
-    Ok(EngineConfig {
+    let mut cfg = EngineConfig {
         policy,
         cache: CacheConfig { page_tokens: 16, budget_bytes: budget_mb << 20 },
         seed,
         ..EngineConfig::default()
-    })
+    };
+    if let Some(v) = args.flag("--gang") {
+        cfg.sched.gang = match v.as_str() {
+            "on" | "true" | "1" => true,
+            "off" | "false" | "0" => false,
+            other => anyhow::bail!("--gang takes on|off, got {other:?}"),
+        };
+    }
+    if let Some(v) = args.flag("--gang-hold-ms") {
+        cfg.sched.gang_hold_ms = v.parse()?;
+    }
+    Ok(cfg)
 }
 
 /// Feed `forkkv calibrate`'s measured cost model (real FLOP terms + the
@@ -244,8 +258,10 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         .map(|v| v.parse())
         .transpose()?
         .unwrap_or(4);
+    let fan_parallel = args.has("--fan-parallel");
 
     let policy = cfg.policy;
+    let gang = cfg.sched.gang;
     let engines = build_shards(&cfg, scfg.shards, || {
         let sim = SimExecutor::new(&model, presets::SIM_BUCKETS.to_vec())?
             .with_wall_pace_us(pace_us);
@@ -300,6 +316,7 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
                 workflows: k,
                 agents_per_workflow: agents,
                 max_new,
+                parallel: fan_parallel,
                 ..MultiWorkflowHttpSpec::default()
             };
             run_multi_workflow_load(&addr, &spec)?
@@ -326,6 +343,7 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         );
         m.insert("router".into(), server.router_stats());
         m.insert("policy".into(), Json::str(policy.name()));
+        m.insert("gang".into(), Json::Bool(gang));
         m.insert("workers".into(), Json::num(server.config().workers as f64));
         m.insert("pace_us".into(), Json::num(pace_us as f64));
     }
@@ -379,8 +397,9 @@ fn cmd_run(args: &Args) -> anyhow::Result<()> {
     engine.run_driver(&mut driver)?;
     let mut report = driver.report();
     if let Json::Obj(m) = &mut report {
-        m.insert("engine".into(), engine.metrics.to_json());
+        m.insert("engine".into(), engine.stats_json());
         m.insert("policy".into(), Json::str(engine.cfg.policy.name()));
+        m.insert("gang".into(), Json::Bool(engine.cfg.sched.gang));
     }
     println!("{report}");
     Ok(())

@@ -27,6 +27,14 @@ pub struct EngineMetrics {
     pub preemptions: u64,
     pub oom_drops: u64,
 
+    /// forks first-admitted while another member of their workflow tag
+    /// was already resident — the gang scheduler's co-admissions
+    pub gang_admitted: u64,
+    /// per-workflow-tag cache effectiveness: tag -> (prompt tokens,
+    /// matched tokens). Cardinality-bounded; see
+    /// [`EngineMetrics::record_tag_hit`].
+    pub tag_hits: std::collections::HashMap<u64, (u64, u64)>,
+
     // cross-shard page migration (spill-path bandwidth-for-FLOPs trade):
     // import side — pages/bytes adopted into this shard's pool + trees,
     // and the prompt tokens those pages spare this shard from prefilling
@@ -88,6 +96,29 @@ impl EngineMetrics {
         self.max_decode_batch = self.max_decode_batch.max(rows as u64);
     }
 
+    /// Distinct workflow tags tracked individually by
+    /// [`EngineMetrics::record_tag_hit`]; tags past this fold into one
+    /// `other` bucket so an adversarial tag stream cannot grow the map
+    /// unboundedly.
+    pub const MAX_TAG_SLOTS: usize = 128;
+
+    /// Record one first-admission's per-tag cache outcome (`prompt`
+    /// tokens, of which `matched` were served from cached pages) — the
+    /// per-workflow matched rate in `/metrics`. A (theoretical) real tag
+    /// of `u64::MAX` shares the overflow bucket.
+    pub fn record_tag_hit(&mut self, tag: u64, prompt: u64, matched: u64) {
+        let slot = if self.tag_hits.contains_key(&tag)
+            || self.tag_hits.len() < Self::MAX_TAG_SLOTS
+        {
+            tag
+        } else {
+            u64::MAX // overflow bucket, rendered as "other"
+        };
+        let e = self.tag_hits.entry(slot).or_insert((0, 0));
+        e.0 += prompt;
+        e.1 += matched;
+    }
+
     /// JSON snapshot. Takes `&mut self` (unlike the `to_*` convention)
     /// because the percentile summaries sort their series in place.
     #[allow(clippy::wrong_self_convention)]
@@ -107,6 +138,8 @@ impl EngineMetrics {
             ("completed", Json::num(self.completed as f64)),
             ("preemptions", Json::num(self.preemptions as f64)),
             ("oom_drops", Json::num(self.oom_drops as f64)),
+            ("gang_admitted", Json::num(self.gang_admitted as f64)),
+            ("per_tag", self.per_tag_json()),
             ("migrated_pages", Json::num(self.migrated_pages as f64)),
             ("migrated_bytes", Json::num(self.migrated_bytes as f64)),
             (
@@ -123,12 +156,42 @@ impl EngineMetrics {
             ("queue_depth", self.queue_depth.summary().to_json()),
         ])
     }
+
+    /// The per-workflow-tag matched-rate object served inside each shard
+    /// snapshot (`per_tag` key). Percentages don't compose across shards,
+    /// so like the series summaries this stays per-shard only.
+    fn per_tag_json(&self) -> Json {
+        let mut tags = std::collections::BTreeMap::new();
+        for (&tag, &(prompt, matched)) in &self.tag_hits {
+            let label = if tag == u64::MAX {
+                "other".to_string()
+            } else {
+                tag.to_string()
+            };
+            tags.insert(
+                label,
+                Json::obj(vec![
+                    ("prompt_tokens", Json::num(prompt as f64)),
+                    ("matched_tokens", Json::num(matched as f64)),
+                    (
+                        "matched_rate",
+                        Json::num(if prompt > 0 {
+                            matched as f64 / prompt as f64
+                        } else {
+                            0.0
+                        }),
+                    ),
+                ]),
+            );
+        }
+        Json::Obj(tags)
+    }
 }
 
 /// Keys summed across shards by [`aggregate_stats`]. Series summaries are
 /// deliberately absent: percentiles don't compose across shards, so those
 /// stay in the per-shard snapshots.
-const SUMMED_KEYS: [&str; 16] = [
+const SUMMED_KEYS: [&str; 18] = [
     "prefill_steps",
     "decode_steps",
     "decode_rows",
@@ -141,6 +204,8 @@ const SUMMED_KEYS: [&str; 16] = [
     "completed",
     "preemptions",
     "oom_drops",
+    "gang_admitted",
+    "evictions_deferred",
     "migrated_pages",
     "migrated_bytes",
     "recompute_tokens_saved",
@@ -324,6 +389,7 @@ mod tests {
             hit_full_tokens: 80,
             hit_partial_tokens: 10,
             completed: 3,
+            gang_admitted: 2,
             migrated_pages: 5,
             migrated_bytes: 5 * 65536,
             recompute_tokens_saved: 80,
@@ -335,6 +401,7 @@ mod tests {
             max_decode_batch: 2,
             prompt_tokens: 900,
             oom_drops: 2,
+            gang_admitted: 1,
             migrated_pages: 2,
             recompute_tokens_saved: 32,
             exported_pages: 5,
@@ -346,6 +413,7 @@ mod tests {
         assert_eq!(agg.at(&["completed"]).as_usize().unwrap(), 3);
         assert_eq!(agg.at(&["oom_drops"]).as_usize().unwrap(), 2);
         assert_eq!(agg.at(&["max_decode_batch"]).as_usize().unwrap(), 6);
+        assert_eq!(agg.at(&["gang_admitted"]).as_usize().unwrap(), 3);
         assert_eq!(agg.at(&["migrated_pages"]).as_usize().unwrap(), 7);
         assert_eq!(agg.at(&["migrated_bytes"]).as_usize().unwrap(), 5 * 65536);
         assert_eq!(agg.at(&["recompute_tokens_saved"]).as_usize().unwrap(), 112);
@@ -359,6 +427,33 @@ mod tests {
         let empty = aggregate_stats(&[]);
         assert_eq!(empty.at(&["avg_decode_batch"]).as_f64().unwrap(), 0.0);
         assert_eq!(empty.at(&["hit_rate"]).as_f64().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn per_tag_hits_bound_cardinality_and_render() {
+        let mut m = EngineMetrics::default();
+        m.record_tag_hit(3, 100, 80);
+        m.record_tag_hit(3, 100, 60);
+        m.record_tag_hit(9, 50, 0);
+        assert_eq!(m.tag_hits[&3], (200, 140));
+        let j = m.to_json();
+        assert!((j.at(&["per_tag", "3", "matched_rate"]).as_f64().unwrap() - 0.7).abs() < 1e-9);
+        assert_eq!(j.at(&["per_tag", "9", "matched_rate"]).as_f64().unwrap(), 0.0);
+
+        // past the slot cap, new tags fold into "other"; known tags
+        // still accumulate under their own key
+        let mut m = EngineMetrics::default();
+        for t in 0..(EngineMetrics::MAX_TAG_SLOTS as u64) {
+            m.record_tag_hit(t, 10, 5);
+        }
+        m.record_tag_hit(1_000_000, 10, 10);
+        m.record_tag_hit(2_000_000, 10, 0);
+        m.record_tag_hit(0, 10, 5);
+        assert_eq!(m.tag_hits.len(), EngineMetrics::MAX_TAG_SLOTS + 1);
+        assert_eq!(m.tag_hits[&u64::MAX], (20, 10));
+        assert_eq!(m.tag_hits[&0], (20, 10));
+        let j = m.to_json();
+        assert!((j.at(&["per_tag", "other", "matched_rate"]).as_f64().unwrap() - 0.5).abs() < 1e-9);
     }
 
     #[test]

@@ -34,6 +34,8 @@
 //! the server move the payload between shard threads without aliasing
 //! either engine's memory.
 
+#![warn(missing_docs)]
+
 use crate::exec::CostModel;
 use crate::kvcache::BlockPool;
 use crate::radix::RadixTree;
@@ -54,6 +56,7 @@ pub struct ComponentExport {
 }
 
 impl ComponentExport {
+    /// Total payload size of this component's page bytes.
     pub fn bytes(&self) -> usize {
         self.pages.iter().map(|p| p.len() * 4).sum()
     }
@@ -65,16 +68,19 @@ pub struct MigrationPayload {
     /// page granularity of the exporting shard (importers verify it
     /// matches their own before touching their pool)
     pub page_tokens: usize,
+    /// bCache component of the snapshot
     pub base: ComponentExport,
     /// present only under the disaggregated policy
     pub residual: Option<ComponentExport>,
 }
 
 impl MigrationPayload {
+    /// Total bytes the snapshot would move over the inter-shard link.
     pub fn bytes(&self) -> usize {
         self.base.bytes() + self.residual.as_ref().map_or(0, ComponentExport::bytes)
     }
 
+    /// Total pages across both components.
     pub fn pages(&self) -> usize {
         self.base.pages.len() + self.residual.as_ref().map_or(0, |r| r.pages.len())
     }
@@ -122,7 +128,9 @@ pub fn export_component(
 /// copying a byte.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct MigrationEstimate {
+    /// bCache pages the prompt matched on the probed shard
     pub base_pages: usize,
+    /// rCache pages the prompt matched on the probed shard
     pub res_pages: usize,
     /// total bytes a full export of those pages would move
     pub bytes: usize,
@@ -136,11 +144,14 @@ pub struct MigrationEstimate {
 /// `tokens_saved` tokens on the target shard.
 #[derive(Debug, Clone)]
 pub struct MigrationPolicy {
+    /// master switch (`ServerConfig::migrate` && a multi-shard pool)
     pub enabled: bool,
+    /// calibrated price list for both sides of the trade
     pub cost: CostModel,
 }
 
 impl MigrationPolicy {
+    /// Policy over a (possibly calibrated) cost model.
     pub fn new(enabled: bool, cost: CostModel) -> Self {
         MigrationPolicy { enabled, cost }
     }

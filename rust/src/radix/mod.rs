@@ -22,6 +22,18 @@
 //! Step 2. Eviction is **decoupled** (paper §5.2): each tree runs its own
 //! LRU over unpinned leaves, so evicting a massive bCache node never
 //! cascades into the surviving rCache (partial hits) and vice versa.
+//!
+//! Workflow-aware eviction (KVFlow-style steps-to-use): on top of the
+//! hard `leases` (pages held by *running* sequences — never evictable),
+//! nodes carry soft **pins** ([`RadixTree::pin_prefix`]) placed by the
+//! scheduler for *queued* forks that will need the prefix shortly. The
+//! LRU defers pinned nodes to a second pass (`stats.deferred_evictions`
+//! counts the deferrals), so a workflow's parent pages survive until its
+//! last queued fork has admitted — but under terminal pressure the
+//! second pass may still take them, so pinning can never leak budget or
+//! deadlock allocation.
+
+#![warn(missing_docs)]
 
 use std::collections::BinaryHeap;
 use std::collections::HashMap;
@@ -30,6 +42,14 @@ use crate::kvcache::{BlockPool, PageId};
 
 type NodeId = u32;
 const NIL: NodeId = u32::MAX;
+
+/// A pinned prefix as returned by [`RadixTree::pin_prefix`]: one
+/// `(node, epoch)` pair per pinned page, in path order. The epoch makes
+/// a stale unpin safe: if a pinned node was force-evicted (second-pass
+/// eviction) and its slot recycled, the epoch no longer matches and
+/// [`RadixTree::unpin_path`] skips it instead of corrupting the fresh
+/// node's pin count.
+pub type PinPath = Vec<(u32, u32)>;
 
 #[derive(Debug)]
 struct Node {
@@ -43,17 +63,34 @@ struct Node {
     last_access: u64,
     /// active sequences currently holding this node's page via match_lease
     leases: u32,
+    /// queued forks that declared they still need this prefix (soft:
+    /// defers eviction to the second pass, never forbids it)
+    pins: u32,
+    /// bumped every time this node slot is killed, so recycled slots
+    /// invalidate stale [`PinPath`] entries
+    epoch: u32,
     dead: bool,
 }
 
+/// Counters describing one tree's lifetime activity (insert/match/evict
+/// traffic); snapshot via [`RadixTree::stats`].
 #[derive(Debug, Default, Clone)]
 pub struct TreeStats {
+    /// live nodes (== pages currently owned by the tree)
     pub nodes: usize,
+    /// pages newly adopted by `insert` over the tree's lifetime
     pub inserted_pages: u64,
+    /// insert chunks that were already present (sharing wins)
     pub deduped_pages: u64,
+    /// pages whose memory eviction actually freed
     pub evicted_pages: u64,
+    /// `match_lease` calls served
     pub match_queries: u64,
+    /// pages returned across all `match_lease` calls
     pub matched_pages: u64,
+    /// eviction candidates skipped (to the second pass) because a queued
+    /// workflow fork had pinned them — the workflow-aware eviction signal
+    pub deferred_evictions: u64,
 }
 
 /// Result of the fork's Step-1 prefix match. Pages are pool-retained for
@@ -61,11 +98,17 @@ pub struct TreeStats {
 /// sequence stops using the prefix.
 #[derive(Debug, Default)]
 pub struct MatchResult {
+    /// matched pages in path order, pool-retained for the caller
     pub pages: Vec<PageId>,
+    /// matched coverage in tokens (always page aligned)
     pub tokens: usize,
+    /// leased node path; give back via [`RadixTree::release_path`]
     pub path: Vec<NodeId>,
 }
 
+/// One page-aligned radix trie over token sequences (see module docs):
+/// the storage half of the paper's bCache or rCache, with leases, soft
+/// workflow pins, and a lazy-heap LRU eviction policy.
 #[derive(Debug)]
 pub struct RadixTree {
     nodes: Vec<Node>,
@@ -79,6 +122,7 @@ pub struct RadixTree {
 }
 
 impl RadixTree {
+    /// Empty tree over pages of `page_tokens` tokens each.
     pub fn new(page_tokens: usize) -> Self {
         assert!(page_tokens > 0);
         RadixTree {
@@ -92,10 +136,12 @@ impl RadixTree {
         }
     }
 
+    /// Page granularity of this tree (tokens per node edge).
     pub fn page_tokens(&self) -> usize {
         self.page_tokens
     }
 
+    /// Lifetime activity counters (see [`TreeStats`]).
     pub fn stats(&self) -> &TreeStats {
         &self.stats
     }
@@ -110,8 +156,11 @@ impl RadixTree {
         self.clock
     }
 
-    fn alloc_node(&mut self, node: Node) -> NodeId {
+    fn alloc_node(&mut self, mut node: Node) -> NodeId {
         if let Some(id) = self.free_nodes.pop() {
+            // recycled slots keep their epoch so stale PinPath entries
+            // from the previous occupant never match the new node
+            node.epoch = self.nodes[id as usize].epoch;
             self.nodes[id as usize] = node;
             id
         } else {
@@ -200,6 +249,8 @@ impl RadixTree {
                 children: HashMap::new(),
                 last_access: now,
                 leases: 1, // roots are never evicted
+                pins: 0,
+                epoch: 0,
                 dead: false,
             });
             self.roots.insert(ns, id);
@@ -227,6 +278,8 @@ impl RadixTree {
                 children: HashMap::new(),
                 last_access: now,
                 leases: 0,
+                pins: 0,
+                epoch: 0,
                 dead: false,
             });
             self.nodes[cur as usize].children.insert(key, id);
@@ -239,15 +292,36 @@ impl RadixTree {
         adopted
     }
 
-    /// Evict up to `want_pages` least-recently-used unpinned leaves,
+    /// Evict up to `want_pages` least-recently-used unleased leaves,
     /// releasing their pool refs. Returns the number of pages whose memory
     /// was actually freed (refcount reached zero) — nodes whose pages are
     /// still held by running sequences are *skipped*, because evicting them
     /// frees no memory and only destroys future sharing.
+    ///
+    /// Workflow-aware (KVFlow-style): the first pass also defers nodes a
+    /// queued fork has pinned ([`RadixTree::pin_prefix`]), counting each
+    /// deferral in `stats.deferred_evictions`; only if the unpinned
+    /// candidates cannot satisfy the demand does a second pass take
+    /// pinned pages too — pins shape eviction *order*, they never turn
+    /// into a budget leak.
     /// Decoupled policy (paper §5.2): this touches only *this* tree/pool.
     pub fn evict(&mut self, want_pages: usize, pool: &mut BlockPool) -> usize {
+        let freed = self.evict_pass(want_pages, pool, false);
+        if freed < want_pages {
+            freed + self.evict_pass(want_pages - freed, pool, true)
+        } else {
+            freed
+        }
+    }
+
+    fn evict_pass(
+        &mut self,
+        want_pages: usize,
+        pool: &mut BlockPool,
+        evict_pinned: bool,
+    ) -> usize {
         let mut evicted = 0;
-        let mut still_referenced: Vec<std::cmp::Reverse<(u64, NodeId)>> = Vec::new();
+        let mut deferred: Vec<std::cmp::Reverse<(u64, NodeId)>> = Vec::new();
         while evicted < want_pages {
             let Some(std::cmp::Reverse((stamp, id))) = self.lru.pop() else {
                 break;
@@ -270,15 +344,23 @@ impl RadixTree {
                 }
                 continue;
             }
+            if !evict_pinned && node.pins > 0 {
+                // a queued workflow fork still needs this prefix: evict
+                // it last (second pass only)
+                self.stats.deferred_evictions += 1;
+                deferred.push(std::cmp::Reverse((stamp, id)));
+                continue;
+            }
             if pool.refcount(node.page) > 1 {
-                still_referenced.push(std::cmp::Reverse((stamp, id)));
+                deferred.push(std::cmp::Reverse((stamp, id)));
                 continue;
             }
             self.remove_leaf(id, pool);
             evicted += 1;
         }
-        // candidates that freed no memory go back for later rounds
-        for entry in still_referenced {
+        // candidates that freed no memory (or were pin-deferred) go back
+        // for later rounds
+        for entry in deferred {
             self.lru.push(entry);
         }
         self.stats.evicted_pages += evicted as u64;
@@ -292,7 +374,12 @@ impl RadixTree {
             (node.parent, node.key.clone(), node.page)
         };
         pool.release(page);
-        self.nodes[id as usize].dead = true;
+        let node = &mut self.nodes[id as usize];
+        node.dead = true;
+        // invalidate any outstanding PinPath entries for this slot (a
+        // soft-pinned node can be force-evicted by the second pass)
+        node.epoch = node.epoch.wrapping_add(1);
+        node.pins = 0;
         self.free_nodes.push(id);
         self.stats.nodes -= 1;
         if parent != NIL {
@@ -326,6 +413,57 @@ impl RadixTree {
             }
         }
         pages
+    }
+
+    /// Workflow pin (KVFlow-style "a queued step still needs this
+    /// prefix"): walk the longest cached prefix of `tokens` and mark
+    /// every matched node pinned, deferring its eviction to the second
+    /// pass until [`RadixTree::unpin_path`] is called. Unlike
+    /// [`RadixTree::match_lease`] this takes **no pool refs** and does
+    /// not touch the LRU clock — a pin is a scheduling hint, not
+    /// ownership, so pinned pages still free their memory if the tree is
+    /// forced to take them. Returns the pinned path; an empty path means
+    /// nothing was cached (and needs no unpin).
+    pub fn pin_prefix(&mut self, ns: u32, tokens: &[u32]) -> PinPath {
+        let Some(&root) = self.roots.get(&ns) else {
+            return Vec::new();
+        };
+        let mut cur = root;
+        let mut consumed = 0usize;
+        let mut path = Vec::new();
+        while consumed + self.page_tokens <= tokens.len() {
+            let chunk = &tokens[consumed..consumed + self.page_tokens];
+            let next = match self.nodes[cur as usize].children.get(chunk) {
+                Some(&n) => n,
+                None => break,
+            };
+            let node = &mut self.nodes[next as usize];
+            node.pins += 1;
+            path.push((next, node.epoch));
+            consumed += self.page_tokens;
+            cur = next;
+        }
+        path
+    }
+
+    /// Drop the pins taken by [`RadixTree::pin_prefix`]. Entries whose
+    /// node was force-evicted in the meantime (dead, or recycled under a
+    /// newer epoch) are skipped — their pins died with the node.
+    pub fn unpin_path(&mut self, path: &[(u32, u32)]) {
+        for &(id, epoch) in path {
+            let node = &mut self.nodes[id as usize];
+            if node.dead || node.epoch != epoch {
+                continue;
+            }
+            debug_assert!(node.pins > 0, "unpin underflow on node {id}");
+            node.pins = node.pins.saturating_sub(1);
+        }
+    }
+
+    /// Live nodes currently carrying at least one workflow pin (test /
+    /// leak-check observability).
+    pub fn pinned_nodes(&self) -> usize {
+        self.nodes.iter().filter(|n| !n.dead && n.pins > 0).count()
     }
 
     /// Pages whose memory is reclaimable by (possibly cascaded) eviction:
@@ -397,14 +535,18 @@ impl RadixTree {
 /// independently managed LRU lifecycles.
 #[derive(Debug)]
 pub struct DualRadixTree {
+    /// token-keyed bCache tree (namespace 0 is globally shared)
     pub base: RadixTree,
+    /// (adapter, token)-keyed rCache tree (namespace = adapter id)
     pub residual: RadixTree,
 }
 
 /// Outcome of forking a new agent onto existing cache state.
 #[derive(Debug, Default)]
 pub struct ForkMatch {
+    /// bCache half of the fork's Step-1 match
     pub base: MatchResult,
+    /// rCache half of the fork's Step-1 match
     pub residual: MatchResult,
 }
 
@@ -421,6 +563,7 @@ impl ForkMatch {
 }
 
 impl DualRadixTree {
+    /// Two empty trees sharing one page granularity.
     pub fn new(page_tokens: usize) -> Self {
         DualRadixTree {
             base: RadixTree::new(page_tokens),
@@ -768,6 +911,73 @@ mod tests {
         tree.check_invariants(&pool).unwrap();
         // everything is evictable again (no lingering leases)
         assert_eq!(tree.evict(100, &mut pool), 3);
+    }
+
+    #[test]
+    fn pinned_pages_evicted_last_but_reclaimable() {
+        // workflow-aware eviction contract: pages pinned for a queued
+        // fork survive LRU pressure while unpinned candidates exist, are
+        // still takeable under terminal pressure (no budget leak), and
+        // become plainly evictable once the tag's pending count (the
+        // engine's pin) is gone
+        let mut pool = pool(32);
+        let mut tree = RadixTree::new(4);
+        let a = toks(8, 60);
+        let b = toks(8, 61);
+        publish(&mut tree, 0, &a, &mut pool); // older: LRU victim first
+        publish(&mut tree, 0, &b, &mut pool);
+        assert_eq!(tree.total_pages(), 4);
+
+        let pins = tree.pin_prefix(0, &a);
+        assert_eq!(pins.len(), 2);
+        assert_eq!(tree.pinned_nodes(), 2);
+        assert_eq!(pool.used_pages(), 4, "pins take no pool refs");
+
+        // partial pressure: although a is least recently used, only b's
+        // unpinned pages go — and the deferrals are counted
+        assert_eq!(tree.evict(2, &mut pool), 2);
+        assert!(tree.stats().deferred_evictions >= 2, "{:?}", tree.stats());
+        let m = tree.match_lease(0, &a, &mut pool);
+        assert_eq!(m.tokens, 8, "pinned prefix evicted while unpinned existed");
+        let mb = tree.match_lease(0, &b, &mut pool);
+        assert_eq!(mb.tokens, 0, "unpinned pages should have been the victims");
+        tree.release_path(&m.path);
+        for p in &m.pages {
+            pool.release(*p);
+        }
+
+        // terminal pressure: pins are soft — the second pass takes them
+        // rather than leaving the budget stuck
+        assert_eq!(tree.evict(10, &mut pool), 2);
+        assert_eq!(pool.used_pages(), 0, "pinned pages leaked budget");
+        tree.check_invariants(&pool).unwrap();
+
+        // the stale unpin (its nodes were force-evicted) must be a no-op
+        tree.unpin_path(&pins);
+        assert_eq!(tree.pinned_nodes(), 0);
+
+        // recycled node slots: a re-publish reuses the freed node ids
+        // under a bumped epoch, so the old PinPath can never strip the
+        // fresh pins
+        publish(&mut tree, 0, &a, &mut pool);
+        let fresh = tree.pin_prefix(0, &a);
+        assert_eq!(fresh.len(), 2);
+        tree.unpin_path(&pins); // stale epochs: skipped
+        assert_eq!(tree.pinned_nodes(), 2, "stale unpin stripped fresh pins");
+
+        // the normal lifecycle: pending count hits zero -> unpin -> the
+        // pages are ordinary first-pass LRU candidates again
+        tree.unpin_path(&fresh);
+        assert_eq!(tree.pinned_nodes(), 0);
+        let deferred_before = tree.stats().deferred_evictions;
+        assert_eq!(tree.evict(10, &mut pool), 2);
+        assert_eq!(
+            tree.stats().deferred_evictions,
+            deferred_before,
+            "unpinned eviction must not defer"
+        );
+        assert_eq!(pool.used_pages(), 0);
+        tree.check_invariants(&pool).unwrap();
     }
 
     #[test]

@@ -25,6 +25,8 @@
 //! which keeps placement O(window) and makes identical prompts land on the
 //! same shard across the whole process lifetime.
 
+#![warn(missing_docs)]
+
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::util::{fnv1a_from, FNV_OFFSET};
@@ -39,6 +41,7 @@ pub enum RoutePolicy {
 }
 
 impl RoutePolicy {
+    /// Parse a CLI/JSON policy name (`affinity`, `round_robin`/`rr`).
     pub fn parse(s: &str) -> anyhow::Result<Self> {
         Ok(match s {
             "round-robin" | "round_robin" | "rr" => RoutePolicy::RoundRobin,
@@ -47,6 +50,7 @@ impl RoutePolicy {
         })
     }
 
+    /// Canonical name as reported by `/metrics` (`route` field).
     pub fn name(&self) -> &'static str {
         match self {
             RoutePolicy::RoundRobin => "round_robin",
@@ -70,6 +74,8 @@ pub struct Router {
 }
 
 impl Router {
+    /// Router over `shards` peer shards. `page_tokens` sizes the affinity
+    /// fingerprint window; `imbalance_factor` (≥ 1) sets the spill rule.
     pub fn new(
         policy: RoutePolicy,
         shards: usize,
@@ -157,6 +163,7 @@ impl Router {
 /// [`Router::place_spill`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Placement {
+    /// the shard this request should be submitted to
     pub shard: usize,
     /// the overloaded home shard this request was spilled away from
     pub spilled_from: Option<usize>,

@@ -1,8 +1,13 @@
 //! Minimal HTTP/1.1 JSON serving front-end (hand-rolled on std::net — the
 //! offline vendor set has no hyper/axum/tokio; DESIGN.md §3).
 //!
-//! POST /generate {"prompt": "...", "adapter": 3, "max_new": 24, "tag": 0}
+//! POST /generate {"prompt": "...", "adapter": 3, "max_new": 24, "tag": 0,
+//!                 "fan": 0}
 //!   -> {"tokens": [...], "text": "...", "ttft_us": ..., "latency_us": ...}
+//!
+//! `tag` is the opaque workflow id (affinity routing + the shard's gang
+//! scheduler group key); `fan` optionally declares how many requests of
+//! the tag form one workflow step, so the shard may gang-admit them.
 //! GET /stats   -> aggregated pool metrics JSON
 //! GET /metrics -> per-shard snapshots + the same aggregate + route policy
 //!
@@ -166,7 +171,7 @@ fn handle_cmd(
             true
         }
         Cmd::Stats(reply) => {
-            let _ = reply.send(engine.metrics.to_json());
+            let _ = reply.send(engine.stats_json());
             true
         }
         Cmd::Shutdown => false,
@@ -371,6 +376,22 @@ impl Server {
         max_new: usize,
         tag: u64,
     ) -> anyhow::Result<RequestOutcome> {
+        self.generate_outcome_hinted(prompt_tokens, adapter, max_new, tag, 0)
+    }
+
+    /// Like [`Server::generate_outcome_tagged`], with a declared fan
+    /// width: `fan = K > 1` tells the target shard's gang scheduler that
+    /// K requests of this tag form one workflow step, so admission may
+    /// hold briefly (`gang_hold_ms`) for the stragglers and admit the fan
+    /// together. `fan <= 1` is a plain tagged submission.
+    pub fn generate_outcome_hinted(
+        &self,
+        prompt_tokens: Vec<u32>,
+        adapter: u32,
+        max_new: usize,
+        tag: u64,
+        fan: usize,
+    ) -> anyhow::Result<RequestOutcome> {
         self.validate_request(&prompt_tokens, max_new)?;
         let depths: Vec<usize> = self
             .shards
@@ -394,6 +415,7 @@ impl Server {
             max_new,
             arrival_us: 0,
             ignore_eos: false,
+            fan,
         };
         let mut attempts = 0;
         loop {
@@ -848,11 +870,13 @@ impl Server {
         // opaque workflow id: feeds the affinity fingerprint so one
         // workflow's agents co-locate even across HTTP connections
         let tag = j.get("tag").and_then(Json::as_usize).unwrap_or(0) as u64;
+        // declared fan width of this workflow step (gang-admission hint)
+        let fan = j.get("fan").and_then(Json::as_usize).unwrap_or(0);
         let tokens = self.tokenizer.encode(prompt);
         if let Err(e) = self.validate_request(&tokens, max_new) {
             return err("400 Bad Request", format!("{e:#}"));
         }
-        match self.generate_outcome_tagged(tokens, adapter, max_new, tag) {
+        match self.generate_outcome_hinted(tokens, adapter, max_new, tag, fan) {
             Ok(RequestOutcome::Finished(fin)) => (
                 "200 OK",
                 Json::obj(vec![

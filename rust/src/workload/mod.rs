@@ -293,14 +293,24 @@ impl WorkflowDriver {
         self.next_req_id += 1;
         self.inflight.insert(id, (rid, step));
         let workflow = self.requests[rid].workflow;
+        // declared fan width for the gang scheduler: a MapReduce map step
+        // is an n_mappers-wide fan (they all carry this request's tag);
+        // ReAct steps and the reducer are single-file
+        let fan = match self.spec.kind {
+            WorkflowKind::MapReduce { n_mappers } if step < n_mappers => n_mappers,
+            _ => 1,
+        };
         Request {
             id,
-            tag: rid as u64,
+            // tags are 1-based: tag 0 is reserved for untagged traffic,
+            // which the gang scheduler deliberately ignores
+            tag: rid as u64 + 1,
             adapter: self.adapter_for(workflow, step),
             tokens: prompt,
             max_new: self.spec.output_len,
             arrival_us,
             ignore_eos: true,
+            fan,
         }
     }
 
@@ -572,12 +582,18 @@ pub struct MultiWorkflowHttpSpec {
     /// K: concurrent workflows, one client thread each
     pub workflows: usize,
     /// M: agents per workflow, issued sequentially within the workflow
+    /// (or as a declared fan — see `parallel`)
     pub agents_per_workflow: usize,
     /// words in each workflow's private shared context
     pub shared_words: usize,
     /// per-agent unique words appended after the shared context
     pub unique_words: usize,
     pub max_new: usize,
+    /// MapReduce shape instead of ReAct: agent 0 still runs first (it
+    /// primes the workflow's shared context), but agents 1..M then fan
+    /// out as a *parallel* burst, each declaring `fan: M-1` on submit so
+    /// the home shard's gang scheduler co-admits the step
+    pub parallel: bool,
 }
 
 impl Default for MultiWorkflowHttpSpec {
@@ -588,6 +604,7 @@ impl Default for MultiWorkflowHttpSpec {
             shared_words: 120,
             unique_words: 4,
             max_new: 24,
+            parallel: false,
         }
     }
 }
@@ -607,6 +624,35 @@ pub fn multi_workflow_prompt(
     words.join(" ")
 }
 
+/// POST one workflow agent's request; returns its client-side latency in
+/// microseconds on success, None on any failure.
+fn post_workflow_agent(
+    addr: &str,
+    spec: &MultiWorkflowHttpSpec,
+    w: usize,
+    a: usize,
+    fan: usize,
+) -> Option<f64> {
+    let body = Json::obj(vec![
+        ("prompt", Json::str(multi_workflow_prompt(spec, w, a))),
+        (
+            "adapter",
+            Json::num(((w * spec.agents_per_workflow + a) % 64) as f64),
+        ),
+        ("max_new", Json::num(spec.max_new as f64)),
+        // 1-based: tag 0 means untagged and would opt workflow 0 out of
+        // gang scheduling
+        ("tag", Json::num((w + 1) as f64)),
+        ("fan", Json::num(fan as f64)),
+    ])
+    .to_string();
+    let start = std::time::Instant::now();
+    match crate::server::http_post(addr, "/generate", &body) {
+        Ok((200, _)) => Some(start.elapsed().as_micros() as f64),
+        Ok(_) | Err(_) => None,
+    }
+}
+
 /// Run the multi-workflow scenario against a serving address; returns a
 /// JSON report (counts, client-side latency summary, throughput).
 pub fn run_multi_workflow_load(
@@ -621,26 +667,39 @@ pub fn run_multi_workflow_load(
         let addr = addr.to_string();
         let spec = spec.clone();
         handles.push(std::thread::spawn(move || {
+            let mut results: Vec<Option<f64>> = Vec::new();
+            if spec.parallel && spec.agents_per_workflow > 1 {
+                // MapReduce shape: agent 0 primes the shared context,
+                // then the remaining agents fan out in parallel, each
+                // declaring the step's fan width for gang admission
+                results.push(post_workflow_agent(&addr, &spec, w, 0, 1));
+                let fan = spec.agents_per_workflow - 1;
+                let mut burst = Vec::new();
+                for a in 1..spec.agents_per_workflow {
+                    let addr = addr.clone();
+                    let spec = spec.clone();
+                    burst.push(std::thread::spawn(move || {
+                        post_workflow_agent(&addr, &spec, w, a, fan)
+                    }));
+                }
+                for b in burst {
+                    results.push(b.join().unwrap_or(None));
+                }
+            } else {
+                // ReAct shape: agents run single-file (fan 1 = no hold)
+                for a in 0..spec.agents_per_workflow {
+                    results.push(post_workflow_agent(&addr, &spec, w, a, 1));
+                }
+            }
             let mut latency = Series::new();
             let (mut ok, mut errors) = (0usize, 0usize);
-            for a in 0..spec.agents_per_workflow {
-                let body = Json::obj(vec![
-                    ("prompt", Json::str(multi_workflow_prompt(&spec, w, a))),
-                    (
-                        "adapter",
-                        Json::num(((w * spec.agents_per_workflow + a) % 64) as f64),
-                    ),
-                    ("max_new", Json::num(spec.max_new as f64)),
-                    ("tag", Json::num(w as f64)),
-                ])
-                .to_string();
-                let start = std::time::Instant::now();
-                match crate::server::http_post(&addr, "/generate", &body) {
-                    Ok((200, _)) => {
+            for l in results {
+                match l {
+                    Some(us) => {
                         ok += 1;
-                        latency.push(start.elapsed().as_micros() as f64);
+                        latency.push(us);
                     }
-                    Ok(_) | Err(_) => errors += 1,
+                    None => errors += 1,
                 }
             }
             (latency, ok, errors)
@@ -660,6 +719,7 @@ pub fn run_multi_workflow_load(
     Ok(Json::obj(vec![
         ("workflows", Json::num(spec.workflows as f64)),
         ("agents_per_workflow", Json::num(spec.agents_per_workflow as f64)),
+        ("parallel", Json::Bool(spec.parallel)),
         (
             "requests",
             Json::num((spec.workflows * spec.agents_per_workflow) as f64),
@@ -678,7 +738,8 @@ pub fn run_multi_workflow_load(
 
 /// One *hot* workflow whose agents arrive in a parallel burst, plus a few
 /// cold background workflows: the spill-forcing scenario behind
-/// cross-shard page migration. All hot agents share tag 0, the same
+/// cross-shard page migration. All hot agents share one tag
+/// ([`SkewedWorkflowHttpSpec::HOT_TAG`]), the same
 /// shared context AND the same adapter (one specialized agent role
 /// fanned out, the MapReduce-mapper shape) — so affinity routes them to
 /// one home shard where both their bCache and rCache coverage live. The
@@ -722,6 +783,12 @@ impl SkewedWorkflowHttpSpec {
     /// bCache+rCache coverage is what makes a spill migratable).
     pub const HOT_ADAPTER: usize = 7;
 
+    /// The hot workflow's tag. Nonzero (tag 0 = untagged, which the
+    /// gang scheduler ignores) and far above any cold workflow's tag
+    /// (those are 1..=cold_workflows), so the hot fan both gangs and
+    /// never collides with a cold tag.
+    pub const HOT_TAG: u64 = 0xF00D;
+
     /// The hot workflow's shared-context prompt for burst agent `agent`
     /// (reuses the multi-workflow prompt shape: workflow id 0 is hot).
     pub fn hot_prompt(&self, agent: usize) -> String {
@@ -742,6 +809,7 @@ impl SkewedWorkflowHttpSpec {
             shared_words: self.shared_words,
             unique_words: self.unique_words,
             max_new: self.max_new,
+            parallel: false, // prompt-shape helper only; never driven
         }
     }
 }
@@ -772,7 +840,7 @@ pub fn run_skewed_workflow_load(
     let (status, body) = post(
         spec.hot_prompt(spec.hot_agents),
         SkewedWorkflowHttpSpec::HOT_ADAPTER,
-        0,
+        SkewedWorkflowHttpSpec::HOT_TAG as usize,
         spec.max_new,
     )?;
     anyhow::ensure!(status == 200, "primer request failed ({status}): {body}");
@@ -792,7 +860,10 @@ pub fn run_skewed_workflow_load(
                     Json::num(SkewedWorkflowHttpSpec::HOT_ADAPTER as f64),
                 ),
                 ("max_new", Json::num(spec.max_new as f64)),
-                ("tag", Json::num(0.0)),
+                (
+                    "tag",
+                    Json::num(SkewedWorkflowHttpSpec::HOT_TAG as f64),
+                ),
             ])
             .to_string();
             let start = std::time::Instant::now();

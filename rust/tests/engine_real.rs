@@ -59,6 +59,7 @@ fn submit_stream(e: &mut Engine, shared: &[u32], n: usize, same_adapter: bool) {
             max_new: 10,
             arrival_us: i as u64,
             ignore_eos: true,
+            fan: 0,
         });
     }
 }
@@ -175,6 +176,7 @@ fn incremental_batch_assembly_is_lossless() {
             max_new: 10,
             arrival_us: seq.now_us(),
             ignore_eos: true,
+            fan: 0,
         });
         fin_s.extend(drive(&mut seq, 1));
     }

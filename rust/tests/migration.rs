@@ -65,7 +65,8 @@ fn run_skewed(migrate: bool) -> Json {
     // primer: runs alone so the home shard has the hot context published
     // (both cache components) before the burst can spill anyone
     let primer = tok.encode(&spec.hot_prompt(spec.hot_agents));
-    srv.generate_tagged(primer, adapter, MAX_NEW, 0).unwrap();
+    srv.generate_tagged(primer, adapter, MAX_NEW, SkewedWorkflowHttpSpec::HOT_TAG)
+        .unwrap();
 
     // the burst: staggered so the home shard's in-flight depth is
     // visible to each successive placement decision
@@ -75,7 +76,8 @@ fn run_skewed(migrate: bool) -> Json {
         let tokens = tok.encode(&spec.hot_prompt(a));
         clients.push(std::thread::spawn(move || {
             std::thread::sleep(std::time::Duration::from_millis(a as u64 * STAGGER_MS));
-            srv.generate_tagged(tokens, adapter, MAX_NEW, 0).unwrap();
+            srv.generate_tagged(tokens, adapter, MAX_NEW, SkewedWorkflowHttpSpec::HOT_TAG)
+                .unwrap();
         }));
     }
     for c in clients {
@@ -101,7 +103,8 @@ fn run_skewed(migrate: bool) -> Json {
 fn home_shard(spec: &SkewedWorkflowHttpSpec) -> usize {
     let tok = HashTokenizer::new(2048);
     let tokens = tok.encode(&spec.hot_prompt(0));
-    Router::new(RoutePolicy::Affinity, SHARDS, PAGE_TOKENS, 2.0).affinity_shard(&tokens, 0)
+    Router::new(RoutePolicy::Affinity, SHARDS, PAGE_TOKENS, 2.0)
+        .affinity_shard(&tokens, SkewedWorkflowHttpSpec::HOT_TAG)
 }
 
 /// (matched-page rate of the home shard, matched-page rate across every

@@ -47,13 +47,15 @@ fn run_scenario(route: RoutePolicy) -> (f64, Vec<usize>) {
         shared_words: 160,
         unique_words: 4,
         max_new: 8,
+        parallel: false,
     };
     let tok = HashTokenizer::new(2048); // sim model vocab
     for w in 0..spec.workflows {
         for a in 0..spec.agents_per_workflow {
             let tokens = tok.encode(&multi_workflow_prompt(&spec, w, a));
             let adapter = (w * spec.agents_per_workflow + a) as u32;
-            srv.generate_tagged(tokens, adapter, spec.max_new, w as u64)
+            // 1-based tags, matching the HTTP harness (tag 0 = untagged)
+            srv.generate_tagged(tokens, adapter, spec.max_new, w as u64 + 1)
                 .unwrap();
         }
     }
