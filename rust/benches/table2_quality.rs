@@ -28,7 +28,7 @@ fn run_policy(
     let exec = PjrtExecutor::load(dir)?;
     let cfg = EngineConfig {
         policy,
-        cache: CacheConfig { page_tokens: 16, budget_bytes: 256 << 20 },
+        cache: CacheConfig { page_tokens: 16, budget_bytes: 256 << 20, capacity_bytes: 0 },
         seed: 5,
         ..EngineConfig::default()
     };

@@ -45,8 +45,18 @@ pub struct CacheConfig {
     /// tokens per page (allocator + radix granularity)
     pub page_tokens: usize,
     /// total byte budget for KV state, split between the pools; this is
-    /// the experiment's "GPU memory" knob that creates contention
+    /// the experiment's "GPU memory" knob that creates contention. The
+    /// budget is *elastic* at runtime (`Engine::set_budget_bytes`): the
+    /// pool rebalancer may lend a shard budget from its cold peers.
     pub budget_bytes: usize,
+    /// physical pool sizing (bytes): the page tables and backing buffers
+    /// are built for this many bytes even though allocation is enforced
+    /// against the (possibly smaller, elastic) `budget_bytes`. The
+    /// headroom is what lets a shard actually *spend* budget lent to it
+    /// by the rebalancer. 0 = size the pools to `budget_bytes` exactly
+    /// (no headroom — the single-engine default, where there is no peer
+    /// to borrow from).
+    pub capacity_bytes: usize,
 }
 
 impl Default for CacheConfig {
@@ -54,6 +64,7 @@ impl Default for CacheConfig {
         CacheConfig {
             page_tokens: 16,
             budget_bytes: 64 << 20,
+            capacity_bytes: 0,
         }
     }
 }
@@ -142,6 +153,17 @@ pub struct ServerConfig {
     /// loads `calibration.json` into this); None = derive the FLOP terms
     /// from the model geometry and use `migration_bandwidth_bytes_per_s`
     pub migration_cost: Option<crate::exec::CostModel>,
+    /// elastic shard budgets: a pool supervisor periodically lends free
+    /// byte budget from cold shards to hot ones (see the `rebalance`
+    /// module). Armed only when the pool has more than one shard.
+    pub rebalance: bool,
+    /// how often (wall-clock ms) the supervisor reads every shard's
+    /// budget pressure and moves budget
+    pub rebalance_interval_ms: u64,
+    /// how much of its static slice a shard may lend out, in [0, 1]:
+    /// the lend floor is `slice * (1 - lend_max_frac)` (clamped to at
+    /// least 1/8 of the slice), so no shard is ever starved
+    pub lend_max_frac: f64,
 }
 
 impl Default for ServerConfig {
@@ -159,6 +181,9 @@ impl Default for ServerConfig {
             migration_max_inflight: 4,
             migration_bandwidth_bytes_per_s: crate::exec::DEFAULT_MIGRATION_BANDWIDTH,
             migration_cost: None,
+            rebalance: true,
+            rebalance_interval_ms: 50,
+            lend_max_frac: 0.5,
         }
     }
 }
@@ -211,6 +236,20 @@ impl ServerConfig {
             );
             cfg.migration_bandwidth_bytes_per_s = v;
         }
+        if let Some(v) = j.get("rebalance").and_then(Json::as_bool) {
+            cfg.rebalance = v;
+        }
+        if let Some(v) = j.get("rebalance_interval_ms").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "server.rebalance_interval_ms must be > 0");
+            cfg.rebalance_interval_ms = v as u64;
+        }
+        if let Some(v) = j.get("lend_max_frac").and_then(Json::as_f64) {
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&v),
+                "server.lend_max_frac must be in [0, 1]"
+            );
+            cfg.lend_max_frac = v;
+        }
         Ok(cfg)
     }
 }
@@ -242,12 +281,40 @@ impl EngineConfig {
     /// engines: the byte budget and residency cap are split N ways (the
     /// pool as a whole spends one "GPU memory" budget) and the seed is
     /// decorrelated per shard so peer engines don't sample in lockstep.
+    ///
+    /// The split is **exact**: shard `i` takes `total / N` plus one unit
+    /// of the remainder for `i < total % N`, so the slices sum to the
+    /// configured totals (the old plain `/ N` silently dropped up to
+    /// `N - 1` bytes/slots pool-wide — and the budget conservation the
+    /// elastic rebalancer asserts starts from this sum).
+    ///
+    /// Each slice is also given physical pool **headroom** so a shard
+    /// that borrows budget from cold peers can actually allocate pages
+    /// against it: an explicitly configured pool `capacity_bytes`
+    /// (`cache.capacity_mb`) is split N ways like the budget, otherwise
+    /// each slice defaults to 2x its budget (never beyond the whole
+    /// pool's budget).
+    ///
+    /// Degenerate splits (a total smaller than the shard count) floor
+    /// every slice at 1 and therefore overshoot the sum — a pool with
+    /// fewer budget bytes or running slots than shards is a
+    /// misconfiguration, kept non-zero only so each engine stays
+    /// constructible.
     pub fn shard_slice(&self, shard: usize, shards: usize) -> EngineConfig {
         assert!(shards > 0, "shard pool must be non-empty");
         assert!(shard < shards, "shard index {shard} out of range {shards}");
         let mut cfg = self.clone();
-        cfg.cache.budget_bytes = (self.cache.budget_bytes / shards).max(1);
-        cfg.sched.max_running = (self.sched.max_running / shards).max(1);
+        let budget = self.cache.budget_bytes;
+        let slice = (budget / shards + usize::from(shard < budget % shards)).max(1);
+        cfg.cache.budget_bytes = slice;
+        let cap = self.cache.capacity_bytes;
+        cfg.cache.capacity_bytes = if cap > 0 {
+            (cap / shards + usize::from(shard < cap % shards)).max(slice)
+        } else {
+            slice.saturating_mul(2).min(budget.max(slice))
+        };
+        let mr = self.sched.max_running;
+        cfg.sched.max_running = (mr / shards + usize::from(shard < mr % shards)).max(1);
         cfg.seed = self
             .seed
             .wrapping_add((shard as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
@@ -265,6 +332,9 @@ impl EngineConfig {
             }
             if let Some(v) = c.get("budget_mb").and_then(Json::as_f64) {
                 cfg.cache.budget_bytes = (v * 1048576.0) as usize;
+            }
+            if let Some(v) = c.get("capacity_mb").and_then(Json::as_f64) {
+                cfg.cache.capacity_bytes = (v * 1048576.0) as usize;
             }
         }
         if let Some(s) = j.get("sched") {
@@ -326,7 +396,9 @@ mod tests {
                 "idle_wait_ms":5,"io_timeout_ms":1000,"shards":4,
                 "route":"round_robin","imbalance_factor":3.5,
                 "migrate":false,"migration_max_inflight":2,
-                "migration_bandwidth_bytes_per_s":1e9}"#,
+                "migration_bandwidth_bytes_per_s":1e9,
+                "rebalance":false,"rebalance_interval_ms":20,
+                "lend_max_frac":0.25}"#,
         )
         .unwrap();
         let cfg = ServerConfig::from_json(&j).unwrap();
@@ -341,6 +413,9 @@ mod tests {
         assert!(!cfg.migrate);
         assert_eq!(cfg.migration_max_inflight, 2);
         assert!((cfg.migration_bandwidth_bytes_per_s - 1e9).abs() < 1.0);
+        assert!(!cfg.rebalance);
+        assert_eq!(cfg.rebalance_interval_ms, 20);
+        assert!((cfg.lend_max_frac - 0.25).abs() < 1e-9);
         // zero workers / zero shards / sub-1 imbalance are rejected,
         // absent fields keep defaults
         assert!(ServerConfig::from_json(&json::parse(r#"{"workers":0}"#).unwrap()).is_err());
@@ -353,6 +428,15 @@ mod tests {
             &json::parse(r#"{"migration_max_inflight":0}"#).unwrap()
         )
         .is_err());
+        // a lend fraction outside [0, 1] is rejected
+        assert!(ServerConfig::from_json(
+            &json::parse(r#"{"lend_max_frac":1.5}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServerConfig::from_json(
+            &json::parse(r#"{"rebalance_interval_ms":0}"#).unwrap()
+        )
+        .is_err());
         let d = ServerConfig::from_json(&json::parse("{}").unwrap()).unwrap();
         assert_eq!(d.workers, ServerConfig::default().workers);
         assert_eq!(d.max_body_bytes, 1 << 20);
@@ -362,12 +446,19 @@ mod tests {
         assert!((d.imbalance_factor - 1.5).abs() < 1e-9);
         assert!(d.migrate, "migration defaults on");
         assert_eq!(d.migration_max_inflight, 4);
+        assert!(d.rebalance, "elastic budgets default on");
+        assert_eq!(d.rebalance_interval_ms, 50);
+        assert!((d.lend_max_frac - 0.5).abs() < 1e-9);
     }
 
     #[test]
     fn shard_slice_splits_budget_and_decorrelates_seeds() {
         let cfg = EngineConfig {
-            cache: CacheConfig { page_tokens: 16, budget_bytes: 64 << 20 },
+            cache: CacheConfig {
+                page_tokens: 16,
+                budget_bytes: 64 << 20,
+                capacity_bytes: 0,
+            },
             seed: 42,
             ..EngineConfig::default()
         };
@@ -378,9 +469,67 @@ mod tests {
         assert_eq!(a.sched.max_running, cfg.sched.max_running / 4);
         assert_ne!(a.seed, b.seed);
         assert_ne!(a.seed, cfg.seed);
-        // degenerate single-shard slice is the whole budget
+        // every slice has physical headroom (2x) for borrowed budget,
+        // never beyond the whole pool's budget
+        assert_eq!(a.cache.capacity_bytes, 32 << 20);
+        // degenerate single-shard slice is the whole budget, no headroom
+        // (there is no peer to borrow from)
         let whole = cfg.shard_slice(0, 1);
         assert_eq!(whole.cache.budget_bytes, 64 << 20);
+        assert_eq!(whole.cache.capacity_bytes, 64 << 20);
+        // an explicit pool capacity is split N ways instead of the 2x
+        // default (the `cache.capacity_mb` knob survives sharding)
+        let explicit = EngineConfig {
+            cache: CacheConfig {
+                page_tokens: 16,
+                budget_bytes: 64 << 20,
+                capacity_bytes: 256 << 20,
+            },
+            ..EngineConfig::default()
+        };
+        assert_eq!(explicit.shard_slice(0, 4).cache.capacity_bytes, 64 << 20);
+    }
+
+    #[test]
+    fn shard_slice_distributes_remainders_exactly() {
+        // the old `/ N` silently dropped up to N-1 bytes (and running
+        // slots) pool-wide; the slices must now sum to the configured
+        // totals for awkward shard counts
+        for shards in [1usize, 2, 3, 5, 7, 12] {
+            for budget in [64 << 20, (64 << 20) + 1, 10_000_019, 1 << 20] {
+                let cfg = EngineConfig {
+                    cache: CacheConfig {
+                        page_tokens: 16,
+                        budget_bytes: budget,
+                        capacity_bytes: 0,
+                    },
+                    ..EngineConfig::default()
+                };
+                let slices: Vec<EngineConfig> =
+                    (0..shards).map(|i| cfg.shard_slice(i, shards)).collect();
+                let budget_sum: usize =
+                    slices.iter().map(|s| s.cache.budget_bytes).sum();
+                assert_eq!(
+                    budget_sum, budget,
+                    "budget sum for {budget} over {shards} shards"
+                );
+                let running_sum: usize =
+                    slices.iter().map(|s| s.sched.max_running).sum();
+                assert_eq!(
+                    running_sum, cfg.sched.max_running,
+                    "max_running sum over {shards} shards"
+                );
+                // the remainder lands on the low shards, one unit each —
+                // slices never differ by more than one
+                let min = slices.iter().map(|s| s.cache.budget_bytes).min().unwrap();
+                let max = slices.iter().map(|s| s.cache.budget_bytes).max().unwrap();
+                assert!(max - min <= 1, "uneven split: {min}..{max}");
+                for s in &slices {
+                    assert!(s.cache.capacity_bytes >= s.cache.budget_bytes);
+                    assert!(s.cache.capacity_bytes <= budget);
+                }
+            }
+        }
     }
 
     #[test]

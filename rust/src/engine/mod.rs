@@ -24,9 +24,11 @@
 //! `Engine` instances as peer *shards* (`server::Server::start_sharded`),
 //! each with its own executor, pools and trees and a 1/N slice of the
 //! byte budget (`EngineConfig::shard_slice`); the `router` module decides
-//! which shard a request's prefix affinity lands it on. Per-shard
-//! determinism is preserved: a shard's event stream depends only on the
-//! requests routed to it.
+//! which shard a request's prefix affinity lands it on. The slice is
+//! *elastic*: the server's rebalance supervisor moves budget between
+//! shards at runtime (`Engine::set_budget_bytes`, `rebalance` module).
+//! Per-shard determinism is preserved: a shard's event stream depends
+//! only on the requests and budget moves routed to it.
 //!
 //! CoW invariant (checked by debug assertions + tests): a page is written
 //! only while its refcount is 1. Fork inheritance is page-aligned, the
@@ -43,6 +45,7 @@ use crate::kvcache::{pages_for, BlockPool, PageId, PoolSpec};
 use crate::metrics::{DropReason, DroppedRequest, EngineMetrics, FinishedRequest};
 use crate::migrate::{export_component, MigrationEstimate, MigrationPayload};
 use crate::radix::{DualRadixTree, MatchResult, PinPath};
+use crate::rebalance::BudgetPressure;
 use crate::util::json::Json;
 use crate::runtime::{argmax, DecodeArgs, PrefillArgs};
 use crate::util::rng::Rng;
@@ -196,6 +199,13 @@ pub trait Driver {
 pub struct Engine {
     pub cfg: EngineConfig,
     exec: Box<dyn Executor>,
+    /// the *currently enforced* byte budget across both pools. Starts at
+    /// `cfg.cache.budget_bytes` and moves at runtime via
+    /// `set_budget_bytes` — the elastic-budget rebalancer lends budget
+    /// between shards. Distinct from the pools' physical capacity, which
+    /// is fixed at construction (with headroom; see
+    /// `CacheConfig::capacity_bytes`).
+    budget_bytes: usize,
     base_pool: BlockPool,
     res_pool: Option<BlockPool>,
     trees: DualRadixTree,
@@ -270,22 +280,26 @@ impl Engine {
 
         // Both pools draw on ONE byte budget (the experiment's "GPU
         // memory"): each pool's page table is sized so it alone could fill
-        // the budget, and `alloc_pages` enforces the global limit — so the
-        // base/residual split is fully dynamic, exactly like two data
-        // structures sharing one device memory.
+        // the *capacity*, and `alloc_pages` enforces the (elastic) budget
+        // — so the base/residual split is fully dynamic, exactly like two
+        // data structures sharing one device memory. Capacity may exceed
+        // the budget (`CacheConfig::capacity_bytes` headroom): the extra
+        // pages are spendable only when the pool rebalancer lends this
+        // shard budget from a cold peer.
         let budget = cfg.cache.budget_bytes;
+        let capacity = cfg.cache.capacity_bytes.max(budget);
         let base_pool = BlockPool::new(PoolSpec {
             page_tokens: pt,
             n_layers: meta.n_layers,
             width: meta.kv_width(),
-            n_pages: (budget / (meta.n_layers * 2 * meta.kv_width() * 4 * pt)).max(4),
+            n_pages: (capacity / (meta.n_layers * 2 * meta.kv_width() * 4 * pt)).max(4),
         });
         let res_pool = if cfg.policy.uses_residual() {
             Some(BlockPool::new(PoolSpec {
                 page_tokens: pt,
                 n_layers: meta.n_layers,
                 width: meta.rank_effective,
-                n_pages: (budget / (meta.n_layers * 2 * meta.rank_effective * 4 * pt))
+                n_pages: (capacity / (meta.n_layers * 2 * meta.rank_effective * 4 * pt))
                     .max(4),
             }))
         } else {
@@ -304,6 +318,7 @@ impl Engine {
         };
         Ok(Engine {
             rng: Rng::seeded(cfg.seed ^ 0xF0F0),
+            budget_bytes: budget,
             cfg,
             exec,
             base_pool,
@@ -361,6 +376,102 @@ impl Engine {
     }
     pub fn used_cache_bytes(&self) -> usize {
         self.base_pool.used_bytes() + self.res_pool.as_ref().map_or(0, |p| p.used_bytes())
+    }
+
+    // -----------------------------------------------------------------
+    // elastic byte budget (dynamic shard budgets; ROADMAP item)
+    // -----------------------------------------------------------------
+
+    /// The currently enforced byte budget across both pools. Starts at
+    /// `cfg.cache.budget_bytes`; the pool rebalancer moves it at runtime.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Physical pool capacity: the bytes the constructed page tables
+    /// could hold if every page were used. May exceed the budget — the
+    /// headroom a borrowing shard spends lent budget against — or, with
+    /// a budget below the minimum pool floor (4 pages), fall short of it.
+    pub fn pool_capacity_bytes(&self) -> usize {
+        self.base_pool.capacity_bytes()
+            + self.res_pool.as_ref().map_or(0, |p| p.capacity_bytes())
+    }
+
+    /// *Reported* capacity: how many bytes this shard could actually
+    /// cache right now — the smaller of the physical pools and the
+    /// enforced budget. The pools are floored at 4 pages each, so with a
+    /// tiny budget the raw pool capacity exceeds what allocation will
+    /// ever grant; utilization derived from the raw number read >100%.
+    pub fn capacity_bytes(&self) -> usize {
+        self.pool_capacity_bytes().min(self.budget_bytes)
+    }
+
+    /// Set the enforced byte budget and converge to it: a shrink evicts
+    /// cold (unleased, unpinned) radix pages until usage fits the new
+    /// budget or nothing cold remains. Previously a shrunk budget was
+    /// only consulted at the *next* allocation, so a quiet shard never
+    /// reclaimed anything. Returns the pages evicted by the enforcement.
+    pub fn set_budget_bytes(&mut self, bytes: usize) -> usize {
+        self.budget_bytes = bytes;
+        self.enforce_budget()
+    }
+
+    /// Evict cold radix pages until `used_cache_bytes() <= budget_bytes`
+    /// or no evictable page remains. Never touches running sequences
+    /// (their pages are leased or pool-held outside the trees) and never
+    /// takes workflow-pinned pages (`RadixTree::evict_unpinned` — a
+    /// shrink defers pins exactly like first-pass LRU pressure). Any
+    /// remaining overage stays enforced lazily by the allocation-time
+    /// budget check, exactly as before.
+    ///
+    /// Both trees shrink (base first — its pages are ~n/r times larger):
+    /// this is not a violation of the decoupled eviction policy (paper
+    /// §5.2), which forbids *one pool's allocation pressure* from
+    /// cascading into the other; a budget move is global by definition,
+    /// like the construction-time sizing.
+    pub fn enforce_budget(&mut self) -> usize {
+        let mut freed_pages = 0;
+        loop {
+            let used = self.used_cache_bytes();
+            if used <= self.budget_bytes {
+                break;
+            }
+            let over = used - self.budget_bytes;
+            let bpb = self.base_pool.spec().bytes_per_page();
+            let freed_base = self
+                .trees
+                .base
+                .evict_unpinned(over.div_ceil(bpb), &mut self.base_pool);
+            let used = self.used_cache_bytes();
+            let mut freed_res = 0;
+            if used > self.budget_bytes {
+                if let Some(pool) = self.res_pool.as_mut() {
+                    let rpb = pool.spec().bytes_per_page();
+                    let want = (used - self.budget_bytes).div_ceil(rpb);
+                    freed_res = self.trees.residual.evict_unpinned(want, pool);
+                }
+            }
+            if freed_base + freed_res == 0 {
+                break; // the remainder is running/pinned/leased state
+            }
+            freed_pages += freed_base + freed_res;
+        }
+        freed_pages
+    }
+
+    /// This shard's budget-pressure snapshot — what `Cmd::Pressure`
+    /// serves the pool rebalancer. Counters are cumulative (the planner
+    /// differences them across ticks).
+    pub fn budget_pressure(&self) -> BudgetPressure {
+        BudgetPressure {
+            used_bytes: self.used_cache_bytes(),
+            budget_bytes: self.budget_bytes,
+            capacity_bytes: self.pool_capacity_bytes(),
+            budget_denials: self.metrics.budget_denials,
+            alloc_failures: self.base_pool.alloc_failures()
+                + self.res_pool.as_ref().map_or(0, |p| p.alloc_failures()),
+            oom_drops: self.metrics.oom_drops,
+        }
     }
 
     pub fn submit(&mut self, req: Request) {
@@ -721,7 +832,8 @@ impl Engine {
     // -----------------------------------------------------------------
 
     fn alloc_pages(&mut self, which: Which, n: usize, for_seq: u64) -> Option<Vec<PageId>> {
-        let budget = self.cfg.cache.budget_bytes;
+        let budget = self.budget_bytes;
+        let mut budget_denied = false;
         let mut pages = Vec::with_capacity(n);
         loop {
             while pages.len() < n {
@@ -730,7 +842,8 @@ impl Engine {
                     Which::Res => self.res_pool.as_ref().unwrap().spec().bytes_per_page(),
                 };
                 if self.used_cache_bytes() + page_bytes > budget {
-                    break; // global budget exhausted
+                    budget_denied = true;
+                    break; // global (elastic) budget exhausted
                 }
                 let pool = match which {
                     Which::Base => &mut self.base_pool,
@@ -766,7 +879,12 @@ impl Engine {
             if self.preempt_one(for_seq) {
                 continue;
             }
-            // out of options: roll back
+            // out of options: roll back. If the byte budget (rather than
+            // physical pool exhaustion) ever blocked this attempt, count
+            // it — the rebalancer's hot-shard signal.
+            if budget_denied {
+                self.metrics.budget_denials += 1;
+            }
             let pool = match which {
                 Which::Base => &mut self.base_pool,
                 Which::Res => self.res_pool.as_mut().expect("res pool"),
@@ -994,14 +1112,14 @@ impl Engine {
             let res_hit = self.trees.residual.probe_pages(seq.req.adapter, probe);
             needed += total_pages.saturating_sub(res_hit) * res.spec().bytes_per_page();
         }
-        let free = self.cfg.cache.budget_bytes.saturating_sub(self.used_cache_bytes());
+        let free = self.budget_bytes.saturating_sub(self.used_cache_bytes());
         let reclaimable = self.trees.base.reclaimable_pages(&self.base_pool) * base_page
             + self.res_pool.as_ref().map_or(0, |p| {
                 self.trees.residual.reclaimable_pages(p) * p.spec().bytes_per_page()
             });
         // headroom: concurrent decode growth + estimate error would
         // otherwise preempt-thrash right at the admission boundary
-        let slack = self.cfg.cache.budget_bytes / 16;
+        let slack = self.budget_bytes / 16;
         needed + slack <= free + reclaimable
     }
 
@@ -1010,6 +1128,10 @@ impl Engine {
     fn prefill_tick(&mut self, sid: u64) -> anyhow::Result<bool> {
         if !self.seqs[&sid].admitted {
             if !self.can_admit(sid) {
+                // the admission gate is budget-bound (free + reclaimable
+                // vs lifetime footprint): a blocked head is this shard
+                // asking for more budget, tick after tick
+                self.metrics.budget_denials += 1;
                 return Ok(false); // wait for memory; decode keeps draining
             }
             self.admit_fork(sid);
@@ -1491,14 +1613,22 @@ impl Engine {
     }
 
     /// Full per-shard stats snapshot: the engine metrics plus the
-    /// tree-derived eviction counters — what `Cmd::Stats` (and therefore
-    /// `/stats` and `/metrics`) serve per shard.
+    /// tree-derived eviction counters and the live budget/capacity
+    /// gauges — what `Cmd::Stats` (and therefore `/stats` and
+    /// `/metrics`) serve per shard. The per-shard `budget_bytes` always
+    /// sum to the pool's configured budget (the rebalancer conserves
+    /// the total); `capacity_bytes` is the *reported* capacity,
+    /// `min(physical pools, budget)`, so utilization never reads >100%.
     pub fn stats_json(&mut self) -> Json {
         let deferred = self.trees.base.stats().deferred_evictions
             + self.trees.residual.stats().deferred_evictions;
+        let budget = self.budget_bytes;
+        let capacity = self.capacity_bytes();
         let mut j = self.metrics.to_json();
         if let Json::Obj(m) = &mut j {
             m.insert("evictions_deferred".into(), Json::num(deferred as f64));
+            m.insert("budget_bytes".into(), Json::num(budget as f64));
+            m.insert("capacity_bytes".into(), Json::num(capacity as f64));
         }
         j
     }
@@ -1722,7 +1852,10 @@ impl Engine {
                     .spec()
                     .bytes_per_page(),
             };
-            if self.used_cache_bytes() + page_bytes <= self.cfg.cache.budget_bytes {
+            // the *current* (elastic) budget, not the constructed one: a
+            // shard whose budget was lent away must not let imports
+            // push it back over the shrunken limit
+            if self.used_cache_bytes() + page_bytes <= self.budget_bytes {
                 let pool = match which {
                     Which::Base => &mut self.base_pool,
                     Which::Res => self.res_pool.as_mut().expect("res pool"),

@@ -12,6 +12,7 @@ fn engine(policy: CachePolicy, budget_mb: usize) -> Engine {
         cache: CacheConfig {
             page_tokens: 16,
             budget_bytes: budget_mb << 20,
+            capacity_bytes: 0,
         },
         sched: SchedulerConfig::default(),
         seed: 7,
@@ -28,6 +29,7 @@ fn engine_with(policy: CachePolicy, budget_mb: usize, gang: bool, hold_ms: u64) 
         cache: CacheConfig {
             page_tokens: 16,
             budget_bytes: budget_mb << 20,
+            capacity_bytes: 0,
         },
         sched: SchedulerConfig {
             gang,
@@ -752,5 +754,175 @@ fn context_overflow_finishes_at_window_edge() {
     let fin = run_to_completion(&mut e);
     assert_eq!(fin.len(), 1);
     assert!(fin[0].generated.len() <= 10);
+    e.check_quiescent().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// elastic byte budgets (ISSUE 5): capacity reporting, shrink
+// enforcement, pressure accounting
+// ---------------------------------------------------------------------
+
+#[test]
+fn tiny_budget_reported_capacity_never_exceeds_budget() {
+    // one base page of budget: the pools' 4-page construction floors
+    // give more physical capacity than the budget will ever grant, so
+    // utilization derived from the raw pool size would read >100% — the
+    // *reported* capacity must clamp to the budget
+    let cfg = EngineConfig {
+        policy: CachePolicy::Disaggregated,
+        cache: CacheConfig {
+            page_tokens: 16,
+            budget_bytes: 64 << 10,
+            capacity_bytes: 0,
+        },
+        ..EngineConfig::default()
+    };
+    let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8]).unwrap();
+    let mut e = Engine::new(cfg, Box::new(sim)).unwrap();
+    assert!(
+        e.pool_capacity_bytes() > 64 << 10,
+        "expected the 4-page construction floor to exceed the budget"
+    );
+    assert_eq!(e.capacity_bytes(), 64 << 10, "reported capacity must clamp");
+    let j = e.stats_json();
+    assert_eq!(j.at(&["capacity_bytes"]).as_usize().unwrap(), 64 << 10);
+    assert_eq!(j.at(&["budget_bytes"]).as_usize().unwrap(), 64 << 10);
+
+    // explicit headroom sizes the pools past the budget (lent budget is
+    // spendable) but the reported capacity still clamps to the budget
+    let cfg = EngineConfig {
+        policy: CachePolicy::Disaggregated,
+        cache: CacheConfig {
+            page_tokens: 16,
+            budget_bytes: 64 << 10,
+            capacity_bytes: 1 << 20,
+        },
+        ..EngineConfig::default()
+    };
+    let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8]).unwrap();
+    let e = Engine::new(cfg, Box::new(sim)).unwrap();
+    assert!(e.pool_capacity_bytes() >= 2 << 20); // each pool sized to capacity
+    assert_eq!(e.budget_bytes(), 64 << 10);
+    assert_eq!(e.capacity_bytes(), 64 << 10);
+}
+
+#[test]
+fn budget_shrink_reclaims_cold_pages_but_never_pinned_or_leased() {
+    let mut e = engine(CachePolicy::Disaggregated, 8);
+    // fill the trees with four distinct published contexts
+    let prompts: Vec<Vec<u32>> = (0..4).map(|i| toks(160, 100 + i)).collect();
+    for (i, p) in prompts.iter().enumerate() {
+        e.submit(req(i as u64 + 1, 0, p.clone(), 4, 0));
+    }
+    let fin = run_to_completion(&mut e);
+    assert_eq!(fin.len(), 4);
+    let used_before = e.used_cache_bytes();
+    assert!(used_before > 2 << 20, "cache not filled: {used_before}");
+
+    // an in-flight export lease on context 0 and a queued-fork pin on
+    // context 1: a shrink must reclaim around both
+    let lease = e.trees.base.match_lease(0, &prompts[0], &mut e.base_pool);
+    assert_eq!(lease.tokens, 160);
+    let pins = e.trees.base.pin_prefix(0, &prompts[1]);
+    assert!(!pins.is_empty());
+
+    let target = used_before * 5 / 8;
+    let freed = e.set_budget_bytes(target);
+    assert!(freed > 0, "shrink evicted nothing");
+    assert!(
+        e.used_cache_bytes() <= target,
+        "shrink did not converge: {} > {target}",
+        e.used_cache_bytes()
+    );
+    assert_eq!(e.budget_bytes(), target);
+    // the leased and pinned prefixes are fully intact
+    assert_eq!(e.trees.base.probe_pages(0, &prompts[0]), 10);
+    assert_eq!(e.trees.base.probe_pages(0, &prompts[1]), 10);
+    assert!(e.trees.base.pinned_nodes() > 0);
+
+    // cleanup: drop the lease (tree + pool refs) and the pins; the
+    // engine must be internally consistent afterwards
+    e.trees.base.release_path(&lease.path);
+    for p in &lease.pages {
+        e.base_pool.release(*p);
+    }
+    e.trees.base.unpin_path(&pins);
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn budget_shrink_mid_flight_spares_running_sequences() {
+    let mut e = engine(CachePolicy::Disaggregated, 8);
+    // a cold published context the shrink can reclaim
+    let cold = toks(160, 9);
+    e.submit(req(1, 0, cold.clone(), 4, 0));
+    assert_eq!(run_to_completion(&mut e).len(), 1);
+
+    // a sequence mid-decode: prompt 120 + 8 new tokens stays within the
+    // 8 pages its prefill allocated, so it needs no further allocation
+    let warm = toks(120, 10);
+    e.submit(req(2, 1, warm.clone(), 8, e.now_us()));
+    for _ in 0..10_000 {
+        e.tick().unwrap();
+        if e.seqs.get(&2).is_some_and(|s| s.phase == Phase::Decode) {
+            break;
+        }
+    }
+    assert!(
+        e.seqs.get(&2).is_some_and(|s| s.phase == Phase::Decode),
+        "sequence never reached decode"
+    );
+
+    // shrink below current usage: the cold context goes, the running
+    // sequence's pages (pool-shared with the tree, refcount > 1) stay
+    let target = e.used_cache_bytes() - (600 << 10);
+    e.set_budget_bytes(target);
+    assert!(e.used_cache_bytes() <= target);
+    assert_eq!(
+        e.trees.base.probe_pages(0, &cold),
+        0,
+        "cold context survived the shrink"
+    );
+
+    let fin = run_to_completion(&mut e);
+    assert_eq!(fin.len(), 1, "running sequence was killed by the shrink");
+    assert_eq!(fin[0].generated.len(), 8);
+    assert_eq!(e.metrics.oom_drops, 0);
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn budget_denials_counted_and_grow_unblocks() {
+    // a 64 KiB budget (one base page) with 2 MiB of physical headroom:
+    // the first request is denied admission by the budget and dropped;
+    // growing the budget lets an identical request through — lent
+    // budget is actually spendable thanks to the pool headroom
+    let cfg = EngineConfig {
+        policy: CachePolicy::Disaggregated,
+        cache: CacheConfig {
+            page_tokens: 16,
+            budget_bytes: 64 << 10,
+            capacity_bytes: 2 << 20,
+        },
+        ..EngineConfig::default()
+    };
+    let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8]).unwrap();
+    let mut e = Engine::new(cfg, Box::new(sim)).unwrap();
+    e.submit(req(1, 0, toks(80, 3), 8, 0));
+    assert_eq!(run_to_completion(&mut e).len(), 0);
+    assert_eq!(e.metrics.oom_drops, 1);
+    assert!(e.metrics.budget_denials >= 1, "budget denial not counted");
+    assert_eq!(e.drain_dropped().len(), 1);
+    let p = e.budget_pressure();
+    assert_eq!(p.budget_bytes, 64 << 10);
+    assert_eq!(p.oom_drops, 1);
+    assert!(p.budget_denials >= 1);
+    assert!(p.capacity_bytes >= 2 << 20);
+
+    e.set_budget_bytes(2 << 20);
+    e.submit(req(2, 0, toks(80, 3), 8, e.now_us()));
+    let fin = run_to_completion(&mut e);
+    assert_eq!(fin.len(), 1, "grown budget still blocked the request");
+    assert_eq!(fin[0].generated.len(), 8);
     e.check_quiescent().unwrap();
 }

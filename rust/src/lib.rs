@@ -14,6 +14,7 @@ pub mod kvcache;
 pub mod metrics;
 pub mod migrate;
 pub mod radix;
+pub mod rebalance;
 pub mod router;
 pub mod runtime;
 pub mod server;

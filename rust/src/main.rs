@@ -25,6 +25,7 @@ USAGE:
                     [--workers N] [--max-body-kb N] [--shards N] [--route R]
                     [--imbalance F] [--migrate on|off] [--migrate-gbps F]
                     [--migrate-max-inflight N] [--gang on|off] [--gang-hold-ms T]
+                    [--rebalance on|off] [--rebalance-ms T] [--lend-max F]
   forkkv run        [--policy P] [--model M] [--dataset D] [--workflow react|mapreduce]
                     [--workflows N] [--requests N] [--rate R] [--budget-mb N] [--seed S]
                     [--gang on|off] [--real --artifacts DIR]
@@ -32,16 +33,19 @@ USAGE:
                     [--budget-mb N] [--max-new N] [--workers N] [--pace-us U]
                     [--shards N] [--route R] [--imbalance F]
                     [--workflows K --agents-per-workflow M] [--fan-parallel]
-                    [--hot-agents N --stagger-ms T]
+                    [--hot-agents N --stagger-ms T] [--waves W]
+                    [--unique-words U] [--hot-pad-words P]
                     [--migrate on|off] [--migrate-gbps F]
                     [--gang on|off] [--gang-hold-ms T]
+                    [--rebalance on|off] [--rebalance-ms T] [--lend-max F]
                     # closed-loop concurrent HTTP load against a sim-backed server;
                     # with --workflows, K workflows of M agents fork shared contexts
                     # (the multi-shard placement scenario; add --fan-parallel to
                     # burst agents 1..M as a declared fan and exercise gang
                     # admission); with --hot-agents, one hot workflow bursts N
                     # parallel agents so spills are forced and cross-shard page
-                    # migration (--migrate) is exercised
+                    # migration (--migrate) is exercised; --waves W replays the
+                    # hot burst W times (the elastic-budget --rebalance A/B)
   forkkv calibrate  [--artifacts DIR]   # measure real PJRT costs + inter-shard copy
                                         # bandwidth -> calibration.json
 
@@ -49,6 +53,15 @@ USAGE:
   D: loogle | narrativeqa | apigen     R: affinity | round_robin"
     );
     std::process::exit(2);
+}
+
+/// Parse an `on|off` CLI flag value (also accepts true/false/1/0).
+fn parse_on_off(flag: &str, v: &str) -> anyhow::Result<bool> {
+    match v {
+        "on" | "true" | "1" => Ok(true),
+        "off" | "false" | "0" => Ok(false),
+        other => anyhow::bail!("{flag} takes on|off, got {other:?}"),
+    }
 }
 
 struct Args(Vec<String>);
@@ -102,11 +115,7 @@ fn server_config(args: &Args) -> anyhow::Result<ServerConfig> {
         anyhow::ensure!(cfg.imbalance_factor >= 1.0, "--imbalance must be >= 1.0");
     }
     if let Some(v) = args.flag("--migrate") {
-        cfg.migrate = match v.as_str() {
-            "on" | "true" | "1" => true,
-            "off" | "false" | "0" => false,
-            other => anyhow::bail!("--migrate takes on|off, got {other:?}"),
-        };
+        cfg.migrate = parse_on_off("--migrate", &v)?;
     }
     if let Some(v) = args.flag("--migrate-gbps") {
         let gbps: f64 = v.parse()?;
@@ -118,6 +127,20 @@ fn server_config(args: &Args) -> anyhow::Result<ServerConfig> {
         anyhow::ensure!(
             cfg.migration_max_inflight > 0,
             "--migrate-max-inflight must be > 0"
+        );
+    }
+    if let Some(v) = args.flag("--rebalance") {
+        cfg.rebalance = parse_on_off("--rebalance", &v)?;
+    }
+    if let Some(v) = args.flag("--rebalance-ms") {
+        cfg.rebalance_interval_ms = v.parse()?;
+        anyhow::ensure!(cfg.rebalance_interval_ms > 0, "--rebalance-ms must be > 0");
+    }
+    if let Some(v) = args.flag("--lend-max") {
+        cfg.lend_max_frac = v.parse()?;
+        anyhow::ensure!(
+            (0.0..=1.0).contains(&cfg.lend_max_frac),
+            "--lend-max must be in [0, 1]"
         );
     }
     Ok(cfg)
@@ -134,16 +157,12 @@ fn engine_config(args: &Args) -> anyhow::Result<EngineConfig> {
     let seed: u64 = args.flag("--seed").map(|v| v.parse()).transpose()?.unwrap_or(42);
     let mut cfg = EngineConfig {
         policy,
-        cache: CacheConfig { page_tokens: 16, budget_bytes: budget_mb << 20 },
+        cache: CacheConfig { page_tokens: 16, budget_bytes: budget_mb << 20, capacity_bytes: 0 },
         seed,
         ..EngineConfig::default()
     };
     if let Some(v) = args.flag("--gang") {
-        cfg.sched.gang = match v.as_str() {
-            "on" | "true" | "1" => true,
-            "off" | "false" | "0" => false,
-            other => anyhow::bail!("--gang takes on|off, got {other:?}"),
-        };
+        cfg.sched.gang = parse_on_off("--gang", &v)?;
     }
     if let Some(v) = args.flag("--gang-hold-ms") {
         cfg.sched.gang_hold_ms = v.parse()?;
@@ -258,6 +277,14 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         .map(|v| v.parse())
         .transpose()?
         .unwrap_or(4);
+    let waves: usize = args.flag("--waves").map(|v| v.parse()).transpose()?.unwrap_or(1);
+    let unique_words: Option<usize> =
+        args.flag("--unique-words").map(|v| v.parse()).transpose()?;
+    let hot_pad_words: usize = args
+        .flag("--hot-pad-words")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(0);
     let fan_parallel = args.has("--fan-parallel");
 
     let policy = cfg.policy;
@@ -302,13 +329,18 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
 
     let mut report = match (hot_agents, workflows) {
         (Some(n), _) => {
-            let spec = SkewedWorkflowHttpSpec {
+            let mut spec = SkewedWorkflowHttpSpec {
                 hot_agents: n,
                 stagger_ms,
                 cold_workflows: workflows.unwrap_or(3),
                 max_new,
+                waves,
+                hot_pad_words,
                 ..SkewedWorkflowHttpSpec::default()
             };
+            if let Some(u) = unique_words {
+                spec.unique_words = u;
+            }
             run_skewed_workflow_load(&addr, &spec)?
         }
         (None, Some(k)) => {
@@ -342,6 +374,7 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
             Json::str(server.config().route_policy.name()),
         );
         m.insert("router".into(), server.router_stats());
+        m.insert("rebalancer".into(), server.rebalancer_stats());
         m.insert("policy".into(), Json::str(policy.name()));
         m.insert("gang".into(), Json::Bool(gang));
         m.insert("workers".into(), Json::num(server.config().workers as f64));

@@ -27,6 +27,13 @@ pub struct EngineMetrics {
     pub preemptions: u64,
     pub oom_drops: u64,
 
+    /// admissions/allocations denied by the *byte budget* (counted per
+    /// blocked scheduler tick, not per request): distinct from the
+    /// pools' physical `alloc_failures`, this is the shard's "I am
+    /// bumping my budget ceiling" signal — the pressure input the
+    /// elastic-budget rebalancer reads to decide who borrows
+    pub budget_denials: u64,
+
     /// forks first-admitted while another member of their workflow tag
     /// was already resident — the gang scheduler's co-admissions
     pub gang_admitted: u64,
@@ -138,6 +145,7 @@ impl EngineMetrics {
             ("completed", Json::num(self.completed as f64)),
             ("preemptions", Json::num(self.preemptions as f64)),
             ("oom_drops", Json::num(self.oom_drops as f64)),
+            ("budget_denials", Json::num(self.budget_denials as f64)),
             ("gang_admitted", Json::num(self.gang_admitted as f64)),
             ("per_tag", self.per_tag_json()),
             ("migrated_pages", Json::num(self.migrated_pages as f64)),
@@ -191,7 +199,7 @@ impl EngineMetrics {
 /// Keys summed across shards by [`aggregate_stats`]. Series summaries are
 /// deliberately absent: percentiles don't compose across shards, so those
 /// stay in the per-shard snapshots.
-const SUMMED_KEYS: [&str; 18] = [
+const SUMMED_KEYS: [&str; 20] = [
     "prefill_steps",
     "decode_steps",
     "decode_rows",
@@ -204,6 +212,10 @@ const SUMMED_KEYS: [&str; 18] = [
     "completed",
     "preemptions",
     "oom_drops",
+    "budget_denials",
+    // per-shard elastic budgets: the aggregate is the pool total, which
+    // the rebalancer conserves (always equals the configured budget)
+    "budget_bytes",
     "gang_admitted",
     "evictions_deferred",
     "migrated_pages",
@@ -401,6 +413,7 @@ mod tests {
             max_decode_batch: 2,
             prompt_tokens: 900,
             oom_drops: 2,
+            budget_denials: 7,
             gang_admitted: 1,
             migrated_pages: 2,
             recompute_tokens_saved: 32,
@@ -412,6 +425,7 @@ mod tests {
         assert_eq!(agg.at(&["decode_steps"]).as_usize().unwrap(), 100);
         assert_eq!(agg.at(&["completed"]).as_usize().unwrap(), 3);
         assert_eq!(agg.at(&["oom_drops"]).as_usize().unwrap(), 2);
+        assert_eq!(agg.at(&["budget_denials"]).as_usize().unwrap(), 7);
         assert_eq!(agg.at(&["max_decode_batch"]).as_usize().unwrap(), 6);
         assert_eq!(agg.at(&["gang_admitted"]).as_usize().unwrap(), 3);
         assert_eq!(agg.at(&["migrated_pages"]).as_usize().unwrap(), 7);

@@ -306,12 +306,28 @@ impl RadixTree {
     /// into a budget leak.
     /// Decoupled policy (paper §5.2): this touches only *this* tree/pool.
     pub fn evict(&mut self, want_pages: usize, pool: &mut BlockPool) -> usize {
-        let freed = self.evict_pass(want_pages, pool, false);
+        let freed = self.evict_pass(want_pages, pool, false, true);
         if freed < want_pages {
-            freed + self.evict_pass(want_pages - freed, pool, true)
+            freed + self.evict_pass(want_pages - freed, pool, true, true)
         } else {
             freed
         }
+    }
+
+    /// First-pass-only eviction: up to `want_pages` LRU leaves that are
+    /// neither leased nor workflow-pinned. Unlike [`RadixTree::evict`]
+    /// this never escalates to pinned pages — budget-*shrink*
+    /// enforcement (`Engine::enforce_budget`, run when the pool
+    /// rebalancer reclaims lent budget) takes cold cache only, so a
+    /// queued fork's pinned prefix survives a rebalance exactly like it
+    /// survives first-pass LRU pressure. The un-freed remainder stays
+    /// enforced lazily by the allocation-time budget check. Pins skipped
+    /// here do NOT count as `deferred_evictions`: that counter means "a
+    /// pinned page survived to eviction's second pass", and a budget
+    /// shrink has no second pass — counting its skips would inflate the
+    /// gang-eviction signal on every rebalance tick.
+    pub fn evict_unpinned(&mut self, want_pages: usize, pool: &mut BlockPool) -> usize {
+        self.evict_pass(want_pages, pool, false, false)
     }
 
     fn evict_pass(
@@ -319,6 +335,7 @@ impl RadixTree {
         want_pages: usize,
         pool: &mut BlockPool,
         evict_pinned: bool,
+        count_deferrals: bool,
     ) -> usize {
         let mut evicted = 0;
         let mut deferred: Vec<std::cmp::Reverse<(u64, NodeId)>> = Vec::new();
@@ -347,7 +364,9 @@ impl RadixTree {
             if !evict_pinned && node.pins > 0 {
                 // a queued workflow fork still needs this prefix: evict
                 // it last (second pass only)
-                self.stats.deferred_evictions += 1;
+                if count_deferrals {
+                    self.stats.deferred_evictions += 1;
+                }
                 deferred.push(std::cmp::Reverse((stamp, id)));
                 continue;
             }

@@ -1,0 +1,492 @@
+//! Elastic shard budgets: the pool-level budget rebalancer.
+//!
+//! `EngineConfig::shard_slice` splits one "GPU memory" budget statically
+//! 1/N across the engine shards. A skewed workflow (one hot MapReduce fan
+//! pinned to its home shard by affinity routing) saturates that shard's
+//! slice and starts OOM-dropping while its neighbors sit on free pages —
+//! the imbalance the paper's *dynamic* base/residual split (ForkKV §5.1)
+//! exists to avoid inside a single device. This module is the
+//! disaggregated-pool analogue: a server-level supervisor periodically
+//! reads every shard's [`BudgetPressure`] and **lends free budget from
+//! cold shards to hot ones**, bounded so no shard is ever starved.
+//!
+//! Design rules (all enforced by [`Rebalancer::tick`], property-tested):
+//!   - **conservation** — the per-shard budgets always sum to the
+//!     configured pool total; every byte removed from a donor lands on
+//!     exactly one borrower in the same tick;
+//!   - **lend floor** — a donor never drops below
+//!     `base_slice * (1 - lend_max_frac)` (clamped to at least 1/8 of the
+//!     slice), so a cold shard that turns hot later still owns a working
+//!     budget immediately;
+//!   - **free bytes only** — a donor lends only budget it is not using
+//!     (plus a slack margin), so granting a loan never forces the donor to
+//!     evict its own cache;
+//!   - **physical cap** — a borrower's budget never exceeds its pools'
+//!     physical capacity (`CacheConfig::capacity_bytes` headroom), so lent
+//!     budget is always actually usable;
+//!   - **hysteresis** — a shard must stay non-hot for
+//!     [`DONOR_COOLDOWN_TICKS`] ticks before it lends, moves are bounded
+//!     by a per-donor per-tick step, and surplus drifts back toward the
+//!     static split only while *no* shard is hot — budget cannot thrash
+//!     back and forth between two bursty shards.
+//!
+//! The planner is deliberately pure (budgets in, budgets out, no
+//! channels): the server supervisor feeds it `Cmd::Pressure` snapshots and
+//! applies its moves with `Cmd::Budget`, and the property tests drive it
+//! directly with synthetic pressure sequences.
+
+#![warn(missing_docs)]
+
+/// One shard's budget-pressure snapshot, served by `Cmd::Pressure`
+/// (`Engine::budget_pressure`). Counters are cumulative; the planner
+/// differences them against the previous tick itself.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BudgetPressure {
+    /// bytes currently held by used pages across both pools
+    pub used_bytes: usize,
+    /// the shard's currently enforced byte budget
+    pub budget_bytes: usize,
+    /// physical pool capacity (page tables × page bytes) — the hard
+    /// ceiling on how much budget this shard can actually spend
+    pub capacity_bytes: usize,
+    /// cumulative allocations/admissions denied by the byte budget
+    pub budget_denials: u64,
+    /// cumulative allocations that found a pool physically exhausted
+    pub alloc_failures: u64,
+    /// cumulative requests dropped by the memory-deadlock breaker
+    pub oom_drops: u64,
+}
+
+/// Ticks a shard must stay non-hot before it is allowed to lend budget
+/// (the donor half of the thrash hysteresis).
+pub const DONOR_COOLDOWN_TICKS: u8 = 2;
+
+/// A shard whose used bytes reach 15/16 of its budget counts as hot even
+/// before any allocation is denied (numerator/denominator of the ratio).
+const HOT_USED_NUM: usize = 15;
+const HOT_USED_DEN: usize = 16;
+
+/// The pool-level budget planner. Owns the authoritative per-shard budget
+/// vector; [`Rebalancer::tick`] consumes one pressure snapshot per shard
+/// and returns the budget moves to apply.
+#[derive(Debug)]
+pub struct Rebalancer {
+    /// the static `shard_slice` budgets the pool was constructed with
+    base: Vec<usize>,
+    /// lend floor per shard (see module docs)
+    floor: Vec<usize>,
+    /// current budgets (always sums to `sum(base)`)
+    budgets: Vec<usize>,
+    /// last observed `budget_denials + alloc_failures` per shard
+    last_fail: Vec<u64>,
+    /// last observed `oom_drops` per shard
+    last_oom: Vec<u64>,
+    /// ticks remaining before this shard may lend again
+    cool: Vec<u8>,
+}
+
+impl Rebalancer {
+    /// Planner over a pool whose shards were constructed with
+    /// `base_slices` byte budgets. `lend_max_frac` ∈ [0, 1] bounds how
+    /// much of its base slice a shard may lend out (the floor is clamped
+    /// so at least 1/8 of every slice is unlendable — a shard can never
+    /// be starved into an allocation deadlock).
+    pub fn new(base_slices: Vec<usize>, lend_max_frac: f64) -> Self {
+        assert!(!base_slices.is_empty(), "rebalancer needs at least one shard");
+        let frac = lend_max_frac.clamp(0.0, 1.0);
+        let floor = base_slices
+            .iter()
+            .map(|&b| {
+                let kept = (b as f64 * (1.0 - frac)) as usize;
+                kept.max(b / 8).max(1)
+            })
+            .collect();
+        let n = base_slices.len();
+        Rebalancer {
+            budgets: base_slices.clone(),
+            floor,
+            base: base_slices,
+            last_fail: vec![0; n],
+            last_oom: vec![0; n],
+            cool: vec![0; n],
+        }
+    }
+
+    /// The configured pool total (what the budgets always sum to).
+    pub fn total(&self) -> usize {
+        self.base.iter().sum()
+    }
+
+    /// Current per-shard budgets (the planner's authoritative view).
+    pub fn budgets(&self) -> &[usize] {
+        &self.budgets
+    }
+
+    /// The lend floor of shard `i`.
+    pub fn floor(&self, i: usize) -> usize {
+        self.floor[i]
+    }
+
+    /// One rebalance step. `obs[i]` is shard i's pressure snapshot, or
+    /// `None` for a dead/unreachable shard (its budget is frozen —
+    /// neither lent out nor granted to). Returns the changed budgets as
+    /// `(shard, new_budget_bytes)` plus the total bytes moved this tick.
+    pub fn tick(&mut self, obs: &[Option<BudgetPressure>]) -> (Vec<(usize, usize)>, usize) {
+        let n = self.base.len();
+        assert_eq!(obs.len(), n, "one pressure slot per shard");
+        let before = self.budgets.clone();
+
+        // classify: a shard is hot when its failure counters moved since
+        // the last tick or it is running nearly full against its budget
+        let mut hot = vec![false; n];
+        let mut oom_d = vec![0u64; n];
+        let mut fail_d = vec![0u64; n];
+        for (i, o) in obs.iter().enumerate() {
+            let Some(p) = o else { continue };
+            let fails = p.budget_denials + p.alloc_failures;
+            fail_d[i] = fails.saturating_sub(self.last_fail[i]);
+            self.last_fail[i] = self.last_fail[i].max(fails);
+            oom_d[i] = p.oom_drops.saturating_sub(self.last_oom[i]);
+            self.last_oom[i] = self.last_oom[i].max(p.oom_drops);
+            hot[i] = fail_d[i] > 0
+                || oom_d[i] > 0
+                || (p.used_bytes > 0
+                    && p.used_bytes * HOT_USED_DEN >= self.budgets[i] * HOT_USED_NUM);
+        }
+        for i in 0..n {
+            self.cool[i] = if hot[i] {
+                DONOR_COOLDOWN_TICKS
+            } else {
+                self.cool[i].saturating_sub(1)
+            };
+        }
+
+        // donor offers: cold-for-a-while shards lend free budget above
+        // their floor, at most one step per tick
+        let mut offer = vec![0usize; n];
+        for (i, o) in obs.iter().enumerate() {
+            let Some(p) = o else { continue };
+            if hot[i] || self.cool[i] > 0 || self.budgets[i] <= self.floor[i] {
+                continue;
+            }
+            let slack = self.base[i] / 16;
+            let free = self.budgets[i].saturating_sub(p.used_bytes + slack);
+            let above_floor = self.budgets[i] - self.floor[i];
+            let step = (self.base[i] / 4).max(1);
+            offer[i] = free.min(above_floor).min(step);
+        }
+
+        // borrowers, most-starved first (drops outrank denials outrank
+        // fullness; index breaks ties deterministically)
+        let mut borrowers: Vec<usize> = (0..n)
+            .filter(|&i| {
+                obs[i].is_some()
+                    && hot[i]
+                    && self.budgets[i] < obs[i].as_ref().map_or(0, |p| p.capacity_bytes)
+            })
+            .collect();
+        borrowers.sort_by_key(|&i| (std::cmp::Reverse(oom_d[i]), std::cmp::Reverse(fail_d[i]), i));
+
+        let mut moved = 0usize;
+        if borrowers.is_empty() {
+            // quiet pool: drift surplus back toward the static split so a
+            // past burst doesn't skew budgets forever. Same free-bytes
+            // rule as lending — decay never forces the holder to evict.
+            // per-holder decay allowance, derived once so a surplus
+            // holder returns at most base/8 per *tick* no matter how
+            // many shards are in deficit (the same per-tick step bound
+            // the borrow path enforces via `offer`)
+            let mut give = vec![0usize; n];
+            for (i, o) in obs.iter().enumerate() {
+                let Some(p) = o else { continue };
+                if self.cool[i] > 0 {
+                    continue;
+                }
+                let surplus = self.budgets[i].saturating_sub(self.base[i]);
+                let slack = self.base[i] / 16;
+                let free = self.budgets[i].saturating_sub(p.used_bytes + slack);
+                let step = (self.base[i] / 8).max(1);
+                give[i] = surplus.min(free).min(step);
+            }
+            let mut deficits: Vec<usize> = (0..n)
+                .filter(|&i| obs[i].is_some() && self.budgets[i] < self.base[i])
+                .collect();
+            deficits.sort_by_key(|&i| (std::cmp::Reverse(self.base[i] - self.budgets[i]), i));
+            for d in deficits {
+                let mut want = self.base[d] - self.budgets[d];
+                for i in 0..n {
+                    if want == 0 {
+                        break;
+                    }
+                    if i == d || give[i] == 0 {
+                        continue;
+                    }
+                    let take = give[i].min(want);
+                    give[i] -= take;
+                    self.budgets[i] -= take;
+                    self.budgets[d] += take;
+                    want -= take;
+                    moved += take;
+                }
+            }
+        } else {
+            for &b in &borrowers {
+                let cap = obs[b].as_ref().unwrap().capacity_bytes;
+                let mut want = cap.saturating_sub(self.budgets[b]);
+                for d in 0..n {
+                    if want == 0 {
+                        break;
+                    }
+                    if d == b || offer[d] == 0 {
+                        continue;
+                    }
+                    let take = offer[d].min(want);
+                    offer[d] -= take;
+                    self.budgets[d] -= take;
+                    self.budgets[b] += take;
+                    want -= take;
+                    moved += take;
+                }
+            }
+        }
+
+        let moves: Vec<(usize, usize)> = (0..n)
+            .filter(|&i| self.budgets[i] != before[i])
+            .map(|i| (i, self.budgets[i]))
+            .collect();
+        debug_assert_eq!(
+            self.budgets.iter().sum::<usize>(),
+            self.total(),
+            "budget conservation violated"
+        );
+        (moves, moved)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    const MB: usize = 1 << 20;
+
+    fn pressure(used: usize, budget: usize) -> BudgetPressure {
+        BudgetPressure {
+            used_bytes: used,
+            budget_bytes: budget,
+            capacity_bytes: 2 * MB,
+            budget_denials: 0,
+            alloc_failures: 0,
+            oom_drops: 0,
+        }
+    }
+
+    fn quiet(n: usize, reb: &Rebalancer) -> Vec<Option<BudgetPressure>> {
+        (0..n)
+            .map(|i| Some(pressure(0, reb.budgets()[i])))
+            .collect()
+    }
+
+    #[test]
+    fn hot_shard_borrows_from_cold_ones_and_sum_is_conserved() {
+        let mut reb = Rebalancer::new(vec![MB; 4], 0.5);
+        assert_eq!(reb.total(), 4 * MB);
+        // shard 0 dropped a request; the rest are idle
+        let mut obs = quiet(4, &reb);
+        obs[0] = Some(BudgetPressure { oom_drops: 1, ..pressure(MB, MB) });
+        let (moves, moved) = reb.tick(&obs);
+        assert!(moved > 0, "hot shard got nothing");
+        assert!(!moves.is_empty());
+        assert!(reb.budgets()[0] > MB, "{:?}", reb.budgets());
+        for i in 1..4 {
+            assert!(reb.budgets()[i] >= reb.floor(i));
+            assert!(reb.budgets()[i] < MB);
+        }
+        assert_eq!(reb.budgets().iter().sum::<usize>(), 4 * MB);
+        // per-donor step is base/4: three donors → at most 3/4 MB per tick
+        assert!(moved <= 3 * MB / 4, "step bound violated: {moved}");
+    }
+
+    #[test]
+    fn borrower_is_capped_at_physical_capacity() {
+        let mut reb = Rebalancer::new(vec![MB; 4], 1.0);
+        for _ in 0..32 {
+            let mut obs = quiet(4, &reb);
+            // running at 100% of the current budget: hot every tick
+            obs[0] = Some(pressure(reb.budgets()[0], reb.budgets()[0]));
+            reb.tick(&obs);
+        }
+        assert_eq!(reb.budgets()[0], 2 * MB, "{:?}", reb.budgets());
+        assert_eq!(reb.budgets().iter().sum::<usize>(), 4 * MB);
+    }
+
+    #[test]
+    fn recently_hot_shard_does_not_lend() {
+        let mut reb = Rebalancer::new(vec![MB; 2], 0.5);
+        // shard 1 is hot this tick (denial delta); shard 0 too — nobody
+        // lends, budgets hold
+        let obs = vec![
+            Some(BudgetPressure { budget_denials: 1, ..pressure(MB, MB) }),
+            Some(BudgetPressure { budget_denials: 1, ..pressure(MB, MB) }),
+        ];
+        let (moves, moved) = reb.tick(&obs);
+        assert!(moves.is_empty() && moved == 0);
+        // next tick shard 1 is quiet but still cooling: it must not lend
+        // to a still-hot shard 0 yet
+        let obs = vec![
+            Some(BudgetPressure { budget_denials: 2, ..pressure(MB, MB) }),
+            Some(pressure(0, MB)),
+        ];
+        let (_, moved) = reb.tick(&obs);
+        assert_eq!(moved, 0, "donor lent while cooling down");
+        // after the cooldown elapses it lends
+        let mut lent = 0;
+        for k in 0..3u64 {
+            let obs = vec![
+                Some(BudgetPressure { budget_denials: 3 + k, ..pressure(MB, MB) }),
+                Some(pressure(0, reb.budgets()[1])),
+            ];
+            lent += reb.tick(&obs).1;
+        }
+        assert!(lent > 0, "cooldown never released the donor");
+    }
+
+    #[test]
+    fn quiet_pool_decays_budgets_back_toward_base() {
+        let mut reb = Rebalancer::new(vec![MB; 2], 0.5);
+        let obs = vec![
+            Some(BudgetPressure { oom_drops: 1, ..pressure(MB, MB) }),
+            Some(pressure(0, MB)),
+        ];
+        reb.tick(&obs);
+        let borrowed = reb.budgets()[0];
+        assert!(borrowed > MB);
+        // burst over: everyone quiet (and shard 0's surplus unused) —
+        // budgets drift back to the static split
+        for _ in 0..16 {
+            let obs = quiet(2, &reb);
+            reb.tick(&obs);
+        }
+        assert_eq!(reb.budgets(), &[MB, MB], "decay did not restore the split");
+    }
+
+    #[test]
+    fn decay_is_bounded_per_holder_per_tick() {
+        let mut reb = Rebalancer::new(vec![MB; 4], 1.0);
+        // shard 0 borrows from all three peers, then the pool goes quiet
+        let mut obs = quiet(4, &reb);
+        obs[0] = Some(BudgetPressure { oom_drops: 1, ..pressure(MB, MB) });
+        reb.tick(&obs);
+        assert!(reb.budgets()[0] > MB);
+        // two quiet ticks drain shard 0's hot cooldown without moving
+        // budget; the third is the first decay tick — one surplus holder
+        // facing three deficit shards must still return at most base/8
+        // total (per holder per tick, not per deficit pair)
+        for _ in 0..2 {
+            reb.tick(&quiet(4, &reb));
+        }
+        let before = reb.budgets()[0];
+        reb.tick(&quiet(4, &reb));
+        let returned = before - reb.budgets()[0];
+        assert!(returned > 0, "quiet surplus holder never decayed");
+        assert!(returned <= MB / 8, "decay exceeded the per-tick step: {returned}");
+    }
+
+    #[test]
+    fn dead_shards_freeze_their_budget() {
+        let mut reb = Rebalancer::new(vec![MB; 3], 0.5);
+        let mut obs = quiet(3, &reb);
+        obs[2] = None; // dead
+        obs[0] = Some(BudgetPressure { oom_drops: 1, ..pressure(MB, MB) });
+        reb.tick(&obs);
+        assert_eq!(reb.budgets()[2], MB, "dead shard's budget moved");
+        assert!(reb.budgets()[0] > MB);
+        assert_eq!(reb.budgets().iter().sum::<usize>(), 3 * MB);
+    }
+
+    #[test]
+    fn donor_never_lends_bytes_it_is_using() {
+        let mut reb = Rebalancer::new(vec![MB; 2], 1.0);
+        // donor's cache is nearly full: free (minus slack) is tiny
+        let used = MB - MB / 32;
+        let obs = vec![
+            Some(BudgetPressure { oom_drops: 1, ..pressure(MB, MB) }),
+            Some(pressure(used, MB)),
+        ];
+        let (_, moved) = reb.tick(&obs);
+        assert!(
+            moved <= MB - used,
+            "lent {} bytes but only {} were free",
+            moved,
+            MB - used
+        );
+    }
+
+    #[test]
+    fn prop_random_lend_reclaim_keeps_invariants() {
+        // ISSUE 5 satellite: random lend/reclaim sequences on a 4-shard
+        // pool — the budgets never drift from the configured total, no
+        // shard falls below its lend floor or above its physical
+        // capacity, and every shard always keeps an allocatable budget
+        // (no starvation deadlock).
+        prop::check("rebalance-lend-reclaim", 48, |rng| {
+            let n = 4;
+            let base = MB;
+            let frac = [0.25, 0.5, 0.75, 1.0][rng.below(4)];
+            let cap = base * 2;
+            let mut reb = Rebalancer::new(vec![base; n], frac);
+            let total = reb.total();
+            let mut fails = vec![0u64; n];
+            let mut ooms = vec![0u64; n];
+            for _ in 0..200 {
+                let mut obs: Vec<Option<BudgetPressure>> = Vec::with_capacity(n);
+                for i in 0..n {
+                    if rng.below(16) == 0 {
+                        obs.push(None); // transiently unreachable
+                        continue;
+                    }
+                    let budget = reb.budgets()[i];
+                    // used anywhere from empty to the full budget
+                    let used = rng.below(budget + 1);
+                    // hot roughly a third of the time
+                    match rng.below(6) {
+                        0 => fails[i] += 1 + rng.below(4) as u64,
+                        1 => ooms[i] += 1,
+                        _ => {}
+                    }
+                    obs.push(Some(BudgetPressure {
+                        used_bytes: used,
+                        budget_bytes: budget,
+                        capacity_bytes: cap,
+                        budget_denials: fails[i],
+                        alloc_failures: 0,
+                        oom_drops: ooms[i],
+                    }));
+                }
+                let (moves, moved) = reb.tick(&obs);
+                let sum: usize = reb.budgets().iter().sum();
+                prop_assert!(sum == total, "sum drifted: {sum} != {total}");
+                for i in 0..n {
+                    let b = reb.budgets()[i];
+                    prop_assert!(
+                        b >= reb.floor(i),
+                        "shard {i} below floor: {b} < {}",
+                        reb.floor(i)
+                    );
+                    prop_assert!(b <= cap, "shard {i} above capacity: {b}");
+                    prop_assert!(b > 0, "shard {i} starved to zero budget");
+                }
+                // reported moves must match the authoritative vector
+                for (i, b) in moves {
+                    prop_assert!(
+                        reb.budgets()[i] == b,
+                        "move ({i}, {b}) disagrees with budgets"
+                    );
+                }
+                let _ = moved;
+            }
+            Ok(())
+        });
+    }
+}

@@ -32,6 +32,16 @@
 //! spinning on a sleep loop. The per-shard in-flight count doubles as the
 //! router's load signal.
 //!
+//! Elastic shard budgets: each shard starts with a 1/N slice of the byte
+//! budget, but a skewed workflow can saturate its home slice while
+//! neighbors idle. A rebalance supervisor thread (`forkkv-rebalance`)
+//! periodically reads every shard's budget pressure (`Cmd::Pressure`) and
+//! lends free budget from cold shards to hot ones (`Cmd::Budget`, the
+//! `rebalance` module's planner) — bounded by `lend_max_frac` so no shard
+//! is starved, conserving the pool total. The per-shard `budget_bytes`
+//! gauge and the pool's `budget_rebalances`/`bytes_lent` counters are
+//! served by `GET /metrics`.
+//!
 //! Spill = bandwidth, not FLOPs: when the router spills a request off an
 //! overloaded home shard, the worker first runs the migration pipeline
 //! (`Cmd::Probe` → cost model → `Cmd::Export` → `Cmd::Import`, see
@@ -45,7 +55,7 @@
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
@@ -55,6 +65,7 @@ use crate::engine::{Engine, Request, Tick};
 use crate::exec::CostModel;
 use crate::metrics::{self, FinishedRequest, RequestOutcome};
 use crate::migrate::{MigrationEstimate, MigrationPayload, MigrationPolicy};
+use crate::rebalance::{BudgetPressure, Rebalancer};
 use crate::router::Router;
 use crate::util::json::{self, Json};
 use crate::util::tokenizer::HashTokenizer;
@@ -81,6 +92,16 @@ enum Cmd {
     /// spilled request's Submit, so the pages are in place by admission.
     Import(Box<MigrationPayload>),
     Stats(mpsc::Sender<Json>),
+    /// Elastic budgets step 1: this shard's budget-pressure snapshot
+    /// (used bytes, enforced budget, physical capacity, denial/drop
+    /// counters) — cheap and read-only, what the rebalance supervisor
+    /// polls every tick.
+    Pressure(mpsc::Sender<BudgetPressure>),
+    /// Elastic budgets step 2: set this shard's enforced byte budget.
+    /// A shrink converges immediately (`Engine::set_budget_bytes` evicts
+    /// cold unpinned radix pages down to the new budget); a grow takes
+    /// effect at the next allocation.
+    Budget(usize),
     Shutdown,
 }
 
@@ -113,9 +134,27 @@ pub struct Server {
     /// migrations currently in flight (the bounded migration queue)
     mig_inflight: AtomicUsize,
     counters: RouteCounters,
+    /// elastic-budget planner (None = rebalance off or single shard);
+    /// the supervisor thread and `rebalance_tick` go through here
+    rebalancer: Option<Mutex<Rebalancer>>,
+    /// pool-level elastic-budget outcome counters (`/metrics`)
+    reb_counters: RebalanceCounters,
+    /// tells the rebalance supervisor thread to exit (set by `shutdown`)
+    stop: AtomicBool,
     tokenizer: HashTokenizer,
     max_ctx: usize,
     cfg: ServerConfig,
+}
+
+/// Pool-level elastic-budget counters (the `rebalancer` object of
+/// `GET /metrics`).
+#[derive(Default)]
+struct RebalanceCounters {
+    /// supervisor ticks that moved at least one byte of budget
+    budget_rebalances: AtomicU64,
+    /// cumulative bytes of budget lent between shards (each moved byte
+    /// counted once, on the donor->borrower transfer)
+    bytes_lent: AtomicU64,
 }
 
 /// Pool-level routing/migration outcome counters (served by `/metrics`).
@@ -172,6 +211,14 @@ fn handle_cmd(
         }
         Cmd::Stats(reply) => {
             let _ = reply.send(engine.stats_json());
+            true
+        }
+        Cmd::Pressure(reply) => {
+            let _ = reply.send(engine.budget_pressure());
+            true
+        }
+        Cmd::Budget(bytes) => {
+            engine.set_budget_bytes(bytes);
             true
         }
         Cmd::Shutdown => false,
@@ -289,8 +336,11 @@ impl Server {
             );
         }
         let idle_wait = Duration::from_millis(cfg.idle_wait_ms.max(1));
+        // the planner's authoritative starting point: whatever budgets
+        // the engines were constructed with (normally `shard_slice`)
+        let base_budgets: Vec<usize> = engines.iter().map(|e| e.budget_bytes()).collect();
         let mut shards = Vec::with_capacity(engines.len());
-        let mut handles = Vec::with_capacity(engines.len());
+        let mut handles = Vec::with_capacity(engines.len() + 1);
         for (i, engine) in engines.into_iter().enumerate() {
             let (tx, rx) = mpsc::channel::<Cmd>();
             let depth = Arc::new(AtomicUsize::new(0));
@@ -318,20 +368,37 @@ impl Server {
             c
         });
         let migration = MigrationPolicy::new(cfg.migrate && shards.len() > 1, cost);
+        // elastic budgets need a peer to borrow from and a nonzero lend
+        // allowance; otherwise the static split stands
+        let rebalancer = (cfg.rebalance && shards.len() > 1 && cfg.lend_max_frac > 0.0)
+            .then(|| Mutex::new(Rebalancer::new(base_budgets, cfg.lend_max_frac)));
         let srv = Arc::new(Server {
             shards,
             router,
             migration,
             mig_inflight: AtomicUsize::new(0),
             counters: RouteCounters::default(),
+            rebalancer,
+            reb_counters: RebalanceCounters::default(),
+            stop: AtomicBool::new(false),
             tokenizer: HashTokenizer::new(meta.vocab),
             max_ctx: meta.s_max,
             cfg,
         });
+        if srv.rebalancer.is_some() {
+            let sup = srv.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("forkkv-rebalance".into())
+                    .spawn(move || sup.rebalance_supervisor())
+                    .expect("spawn rebalance supervisor thread"),
+            );
+        }
         (srv, handles)
     }
 
     pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::Relaxed);
         for shard in &self.shards {
             let _ = shard.tx.send(Cmd::Shutdown);
         }
@@ -658,15 +725,109 @@ impl Server {
         ])
     }
 
+    // -----------------------------------------------------------------
+    // elastic shard budgets (the rebalance supervisor)
+    // -----------------------------------------------------------------
+
+    /// The supervisor loop: every `cfg.rebalance_interval_ms` poll each
+    /// shard's budget pressure and apply the planner's moves, until
+    /// `shutdown` raises the stop flag. Runs on its own named thread
+    /// (`forkkv-rebalance`), spawned by `start_sharded`.
+    fn rebalance_supervisor(&self) {
+        let interval = Duration::from_millis(self.cfg.rebalance_interval_ms.max(1));
+        // sleep in short steps so shutdown is never blocked behind a
+        // long interval
+        let step = interval.min(Duration::from_millis(10));
+        let mut since = Duration::ZERO;
+        while !self.stop.load(Ordering::Relaxed) {
+            std::thread::sleep(step);
+            since += step;
+            if since >= interval {
+                since = Duration::ZERO;
+                self.rebalance_tick();
+            }
+        }
+    }
+
+    /// One rebalance step: snapshot every shard's `Cmd::Pressure`, run
+    /// the planner, and push `Cmd::Budget` to each shard whose budget
+    /// moved. Dead shards observe as `None` (their budget is frozen).
+    /// Public so tests can drive the rebalancer deterministically;
+    /// returns the bytes of budget moved this tick.
+    pub fn rebalance_tick(&self) -> usize {
+        let Some(reb) = &self.rebalancer else { return 0 };
+        let mut obs: Vec<Option<BudgetPressure>> = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            if shard.is_poisoned() {
+                obs.push(None);
+                continue;
+            }
+            let (tx, rx) = mpsc::channel();
+            if shard.tx.send(Cmd::Pressure(tx)).is_err() {
+                obs.push(None);
+                continue;
+            }
+            // generous timeout: a shard that can't answer within this is
+            // treated as dead *for this tick* only (its budget freezes)
+            obs.push(rx.recv_timeout(Duration::from_secs(5)).ok());
+        }
+        let (moves, moved) = reb.lock().unwrap_or_else(|e| e.into_inner()).tick(&obs);
+        for &(i, bytes) in &moves {
+            if self.shards[i].tx.send(Cmd::Budget(bytes)).is_err() {
+                // a closed channel means the shard died between the
+                // pressure poll and the move. Poison its depth so the
+                // router and every later tick see it dead — its budget
+                // (including this undeliverable move) freezes in the
+                // planner, exactly like any other dead shard's. A dead
+                // engine allocates nothing, so live shards' enforced
+                // budgets never exceed the planner's conserved total.
+                self.shards[i].depth.store(usize::MAX, Ordering::Relaxed);
+            }
+        }
+        if moved > 0 {
+            self.reb_counters
+                .budget_rebalances
+                .fetch_add(1, Ordering::Relaxed);
+            self.reb_counters
+                .bytes_lent
+                .fetch_add(moved as u64, Ordering::Relaxed);
+        }
+        moved
+    }
+
+    /// Elastic-budget outcome counters and knobs (the `rebalancer`
+    /// object of `GET /metrics`).
+    pub fn rebalancer_stats(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.rebalancer.is_some())),
+            (
+                "interval_ms",
+                Json::num(self.cfg.rebalance_interval_ms as f64),
+            ),
+            ("lend_max_frac", Json::num(self.cfg.lend_max_frac)),
+            (
+                "budget_rebalances",
+                Json::num(self.reb_counters.budget_rebalances.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "bytes_lent",
+                Json::num(self.reb_counters.bytes_lent.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+
     /// Full observability payload: aggregate + per-shard snapshots + the
-    /// active route policy and its spill/migration/reroute counters —
-    /// what `GET /metrics` serves.
+    /// active route policy with its spill/migration/reroute counters +
+    /// the elastic-budget rebalancer counters — what `GET /metrics`
+    /// serves. Each shard snapshot carries its live `budget_bytes`;
+    /// across live shards they always sum to the configured pool budget.
     pub fn metrics_json(&self) -> anyhow::Result<Json> {
         let per_shard = self.shard_stats()?;
         Ok(Json::obj(vec![
             ("aggregate", metrics::aggregate_stats(&per_shard)),
             ("route", Json::str(self.cfg.route_policy.name())),
             ("router", self.router_stats()),
+            ("rebalancer", self.rebalancer_stats()),
             ("per_shard", Json::Arr(per_shard)),
         ]))
     }
@@ -983,7 +1144,7 @@ mod tests {
     fn sim_engine(budget_bytes: usize, wall_pace_us: u64) -> Engine {
         let cfg = EngineConfig {
             policy: CachePolicy::Disaggregated,
-            cache: CacheConfig { page_tokens: 16, budget_bytes },
+            cache: CacheConfig { page_tokens: 16, budget_bytes, capacity_bytes: 0 },
             ..EngineConfig::default()
         };
         let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8])
@@ -1238,6 +1399,129 @@ mod tests {
         assert_eq!(per[0].at(&["dead"]).as_bool(), Some(true));
         assert_eq!(per[1].at(&["completed"]).as_usize().unwrap(), 4);
         assert_eq!(m.at(&["aggregate", "completed"]).as_usize().unwrap(), 4);
+        srv.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn rebalance_lends_budget_to_hot_shard_and_conserves_total() {
+        // 4 shards, 4 MB pool: one 250-token request's lifetime footprint
+        // (~17 base + 17 residual pages ≈ 1.25 MB + admission slack)
+        // exceeds the 1 MB static slice, so its home shard OOM-drops it
+        // while three peers sit idle. One rebalance tick lends the hot
+        // shard their free budget, and the same request then fits.
+        let total = 4 << 20;
+        let base_cfg = EngineConfig {
+            policy: CachePolicy::Disaggregated,
+            cache: CacheConfig {
+                page_tokens: 16,
+                budget_bytes: total,
+                capacity_bytes: 0,
+            },
+            ..EngineConfig::default()
+        };
+        let engines: Vec<Engine> = (0..4)
+            .map(|i| {
+                let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8]).unwrap();
+                Engine::new(base_cfg.shard_slice(i, 4), Box::new(sim)).unwrap()
+            })
+            .collect();
+        let scfg = ServerConfig {
+            rebalance: true,
+            // park the supervisor: the test drives ticks deterministically
+            rebalance_interval_ms: 3_600_000,
+            lend_max_frac: 0.5,
+            ..ServerConfig::default()
+        };
+        let (srv, handles) = Server::start_sharded(engines, scfg);
+
+        let budgets = |srv: &Server| -> Vec<usize> {
+            srv.shard_stats()
+                .unwrap()
+                .iter()
+                .map(|s| s.at(&["budget_bytes"]).as_usize().unwrap())
+                .collect()
+        };
+        // the static split is exact before any rebalance
+        assert_eq!(budgets(&srv).iter().sum::<usize>(), total);
+        assert_eq!(budgets(&srv), vec![total / 4; 4]);
+
+        let tokens: Vec<u32> = (100..350).collect(); // 250 tokens
+        let err = srv.generate_tagged(tokens.clone(), 3, 8, 11).unwrap_err();
+        assert!(format!("{err:#}").contains("dropped"), "{err:#}");
+
+        // the drop (and the budget denials behind it) is the hot signal:
+        // one tick lends the hot shard its idle peers' free budget
+        let moved = srv.rebalance_tick();
+        assert!(moved > 0, "no budget moved toward the hot shard");
+        let after = budgets(&srv);
+        assert_eq!(
+            after.iter().sum::<usize>(),
+            total,
+            "lending must conserve the pool budget: {after:?}"
+        );
+        assert!(
+            after.iter().copied().max().unwrap() > total / 4,
+            "no shard grew past its static slice: {after:?}"
+        );
+
+        // with the lent budget the same request (same tag -> same home
+        // shard) now completes
+        let fin = srv.generate_tagged(tokens, 3, 8, 11).unwrap();
+        assert_eq!(fin.generated.len(), 8);
+
+        let m = srv.metrics_json().unwrap();
+        assert_eq!(m.at(&["rebalancer", "enabled"]).as_bool(), Some(true));
+        assert!(m.at(&["rebalancer", "budget_rebalances"]).as_usize().unwrap() >= 1);
+        assert!(
+            m.at(&["rebalancer", "bytes_lent"]).as_usize().unwrap() >= moved,
+            "{m:?}"
+        );
+        assert!(
+            m.at(&["aggregate", "budget_denials"]).as_usize().unwrap() >= 1,
+            "{m:?}"
+        );
+        assert_eq!(m.at(&["aggregate", "budget_bytes"]).as_usize().unwrap(), total);
+        assert_eq!(m.at(&["aggregate", "oom_drops"]).as_usize().unwrap(), 1);
+
+        srv.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn rebalance_off_keeps_the_static_split() {
+        let total = 4 << 20;
+        let base_cfg = EngineConfig {
+            cache: CacheConfig {
+                page_tokens: 16,
+                budget_bytes: total,
+                capacity_bytes: 0,
+            },
+            ..EngineConfig::default()
+        };
+        let engines: Vec<Engine> = (0..4)
+            .map(|i| {
+                let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8]).unwrap();
+                Engine::new(base_cfg.shard_slice(i, 4), Box::new(sim)).unwrap()
+            })
+            .collect();
+        let scfg = ServerConfig { rebalance: false, ..ServerConfig::default() };
+        let (srv, handles) = Server::start_sharded(engines, scfg);
+        // a drop creates pressure, but with the rebalancer disarmed a
+        // tick is a no-op and every slice stays put
+        let tokens: Vec<u32> = (100..350).collect();
+        let _ = srv.generate_tagged(tokens, 3, 8, 11).unwrap_err();
+        assert_eq!(srv.rebalance_tick(), 0);
+        let m = srv.metrics_json().unwrap();
+        assert_eq!(m.at(&["rebalancer", "enabled"]).as_bool(), Some(false));
+        let per = m.at(&["per_shard"]).as_arr().unwrap();
+        for s in per {
+            assert_eq!(s.at(&["budget_bytes"]).as_usize().unwrap(), total / 4);
+        }
         srv.shutdown();
         for h in handles {
             h.join().unwrap();

@@ -760,9 +760,23 @@ pub struct SkewedWorkflowHttpSpec {
     pub cold_workflows: usize,
     /// words in the hot workflow's shared context
     pub shared_words: usize,
+    /// extra shared-context words appended to the *hot* workflow only
+    /// (cold workflows keep `shared_words`): inflates every hot agent's
+    /// footprint past a single shard's static budget slice without
+    /// touching the cold background — the elastic-budget A/B's pressure
+    /// shape (hot requests need lent budget; cold shards stay lendable)
+    pub hot_pad_words: usize,
     /// per-agent unique words appended after the shared context
     pub unique_words: usize,
     pub max_new: usize,
+    /// sequential repetitions of the whole hot burst (each wave joins
+    /// before the next starts). Wave k replays the *same* per-agent
+    /// prompts, so a later wave measures how much of the hot working set
+    /// survived the pressure of the earlier ones — the elastic-budget
+    /// A/B's signal: with rebalance on, the home shard keeps (or is lent
+    /// room for) the agents' paths and wave 2 lands warm; with the
+    /// static split they were evicted or the agents dropped.
+    pub waves: usize,
 }
 
 impl Default for SkewedWorkflowHttpSpec {
@@ -772,8 +786,10 @@ impl Default for SkewedWorkflowHttpSpec {
             stagger_ms: 4,
             cold_workflows: 3,
             shared_words: 160,
+            hot_pad_words: 0,
             unique_words: 4,
             max_new: 24,
+            waves: 1,
         }
     }
 }
@@ -791,8 +807,12 @@ impl SkewedWorkflowHttpSpec {
 
     /// The hot workflow's shared-context prompt for burst agent `agent`
     /// (reuses the multi-workflow prompt shape: workflow id 0 is hot).
+    /// The hot context carries `hot_pad_words` extra shared words that
+    /// cold workflows do not.
     pub fn hot_prompt(&self, agent: usize) -> String {
-        multi_workflow_prompt(&self.as_multi(), 0, agent)
+        let mut m = self.as_multi();
+        m.shared_words = self.shared_words + self.hot_pad_words;
+        multi_workflow_prompt(&m, 0, agent)
     }
 
     /// Cold workflow `w` (1-based ids so they never collide with hot).
@@ -836,47 +856,26 @@ pub fn run_skewed_workflow_load(
     };
     let t0 = std::time::Instant::now();
     // prime the home shard with the hot context (same adapter as the
-    // burst, so both cache components are published before any spill)
-    let (status, body) = post(
+    // burst, so both cache components are published before any spill).
+    // Under a deliberately starved budget (the elastic-budget A/B's
+    // rebalance-off arm) the engine may 503-drop the primer — that is a
+    // measured outcome of the scenario, counted as an error, not a
+    // harness failure. Transport-level failures still bail.
+    let (status, _body) = post(
         spec.hot_prompt(spec.hot_agents),
         SkewedWorkflowHttpSpec::HOT_ADAPTER,
         SkewedWorkflowHttpSpec::HOT_TAG as usize,
         spec.max_new,
     )?;
-    anyhow::ensure!(status == 200, "primer request failed ({status}): {body}");
+    let mut latency = Series::new();
+    let (mut ok, mut errors) = if status == 200 { (1usize, 0usize) } else { (0, 1) };
 
-    let mut handles = Vec::new();
-    for a in 0..spec.hot_agents {
-        let addr = addr.to_string();
-        let spec = spec.clone();
-        handles.push(std::thread::spawn(move || {
-            std::thread::sleep(std::time::Duration::from_millis(
-                a as u64 * spec.stagger_ms,
-            ));
-            let body = Json::obj(vec![
-                ("prompt", Json::str(spec.hot_prompt(a))),
-                (
-                    "adapter",
-                    Json::num(SkewedWorkflowHttpSpec::HOT_ADAPTER as f64),
-                ),
-                ("max_new", Json::num(spec.max_new as f64)),
-                (
-                    "tag",
-                    Json::num(SkewedWorkflowHttpSpec::HOT_TAG as f64),
-                ),
-            ])
-            .to_string();
-            let start = std::time::Instant::now();
-            match crate::server::http_post(&addr, "/generate", &body) {
-                Ok((200, _)) => (Some(start.elapsed().as_micros() as f64), 1usize, 0usize),
-                Ok(_) | Err(_) => (None, 0, 1),
-            }
-        }));
-    }
+    // cold background workflows run once, concurrent with the first wave
+    let mut cold_handles = Vec::new();
     for w in 1..=spec.cold_workflows {
         let addr = addr.to_string();
         let spec = spec.clone();
-        handles.push(std::thread::spawn(move || {
+        cold_handles.push(std::thread::spawn(move || {
             let body = Json::obj(vec![
                 ("prompt", Json::str(spec.cold_prompt(w))),
                 ("adapter", Json::num((w % 64) as f64)),
@@ -891,9 +890,51 @@ pub fn run_skewed_workflow_load(
             }
         }));
     }
-    let mut latency = Series::new();
-    let (mut ok, mut errors) = (1usize, 0usize); // primer counted
-    for h in handles {
+    // hot waves run sequentially (each joins before the next starts);
+    // every wave replays the same per-agent prompts
+    for _wave in 0..spec.waves.max(1) {
+        let mut handles = Vec::new();
+        for a in 0..spec.hot_agents {
+            let addr = addr.to_string();
+            let spec = spec.clone();
+            handles.push(std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_millis(
+                    a as u64 * spec.stagger_ms,
+                ));
+                let body = Json::obj(vec![
+                    ("prompt", Json::str(spec.hot_prompt(a))),
+                    (
+                        "adapter",
+                        Json::num(SkewedWorkflowHttpSpec::HOT_ADAPTER as f64),
+                    ),
+                    ("max_new", Json::num(spec.max_new as f64)),
+                    (
+                        "tag",
+                        Json::num(SkewedWorkflowHttpSpec::HOT_TAG as f64),
+                    ),
+                ])
+                .to_string();
+                let start = std::time::Instant::now();
+                match crate::server::http_post(&addr, "/generate", &body) {
+                    Ok((200, _)) => {
+                        (Some(start.elapsed().as_micros() as f64), 1usize, 0usize)
+                    }
+                    Ok(_) | Err(_) => (None, 0, 1),
+                }
+            }));
+        }
+        for h in handles {
+            let (l, o, e) = h
+                .join()
+                .map_err(|_| anyhow::anyhow!("skewed load client panicked"))?;
+            if let Some(us) = l {
+                latency.push(us);
+            }
+            ok += o;
+            errors += e;
+        }
+    }
+    for h in cold_handles {
         let (l, o, e) = h
             .join()
             .map_err(|_| anyhow::anyhow!("skewed load client panicked"))?;
@@ -907,9 +948,12 @@ pub fn run_skewed_workflow_load(
     Ok(Json::obj(vec![
         ("hot_agents", Json::num(spec.hot_agents as f64)),
         ("cold_workflows", Json::num(spec.cold_workflows as f64)),
+        ("waves", Json::num(spec.waves.max(1) as f64)),
         (
             "requests",
-            Json::num((1 + spec.hot_agents + spec.cold_workflows) as f64),
+            Json::num(
+                (1 + spec.waves.max(1) * spec.hot_agents + spec.cold_workflows) as f64,
+            ),
         ),
         ("ok", Json::num(ok as f64)),
         ("errors", Json::num(errors as f64)),
@@ -953,7 +997,7 @@ pub mod presets {
         // virtual time onto this machine's real PJRT speed when desired.
         let cfg = EngineConfig {
             policy,
-            cache: CacheConfig { page_tokens: 16, budget_bytes: budget_mb << 20 },
+            cache: CacheConfig { page_tokens: 16, budget_bytes: budget_mb << 20, capacity_bytes: 0 },
             seed,
             ..EngineConfig::default()
         };
@@ -971,7 +1015,7 @@ mod tests {
     fn sim_engine(policy: CachePolicy, budget_mb: usize, seed: u64) -> Engine {
         let cfg = EngineConfig {
             policy,
-            cache: CacheConfig { page_tokens: 16, budget_bytes: budget_mb << 20 },
+            cache: CacheConfig { page_tokens: 16, budget_bytes: budget_mb << 20, capacity_bytes: 0 },
             seed,
             ..EngineConfig::default()
         };

@@ -28,7 +28,7 @@ fn engine(policy: CachePolicy, budget_mb: usize) -> Option<Engine> {
     let exec = PjrtExecutor::load(&dir).expect("load artifacts");
     let cfg = EngineConfig {
         policy,
-        cache: CacheConfig { page_tokens: 16, budget_bytes: budget_mb << 20 },
+        cache: CacheConfig { page_tokens: 16, budget_bytes: budget_mb << 20, capacity_bytes: 0 },
         seed: 3,
         ..EngineConfig::default()
     };

@@ -27,7 +27,7 @@ const STAGGER_MS: u64 = 5;
 fn pool(migrate: bool) -> (Arc<Server>, Vec<std::thread::JoinHandle<()>>) {
     let base = EngineConfig {
         policy: CachePolicy::Disaggregated,
-        cache: CacheConfig { page_tokens: PAGE_TOKENS, budget_bytes: 128 << 20 },
+        cache: CacheConfig { page_tokens: PAGE_TOKENS, budget_bytes: 128 << 20, capacity_bytes: 0 },
         ..EngineConfig::default()
     };
     let engines: Vec<Engine> = (0..SHARDS)

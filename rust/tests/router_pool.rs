@@ -24,7 +24,7 @@ fn pool(route: RoutePolicy) -> (Arc<Server>, Vec<std::thread::JoinHandle<()>>) {
     // serve --shards 4` builds the pool
     let base = EngineConfig {
         policy: CachePolicy::Disaggregated,
-        cache: CacheConfig { page_tokens: 16, budget_bytes: 128 << 20 },
+        cache: CacheConfig { page_tokens: 16, budget_bytes: 128 << 20, capacity_bytes: 0 },
         ..EngineConfig::default()
     };
     let engines: Vec<Engine> = (0..SHARDS)
