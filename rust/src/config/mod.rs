@@ -69,6 +69,22 @@ impl Default for CacheConfig {
     }
 }
 
+/// Host-memory tier-2 page store knobs (the `tier` module): evicted
+/// radix pages demote here instead of being destroyed, and a returning
+/// session's fork promotes them back when tier bandwidth beats
+/// recompute.
+#[derive(Debug, Clone, Default)]
+pub struct TierConfig {
+    /// byte budget of the host-memory tier (`--tier-mb`); 0 disables the
+    /// tier entirely — eviction destroys pages exactly as before
+    pub tier_bytes: usize,
+    /// fully calibrated cost model for the promote-vs-recompute decision
+    /// (the CLI loads `calibration.json` into this); None = derive the
+    /// FLOP terms from the model geometry and use the default tier
+    /// bandwidth
+    pub cost: Option<crate::exec::CostModel>,
+}
+
 #[derive(Debug, Clone)]
 pub struct SchedulerConfig {
     /// decode batch buckets available as AOT artifacts (ascending)
@@ -164,6 +180,16 @@ pub struct ServerConfig {
     /// the lend floor is `slice * (1 - lend_max_frac)` (clamped to at
     /// least 1/8 of the slice), so no shard is ever starved
     pub lend_max_frac: f64,
+    /// arm the engines' host-memory tier (`--tier on`): evicted pages
+    /// demote into a per-shard tier store and promote back on a
+    /// returning session's fork (see the `tier` module). The tier's
+    /// byte budget comes from the engine config (`--tier-mb`).
+    pub tier: bool,
+    /// how often (wall-clock ms) the tier compaction supervisor asks
+    /// every shard to drop dead tier records (`--tier-compact-ms`);
+    /// 0 = never — compaction then runs only inline under tier insert
+    /// pressure
+    pub tier_compact_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -184,6 +210,8 @@ impl Default for ServerConfig {
             rebalance: true,
             rebalance_interval_ms: 50,
             lend_max_frac: 0.5,
+            tier: false,
+            tier_compact_ms: 250,
         }
     }
 }
@@ -250,6 +278,12 @@ impl ServerConfig {
             );
             cfg.lend_max_frac = v;
         }
+        if let Some(v) = j.get("tier").and_then(Json::as_bool) {
+            cfg.tier = v;
+        }
+        if let Some(v) = j.get("tier_compact_ms").and_then(Json::as_usize) {
+            cfg.tier_compact_ms = v as u64;
+        }
         Ok(cfg)
     }
 }
@@ -259,6 +293,8 @@ pub struct EngineConfig {
     pub policy: CachePolicy,
     pub cache: CacheConfig,
     pub sched: SchedulerConfig,
+    /// host-memory tier-2 page store (off unless `tier_bytes > 0`)
+    pub tier: TierConfig,
     pub seed: u64,
     /// sample greedily (real mode); sim mode always synthesizes tokens
     pub greedy: bool,
@@ -270,6 +306,7 @@ impl Default for EngineConfig {
             policy: CachePolicy::Disaggregated,
             cache: CacheConfig::default(),
             sched: SchedulerConfig::default(),
+            tier: TierConfig::default(),
             seed: 0,
             greedy: true,
         }
@@ -315,6 +352,12 @@ impl EngineConfig {
         };
         let mr = self.sched.max_running;
         cfg.sched.max_running = (mr / shards + usize::from(shard < mr % shards)).max(1);
+        // the host-memory tier budget is one pool-wide knob too, split
+        // exactly — but 0 means "tier off" and must stay 0 (no floor)
+        let tb = self.tier.tier_bytes;
+        if tb > 0 {
+            cfg.tier.tier_bytes = (tb / shards + usize::from(shard < tb % shards)).max(1);
+        }
         cfg.seed = self
             .seed
             .wrapping_add((shard as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15));
@@ -348,6 +391,11 @@ impl EngineConfig {
                 cfg.sched.gang_hold_ms = v as u64;
             }
         }
+        if let Some(t) = j.get("tier") {
+            if let Some(v) = t.get("tier_mb").and_then(Json::as_f64) {
+                cfg.tier.tier_bytes = (v * 1048576.0) as usize;
+            }
+        }
         if let Some(v) = j.get("seed").and_then(Json::as_f64) {
             cfg.seed = v as u64;
         }
@@ -372,7 +420,8 @@ mod tests {
     fn engine_config_from_json() {
         let j = json::parse(
             r#"{"policy":"prefix","cache":{"page_tokens":8,"budget_mb":16},
-                "sched":{"max_running":4,"gang":false,"gang_hold_ms":7},"seed":7}"#,
+                "sched":{"max_running":4,"gang":false,"gang_hold_ms":7},
+                "tier":{"tier_mb":32},"seed":7}"#,
         )
         .unwrap();
         let cfg = EngineConfig::from_json(&j).unwrap();
@@ -382,11 +431,14 @@ mod tests {
         assert_eq!(cfg.sched.max_running, 4);
         assert!(!cfg.sched.gang);
         assert_eq!(cfg.sched.gang_hold_ms, 7);
+        assert_eq!(cfg.tier.tier_bytes, 32 << 20);
         assert_eq!(cfg.seed, 7);
-        // absent sched knobs keep the gang defaults (on, 25 ms hold)
+        // absent sched knobs keep the gang defaults (on, 25 ms hold);
+        // the tier defaults off (0 bytes)
         let d = EngineConfig::from_json(&json::parse("{}").unwrap()).unwrap();
         assert!(d.sched.gang, "gang scheduling defaults on");
         assert_eq!(d.sched.gang_hold_ms, 25);
+        assert_eq!(d.tier.tier_bytes, 0, "tier defaults off");
     }
 
     #[test]
@@ -398,7 +450,7 @@ mod tests {
                 "migrate":false,"migration_max_inflight":2,
                 "migration_bandwidth_bytes_per_s":1e9,
                 "rebalance":false,"rebalance_interval_ms":20,
-                "lend_max_frac":0.25}"#,
+                "lend_max_frac":0.25,"tier":true,"tier_compact_ms":40}"#,
         )
         .unwrap();
         let cfg = ServerConfig::from_json(&j).unwrap();
@@ -416,6 +468,8 @@ mod tests {
         assert!(!cfg.rebalance);
         assert_eq!(cfg.rebalance_interval_ms, 20);
         assert!((cfg.lend_max_frac - 0.25).abs() < 1e-9);
+        assert!(cfg.tier);
+        assert_eq!(cfg.tier_compact_ms, 40);
         // zero workers / zero shards / sub-1 imbalance are rejected,
         // absent fields keep defaults
         assert!(ServerConfig::from_json(&json::parse(r#"{"workers":0}"#).unwrap()).is_err());
@@ -449,6 +503,8 @@ mod tests {
         assert!(d.rebalance, "elastic budgets default on");
         assert_eq!(d.rebalance_interval_ms, 50);
         assert!((d.lend_max_frac - 0.5).abs() < 1e-9);
+        assert!(!d.tier, "tier defaults off");
+        assert_eq!(d.tier_compact_ms, 250);
     }
 
     #[test]
@@ -529,6 +585,20 @@ mod tests {
                     assert!(s.cache.capacity_bytes <= budget);
                 }
             }
+        }
+        // the tier budget splits exactly too — and a disabled tier (0
+        // bytes) stays disabled on every shard (no 1-byte floor)
+        let tiered = EngineConfig {
+            tier: TierConfig { tier_bytes: 10_000_019, cost: None },
+            ..EngineConfig::default()
+        };
+        let sum: usize = (0..7)
+            .map(|i| tiered.shard_slice(i, 7).tier.tier_bytes)
+            .sum();
+        assert_eq!(sum, 10_000_019, "tier budget split must be exact");
+        let off = EngineConfig::default();
+        for i in 0..4 {
+            assert_eq!(off.shard_slice(i, 4).tier.tier_bytes, 0, "tier off stays off");
         }
     }
 

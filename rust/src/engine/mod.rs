@@ -40,12 +40,13 @@ use std::collections::{BinaryHeap, HashMap, VecDeque};
 
 use crate::batch::{self, SeqSlab, SlabSpec};
 use crate::config::{CachePolicy, EngineConfig};
-use crate::exec::Executor;
+use crate::exec::{CostModel, Executor};
 use crate::kvcache::{pages_for, BlockPool, PageId, PoolSpec};
 use crate::metrics::{DropReason, DroppedRequest, EngineMetrics, FinishedRequest};
 use crate::migrate::{export_component, MigrationEstimate, MigrationPayload};
 use crate::radix::{DualRadixTree, MatchResult, PinPath};
 use crate::rebalance::BudgetPressure;
+use crate::tier::{Component, PageKey, TierStore};
 use crate::util::json::Json;
 use crate::runtime::{argmax, DecodeArgs, PrefillArgs};
 use crate::util::rng::Rng;
@@ -209,6 +210,16 @@ pub struct Engine {
     base_pool: BlockPool,
     res_pool: Option<BlockPool>,
     trees: DualRadixTree,
+    /// host-memory tier-2 page store (`None` = tiering off): pages the
+    /// trees evict are *demoted* here instead of destroyed, and a later
+    /// fork admission *promotes* them back when copying their bytes is
+    /// priced below recomputing their tokens (see `promote_from_tier`).
+    tier: Option<TierStore>,
+    /// pricing for the promote-vs-recompute decision — tier bandwidth
+    /// (`CostModel::tier_cost_us`) against prefill FLOPs
+    /// (`CostModel::prefill_cost_us`). `cfg.tier.cost` when calibrated,
+    /// else derived from the model geometry.
+    tier_cost: CostModel,
     seqs: HashMap<u64, Seq>,
     pending: BinaryHeap<std::cmp::Reverse<(u64, u64)>>, // (arrival, id)
     pending_reqs: HashMap<u64, Request>,
@@ -316,6 +327,12 @@ impl Engine {
             n_adapters: meta.n_adapters,
             chunk: meta.chunk,
         };
+        let tier = (cfg.tier.tier_bytes > 0).then(|| TierStore::new(cfg.tier.tier_bytes));
+        let tier_cost = cfg
+            .tier
+            .cost
+            .clone()
+            .unwrap_or_else(|| CostModel::derived(&meta));
         Ok(Engine {
             rng: Rng::seeded(cfg.seed ^ 0xF0F0),
             budget_bytes: budget,
@@ -324,6 +341,8 @@ impl Engine {
             base_pool,
             res_pool,
             trees: DualRadixTree::new(pt),
+            tier,
+            tier_cost,
             seqs: HashMap::new(),
             pending: BinaryHeap::new(),
             pending_reqs: HashMap::new(),
@@ -422,7 +441,9 @@ impl Engine {
     /// takes workflow-pinned pages (`RadixTree::evict_unpinned` — a
     /// shrink defers pins exactly like first-pass LRU pressure). Any
     /// remaining overage stays enforced lazily by the allocation-time
-    /// budget check, exactly as before.
+    /// budget check, exactly as before. With tiering on, every page this
+    /// shrink takes is demoted to the host tier (`evict_demote`), not
+    /// destroyed.
     ///
     /// Both trees shrink (base first — its pages are ~n/r times larger):
     /// this is not a violation of the decoupled eviction policy (paper
@@ -438,17 +459,15 @@ impl Engine {
             }
             let over = used - self.budget_bytes;
             let bpb = self.base_pool.spec().bytes_per_page();
-            let freed_base = self
-                .trees
-                .base
-                .evict_unpinned(over.div_ceil(bpb), &mut self.base_pool);
+            let freed_base = self.evict_demote(Which::Base, over.div_ceil(bpb), false);
             let used = self.used_cache_bytes();
             let mut freed_res = 0;
             if used > self.budget_bytes {
-                if let Some(pool) = self.res_pool.as_mut() {
-                    let rpb = pool.spec().bytes_per_page();
+                if let Some(rpb) =
+                    self.res_pool.as_ref().map(|p| p.spec().bytes_per_page())
+                {
                     let want = (used - self.budget_bytes).div_ceil(rpb);
-                    freed_res = self.trees.residual.evict_unpinned(want, pool);
+                    freed_res = self.evict_demote(Which::Res, want, false);
                 }
             }
             if freed_base + freed_res == 0 {
@@ -861,13 +880,7 @@ impl Engine {
             // global pressure first drains the tree backing the requested
             // kind, then the other — never as a cascading unit.
             let want = n - pages.len() + self.cfg.sched.evict_slack_pages;
-            let evicted = match which {
-                Which::Base => self.trees.base.evict(want, &mut self.base_pool),
-                Which::Res => self
-                    .trees
-                    .residual
-                    .evict(want, self.res_pool.as_mut().expect("res pool")),
-            };
+            let evicted = self.evict_demote(which, want, true);
             if evicted > 0 {
                 continue;
             }
@@ -983,6 +996,199 @@ impl Engine {
     }
 
     // -----------------------------------------------------------------
+    // host-memory tier: demote on evict, promote on fork admission
+    // -----------------------------------------------------------------
+
+    /// Evict up to `want` pages from one tree, demoting each victim's
+    /// bytes into the host-memory tier (when on) instead of destroying
+    /// them. `escalate` picks allocation-pressure eviction
+    /// (`RadixTree::evict`: pins deferred to a second pass) over
+    /// budget-shrink eviction (`RadixTree::evict_unpinned`: pins never
+    /// taken). The demotion sink runs at the instant the radix leaf is
+    /// removed, so the victims are exactly the pages the pre-tier drop
+    /// path freed — never leased, running-sequence, or (first-pass)
+    /// workflow-pinned state.
+    fn evict_demote(&mut self, which: Which, want: usize, escalate: bool) -> usize {
+        let (tree, pool, component) = match which {
+            Which::Base => {
+                (&mut self.trees.base, &mut self.base_pool, Component::Base)
+            }
+            Which::Res => (
+                &mut self.trees.residual,
+                self.res_pool.as_mut().expect("res pool"),
+                Component::Residual,
+            ),
+        };
+        match self.tier.as_mut() {
+            Some(store) => {
+                let metrics = &mut self.metrics;
+                let mut sink = |ns: u32, path: &[u32], data: &[f32]| {
+                    if store.insert(PageKey::new(component, ns, path), data) {
+                        metrics.demoted_pages += 1;
+                    }
+                };
+                if escalate {
+                    tree.evict_with_sink(want, pool, Some(&mut sink))
+                } else {
+                    tree.evict_unpinned_with_sink(want, pool, Some(&mut sink))
+                }
+            }
+            None if escalate => tree.evict(want, pool),
+            None => tree.evict_unpinned(want, pool),
+        }
+    }
+
+    /// Fork-admission promotion (the demote inverse): if the host tier
+    /// holds pages extending this prompt's cached prefix, and the cost
+    /// model prices copying them below recomputing their tokens
+    /// ("pay bytes, not FLOPs" — PR 3's migration calculus one tier
+    /// down), copy them back into the pool and graft them into the tree
+    /// so the admission match that follows inherits them. The cached
+    /// prefix is leased for the duration — the allocations below can
+    /// evict, and the graft point must survive them. Partial promotion
+    /// under budget pressure keeps the affordable prefix, which is
+    /// still a valid radix path.
+    fn promote_from_tier(&mut self, which: Which, ns: u32, tokens: &[u32]) {
+        if self.tier.is_none() {
+            return;
+        }
+        let pt = self.cfg.cache.page_tokens;
+        let total_pages = tokens.len() / pt;
+        if total_pages == 0 {
+            return;
+        }
+        let component = match which {
+            Which::Base => Component::Base,
+            Which::Res => Component::Residual,
+        };
+        let m = match which {
+            Which::Base => self.trees.base.match_lease(ns, tokens, &mut self.base_pool),
+            Which::Res => self.trees.residual.match_lease(
+                ns,
+                tokens,
+                self.res_pool.as_mut().expect("res pool"),
+            ),
+        };
+        let have = m.pages.len();
+        let mut keys = Vec::new();
+        {
+            let tier = self.tier.as_ref().expect("tier on");
+            for i in have..total_pages {
+                let key = PageKey::new(component, ns, &tokens[..(i + 1) * pt]);
+                if !tier.contains(&key) {
+                    break;
+                }
+                keys.push(key);
+            }
+        }
+        if keys.is_empty() {
+            self.release_match(which, &m);
+            return;
+        }
+        self.metrics.tier_hits += 1;
+        let (page_bytes, floats) = match which {
+            Which::Base => {
+                let s = self.base_pool.spec();
+                (s.bytes_per_page(), s.floats_per_page())
+            }
+            Which::Res => {
+                let s = self.res_pool.as_ref().expect("res pool").spec();
+                (s.bytes_per_page(), s.floats_per_page())
+            }
+        };
+        // a short tail next to a long cached prefix recomputes faster
+        // than a tier round-trip's dispatch: leave it tiered
+        let copy_us = self.tier_cost.tier_cost_us(keys.len() * page_bytes);
+        let recompute_us = self.tier_cost.prefill_cost_us(keys.len() * pt, have * pt);
+        if copy_us >= recompute_us {
+            self.release_match(which, &m);
+            return;
+        }
+        let mut fresh: Vec<PageId> = Vec::with_capacity(keys.len());
+        for key in &keys {
+            let Some(p) = self.alloc_import_page(which) else {
+                break; // budget exhausted: keep the affordable prefix
+            };
+            // that allocation may have evicted — demoting INTO the tier,
+            // whose own budget may have evicted this very record:
+            // re-resolve by key before copying
+            let tier = self.tier.as_ref().expect("tier on");
+            match tier.get(key) {
+                Some(data) if data.len() == floats => {
+                    let pool = match which {
+                        Which::Base => &mut self.base_pool,
+                        Which::Res => self.res_pool.as_mut().expect("res pool"),
+                    };
+                    pool.page_data_mut(p).copy_from_slice(data);
+                    fresh.push(p);
+                }
+                _ => {
+                    let pool = match which {
+                        Which::Base => &mut self.base_pool,
+                        Which::Res => self.res_pool.as_mut().expect("res pool"),
+                    };
+                    pool.release(p);
+                    break;
+                }
+            }
+        }
+        let got = fresh.len();
+        if got > 0 {
+            let mut pages = Vec::with_capacity(have + got);
+            pages.extend_from_slice(&m.pages);
+            pages.extend_from_slice(&fresh);
+            let (tree, pool) = match which {
+                Which::Base => (&mut self.trees.base, &mut self.base_pool),
+                Which::Res => (
+                    &mut self.trees.residual,
+                    self.res_pool.as_mut().expect("res pool"),
+                ),
+            };
+            tree.insert(ns, &tokens[..(have + got) * pt], &pages, pool);
+            for p in fresh {
+                pool.release(p); // the tree holds its own refs now
+            }
+            let tier = self.tier.as_mut().expect("tier on");
+            for key in keys.iter().take(got) {
+                tier.remove(key);
+            }
+            self.metrics.promoted_pages += got as u64;
+            self.metrics.recompute_tokens_saved_tier += (got * pt) as u64;
+        }
+        self.release_match(which, &m);
+    }
+
+    /// Drop a protective `match_lease` taken by promotion: release the
+    /// matched pages' pool refs and the lease path.
+    fn release_match(&mut self, which: Which, m: &MatchResult) {
+        let (tree, pool) = match which {
+            Which::Base => (&mut self.trees.base, &mut self.base_pool),
+            Which::Res => (
+                &mut self.trees.residual,
+                self.res_pool.as_mut().expect("res pool"),
+            ),
+        };
+        for &p in &m.pages {
+            pool.release(p);
+        }
+        tree.release_path(&m.path);
+    }
+
+    /// The host-memory tier store, when tiering is on.
+    pub fn tier(&self) -> Option<&TierStore> {
+        self.tier.as_ref()
+    }
+
+    /// One compaction pass over the tier store: rewrite the segments
+    /// dropping dead (replaced / promoted / tier-evicted) records.
+    /// Returns the bytes reclaimed. Driven by the server's tier
+    /// compaction supervisor on the `--tier-compact-ms` cadence; a no-op
+    /// with tiering off or nothing dead.
+    pub fn tier_compact(&mut self) -> usize {
+        self.tier.as_mut().map_or(0, |t| t.compact())
+    }
+
+    // -----------------------------------------------------------------
     // prefill
     // -----------------------------------------------------------------
 
@@ -1011,6 +1217,14 @@ impl Engine {
         let gang_mate =
             tag != 0 && self.seqs.values().any(|s| s.admitted && s.req.tag == tag);
         let ns = base_ns(policy, adapter);
+        // tier promotion (Step 0, before the fork's Step 1 match): if
+        // the demoted tail of this prompt survives in the host tier and
+        // copying it back is priced below re-prefilling it, graft it in
+        // now so the match below inherits it
+        self.promote_from_tier(Which::Base, ns, &match_tokens);
+        if policy.uses_residual() {
+            self.promote_from_tier(Which::Res, adapter, &match_tokens);
+        }
         let bm: MatchResult =
             self.trees
                 .base
@@ -1624,11 +1838,17 @@ impl Engine {
             + self.trees.residual.stats().deferred_evictions;
         let budget = self.budget_bytes;
         let capacity = self.capacity_bytes();
+        let (tier_bytes, tier_budget) = self
+            .tier
+            .as_ref()
+            .map_or((0, 0), |t| (t.bytes(), t.budget_bytes()));
         let mut j = self.metrics.to_json();
         if let Json::Obj(m) = &mut j {
             m.insert("evictions_deferred".into(), Json::num(deferred as f64));
             m.insert("budget_bytes".into(), Json::num(budget as f64));
             m.insert("capacity_bytes".into(), Json::num(capacity as f64));
+            m.insert("tier_bytes".into(), Json::num(tier_bytes as f64));
+            m.insert("tier_budget_bytes".into(), Json::num(tier_budget as f64));
         }
         j
     }
@@ -1652,6 +1872,9 @@ impl Engine {
         self.base_pool.check_invariants()?;
         if let Some(p) = &self.res_pool {
             p.check_invariants()?;
+        }
+        if let Some(t) = &self.tier {
+            t.check_invariants()?;
         }
         self.trees.base.check_invariants(&self.base_pool)?;
         if let Some(p) = &self.res_pool {
@@ -1864,13 +2087,7 @@ impl Engine {
                     return Some(p);
                 }
             }
-            let evicted = match which {
-                Which::Base => self.trees.base.evict(1, &mut self.base_pool),
-                Which::Res => self
-                    .trees
-                    .residual
-                    .evict(1, self.res_pool.as_mut().expect("res pool")),
-            };
+            let evicted = self.evict_demote(which, 1, true);
             if evicted == 0 {
                 return None;
             }

@@ -2,7 +2,7 @@
 //! policy-specific sharing behaviour, memory pressure, and quiescence.
 
 use super::*;
-use crate::config::{CacheConfig, CachePolicy, EngineConfig, SchedulerConfig};
+use crate::config::{CacheConfig, CachePolicy, EngineConfig, SchedulerConfig, TierConfig};
 use crate::exec::SimExecutor;
 use crate::util::rng::Rng;
 
@@ -15,8 +15,28 @@ fn engine(policy: CachePolicy, budget_mb: usize) -> Engine {
             capacity_bytes: 0,
         },
         sched: SchedulerConfig::default(),
+        tier: TierConfig::default(),
         seed: 7,
         greedy: true,
+    };
+    let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8, 16]).unwrap();
+    Engine::new(cfg, Box::new(sim)).unwrap()
+}
+
+/// `engine` with the host-memory tier armed (`tier_bytes` of budget);
+/// `tier_bytes == 0` is the tier-off control with otherwise identical
+/// construction.
+fn engine_tiered(budget_bytes: usize, tier_bytes: usize) -> Engine {
+    let cfg = EngineConfig {
+        policy: CachePolicy::Disaggregated,
+        cache: CacheConfig {
+            page_tokens: 16,
+            budget_bytes,
+            capacity_bytes: 0,
+        },
+        tier: TierConfig { tier_bytes, cost: None },
+        seed: 7,
+        ..EngineConfig::default()
     };
     let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8, 16]).unwrap();
     Engine::new(cfg, Box::new(sim)).unwrap()
@@ -36,6 +56,7 @@ fn engine_with(policy: CachePolicy, budget_mb: usize, gang: bool, hold_ms: u64) 
             gang_hold_ms: hold_ms,
             ..SchedulerConfig::default()
         },
+        tier: TierConfig::default(),
         seed: 7,
         greedy: true,
     };
@@ -925,4 +946,165 @@ fn budget_denials_counted_and_grow_unblocks() {
     assert_eq!(fin.len(), 1, "grown budget still blocked the request");
     assert_eq!(fin[0].generated.len(), 8);
     e.check_quiescent().unwrap();
+}
+
+// ---------------------------------------------------------------------
+// tiered KV page store (ISSUE 6): demote on evict, promote on fork
+// ---------------------------------------------------------------------
+
+#[test]
+fn demote_then_promote_restores_byte_identical_pages() {
+    let mut e = engine_tiered(8 << 20, 16 << 20);
+    let pt = e.cfg.cache.page_tokens;
+    // a 3-page published context with distinctive per-float contents
+    let t = toks(3 * pt, 40);
+    let mut pages = Vec::new();
+    for i in 0..3usize {
+        let p = e.base_pool.alloc().unwrap();
+        for (j, x) in e.base_pool.page_data_mut(p).iter_mut().enumerate() {
+            *x = (i * 100_000 + j) as f32;
+        }
+        pages.push(p);
+    }
+    e.trees.base.insert(0, &t, &pages, &mut e.base_pool);
+    for p in pages {
+        e.base_pool.release(p);
+    }
+    assert_eq!(e.base_pool.used_pages(), 3);
+
+    // demote: eviction moves all three pages into the host tier
+    assert_eq!(e.evict_demote(Which::Base, 100, true), 3);
+    assert_eq!(e.metrics.demoted_pages, 3);
+    assert_eq!(e.base_pool.used_pages(), 0);
+    assert_eq!(e.trees.base.probe_pages(0, &t), 0);
+    let tier = e.tier().unwrap();
+    assert_eq!(tier.entries(), 3);
+    assert!(tier.bytes() <= tier.budget_bytes());
+    tier.check_invariants().unwrap();
+
+    // promote: the whole path comes back, byte for byte
+    e.promote_from_tier(Which::Base, 0, &t);
+    assert_eq!(e.metrics.promoted_pages, 3);
+    assert_eq!(e.metrics.tier_hits, 1);
+    assert_eq!(e.metrics.recompute_tokens_saved_tier, (3 * pt) as u64);
+    assert_eq!(e.trees.base.probe_pages(0, &t), 3);
+    let m = e.trees.base.match_lease(0, &t, &mut e.base_pool);
+    assert_eq!(m.pages.len(), 3);
+    for (i, &p) in m.pages.iter().enumerate() {
+        for (j, &x) in e.base_pool.page_data(p).iter().enumerate() {
+            assert_eq!(x, (i * 100_000 + j) as f32, "page {i} float {j} corrupted");
+        }
+    }
+    e.trees.base.release_path(&m.path);
+    for p in m.pages {
+        e.base_pool.release(p);
+    }
+
+    // promotion invalidated the tier records ("all referencing nodes
+    // released"): compaction reclaims every retained byte
+    let tier = e.tier().unwrap();
+    assert_eq!(tier.entries(), 0, "promotion must invalidate tier records");
+    assert!(tier.bytes() > 0, "dead bytes retained until compaction");
+    assert!(e.tier_compact() > 0);
+    assert_eq!(e.tier().unwrap().bytes(), 0);
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn promotion_refused_when_pool_budget_exhausted_leaks_nothing() {
+    let page = e_base_page_bytes();
+    let mut e = engine_tiered(2 * page, 1 << 20);
+    let pt = e.cfg.cache.page_tokens;
+    // a returning session's two pages, demoted into the tier
+    let t = toks(2 * pt, 41);
+    let mut pages = Vec::new();
+    for _ in 0..2 {
+        pages.push(e.base_pool.alloc().unwrap());
+    }
+    e.trees.base.insert(0, &t, &pages, &mut e.base_pool);
+    for p in pages {
+        e.base_pool.release(p);
+    }
+    assert_eq!(e.evict_demote(Which::Base, 100, true), 2);
+    assert_eq!(e.tier().unwrap().entries(), 2);
+
+    // an unrelated *leased* context now occupies the whole pool budget,
+    // so promotion cannot fund a single page by evicting
+    let u = toks(2 * pt, 42);
+    let mut upages = Vec::new();
+    for _ in 0..2 {
+        upages.push(e.base_pool.alloc().unwrap());
+    }
+    e.trees.base.insert(0, &u, &upages, &mut e.base_pool);
+    for p in upages {
+        e.base_pool.release(p);
+    }
+    let lease = e.trees.base.match_lease(0, &u, &mut e.base_pool);
+    assert_eq!(lease.pages.len(), 2);
+    let used_before = e.base_pool.used_pages();
+
+    // the lookup finds the records but the refusal must be clean: no
+    // promoted pages, no leaked allocations, records intact for a later
+    // (funded) attempt
+    e.promote_from_tier(Which::Base, 0, &t);
+    assert_eq!(e.metrics.promoted_pages, 0);
+    assert_eq!(e.metrics.tier_hits, 1, "the tier lookup still counts");
+    assert_eq!(e.base_pool.used_pages(), used_before, "pages leaked");
+    assert_eq!(e.trees.base.probe_pages(0, &t), 0);
+    assert_eq!(e.tier().unwrap().entries(), 2, "records must survive the refusal");
+    e.base_pool.check_invariants().unwrap();
+    e.tier().unwrap().check_invariants().unwrap();
+
+    e.trees.base.release_path(&lease.path);
+    for p in lease.pages {
+        e.base_pool.release(p);
+    }
+    e.check_quiescent().unwrap();
+}
+
+/// One base page at the llama3-8b-sim geometry with 16-token pages:
+/// 16 tokens x 4 layers x K+V x kv_width 128 x 4 bytes.
+fn e_base_page_bytes() -> usize {
+    16 * 4 * 2 * 128 * 4
+}
+
+#[test]
+fn returning_session_promotes_instead_of_recomputing() {
+    // session A visits, session B's working set forces A's pages out of
+    // the 2 MB pool, A returns. With the tier on, the return visit
+    // promotes the demoted pages back (bytes) instead of re-prefilling
+    // them (FLOPs); tier off (0 bytes) is the identical-construction
+    // control.
+    let run = |tier_bytes: usize| {
+        let mut e = engine_tiered(2 << 20, tier_bytes);
+        let pa = toks(300, 50);
+        let pb = toks(300, 51);
+        e.submit(req(1, 0, pa.clone(), 8, 0));
+        assert_eq!(run_to_completion(&mut e).len(), 1);
+        e.submit(req(2, 1, pb, 8, e.now_us() + 1));
+        assert_eq!(run_to_completion(&mut e).len(), 1);
+        e.submit(req(3, 0, pa, 8, e.now_us() + 1));
+        let fin = run_to_completion(&mut e);
+        assert_eq!(fin.len(), 1);
+        e.check_quiescent().unwrap();
+        (
+            fin[0].computed_prompt,
+            fin[0].hit_full + fin[0].hit_partial,
+            e.metrics.promoted_pages,
+            e.metrics.tier_hits,
+        )
+    };
+    let (warm_computed, warm_hits, promoted, hits) = run(64 << 20);
+    let (cold_computed, cold_hits, promoted_off, _) = run(0);
+    assert_eq!(promoted_off, 0, "tier off must never promote");
+    assert!(promoted > 0, "returning session never promoted");
+    assert!(hits > 0, "tier lookups never hit");
+    assert!(
+        warm_computed < cold_computed,
+        "tier saved no prompt recompute: {warm_computed} vs {cold_computed}"
+    );
+    assert!(
+        warm_hits > cold_hits,
+        "tier did not raise the hit tokens: {warm_hits} vs {cold_hits}"
+    );
 }

@@ -109,11 +109,20 @@ pub struct CostModel {
     /// (bytes/s); calibrated by `forkkv calibrate` alongside the FLOP
     /// terms, and the denominator of the migrate-vs-recompute decision
     pub migration_bandwidth_bytes_per_s: f64,
+    /// sustained pool<->host-tier copy bandwidth (bytes/s); calibrated by
+    /// the `forkkv calibrate` tier probe, and the denominator of the
+    /// promote-vs-recompute decision (tier module)
+    pub tier_bandwidth_bytes_per_s: f64,
 }
 
 /// Default inter-shard copy bandwidth when no calibration is present:
 /// conservative host-memory memcpy territory (same-box shards).
 pub const DEFAULT_MIGRATION_BANDWIDTH: f64 = 8.0e9;
+
+/// Default pool<->tier copy bandwidth when no calibration is present.
+/// The tier is plain host memory on the same box — no socket framing or
+/// peer round trip — so the default sits above the migration link.
+pub const DEFAULT_TIER_BANDWIDTH: f64 = 16.0e9;
 
 impl CostModel {
     pub fn derived(meta: &ModelMeta) -> Self {
@@ -124,6 +133,7 @@ impl CostModel {
             dispatch_us: 600,
             step_overhead_us: 150,
             migration_bandwidth_bytes_per_s: DEFAULT_MIGRATION_BANDWIDTH,
+            tier_bandwidth_bytes_per_s: DEFAULT_TIER_BANDWIDTH,
         }
     }
 
@@ -140,6 +150,12 @@ impl CostModel {
                 .get("migration_bandwidth_bytes_per_s")
                 .and_then(Json::as_f64)
                 .unwrap_or(DEFAULT_MIGRATION_BANDWIDTH),
+            // optional for the same reason: calibration files written
+            // before the tier subsystem keep loading
+            tier_bandwidth_bytes_per_s: j
+                .get("tier_bandwidth_bytes_per_s")
+                .and_then(Json::as_f64)
+                .unwrap_or(DEFAULT_TIER_BANDWIDTH),
         })
     }
 
@@ -154,6 +170,10 @@ impl CostModel {
                 "migration_bandwidth_bytes_per_s",
                 Json::num(self.migration_bandwidth_bytes_per_s),
             ),
+            (
+                "tier_bandwidth_bytes_per_s",
+                Json::num(self.tier_bandwidth_bytes_per_s),
+            ),
         ])
     }
 
@@ -161,6 +181,15 @@ impl CostModel {
     /// fixed dispatch for the transfer, then pure bandwidth).
     pub fn migrate_cost_us(&self, bytes: usize) -> u64 {
         (bytes as f64 / self.migration_bandwidth_bytes_per_s.max(1.0) * 1e6) as u64
+            + self.dispatch_us
+    }
+
+    /// Virtual time to copy `bytes` of pages between the pool and the
+    /// host-memory tier — the migrate shape one tier down: one dispatch,
+    /// then pure bandwidth. Promotion runs when this beats
+    /// [`CostModel::prefill_cost_us`] for the tokens the pages hold.
+    pub fn tier_cost_us(&self, bytes: usize) -> u64 {
+        (bytes as f64 / self.tier_bandwidth_bytes_per_s.max(1.0) * 1e6) as u64
             + self.dispatch_us
     }
 
@@ -388,14 +417,33 @@ mod tests {
             (c.migration_bandwidth_bytes_per_s - c2.migration_bandwidth_bytes_per_s).abs()
                 < 1.0
         );
-        // calibration files that predate the migration subsystem load
-        // with the default bandwidth
+        assert!((c.tier_bandwidth_bytes_per_s - c2.tier_bandwidth_bytes_per_s).abs() < 1.0);
+        // calibration files that predate the migration and tier
+        // subsystems load with the default bandwidths
         let mut legacy = j.clone();
         if let Json::Obj(m) = &mut legacy {
             m.remove("migration_bandwidth_bytes_per_s");
+            m.remove("tier_bandwidth_bytes_per_s");
         }
         let c3 = CostModel::from_json(&legacy).unwrap();
         assert_eq!(c3.migration_bandwidth_bytes_per_s, DEFAULT_MIGRATION_BANDWIDTH);
+        assert_eq!(c3.tier_bandwidth_bytes_per_s, DEFAULT_TIER_BANDWIDTH);
+    }
+
+    #[test]
+    fn tier_cost_scales_and_beats_recompute_for_long_prefixes() {
+        let m = synthetic_meta("llama3-8b-sim").unwrap();
+        let mut c = CostModel::derived(&m);
+        let small = c.tier_cost_us(64 << 10);
+        let big = c.tier_cost_us(64 << 20);
+        assert!(big > small);
+        c.tier_bandwidth_bytes_per_s /= 100.0;
+        assert!(c.tier_cost_us(64 << 20) > big, "slower tier costs more");
+        // host-memory copies beat re-prefilling the tokens the pages hold
+        let c = CostModel::derived(&m);
+        assert!(c.tier_cost_us(100 << 10) < c.prefill_cost_us(144, 0));
+        // and sit below the socket-framed migration link at equal bytes
+        assert!(c.tier_cost_us(64 << 20) < c.migrate_cost_us(64 << 20));
     }
 
     #[test]

@@ -18,5 +18,6 @@ pub mod rebalance;
 pub mod router;
 pub mod runtime;
 pub mod server;
+pub mod tier;
 pub mod util;
 pub mod workload;

@@ -12,8 +12,9 @@ use forkkv::runtime::PrefillArgs;
 use forkkv::server::Server;
 use forkkv::util::json::Json;
 use forkkv::workload::{
-    presets, run_http_load, run_multi_workflow_load, run_skewed_workflow_load, HttpLoadSpec,
-    MultiWorkflowHttpSpec, SkewedWorkflowHttpSpec, WorkflowDriver, WorkflowKind, WorkloadSpec,
+    presets, run_http_load, run_multi_workflow_load, run_returning_sessions_load,
+    run_skewed_workflow_load, HttpLoadSpec, MultiWorkflowHttpSpec, ReturningSessionsHttpSpec,
+    SkewedWorkflowHttpSpec, WorkflowDriver, WorkflowKind, WorkloadSpec,
 };
 
 fn usage() -> ! {
@@ -26,6 +27,7 @@ USAGE:
                     [--imbalance F] [--migrate on|off] [--migrate-gbps F]
                     [--migrate-max-inflight N] [--gang on|off] [--gang-hold-ms T]
                     [--rebalance on|off] [--rebalance-ms T] [--lend-max F]
+                    [--tier on|off] [--tier-mb N] [--tier-compact-ms T]
   forkkv run        [--policy P] [--model M] [--dataset D] [--workflow react|mapreduce]
                     [--workflows N] [--requests N] [--rate R] [--budget-mb N] [--seed S]
                     [--gang on|off] [--real --artifacts DIR]
@@ -38,6 +40,8 @@ USAGE:
                     [--migrate on|off] [--migrate-gbps F]
                     [--gang on|off] [--gang-hold-ms T]
                     [--rebalance on|off] [--rebalance-ms T] [--lend-max F]
+                    [--tier on|off] [--tier-mb N] [--tier-compact-ms T]
+                    [--sessions N --visits V] [--session-words W]
                     # closed-loop concurrent HTTP load against a sim-backed server;
                     # with --workflows, K workflows of M agents fork shared contexts
                     # (the multi-shard placement scenario; add --fan-parallel to
@@ -45,7 +49,12 @@ USAGE:
                     # admission); with --hot-agents, one hot workflow bursts N
                     # parallel agents so spills are forced and cross-shard page
                     # migration (--migrate) is exercised; --waves W replays the
-                    # hot burst W times (the elastic-budget --rebalance A/B)
+                    # hot burst W times (the elastic-budget --rebalance A/B);
+                    # with --sessions, N sessions of --session-words context
+                    # words each make V round-robin visits, so a session's
+                    # pages are evicted between visits (the host-tier --tier
+                    # A/B: tier on promotes demoted pages back on return
+                    # instead of recomputing the prompt)
   forkkv calibrate  [--artifacts DIR]   # measure real PJRT costs + inter-shard copy
                                         # bandwidth -> calibration.json
 
@@ -143,6 +152,12 @@ fn server_config(args: &Args) -> anyhow::Result<ServerConfig> {
             "--lend-max must be in [0, 1]"
         );
     }
+    if let Some(v) = args.flag("--tier") {
+        cfg.tier = parse_on_off("--tier", &v)?;
+    }
+    if let Some(v) = args.flag("--tier-compact-ms") {
+        cfg.tier_compact_ms = v.parse()?;
+    }
     Ok(cfg)
 }
 
@@ -167,15 +182,36 @@ fn engine_config(args: &Args) -> anyhow::Result<EngineConfig> {
     if let Some(v) = args.flag("--gang-hold-ms") {
         cfg.sched.gang_hold_ms = v.parse()?;
     }
+    // the host-memory tier: armed by --tier on, sized by --tier-mb
+    // (pool-wide; shard_slice splits it exactly like the byte budget)
+    let tier_on = args
+        .flag("--tier")
+        .map(|v| parse_on_off("--tier", &v))
+        .transpose()?
+        .unwrap_or(false);
+    let tier_mb: usize = args
+        .flag("--tier-mb")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(64);
+    cfg.tier.tier_bytes = if tier_on { tier_mb << 20 } else { 0 };
     Ok(cfg)
 }
 
 /// Feed `forkkv calibrate`'s measured cost model (real FLOP terms + the
-/// memcpy bandwidth probe) into the server's migrate-vs-recompute
-/// decision. No calibration file, no entry for this model, or a parse
+/// memcpy bandwidth probes) into the server's migrate-vs-recompute
+/// decision and the engines' promote-vs-recompute decision (the
+/// host-tier pricing — which is why this must run before the shards are
+/// built). No calibration file, no entry for this model, or a parse
 /// failure all silently keep the derived defaults; an explicit
 /// `--migrate-gbps` flag still overrides the calibrated bandwidth.
-fn apply_calibration(scfg: &mut ServerConfig, args: &Args, cal_dir: &Path, model: &str) {
+fn apply_calibration(
+    scfg: &mut ServerConfig,
+    ecfg: &mut EngineConfig,
+    args: &Args,
+    cal_dir: &Path,
+    model: &str,
+) {
     let path = cal_dir.join("calibration.json");
     let Ok(text) = std::fs::read_to_string(&path) else {
         return;
@@ -195,11 +231,13 @@ fn apply_calibration(scfg: &mut ServerConfig, args: &Args, cal_dir: &Path, model
         scfg.migration_bandwidth_bytes_per_s = cost.migration_bandwidth_bytes_per_s;
     }
     eprintln!(
-        "migration cost model for {model} calibrated from {} ({:.2e} FLOP/s, {:.2e} B/s)",
+        "cost model for {model} calibrated from {} ({:.2e} FLOP/s, migrate {:.2e} B/s, tier {:.2e} B/s)",
         path.display(),
         cost.sustained_flops,
-        cost.migration_bandwidth_bytes_per_s
+        cost.migration_bandwidth_bytes_per_s,
+        cost.tier_bandwidth_bytes_per_s
     );
+    ecfg.tier.cost = Some(cost.clone());
     scfg.migration_cost = Some(cost);
 }
 
@@ -223,18 +261,28 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
     let addr = args
         .flag("--addr")
         .unwrap_or_else(|| "127.0.0.1:8080".into());
-    let cfg = engine_config(args)?;
+    let mut cfg = engine_config(args)?;
     let mut scfg = server_config(args)?;
     eprintln!("loading artifacts from {} ...", dir.display());
-    let engines = build_shards(&cfg, scfg.shards, || {
-        Ok(Box::new(PjrtExecutor::load(&dir)?) as Box<dyn Executor>)
-    })?;
+    // load the executors before constructing engines: the model name
+    // they carry selects the calibration entry, and the calibrated cost
+    // model must reach the engine config (tier pricing) pre-construction
+    let mut execs = Vec::with_capacity(scfg.shards.max(1));
+    for _ in 0..scfg.shards.max(1) {
+        execs.push(Box::new(PjrtExecutor::load(&dir)?) as Box<dyn Executor>);
+    }
     // calibrate writes calibration.json next to the per-model artifact
     // dirs (the parent of --artifacts here)
-    let model = engines[0].meta().name.clone();
+    let model = execs[0].meta().name.clone();
     if let Some(parent) = dir.parent() {
-        apply_calibration(&mut scfg, args, parent, &model);
+        apply_calibration(&mut scfg, &mut cfg, args, parent, &model);
     }
+    let shards = execs.len();
+    let engines = execs
+        .into_iter()
+        .enumerate()
+        .map(|(i, exec)| Engine::new(cfg.shard_slice(i, shards), exec))
+        .collect::<anyhow::Result<Vec<_>>>()?;
     let (server, handles) = Server::start_sharded(engines, scfg);
     server.serve_http(&addr, None)?;
     server.shutdown();
@@ -251,12 +299,12 @@ fn cmd_serve(args: &Args) -> anyhow::Result<()> {
 /// each shard's decode-batch occupancy — the direct measurement of
 /// front-end concurrency and router placement quality.
 fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
-    let cfg = engine_config(args)?;
+    let mut cfg = engine_config(args)?;
     let mut scfg = server_config(args)?;
     let model = args
         .flag("--model")
         .unwrap_or_else(|| "llama3-8b-sim".into());
-    apply_calibration(&mut scfg, args, Path::new("artifacts"), &model);
+    apply_calibration(&mut scfg, &mut cfg, args, Path::new("artifacts"), &model);
     let clients: usize = args.flag("--clients").map(|v| v.parse()).transpose()?.unwrap_or(8);
     let per_client: usize = args
         .flag("--requests-per-client")
@@ -286,6 +334,13 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         .transpose()?
         .unwrap_or(0);
     let fan_parallel = args.has("--fan-parallel");
+    let sessions: Option<usize> = args.flag("--sessions").map(|v| v.parse()).transpose()?;
+    let visits: usize = args.flag("--visits").map(|v| v.parse()).transpose()?.unwrap_or(3);
+    let session_words: usize = args
+        .flag("--session-words")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(160);
 
     let policy = cfg.policy;
     let gang = cfg.sched.gang;
@@ -301,19 +356,24 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
             .unwrap_or_else(|| "127.0.0.1:0".into()),
     )?;
     let addr = listener.local_addr()?.to_string();
-    match (hot_agents, workflows) {
-        (Some(n), _) => eprintln!(
+    match (sessions, hot_agents, workflows) {
+        (Some(n), _, _) => eprintln!(
+            "bench-http: {n} returning sessions x {visits} visits ({session_words} context \
+             words), tier={} -> http://{addr}",
+            server.config().tier,
+        ),
+        (None, Some(n), _) => eprintln!(
             "bench-http: skewed load, {n} hot agents (+{} cold) over {} shard(s), \
              migrate={} -> http://{addr}",
             workflows.unwrap_or(3),
             server.config().shards,
             server.config().migrate,
         ),
-        (None, Some(k)) => eprintln!(
+        (None, None, Some(k)) => eprintln!(
             "bench-http: {k} workflows x {agents} agents over {} shard(s) -> http://{addr}",
             server.config().shards
         ),
-        (None, None) => eprintln!(
+        (None, None, None) => eprintln!(
             "bench-http: {clients} clients x {per_client} requests over {} shard(s) -> http://{addr}",
             server.config().shards
         ),
@@ -327,8 +387,18 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         std::thread::spawn(move || server.serve_listener(listener, None))
     };
 
-    let mut report = match (hot_agents, workflows) {
-        (Some(n), _) => {
+    let mut report = match (sessions, hot_agents, workflows) {
+        (Some(n), _, _) => {
+            let spec = ReturningSessionsHttpSpec {
+                sessions: n,
+                visits,
+                session_words,
+                max_new,
+                ..ReturningSessionsHttpSpec::default()
+            };
+            run_returning_sessions_load(&addr, &spec)?
+        }
+        (None, Some(n), _) => {
             let mut spec = SkewedWorkflowHttpSpec {
                 hot_agents: n,
                 stagger_ms,
@@ -343,7 +413,7 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
             }
             run_skewed_workflow_load(&addr, &spec)?
         }
-        (None, Some(k)) => {
+        (None, None, Some(k)) => {
             let spec = MultiWorkflowHttpSpec {
                 workflows: k,
                 agents_per_workflow: agents,
@@ -353,7 +423,7 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
             };
             run_multi_workflow_load(&addr, &spec)?
         }
-        (None, None) => {
+        (None, None, None) => {
             let spec = HttpLoadSpec {
                 clients,
                 requests_per_client: per_client,
@@ -375,6 +445,7 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         );
         m.insert("router".into(), server.router_stats());
         m.insert("rebalancer".into(), server.rebalancer_stats());
+        m.insert("tier".into(), server.tier_stats());
         m.insert("policy".into(), Json::str(policy.name()));
         m.insert("gang".into(), Json::Bool(gang));
         m.insert("workers".into(), Json::num(server.config().workers as f64));
@@ -454,6 +525,25 @@ fn measure_copy_bandwidth() -> f64 {
     (src.len() * 4 * reps) as f64 / secs
 }
 
+/// Measured host-tier copy bandwidth (bytes/s): the rate at which page
+/// bytes move between a pool and the host-memory `TierStore` — the
+/// denominator of the promote-vs-recompute decision
+/// (`CostModel::tier_cost_us`). A larger working set than the migration
+/// probe (64 MiB vs 16 MiB) so the figure reflects DRAM streaming, not
+/// last-level cache reuse: demoted pages are cold by definition.
+fn measure_tier_bandwidth() -> f64 {
+    let src = vec![1.0f32; 16 << 20]; // 64 MiB
+    let mut dst = vec![0.0f32; 16 << 20];
+    let reps = 4;
+    let t = std::time::Instant::now();
+    for _ in 0..reps {
+        dst.copy_from_slice(&src);
+        std::hint::black_box(&mut dst);
+    }
+    let secs = t.elapsed().as_secs_f64().max(1e-9);
+    (src.len() * 4 * reps) as f64 / secs
+}
+
 /// Measure real per-op costs and write artifacts/calibration.json so the
 /// sim cost model reflects this machine (EXPERIMENTS.md §Calibration).
 fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
@@ -501,10 +591,17 @@ fn cmd_calibrate(args: &Args) -> anyhow::Result<()> {
         // inter-shard page-copy bandwidth: shards live in one process on
         // this substrate, so migration moves at host memcpy speed
         cost.migration_bandwidth_bytes_per_s = measure_copy_bandwidth();
+        // host-tier demote/promote bandwidth (the promote-vs-recompute
+        // denominator); calibration files predating the tier load with
+        // the derived default, so this field is additive
+        cost.tier_bandwidth_bytes_per_s = measure_tier_bandwidth();
         out.insert(meta.name.clone(), cost.to_json());
         eprintln!(
-            "  chunk={}us sustained={:.2e} FLOP/s migrate={:.2e} B/s",
-            prefill_med, cost.sustained_flops, cost.migration_bandwidth_bytes_per_s
+            "  chunk={}us sustained={:.2e} FLOP/s migrate={:.2e} B/s tier={:.2e} B/s",
+            prefill_med,
+            cost.sustained_flops,
+            cost.migration_bandwidth_bytes_per_s,
+            cost.tier_bandwidth_bytes_per_s
         );
     }
     let j = Json::Obj(out.into_iter().collect());

@@ -51,6 +51,20 @@ pub struct EngineMetrics {
     /// export side — pages snapshotted out of this shard for a peer
     pub exported_pages: u64,
 
+    // host-memory tier (demote-on-evict / promote-on-match):
+    /// evicted pages whose bytes the tier accepted instead of destroying
+    pub demoted_pages: u64,
+    /// tier pages copied back into the pool ahead of a returning
+    /// session's fork match
+    pub promoted_pages: u64,
+    /// admissions that found at least one of their pages resident in the
+    /// tier (whether or not the cost model then chose to promote)
+    pub tier_hits: u64,
+    /// prompt tokens spared recompute because their pages were promoted
+    /// from the tier (the tier's own bytes-for-FLOPs ledger, parallel to
+    /// migration's `recompute_tokens_saved`)
+    pub recompute_tokens_saved_tier: u64,
+
     // decode-batch occupancy (rows per decode step) and its observed peak
     pub decode_batch: Series,
     pub max_decode_batch: u64,
@@ -155,6 +169,13 @@ impl EngineMetrics {
                 Json::num(self.recompute_tokens_saved as f64),
             ),
             ("exported_pages", Json::num(self.exported_pages as f64)),
+            ("demoted_pages", Json::num(self.demoted_pages as f64)),
+            ("promoted_pages", Json::num(self.promoted_pages as f64)),
+            ("tier_hits", Json::num(self.tier_hits as f64)),
+            (
+                "recompute_tokens_saved_tier",
+                Json::num(self.recompute_tokens_saved_tier as f64),
+            ),
             ("decode_batch", self.decode_batch.summary().to_json()),
             ("max_decode_batch", Json::num(self.max_decode_batch as f64)),
             ("base_pool_bytes", self.base_pool_bytes.summary().to_json()),
@@ -199,7 +220,7 @@ impl EngineMetrics {
 /// Keys summed across shards by [`aggregate_stats`]. Series summaries are
 /// deliberately absent: percentiles don't compose across shards, so those
 /// stay in the per-shard snapshots.
-const SUMMED_KEYS: [&str; 20] = [
+const SUMMED_KEYS: [&str; 26] = [
     "prefill_steps",
     "decode_steps",
     "decode_rows",
@@ -222,6 +243,14 @@ const SUMMED_KEYS: [&str; 20] = [
     "migrated_bytes",
     "recompute_tokens_saved",
     "exported_pages",
+    "demoted_pages",
+    "promoted_pages",
+    "tier_hits",
+    "recompute_tokens_saved_tier",
+    // per-shard tier gauges (stats_json inserts them next to
+    // budget_bytes): the aggregate is the pool-wide tier footprint
+    "tier_bytes",
+    "tier_budget_bytes",
 ];
 
 /// Combine per-shard stats snapshots (as produced by
@@ -405,6 +434,10 @@ mod tests {
             migrated_pages: 5,
             migrated_bytes: 5 * 65536,
             recompute_tokens_saved: 80,
+            demoted_pages: 12,
+            promoted_pages: 4,
+            tier_hits: 3,
+            recompute_tokens_saved_tier: 64,
             ..EngineMetrics::default()
         };
         let mut b = EngineMetrics {
@@ -418,6 +451,8 @@ mod tests {
             migrated_pages: 2,
             recompute_tokens_saved: 32,
             exported_pages: 5,
+            demoted_pages: 1,
+            tier_hits: 1,
             ..EngineMetrics::default()
         };
         let agg = aggregate_stats(&[a.to_json(), b.to_json()]);
@@ -432,6 +467,13 @@ mod tests {
         assert_eq!(agg.at(&["migrated_bytes"]).as_usize().unwrap(), 5 * 65536);
         assert_eq!(agg.at(&["recompute_tokens_saved"]).as_usize().unwrap(), 112);
         assert_eq!(agg.at(&["exported_pages"]).as_usize().unwrap(), 5);
+        assert_eq!(agg.at(&["demoted_pages"]).as_usize().unwrap(), 13);
+        assert_eq!(agg.at(&["promoted_pages"]).as_usize().unwrap(), 4);
+        assert_eq!(agg.at(&["tier_hits"]).as_usize().unwrap(), 4);
+        assert_eq!(
+            agg.at(&["recompute_tokens_saved_tier"]).as_usize().unwrap(),
+            64
+        );
         // weighted by steps, not the mean of per-shard averages (2.5)
         assert!((agg.at(&["avg_decode_batch"]).as_f64().unwrap() - 1.3).abs() < 1e-9);
         // weighted by prompt tokens, not the mean of per-shard rates (0.4)

@@ -43,6 +43,20 @@ use crate::kvcache::{BlockPool, PageId};
 type NodeId = u32;
 const NIL: NodeId = u32::MAX;
 
+/// Compact the lazy LRU heap past this many entries per live node.
+const LRU_COMPACT_FACTOR: usize = 4;
+/// Never compact below this heap size (tiny trees churn cheaply).
+const LRU_COMPACT_FLOOR: usize = 64;
+
+/// Demotion sink handed to the eviction passes: called once per victim
+/// page just before its memory is freed, with the victim's namespace,
+/// its full root-to-node token path, and the page's floats. The engine
+/// uses this to hand evicted bytes to the host-memory tier (tier module)
+/// instead of destroying them. Victims are always unleased leaves whose
+/// page only the tree references, so the snapshot can never observe a
+/// running sequence's state.
+pub type DemoteSink<'a> = &'a mut dyn FnMut(u32, &[u32], &[f32]);
+
 /// A pinned prefix as returned by [`RadixTree::pin_prefix`]: one
 /// `(node, epoch)` pair per pinned page, in path order. The epoch makes
 /// a stale unpin safe: if a pinned node was force-evicted (second-pass
@@ -57,7 +71,8 @@ struct Node {
     key: Box<[u32]>,
     page: PageId,
     parent: NodeId,
-    #[allow(dead_code)]
+    /// namespace this node lives under (root's namespace); the demote
+    /// sink needs it to key the tier record
     ns: u32,
     children: HashMap<Box<[u32]>, NodeId>,
     last_access: u64,
@@ -156,6 +171,36 @@ impl RadixTree {
         self.clock
     }
 
+    /// All LRU heap pushes go through here so the lazy heap stays
+    /// bounded: repeated access cycles leave duplicate and stale
+    /// `(stamp, node)` entries that are otherwise only filtered at pop
+    /// time, growing the heap without bound under an access-heavy loop.
+    /// Past ~4x the node count the heap is rebuilt keeping one entry per
+    /// still-evictable node.
+    fn lru_push(&mut self, stamp: u64, id: NodeId) {
+        self.lru.push(std::cmp::Reverse((stamp, id)));
+        if self.lru.len() > (self.stats.nodes * LRU_COMPACT_FACTOR).max(LRU_COMPACT_FLOOR) {
+            self.compact_lru();
+        }
+    }
+
+    /// Rebuild the LRU heap with one entry per currently evictable node
+    /// (alive, unleased, leaf), stamped with its *current* last_access.
+    /// Refreshing the stamp matters: a deduping re-insert bumps
+    /// last_access without pushing a new heap entry, so dropping the
+    /// stale entry outright would strand the node unevictable forever.
+    fn compact_lru(&mut self) {
+        let old = std::mem::take(&mut self.lru);
+        let mut seen = std::collections::HashSet::with_capacity(self.stats.nodes);
+        for std::cmp::Reverse((_stamp, id)) in old {
+            let node = &self.nodes[id as usize];
+            if node.dead || node.leases > 0 || !node.children.is_empty() || !seen.insert(id) {
+                continue;
+            }
+            self.lru.push(std::cmp::Reverse((node.last_access, id)));
+        }
+    }
+
     fn alloc_node(&mut self, mut node: Node) -> NodeId {
         if let Some(id) = self.free_nodes.pop() {
             // recycled slots keep their epoch so stale PinPath entries
@@ -214,7 +259,8 @@ impl RadixTree {
             assert!(node.leases > 0, "lease underflow on node {id}");
             node.leases -= 1;
             if node.leases == 0 && node.children.is_empty() {
-                self.lru.push(std::cmp::Reverse((node.last_access, id)));
+                let stamp = node.last_access;
+                self.lru_push(stamp, id);
             }
         }
     }
@@ -283,7 +329,7 @@ impl RadixTree {
                 dead: false,
             });
             self.nodes[cur as usize].children.insert(key, id);
-            self.lru.push(std::cmp::Reverse((now, id)));
+            self.lru_push(now, id);
             self.stats.nodes += 1;
             self.stats.inserted_pages += 1;
             adopted += 1;
@@ -306,9 +352,22 @@ impl RadixTree {
     /// into a budget leak.
     /// Decoupled policy (paper §5.2): this touches only *this* tree/pool.
     pub fn evict(&mut self, want_pages: usize, pool: &mut BlockPool) -> usize {
-        let freed = self.evict_pass(want_pages, pool, false, true);
+        self.evict_with_sink(want_pages, pool, None)
+    }
+
+    /// [`RadixTree::evict`] with a demotion sink: each victim's bytes are
+    /// offered to `sink` (see [`DemoteSink`]) just before the page is
+    /// freed, turning "evict = destroy" into "evict = demote" when the
+    /// engine's host-memory tier is on.
+    pub fn evict_with_sink(
+        &mut self,
+        want_pages: usize,
+        pool: &mut BlockPool,
+        mut sink: Option<DemoteSink<'_>>,
+    ) -> usize {
+        let freed = self.evict_pass(want_pages, pool, false, true, sink.as_deref_mut());
         if freed < want_pages {
-            freed + self.evict_pass(want_pages - freed, pool, true, true)
+            freed + self.evict_pass(want_pages - freed, pool, true, true, sink.as_deref_mut())
         } else {
             freed
         }
@@ -327,7 +386,18 @@ impl RadixTree {
     /// shrink has no second pass — counting its skips would inflate the
     /// gang-eviction signal on every rebalance tick.
     pub fn evict_unpinned(&mut self, want_pages: usize, pool: &mut BlockPool) -> usize {
-        self.evict_pass(want_pages, pool, false, false)
+        self.evict_unpinned_with_sink(want_pages, pool, None)
+    }
+
+    /// [`RadixTree::evict_unpinned`] with a demotion sink (see
+    /// [`RadixTree::evict_with_sink`]).
+    pub fn evict_unpinned_with_sink(
+        &mut self,
+        want_pages: usize,
+        pool: &mut BlockPool,
+        sink: Option<DemoteSink<'_>>,
+    ) -> usize {
+        self.evict_pass(want_pages, pool, false, false, sink)
     }
 
     fn evict_pass(
@@ -336,6 +406,7 @@ impl RadixTree {
         pool: &mut BlockPool,
         evict_pinned: bool,
         count_deferrals: bool,
+        mut sink: Option<DemoteSink<'_>>,
     ) -> usize {
         let mut evicted = 0;
         let mut deferred: Vec<std::cmp::Reverse<(u64, NodeId)>> = Vec::new();
@@ -356,8 +427,8 @@ impl RadixTree {
                     && node.children.is_empty()
                     && node.last_access != stamp
                 {
-                    let entry = std::cmp::Reverse((node.last_access, id));
-                    self.lru.push(entry);
+                    let moved = node.last_access;
+                    self.lru_push(moved, id);
                 }
                 continue;
             }
@@ -374,13 +445,20 @@ impl RadixTree {
                 deferred.push(std::cmp::Reverse((stamp, id)));
                 continue;
             }
+            if let Some(s) = sink.as_deref_mut() {
+                // victim is an unleased leaf whose page only the tree
+                // holds: hand its bytes to the tier before freeing
+                let (ns, page) = (node.ns, node.page);
+                let path = self.token_path(id);
+                s(ns, &path, pool.page_data(page));
+            }
             self.remove_leaf(id, pool);
             evicted += 1;
         }
         // candidates that freed no memory (or were pin-deferred) go back
         // for later rounds
-        for entry in deferred {
-            self.lru.push(entry);
+        for std::cmp::Reverse((s, id)) in deferred {
+            self.lru_push(s, id);
         }
         self.stats.evicted_pages += evicted as u64;
         evicted
@@ -405,10 +483,25 @@ impl RadixTree {
             self.nodes[parent as usize].children.remove(&key);
             let p = &self.nodes[parent as usize];
             if p.children.is_empty() && p.leases == 0 && p.parent != NIL {
-                self.lru
-                    .push(std::cmp::Reverse((p.last_access, parent)));
+                let stamp = p.last_access;
+                self.lru_push(stamp, parent);
             }
         }
+    }
+
+    /// Full token path from the namespace root down through `id`, in
+    /// sequence order — the stable identity of the node's page used to
+    /// key its tier record.
+    fn token_path(&self, id: NodeId) -> Vec<u32> {
+        let mut spans: Vec<&[u32]> = Vec::new();
+        let mut cur = id;
+        while cur != NIL {
+            let node = &self.nodes[cur as usize];
+            spans.push(&node.key);
+            cur = node.parent;
+        }
+        spans.reverse();
+        spans.concat()
     }
 
     /// Read-only longest-prefix probe: pages that a `match_lease` would
@@ -995,6 +1088,93 @@ mod tests {
             deferred_before,
             "unpinned eviction must not defer"
         );
+        assert_eq!(pool.used_pages(), 0);
+        tree.check_invariants(&pool).unwrap();
+    }
+
+    #[test]
+    fn evict_sink_receives_full_path_and_page_bytes() {
+        // the demote hook: every victim is reported with its namespace,
+        // its full root-to-node token path, and its exact page bytes,
+        // leaves first (children evict before their parents)
+        let mut pool = pool(32);
+        let mut tree = RadixTree::new(4);
+        let t = toks(8, 73);
+        let pages: Vec<PageId> = (0..2).map(|_| pool.alloc().unwrap()).collect();
+        for (i, &p) in pages.iter().enumerate() {
+            pool.page_data_mut(p).fill(i as f32 + 1.0);
+        }
+        tree.insert(3, &t, &pages, &mut pool);
+        for p in pages {
+            pool.release(p);
+        }
+        let mut got: Vec<(u32, Vec<u32>, Vec<f32>)> = Vec::new();
+        let mut sink = |ns: u32, path: &[u32], data: &[f32]| {
+            got.push((ns, path.to_vec(), data.to_vec()));
+        };
+        let freed = tree.evict_with_sink(10, &mut pool, Some(&mut sink));
+        assert_eq!(freed, 2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].0, 3);
+        assert_eq!(got[0].1, t[..8], "leaf demotes first, under its full path");
+        assert!(got[0].2.iter().all(|&x| x == 2.0), "leaf page bytes");
+        assert_eq!(got[1].1, t[..4], "then its parent");
+        assert!(got[1].2.iter().all(|&x| x == 1.0), "parent page bytes");
+        assert_eq!(pool.used_pages(), 0);
+        tree.check_invariants(&pool).unwrap();
+    }
+
+    #[test]
+    fn lru_heap_stays_bounded_under_access_heavy_loop() {
+        // every match/release cycle pushes a fresh heap entry; without
+        // compaction the lazy heap grows without bound
+        let mut pool = pool(32);
+        let mut tree = RadixTree::new(4);
+        let t = toks(16, 70);
+        publish(&mut tree, 0, &t, &mut pool);
+        for _ in 0..10_000 {
+            let m = tree.match_lease(0, &t, &mut pool);
+            assert_eq!(m.tokens, 16);
+            tree.release_path(&m.path);
+            for p in &m.pages {
+                pool.release(*p);
+            }
+        }
+        let bound = (tree.total_pages() * LRU_COMPACT_FACTOR).max(LRU_COMPACT_FLOOR);
+        assert!(
+            tree.lru.len() <= bound,
+            "lru heap grew to {} (bound {bound})",
+            tree.lru.len()
+        );
+        // stale entries are skipped, not re-evicted: exactly the tree's
+        // four pages free, and the pool returns to empty
+        assert_eq!(tree.evict(100, &mut pool), 4);
+        assert_eq!(pool.used_pages(), 0);
+        tree.check_invariants(&pool).unwrap();
+    }
+
+    #[test]
+    fn lru_compaction_keeps_stamp_moved_leaves_evictable() {
+        // a deduping re-insert bumps last_access without pushing a new
+        // heap entry; compaction must refresh such nodes' stamps instead
+        // of dropping them, or they become unevictable forever
+        let mut pool = pool(64);
+        let mut tree = RadixTree::new(4);
+        let t = toks(8, 71);
+        let u = toks(8, 72);
+        publish(&mut tree, 0, &t, &mut pool);
+        publish(&mut tree, 0, &u, &mut pool);
+        for _ in 0..200 {
+            publish(&mut tree, 0, &t, &mut pool); // all deduped: stamps move
+            let m = tree.match_lease(0, &u, &mut pool); // heap churn
+            tree.release_path(&m.path);
+            for p in &m.pages {
+                pool.release(*p);
+            }
+        }
+        let bound = (tree.total_pages() * LRU_COMPACT_FACTOR).max(LRU_COMPACT_FLOOR);
+        assert!(tree.lru.len() <= bound, "heap unbounded: {}", tree.lru.len());
+        assert_eq!(tree.evict(100, &mut pool), 4, "every page still evictable");
         assert_eq!(pool.used_pages(), 0);
         tree.check_invariants(&pool).unwrap();
     }

@@ -42,6 +42,16 @@
 //! gauge and the pool's `budget_rebalances`/`bytes_lent` counters are
 //! served by `GET /metrics`.
 //!
+//! Tiered KV pages: when the engines run with a host-memory tier
+//! (`--tier on`), evicted pages demote into per-shard `TierStore`s and
+//! returning sessions promote them back at admission (see the `tier`
+//! module and `Engine::promote_from_tier`). Promotion and replacement
+//! leave dead records whose bytes stay retained until a compaction
+//! pass, so a tier supervisor thread (`forkkv-tier`) periodically fans
+//! `Cmd::TierCompact` across the shards (`tier_compact_ms`); the pool's
+//! `tier_compactions`/`tier_bytes_reclaimed` counters are served by
+//! `GET /metrics` under the `tier` object.
+//!
 //! Spill = bandwidth, not FLOPs: when the router spills a request off an
 //! overloaded home shard, the worker first runs the migration pipeline
 //! (`Cmd::Probe` → cost model → `Cmd::Export` → `Cmd::Import`, see
@@ -102,6 +112,10 @@ enum Cmd {
     /// cold unpinned radix pages down to the new budget); a grow takes
     /// effect at the next allocation.
     Budget(usize),
+    /// Compact this shard's host-memory tier (drop dead demoted-page
+    /// records, reclaim their bytes); replies with the bytes reclaimed.
+    /// A no-op returning 0 when the shard runs without a tier.
+    TierCompact(mpsc::Sender<usize>),
     Shutdown,
 }
 
@@ -139,6 +153,8 @@ pub struct Server {
     rebalancer: Option<Mutex<Rebalancer>>,
     /// pool-level elastic-budget outcome counters (`/metrics`)
     reb_counters: RebalanceCounters,
+    /// pool-level host-tier compaction counters (`/metrics`)
+    tier_counters: TierCounters,
     /// tells the rebalance supervisor thread to exit (set by `shutdown`)
     stop: AtomicBool,
     tokenizer: HashTokenizer,
@@ -155,6 +171,17 @@ struct RebalanceCounters {
     /// cumulative bytes of budget lent between shards (each moved byte
     /// counted once, on the donor->borrower transfer)
     bytes_lent: AtomicU64,
+}
+
+/// Pool-level host-tier compaction counters (the `tier` object of
+/// `GET /metrics`).
+#[derive(Default)]
+struct TierCounters {
+    /// supervisor ticks (or manual `tier_compact_tick`s) that reclaimed
+    /// at least one byte of dead tier space
+    tier_compactions: AtomicU64,
+    /// cumulative tier bytes reclaimed by compaction, summed over shards
+    tier_bytes_reclaimed: AtomicU64,
 }
 
 /// Pool-level routing/migration outcome counters (served by `/metrics`).
@@ -219,6 +246,10 @@ fn handle_cmd(
         }
         Cmd::Budget(bytes) => {
             engine.set_budget_bytes(bytes);
+            true
+        }
+        Cmd::TierCompact(reply) => {
+            let _ = reply.send(engine.tier_compact());
             true
         }
         Cmd::Shutdown => false,
@@ -312,7 +343,9 @@ impl Server {
         cfg: ServerConfig,
     ) -> (Arc<Server>, std::thread::JoinHandle<()>) {
         let (srv, mut handles) = Self::start_sharded(vec![engine], cfg);
-        (srv, handles.pop().expect("one shard"))
+        // index 0 is always the shard thread; any supervisor handles
+        // behind it are detached here and exit on the shutdown stop flag
+        (srv, handles.remove(0))
     }
 
     /// Spawn one event-driven thread per engine shard; returns the
@@ -380,6 +413,7 @@ impl Server {
             counters: RouteCounters::default(),
             rebalancer,
             reb_counters: RebalanceCounters::default(),
+            tier_counters: TierCounters::default(),
             stop: AtomicBool::new(false),
             tokenizer: HashTokenizer::new(meta.vocab),
             max_ctx: meta.s_max,
@@ -392,6 +426,18 @@ impl Server {
                     .name("forkkv-rebalance".into())
                     .spawn(move || sup.rebalance_supervisor())
                     .expect("spawn rebalance supervisor thread"),
+            );
+        }
+        // dead tier records (promoted or superseded demotions) retain
+        // bytes until a compaction pass; the supervisor keeps that
+        // retained-over-live gap bounded in wall time
+        if srv.cfg.tier && srv.cfg.tier_compact_ms > 0 {
+            let sup = srv.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("forkkv-tier".into())
+                    .spawn(move || sup.tier_compact_supervisor())
+                    .expect("spawn tier compaction supervisor thread"),
             );
         }
         (srv, handles)
@@ -816,11 +862,88 @@ impl Server {
         ])
     }
 
+    // -----------------------------------------------------------------
+    // host-memory tier compaction (the tier supervisor)
+    // -----------------------------------------------------------------
+
+    /// The tier compaction loop: every `cfg.tier_compact_ms` ask each
+    /// shard to compact its host-tier segments, until `shutdown` raises
+    /// the stop flag. Runs on its own named thread (`forkkv-tier`),
+    /// spawned by `start_sharded` when the tier is armed.
+    fn tier_compact_supervisor(&self) {
+        let interval = Duration::from_millis(self.cfg.tier_compact_ms.max(1));
+        // sleep in short steps so shutdown is never blocked behind a
+        // long interval
+        let step = interval.min(Duration::from_millis(10));
+        let mut since = Duration::ZERO;
+        while !self.stop.load(Ordering::Relaxed) {
+            std::thread::sleep(step);
+            since += step;
+            if since >= interval {
+                since = Duration::ZERO;
+                self.tier_compact_tick();
+            }
+        }
+    }
+
+    /// One compaction step: fan `Cmd::TierCompact` out to every live
+    /// shard, then sum the bytes each reclaimed (all sends go out before
+    /// the first receive, so shards compact concurrently). Dead shards
+    /// are skipped. Public so tests can drive compaction
+    /// deterministically; returns the total bytes reclaimed this tick.
+    pub fn tier_compact_tick(&self) -> usize {
+        let mut pending = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            if shard.is_poisoned() {
+                pending.push(None);
+                continue;
+            }
+            let (tx, rx) = mpsc::channel();
+            pending.push(shard.tx.send(Cmd::TierCompact(tx)).ok().map(|()| rx));
+        }
+        let reclaimed: usize = pending
+            .into_iter()
+            .flatten()
+            .filter_map(|rx| rx.recv_timeout(Duration::from_secs(5)).ok())
+            .sum();
+        if reclaimed > 0 {
+            self.tier_counters
+                .tier_compactions
+                .fetch_add(1, Ordering::Relaxed);
+            self.tier_counters
+                .tier_bytes_reclaimed
+                .fetch_add(reclaimed as u64, Ordering::Relaxed);
+        }
+        reclaimed
+    }
+
+    /// Host-tier knobs and pool-level compaction counters (the `tier`
+    /// object of `GET /metrics`). Per-shard tier occupancy
+    /// (`tier_bytes` / `tier_budget_bytes`) and the demote/promote
+    /// counters live in each shard's snapshot and the aggregate.
+    pub fn tier_stats(&self) -> Json {
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.cfg.tier)),
+            ("compact_ms", Json::num(self.cfg.tier_compact_ms as f64)),
+            (
+                "tier_compactions",
+                Json::num(self.tier_counters.tier_compactions.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "tier_bytes_reclaimed",
+                Json::num(
+                    self.tier_counters.tier_bytes_reclaimed.load(Ordering::Relaxed) as f64,
+                ),
+            ),
+        ])
+    }
+
     /// Full observability payload: aggregate + per-shard snapshots + the
     /// active route policy with its spill/migration/reroute counters +
-    /// the elastic-budget rebalancer counters — what `GET /metrics`
-    /// serves. Each shard snapshot carries its live `budget_bytes`;
-    /// across live shards they always sum to the configured pool budget.
+    /// the elastic-budget rebalancer counters + the host-tier compaction
+    /// counters — what `GET /metrics` serves. Each shard snapshot
+    /// carries its live `budget_bytes`; across live shards they always
+    /// sum to the configured pool budget.
     pub fn metrics_json(&self) -> anyhow::Result<Json> {
         let per_shard = self.shard_stats()?;
         Ok(Json::obj(vec![
@@ -828,6 +951,7 @@ impl Server {
             ("route", Json::str(self.cfg.route_policy.name())),
             ("router", self.router_stats()),
             ("rebalancer", self.rebalancer_stats()),
+            ("tier", self.tier_stats()),
             ("per_shard", Json::Arr(per_shard)),
         ]))
     }
@@ -1136,7 +1260,7 @@ pub fn http_get(addr: &str, path: &str) -> anyhow::Result<(u16, String)> {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::{CacheConfig, CachePolicy, EngineConfig};
+    use crate::config::{CacheConfig, CachePolicy, EngineConfig, TierConfig};
     use crate::exec::SimExecutor;
     use crate::router::RoutePolicy;
     use crate::workload::{run_http_load, HttpLoadSpec};
@@ -1522,6 +1646,75 @@ mod tests {
         for s in per {
             assert_eq!(s.at(&["budget_bytes"]).as_usize().unwrap(), total / 4);
         }
+        srv.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn tier_demotes_promotes_and_compacts_on_tick() {
+        // one tiered shard, 2 MB pool: session B's working set forces
+        // session A's pages out of the budget, but eviction demotes them
+        // into the host tier; A's return promotes them back (bytes, not
+        // FLOPs), and the promotion's dead tier records are reclaimed by
+        // a deterministic compaction tick.
+        let cfg = EngineConfig {
+            policy: CachePolicy::Disaggregated,
+            cache: CacheConfig {
+                page_tokens: 16,
+                budget_bytes: 2 << 20,
+                capacity_bytes: 0,
+            },
+            tier: TierConfig { tier_bytes: 64 << 20, cost: None },
+            ..EngineConfig::default()
+        };
+        let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8]).unwrap();
+        let engine = Engine::new(cfg, Box::new(sim)).unwrap();
+        let scfg = ServerConfig {
+            tier: true,
+            // park the supervisor: the test drives compaction manually
+            tier_compact_ms: 3_600_000,
+            ..ServerConfig::default()
+        };
+        let (srv, handles) = Server::start_sharded(vec![engine], scfg);
+
+        let t_a: Vec<u32> = (1000..1300).collect(); // 300-token session A
+        let t_b: Vec<u32> = (500..800).collect(); // 300-token session B
+        srv.generate(t_a.clone(), 0, 8).unwrap();
+        srv.generate(t_b, 1, 8).unwrap();
+        srv.generate(t_a, 0, 8).unwrap(); // A returns
+
+        let m = srv.metrics_json().unwrap();
+        assert!(
+            m.at(&["aggregate", "demoted_pages"]).as_usize().unwrap() > 0,
+            "eviction never demoted: {m:?}"
+        );
+        assert!(
+            m.at(&["aggregate", "promoted_pages"]).as_usize().unwrap() > 0,
+            "returning session never promoted: {m:?}"
+        );
+        assert!(m.at(&["aggregate", "tier_hits"]).as_usize().unwrap() > 0);
+        assert_eq!(m.at(&["tier", "enabled"]).as_bool(), Some(true));
+        let tier_bytes = m.at(&["aggregate", "tier_bytes"]).as_usize().unwrap();
+        let tier_budget = m.at(&["aggregate", "tier_budget_bytes"]).as_usize().unwrap();
+        assert_eq!(tier_budget, 64 << 20);
+        assert!(tier_bytes > 0 && tier_bytes <= tier_budget);
+
+        // promotion invalidated its tier records; their bytes stay
+        // retained until this tick reclaims them
+        let reclaimed = srv.tier_compact_tick();
+        assert!(reclaimed > 0, "nothing reclaimed after promotions");
+        let m2 = srv.metrics_json().unwrap();
+        assert!(m2.at(&["tier", "tier_compactions"]).as_usize().unwrap() >= 1);
+        assert!(
+            m2.at(&["tier", "tier_bytes_reclaimed"]).as_usize().unwrap() >= reclaimed
+        );
+        assert!(
+            m2.at(&["aggregate", "tier_bytes"]).as_usize().unwrap() < tier_bytes,
+            "compaction did not shrink retained tier bytes"
+        );
+
         srv.shutdown();
         for h in handles {
             h.join().unwrap();

@@ -1,0 +1,474 @@
+//! Tier-2 (host-memory) KV page store: demoted radix pages survive here
+//! instead of being destroyed, so a session returning after its pages
+//! lost the LRU race warm-starts by copying bytes back instead of
+//! re-prefilling FLOPs — the paper's "pay bytes, not FLOPs" thesis
+//! applied one tier down from PR 3's cross-shard migration.
+//!
+//! Layout follows the mini-lsm exemplar scaled to page granularity:
+//! **append-only segments** of page-sized records plus an **in-memory
+//! index** keyed by `(tree component, namespace, node-path fingerprint)`.
+//! A record's fingerprint hashes the *full token path* from the radix
+//! root through the demoted node, so it uniquely names both the prefix
+//! and the page index within it — the tier index IS the demoted-residency
+//! marker (the radix node itself is removed at demotion, exactly like
+//! the pre-tier eviction, so no tree invariant changes).
+//!
+//! Records are never rewritten in place: replacement and promotion mark
+//! the old record **dead**, and [`TierStore::compact`] (driven inline
+//! under insert pressure and by the server's background supervisor)
+//! rewrites the segments dropping dead records. The store enforces its
+//! own byte budget: an insert that would overflow first compacts, then
+//! evicts the oldest live records (append order ≈ demotion order ≈ LRU),
+//! so retained bytes never exceed the configured budget.
+
+#![warn(missing_docs)]
+
+use std::collections::HashMap;
+
+/// Which radix tree a demoted page belongs to. Kept separate from the
+/// namespace because base ns 0 and residual adapter 0 would otherwise
+/// collide in the index.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Component {
+    /// the token-keyed bCache tree
+    Base,
+    /// the (adapter, token)-keyed rCache tree
+    Residual,
+}
+
+/// FNV-1a 64-bit hash of a token path — the node-path fingerprint half
+/// of a [`PageKey`]. Stable across processes (no randomized state), so
+/// calibration or debugging tools can reproduce keys offline.
+pub fn fingerprint(tokens: &[u32]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &t in tokens {
+        for b in t.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Identity of one demoted page: the tree it came from, its namespace,
+/// and the fingerprint of the full token path from the root through the
+/// page (which encodes the page index — path length grows one page per
+/// level).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct PageKey {
+    component: Component,
+    ns: u32,
+    fp: u64,
+}
+
+impl PageKey {
+    /// Key for the page whose node path spells exactly `token_path`
+    /// (page-aligned: the demoted node's tokens are the final
+    /// `page_tokens` of the path).
+    pub fn new(component: Component, ns: u32, token_path: &[u32]) -> Self {
+        PageKey { component, ns, fp: fingerprint(token_path) }
+    }
+}
+
+/// One page-sized record in a segment. `data` is an owned snapshot of
+/// the pool page's floats (the same owned-buffer discipline as
+/// `migrate::ComponentExport`), fully decoupled from any pool.
+#[derive(Debug)]
+struct Record {
+    key: PageKey,
+    data: Vec<f32>,
+    dead: bool,
+}
+
+impl Record {
+    fn bytes(&self) -> usize {
+        self.data.len() * 4
+    }
+}
+
+/// One append-only run of records. Sealed implicitly: appends go to the
+/// last segment until it crosses the store's segment byte target.
+#[derive(Debug, Default)]
+struct Segment {
+    records: Vec<Record>,
+    live_bytes: usize,
+    dead_bytes: usize,
+}
+
+impl Segment {
+    fn bytes(&self) -> usize {
+        self.live_bytes + self.dead_bytes
+    }
+}
+
+/// Lifetime counters for the tier store (see each field).
+#[derive(Debug, Default, Clone)]
+pub struct TierStats {
+    /// records accepted by [`TierStore::insert`]
+    pub inserted_pages: u64,
+    /// inserts that replaced an existing record for the same key
+    pub replaced_pages: u64,
+    /// live records evicted to make room under the tier's own budget
+    pub evicted_pages: u64,
+    /// inserts refused because the record could not fit the budget
+    pub rejected_pages: u64,
+    /// compaction passes that actually reclaimed bytes
+    pub compactions: u64,
+    /// dead bytes reclaimed across all compactions
+    pub reclaimed_bytes: u64,
+}
+
+/// The host-memory tier-2 page store (module docs). Single-owner like
+/// everything else in the engine: each shard's `Engine` owns one.
+#[derive(Debug)]
+pub struct TierStore {
+    budget_bytes: usize,
+    /// seal threshold: appends open a fresh segment past this many bytes
+    seg_bytes: usize,
+    segments: Vec<Segment>,
+    /// key -> (segment, record) location of the live record
+    index: HashMap<PageKey, (u32, u32)>,
+    live_bytes: usize,
+    total_bytes: usize,
+    stats: TierStats,
+}
+
+impl TierStore {
+    /// Empty store enforcing `budget_bytes` of retained (live + dead)
+    /// record bytes.
+    pub fn new(budget_bytes: usize) -> Self {
+        TierStore {
+            budget_bytes,
+            seg_bytes: (budget_bytes / 8).max(1),
+            segments: Vec::new(),
+            index: HashMap::new(),
+            live_bytes: 0,
+            total_bytes: 0,
+            stats: TierStats::default(),
+        }
+    }
+
+    /// The configured byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
+    }
+
+    /// Bytes currently retained by the segments (live + not-yet-compacted
+    /// dead). Never exceeds [`TierStore::budget_bytes`].
+    pub fn bytes(&self) -> usize {
+        self.total_bytes
+    }
+
+    /// Bytes held by live (promotable) records only.
+    pub fn live_bytes(&self) -> usize {
+        self.live_bytes
+    }
+
+    /// Live records in the index.
+    pub fn entries(&self) -> usize {
+        self.index.len()
+    }
+
+    /// Lifetime counters.
+    pub fn stats(&self) -> &TierStats {
+        &self.stats
+    }
+
+    /// The live record for `key`, if resident.
+    pub fn get(&self, key: &PageKey) -> Option<&[f32]> {
+        let &(seg, rec) = self.index.get(key)?;
+        Some(&self.segments[seg as usize].records[rec as usize].data)
+    }
+
+    /// Is a live record for `key` resident?
+    pub fn contains(&self, key: &PageKey) -> bool {
+        self.index.contains_key(key)
+    }
+
+    /// Mark the live record for `key` dead (promotion took its bytes, or
+    /// the caller invalidated it). The bytes stay retained until the next
+    /// [`TierStore::compact`]. Returns whether a record was removed.
+    pub fn remove(&mut self, key: &PageKey) -> bool {
+        match self.index.remove(key) {
+            Some(loc) => {
+                self.kill(loc);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Demote one page's bytes under `key`. An existing record for the
+    /// key is replaced (marked dead). Enforces the tier budget: an insert
+    /// that would overflow first compacts dead records away, then evicts
+    /// the oldest live records; a record that still cannot fit is refused
+    /// (`false`) — retained bytes never exceed the budget.
+    pub fn insert(&mut self, key: PageKey, data: &[f32]) -> bool {
+        let bytes = data.len() * 4;
+        if bytes == 0 || bytes > self.budget_bytes {
+            self.stats.rejected_pages += 1;
+            return false;
+        }
+        if let Some(loc) = self.index.remove(&key) {
+            self.kill(loc);
+            self.stats.replaced_pages += 1;
+        }
+        if self.total_bytes + bytes > self.budget_bytes {
+            while self.live_bytes + bytes > self.budget_bytes {
+                if !self.evict_oldest() {
+                    break;
+                }
+            }
+            self.compact();
+            if self.total_bytes + bytes > self.budget_bytes {
+                self.stats.rejected_pages += 1;
+                return false;
+            }
+        }
+        if !self.segments.last().is_some_and(|s| s.bytes() < self.seg_bytes) {
+            self.segments.push(Segment::default());
+        }
+        let seg = self.segments.len() - 1;
+        let s = &mut self.segments[seg];
+        s.live_bytes += bytes;
+        s.records.push(Record { key, data: data.to_vec(), dead: false });
+        self.index.insert(key, (seg as u32, (s.records.len() - 1) as u32));
+        self.live_bytes += bytes;
+        self.total_bytes += bytes;
+        self.stats.inserted_pages += 1;
+        true
+    }
+
+    /// Rewrite the segments dropping dead records (replaced, promoted, or
+    /// budget-evicted), rebuilding the index. Returns the bytes
+    /// reclaimed; a store with no dead bytes returns 0 without touching
+    /// anything. Driven inline by insert-time budget pressure and
+    /// periodically by the server's tier compaction supervisor.
+    pub fn compact(&mut self) -> usize {
+        let reclaimed = self.total_bytes - self.live_bytes;
+        if reclaimed == 0 {
+            return 0;
+        }
+        let old = std::mem::take(&mut self.segments);
+        self.index.clear();
+        for seg in old {
+            for rec in seg.records {
+                if rec.dead {
+                    continue;
+                }
+                if !self.segments.last().is_some_and(|s| s.bytes() < self.seg_bytes) {
+                    self.segments.push(Segment::default());
+                }
+                let si = self.segments.len() - 1;
+                let s = &mut self.segments[si];
+                s.live_bytes += rec.bytes();
+                self.index
+                    .insert(rec.key, (si as u32, s.records.len() as u32));
+                s.records.push(rec);
+            }
+        }
+        self.total_bytes = self.live_bytes;
+        self.stats.compactions += 1;
+        self.stats.reclaimed_bytes += reclaimed as u64;
+        reclaimed
+    }
+
+    /// Mark dead the oldest live record (front of the oldest segment —
+    /// append order approximates demotion recency, so this is the tier's
+    /// own LRU). Returns false when nothing live remains.
+    fn evict_oldest(&mut self) -> bool {
+        for (si, seg) in self.segments.iter().enumerate() {
+            if let Some(ri) = seg.records.iter().position(|r| !r.dead) {
+                let key = seg.records[ri].key;
+                self.index.remove(&key);
+                self.kill((si as u32, ri as u32));
+                self.stats.evicted_pages += 1;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn kill(&mut self, (seg, rec): (u32, u32)) {
+        let s = &mut self.segments[seg as usize];
+        let r = &mut s.records[rec as usize];
+        debug_assert!(!r.dead, "double kill of tier record");
+        r.dead = true;
+        let bytes = r.bytes();
+        s.live_bytes -= bytes;
+        s.dead_bytes += bytes;
+        self.live_bytes -= bytes;
+    }
+
+    /// Structural invariants (tests): byte accounting matches the
+    /// records, every index entry points at a live record with the same
+    /// key, and every live record is indexed.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut live = 0usize;
+        let mut total = 0usize;
+        let mut live_records = 0usize;
+        for (si, seg) in self.segments.iter().enumerate() {
+            let mut seg_live = 0usize;
+            let mut seg_dead = 0usize;
+            for (ri, rec) in seg.records.iter().enumerate() {
+                total += rec.bytes();
+                if rec.dead {
+                    seg_dead += rec.bytes();
+                    continue;
+                }
+                seg_live += rec.bytes();
+                live += rec.bytes();
+                live_records += 1;
+                match self.index.get(&rec.key) {
+                    Some(&(s, r)) if (s, r) == (si as u32, ri as u32) => {}
+                    _ => return Err(format!("live record ({si},{ri}) not indexed")),
+                }
+            }
+            if seg_live != seg.live_bytes || seg_dead != seg.dead_bytes {
+                return Err(format!("segment {si} byte accounting drifted"));
+            }
+        }
+        if live != self.live_bytes || total != self.total_bytes {
+            return Err(format!(
+                "store accounting drifted: live {live} vs {}, total {total} vs {}",
+                self.live_bytes, self.total_bytes
+            ));
+        }
+        if live_records != self.index.len() {
+            return Err(format!(
+                "index holds {} entries for {live_records} live records",
+                self.index.len()
+            ));
+        }
+        if self.total_bytes > self.budget_bytes {
+            return Err(format!(
+                "retained {} bytes exceed budget {}",
+                self.total_bytes, self.budget_bytes
+            ));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn page(v: f32, floats: usize) -> Vec<f32> {
+        vec![v; floats]
+    }
+
+    fn key(ns: u32, path: &[u32]) -> PageKey {
+        PageKey::new(Component::Base, ns, path)
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_paths_and_components() {
+        assert_ne!(fingerprint(&[1, 2, 3]), fingerprint(&[1, 2, 4]));
+        assert_ne!(fingerprint(&[1, 2]), fingerprint(&[1, 2, 0]));
+        assert_ne!(
+            PageKey::new(Component::Base, 0, &[1, 2]),
+            PageKey::new(Component::Residual, 0, &[1, 2]),
+            "base ns 0 and residual adapter 0 must not collide"
+        );
+        assert_ne!(key(0, &[1, 2]), key(1, &[1, 2]));
+    }
+
+    #[test]
+    fn insert_get_round_trip_is_byte_identical() {
+        let mut t = TierStore::new(1 << 20);
+        let data: Vec<f32> = (0..64).map(|i| i as f32 * 0.5).collect();
+        assert!(t.insert(key(0, &[1, 2, 3, 4]), &data));
+        assert_eq!(t.get(&key(0, &[1, 2, 3, 4])).unwrap(), &data[..]);
+        assert_eq!(t.entries(), 1);
+        assert_eq!(t.bytes(), 64 * 4);
+        assert!(t.get(&key(0, &[1, 2, 3, 5])).is_none());
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn replacement_marks_old_record_dead_and_compaction_reclaims() {
+        let mut t = TierStore::new(1 << 20);
+        let k = key(7, &[9, 9, 9, 9]);
+        assert!(t.insert(k, &page(1.0, 32)));
+        assert!(t.insert(k, &page(2.0, 32)));
+        assert_eq!(t.stats().replaced_pages, 1);
+        assert!(t.get(&k).unwrap().iter().all(|&x| x == 2.0));
+        assert_eq!(t.entries(), 1);
+        assert_eq!(t.bytes(), 2 * 32 * 4, "dead bytes retained until compaction");
+        assert_eq!(t.live_bytes(), 32 * 4);
+        assert_eq!(t.compact(), 32 * 4);
+        assert_eq!(t.bytes(), 32 * 4);
+        assert!(t.get(&k).unwrap().iter().all(|&x| x == 2.0), "survives compaction");
+        assert_eq!(t.compact(), 0, "nothing dead: no-op");
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn budget_evicts_oldest_and_never_exceeds() {
+        // budget fits exactly 4 records; the 5th evicts the oldest
+        let floats = 32;
+        let rec = floats * 4;
+        let mut t = TierStore::new(4 * rec);
+        for i in 0..5u32 {
+            assert!(t.insert(key(0, &[i]), &page(i as f32, floats)));
+            assert!(t.bytes() <= t.budget_bytes(), "budget exceeded at {i}");
+            t.check_invariants().unwrap();
+        }
+        assert_eq!(t.entries(), 4);
+        assert!(t.get(&key(0, &[0])).is_none(), "oldest evicted");
+        assert!(t.get(&key(0, &[4])).is_some());
+        assert_eq!(t.stats().evicted_pages, 1);
+        // a record bigger than the whole budget is refused outright
+        assert!(!t.insert(key(0, &[99]), &page(0.0, 5 * floats)));
+        assert_eq!(t.stats().rejected_pages, 1);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_marks_dead_and_compaction_reclaims_all_released() {
+        // the "all referencing nodes released" lifecycle: every record
+        // removed (promoted away) -> compaction returns the tier to zero
+        let mut t = TierStore::new(1 << 20);
+        for i in 0..8u32 {
+            assert!(t.insert(key(1, &[i, i]), &page(i as f32, 16)));
+        }
+        let before = t.bytes();
+        for i in 0..8u32 {
+            assert!(t.remove(&key(1, &[i, i])));
+        }
+        assert!(!t.remove(&key(1, &[0, 0])), "double remove is a no-op");
+        assert_eq!(t.entries(), 0);
+        assert_eq!(t.live_bytes(), 0);
+        assert_eq!(t.bytes(), before, "bytes retained until compaction");
+        assert_eq!(t.compact(), before);
+        assert_eq!(t.bytes(), 0);
+        assert_eq!(t.stats().reclaimed_bytes, before as u64);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn segments_seal_and_survive_compaction_mix() {
+        // budget/8 seal target forces multiple segments; a mixed
+        // live/dead population compacts into dense segments with every
+        // live record still reachable
+        let floats = 64;
+        let mut t = TierStore::new(floats * 4 * 16);
+        for i in 0..12u32 {
+            assert!(t.insert(key(0, &[i, 1]), &page(i as f32, floats)));
+        }
+        assert!(t.segments.len() > 1, "seal target never crossed");
+        for i in (0..12u32).step_by(2) {
+            assert!(t.remove(&key(0, &[i, 1])));
+        }
+        assert!(t.compact() > 0);
+        for i in (1..12u32).step_by(2) {
+            assert!(
+                t.get(&key(0, &[i, 1])).unwrap().iter().all(|&x| x == i as f32),
+                "record {i} lost in compaction"
+            );
+        }
+        assert_eq!(t.entries(), 6);
+        t.check_invariants().unwrap();
+    }
+}

@@ -963,6 +963,123 @@ pub fn run_skewed_workflow_load(
     ]))
 }
 
+// ---------------------------------------------------------------------------
+// returning-sessions HTTP load (the host-tier measurement harness)
+// ---------------------------------------------------------------------------
+
+/// N sessions, each with its own large private context, visiting the
+/// server in round-robin order (session 0..N-1, then session 0 again)
+/// for `visits` rounds. Between a session's visits the other N-1
+/// working sets push its pages out of the pool budget, so every return
+/// visit finds its context evicted. Without the host tier the eviction
+/// threw the pages away and the return re-prefills the whole context;
+/// with `--tier on` the eviction demoted them and the return *promotes*
+/// them back — the gap shows up as `promoted_pages` / `tier_hits` and a
+/// strictly lower `computed_prompt_tokens` in the engine aggregate at
+/// equal seed.
+#[derive(Debug, Clone)]
+pub struct ReturningSessionsHttpSpec {
+    /// N: sessions with distinct private contexts
+    pub sessions: usize,
+    /// round-robin visit rounds over all sessions
+    pub visits: usize,
+    /// words in each session's private context
+    pub session_words: usize,
+    /// per-visit unique words appended after the session context (each
+    /// visit forks the context rather than replaying it byte-identical)
+    pub unique_words: usize,
+    pub max_new: usize,
+    /// adapters are assigned round-robin over sessions
+    pub adapters: usize,
+}
+
+impl Default for ReturningSessionsHttpSpec {
+    fn default() -> Self {
+        ReturningSessionsHttpSpec {
+            sessions: 8,
+            visits: 3,
+            session_words: 160,
+            unique_words: 4,
+            max_new: 8,
+            adapters: 4,
+        }
+    }
+}
+
+impl ReturningSessionsHttpSpec {
+    /// Session `s`'s prompt for visit `v`: the session's private context
+    /// plus a small visit-unique suffix.
+    pub fn prompt(&self, s: usize, v: usize) -> String {
+        let mut words: Vec<String> =
+            (0..self.session_words).map(|i| format!("s{s}w{i}")).collect();
+        words.extend((0..self.unique_words).map(|w| format!("s{s}v{v}u{w}")));
+        words.join(" ")
+    }
+}
+
+/// Run the returning-sessions scenario against a serving address. The
+/// visits are issued **sequentially on one client** — the scenario
+/// measures cache-tier behavior across visits, and a deterministic
+/// arrival order is what makes the tier-on/tier-off A/B exact at equal
+/// seed. Returns a JSON report (counts, client-observed hit tokens,
+/// latency summary, throughput).
+pub fn run_returning_sessions_load(
+    addr: &str,
+    spec: &ReturningSessionsHttpSpec,
+) -> anyhow::Result<Json> {
+    anyhow::ensure!(spec.sessions > 0, "need at least one session");
+    anyhow::ensure!(spec.visits > 0, "need at least one visit round");
+    let t0 = std::time::Instant::now();
+    let mut latency = Series::new();
+    let (mut ok, mut errors) = (0usize, 0usize);
+    let (mut prompt_tokens, mut hit_tokens) = (0usize, 0usize);
+    // client-observed hit tokens on return visits only (visit 0 is the
+    // cold prime; any hits there come from luck, not the tier)
+    let mut return_hit_tokens = 0usize;
+    for v in 0..spec.visits {
+        for s in 0..spec.sessions {
+            let body = Json::obj(vec![
+                ("prompt", Json::str(spec.prompt(s, v))),
+                ("adapter", Json::num((s % spec.adapters.max(1)) as f64)),
+                ("max_new", Json::num(spec.max_new as f64)),
+                ("tag", Json::num((s + 1) as f64)),
+            ])
+            .to_string();
+            let start = std::time::Instant::now();
+            match crate::server::http_post(addr, "/generate", &body) {
+                Ok((200, resp)) => {
+                    ok += 1;
+                    latency.push(start.elapsed().as_micros() as f64);
+                    if let Ok(j) = crate::util::json::parse(&resp) {
+                        let p = j.at(&["prompt_tokens"]).as_usize().unwrap_or(0);
+                        let h = j.at(&["hit_tokens"]).as_usize().unwrap_or(0);
+                        prompt_tokens += p;
+                        hit_tokens += h;
+                        if v > 0 {
+                            return_hit_tokens += h;
+                        }
+                    }
+                }
+                Ok(_) | Err(_) => errors += 1,
+            }
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok(Json::obj(vec![
+        ("sessions", Json::num(spec.sessions as f64)),
+        ("visits", Json::num(spec.visits as f64)),
+        ("requests", Json::num((spec.sessions * spec.visits) as f64)),
+        ("ok", Json::num(ok as f64)),
+        ("errors", Json::num(errors as f64)),
+        ("prompt_tokens", Json::num(prompt_tokens as f64)),
+        ("hit_tokens", Json::num(hit_tokens as f64)),
+        ("return_hit_tokens", Json::num(return_hit_tokens as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("throughput_req_per_s", Json::num(ok as f64 / wall_s)),
+        ("latency_us", latency.summary().to_json()),
+    ]))
+}
+
 /// Standard engine builders shared by tests, benches and the CLI.
 pub mod presets {
     use crate::config::{CacheConfig, CachePolicy, EngineConfig};
