@@ -1,0 +1,262 @@
+#!/usr/bin/env python3
+"""Bench-gate checker: assert metric comparisons over bench-http JSON reports.
+
+Every CI bench gate used to be an inline ``python3 - <<'EOF'`` heredoc in
+the workflow file; they are now declarative JSON specs under ``ci/gates/``
+evaluated by this one script, so gates are testable, diffable, and share
+one failure format.
+
+Usage::
+
+    python3 ci/check_bench.py check ci/gates/occupancy.json [--dir rust]
+    python3 ci/check_bench.py selftest
+
+A spec names the report files it reads and the checks to run::
+
+    {
+      "files":  {"on": "BENCH_on.json", "off": "BENCH_off.json"},
+      "checks": [
+        {"op": "eq", "left": "on.errors", "right": 0},
+        {"op": "gt", "left": "on.engine.matched_rate",
+                     "right": "off.engine.matched_rate"},
+        {"op": "ge", "left": "on.ok", "right": "on.requests", "offset": -2},
+        {"op": "count_ge",
+         "list": "on.per_shard[*].avg_decode_batch", "gt": 1.0, "min": 2}
+      ]
+    }
+
+Operand grammar (the ``left``/``right``/``list`` fields):
+
+* JSON numbers and booleans are literals; ``{"lit": "affinity"}`` is a
+  literal string (bare strings are always references).
+* ``"on.engine.matched_rate"`` walks keys from a file alias.
+* ``"on.per_shard[*].oom_drops"`` maps the tail over a list, yielding a
+  list.
+* ``sum(...)``, ``max(...)``, ``min(...)``, ``len(...)`` wrap a
+  list-valued reference.
+* ``"offset"`` (checks with ``left``/``right``) is added to the resolved
+  right operand: ``ok >= requests - 2`` is ``offset: -2``.
+
+Ops: ``eq ne gt lt ge le`` compare ``left`` vs ``right``; ``count_ge``
+asserts at least ``min`` elements of ``list`` exceed ``gt``.
+"""
+
+import argparse
+import json
+import operator
+import os
+import sys
+
+OPS = {
+    "eq": operator.eq,
+    "ne": operator.ne,
+    "gt": operator.gt,
+    "lt": operator.lt,
+    "ge": operator.ge,
+    "le": operator.le,
+}
+
+WRAPPERS = {"sum": sum, "max": max, "min": min, "len": len}
+
+
+def walk(value, parts):
+    """Walk key ``parts`` into ``value``, mapping over ``[*]`` segments.
+
+    >>> walk({"a": {"b": 3}}, ["a", "b"])
+    3
+    >>> walk({"a": [{"n": 1}, {"n": 2}]}, ["a[*]", "n"])
+    [1, 2]
+    >>> walk({"a": [1, 2, 3]}, ["a[*]"])
+    [1, 2, 3]
+    >>> walk({"a": 1}, ["missing"])
+    Traceback (most recent call last):
+        ...
+    KeyError: 'missing'
+    """
+    if not parts:
+        return value
+    head, tail = parts[0], parts[1:]
+    if head.endswith("[*]"):
+        seq = value[head[:-3]]
+        if not isinstance(seq, list):
+            raise TypeError(f"{head} is not a list")
+        return [walk(item, tail) for item in seq]
+    return walk(value[head], tail)
+
+
+def resolve(expr, data):
+    """Resolve an operand expression against the loaded reports.
+
+    >>> data = {"r": {"ok": 7, "per_shard": [{"b": 1}, {"b": 2}]}}
+    >>> resolve(3, data)
+    3
+    >>> resolve(True, data)
+    True
+    >>> resolve({"lit": "affinity"}, data)
+    'affinity'
+    >>> resolve("r.ok", data)
+    7
+    >>> resolve("r.per_shard[*].b", data)
+    [1, 2]
+    >>> resolve("sum(r.per_shard[*].b)", data)
+    3
+    >>> resolve("max(r.per_shard[*].b)", data)
+    2
+    >>> resolve("len(r.per_shard)", data)
+    2
+    """
+    if isinstance(expr, dict):
+        return expr["lit"]
+    if not isinstance(expr, str):
+        return expr
+    for name, fn in WRAPPERS.items():
+        if expr.startswith(name + "(") and expr.endswith(")"):
+            inner = resolve(expr[len(name) + 1 : -1], data)
+            # len() of a plain dict/list reference works too
+            return fn(inner)
+    return walk(data, expr.split("."))
+
+
+def run_check(check, data):
+    """Evaluate one check; return (ok, detail string).
+
+    >>> data = {"r": {"ok": 7, "req": 9, "s": [{"d": 0.5}, {"d": 1.5}]}}
+    >>> run_check({"op": "ge", "left": "r.ok", "right": "r.req",
+    ...            "offset": -2}, data)
+    (True, 'ge: r.ok (7) vs r.req - 2 (7)')
+    >>> run_check({"op": "eq", "left": "r.ok", "right": 8}, data)[0]
+    False
+    >>> run_check({"op": "count_ge", "list": "r.s[*].d", "gt": 1.0,
+    ...            "min": 2}, data)
+    (False, 'count_ge: 1 of r.s[*].d ([0.5, 1.5]) > 1.0, need >= 2')
+    """
+    op = check["op"]
+    if op == "count_ge":
+        values = resolve(check["list"], data)
+        bar, need = check["gt"], check["min"]
+        n = sum(1 for v in values if v > bar)
+        detail = f"count_ge: {n} of {check['list']} ({values}) > {bar}, need >= {need}"
+        return n >= need, detail
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}")
+    left = resolve(check["left"], data)
+    right = resolve(check["right"], data)
+    shown = f"{check['right']}"
+    if "offset" in check:
+        right += check["offset"]
+        shown += f" {check['offset']:+d}".replace("+", "+ ").replace("-", "- ")
+    detail = f"{op}: {check['left']} ({left}) vs {shown} ({right})"
+    return OPS[op](left, right), detail
+
+
+def run_spec(spec, base_dir):
+    """Load the spec's files and run every check; return failure list."""
+    data = {}
+    for alias, path in spec["files"].items():
+        with open(os.path.join(base_dir, path)) as fh:
+            data[alias] = json.load(fh)
+    failures = []
+    for check in spec["checks"]:
+        try:
+            ok, detail = run_check(check, data)
+        except Exception as exc:  # unresolvable ref = a broken gate: fail loudly
+            ok, detail = False, f"{check.get('op')}: error resolving {check}: {exc!r}"
+        mark = "ok " if ok else "FAIL"
+        why = f"  # {check['why']}" if "why" in check else ""
+        print(f"  [{mark}] {detail}{why}")
+        if not ok:
+            failures.append(detail)
+    return failures
+
+
+def cmd_check(args):
+    with open(args.spec) as fh:
+        spec = json.load(fh)
+    print(f"{args.spec}: {len(spec['checks'])} checks over {sorted(spec['files'])}")
+    failures = run_spec(spec, args.dir)
+    if failures:
+        print(f"{args.spec}: {len(failures)} check(s) FAILED", file=sys.stderr)
+        return 1
+    print(f"{args.spec}: all checks passed")
+    return 0
+
+
+def cmd_selftest(_args):
+    """Doctest the resolver/comparator, then run a known-answer spec."""
+    import doctest
+    import tempfile
+
+    results = doctest.testmod(sys.modules[__name__], verbose=False)
+    if results.failed:
+        print(f"selftest: {results.failed} doctest(s) failed", file=sys.stderr)
+        return 1
+    print(f"selftest: {results.attempted} doctests passed")
+
+    # end-to-end: a fake A/B report pair through a spec exercising every op
+    on = {
+        "ok": 10, "requests": 10, "errors": 0, "gang": True,
+        "route": "affinity",
+        "engine": {"matched_rate": 0.8, "computed_prompt_tokens": 100},
+        "per_shard": [{"d": 2.0, "b": 4}, {"d": 0.2, "b": 4}],
+    }
+    off = {
+        "ok": 9, "requests": 10, "errors": 1, "gang": False,
+        "route": "affinity",
+        "engine": {"matched_rate": 0.5, "computed_prompt_tokens": 200},
+        "per_shard": [{"d": 1.1, "b": 5}, {"d": 1.2, "b": 3}],
+    }
+    spec = {
+        "files": {"on": "on.json", "off": "off.json"},
+        "checks": [
+            {"op": "eq", "left": "on.errors", "right": 0},
+            {"op": "ne", "left": "off.errors", "right": 0},
+            {"op": "eq", "left": "on.ok", "right": "on.requests"},
+            {"op": "ge", "left": "off.ok", "right": "off.requests", "offset": -2},
+            {"op": "eq", "left": "on.gang", "right": True},
+            {"op": "eq", "left": "on.route", "right": {"lit": "affinity"}},
+            {"op": "gt", "left": "on.engine.matched_rate",
+             "right": "off.engine.matched_rate"},
+            {"op": "lt", "left": "on.engine.computed_prompt_tokens",
+             "right": "off.engine.computed_prompt_tokens"},
+            {"op": "le", "left": "on.errors", "right": "off.errors"},
+            {"op": "eq", "left": "sum(on.per_shard[*].b)",
+             "right": "sum(off.per_shard[*].b)"},
+            {"op": "gt", "left": "max(on.per_shard[*].d)",
+             "right": "max(off.per_shard[*].d)"},
+            {"op": "eq", "left": "len(on.per_shard)", "right": 2},
+            {"op": "count_ge", "list": "off.per_shard[*].d", "gt": 1.0, "min": 2},
+        ],
+    }
+    bad = {"op": "lt", "left": "on.ok", "right": 5}
+    with tempfile.TemporaryDirectory() as tmp:
+        for name, report in (("on.json", on), ("off.json", off)):
+            with open(os.path.join(tmp, name), "w") as fh:
+                json.dump(report, fh)
+        if run_spec(spec, tmp):
+            print("selftest: passing spec reported failures", file=sys.stderr)
+            return 1
+        spec["checks"] = [bad]
+        if not run_spec(spec, tmp):
+            print("selftest: failing spec reported success", file=sys.stderr)
+            return 1
+    print("selftest: ok")
+    return 0
+
+
+def main(argv=None):
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = parser.add_subparsers(dest="cmd", required=True)
+    check = sub.add_parser("check", help="evaluate a gate spec")
+    check.add_argument("spec", help="path to the gate spec JSON")
+    check.add_argument(
+        "--dir", default=".", help="directory the spec's report paths are relative to"
+    )
+    check.set_defaults(fn=cmd_check)
+    selftest = sub.add_parser("selftest", help="doctests + known-answer run")
+    selftest.set_defaults(fn=cmd_selftest)
+    args = parser.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,124 @@
+//! MapReduce workflow over the DAG serving API: three mapper agents fork
+//! the same shared context in parallel (the paper's broadcast-redundancy
+//! case, Fig. 2b) while the server — told the whole step graph up front —
+//! pre-warms the reducer's declared prefix on its home shard under a
+//! prefetch lease. By the time the reducer posts, its context pages are
+//! pinned and warm: the cross-step horizon from the KVFlow line of work.
+//!
+//!   cargo run --release --example mapreduce_agents
+
+use forkkv::config::{CacheConfig, CachePolicy, EngineConfig, ServerConfig};
+use forkkv::engine::Engine;
+use forkkv::exec::SimExecutor;
+use forkkv::server::{http_post, Server};
+use forkkv::util::json::{self, Json};
+use forkkv::workload::presets;
+
+const WIDTH: usize = 3;
+
+fn post_step(
+    addr: &str,
+    prompt: &str,
+    step: &str,
+    fan: usize,
+    steps: Option<&Json>,
+) -> anyhow::Result<Json> {
+    let mut fields = vec![
+        ("prompt", Json::str(prompt)),
+        ("adapter", Json::num(0.0)),
+        ("max_new", Json::num(8.0)),
+        ("tag", Json::num(7.0)),
+        ("workflow", Json::num(7.0)),
+        ("step", Json::str(step)),
+        ("fan", Json::num(fan as f64)),
+    ];
+    if let Some(s) = steps {
+        fields.push(("steps", s.clone()));
+    }
+    let (status, resp) = http_post(addr, "/generate", &Json::obj(fields).to_string())?;
+    anyhow::ensure!(status == 200, "step {step}: HTTP {status}: {resp}");
+    Ok(json::parse(&resp)?)
+}
+
+fn print_step(name: &str, r: &Json) {
+    println!(
+        "{name:<7}| prompt {} tok, hit {} tok, ttft {:.0} us",
+        r.at(&["prompt_tokens"]).as_usize().unwrap_or(0),
+        r.at(&["hit_tokens"]).as_usize().unwrap_or(0),
+        r.at(&["ttft_us"]).as_f64().unwrap_or(0.0),
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = EngineConfig {
+        policy: CachePolicy::Disaggregated,
+        cache: CacheConfig { page_tokens: 16, budget_bytes: 64 << 20, capacity_bytes: 0 },
+        seed: 10,
+        ..EngineConfig::default()
+    };
+    let sim = SimExecutor::new("llama3-8b-sim", presets::SIM_BUCKETS.to_vec())?;
+    let engine = Engine::new(cfg, Box::new(sim))?;
+    let scfg = ServerConfig { prefetch: true, ..ServerConfig::default() };
+    let (server, shard_handles) = Server::start_sharded(vec![engine], scfg);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let serve = {
+        let server = server.clone();
+        std::thread::spawn(move || server.serve_listener(listener, Some(WIDTH + 1)))
+    };
+
+    // shared "document" context every agent forks; long enough to span
+    // several 16-token pages so the prefetch lease has pages to pin
+    let ctx = (0..120).map(|i| format!("doc{i}")).collect::<Vec<_>>().join(" ");
+
+    // the steps-to-execute DAG: mappers are roots, the reducer depends on
+    // all of them and declares its prefix (the shared context) up front so
+    // the server can warm it while the mappers are still decoding
+    let steps = Json::Arr(
+        (0..WIDTH)
+            .map(|a| Json::obj(vec![("id", Json::str(format!("map{a}")))]))
+            .chain(std::iter::once(Json::obj(vec![
+                ("id", Json::str("reduce")),
+                (
+                    "after",
+                    Json::Arr((0..WIDTH).map(|a| Json::str(format!("map{a}"))).collect()),
+                ),
+                ("prefix", Json::str(&ctx)),
+            ])))
+            .collect(),
+    );
+
+    println!("# MapReduce fan over the DAG API, sim execution");
+    let mappers: Vec<_> = (0..WIDTH)
+        .map(|a| {
+            let (addr, ctx, steps) = (addr.clone(), ctx.clone(), steps.clone());
+            std::thread::spawn(move || {
+                post_step(
+                    &addr,
+                    &format!("{ctx} map{a} extract the key facts"),
+                    &format!("map{a}"),
+                    WIDTH,
+                    Some(&steps),
+                )
+            })
+        })
+        .collect();
+    for (a, h) in mappers.into_iter().enumerate() {
+        let r = h.join().unwrap()?;
+        print_step(&format!("map{a}"), &r);
+    }
+
+    // every mapper has answered, so the reducer's lease is already issued:
+    // this request lands on warm, pinned pages
+    let r = post_step(&addr, &format!("{ctx} join the mapper outputs"), "reduce", 1, None)?;
+    print_step("reduce", &r);
+
+    serve.join().unwrap()?;
+    println!("prefetch: {}", server.prefetch_stats());
+    server.shutdown();
+    for h in shard_handles {
+        h.join().ok();
+    }
+    Ok(())
+}

@@ -21,7 +21,7 @@ fn main() -> anyhow::Result<()> {
 
     let cfg = EngineConfig {
         policy: CachePolicy::Disaggregated,
-        cache: CacheConfig { page_tokens: 16, budget_bytes: 64 << 20 },
+        cache: CacheConfig { page_tokens: 16, budget_bytes: 64 << 20, capacity_bytes: 0 },
         ..EngineConfig::default()
     };
     let mut engine = Engine::new(cfg, Box::new(exec))?;
@@ -49,6 +49,7 @@ fn main() -> anyhow::Result<()> {
             max_new: 12,
             arrival_us: i as u64,
             ignore_eos: true,
+            fan: 0,
         });
     }
 

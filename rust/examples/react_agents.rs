@@ -1,0 +1,93 @@
+//! ReAct agent loop over the DAG serving API: a 4-step reason→act chain
+//! where each step's prompt extends the previous step's. The chain is
+//! declared up front as a steps-to-execute DAG with `prefix_from` edges,
+//! so while step N decodes the server already knows step N+1's prefix
+//! (everything step N submitted) and pre-warms it under a prefetch lease
+//! — the cross-step horizon from the KVFlow line of work.
+//!
+//!   cargo run --release --example react_agents
+
+use forkkv::config::{CacheConfig, CachePolicy, EngineConfig, ServerConfig};
+use forkkv::engine::Engine;
+use forkkv::exec::SimExecutor;
+use forkkv::server::{http_post, Server};
+use forkkv::util::json::{self, Json};
+use forkkv::workload::presets;
+
+const STEPS: usize = 4;
+
+fn post_step(addr: &str, prompt: &str, step: &str, steps: Option<&Json>) -> anyhow::Result<Json> {
+    let mut fields = vec![
+        ("prompt", Json::str(prompt)),
+        ("adapter", Json::num(0.0)),
+        ("max_new", Json::num(8.0)),
+        ("tag", Json::num(9.0)),
+        ("workflow", Json::num(9.0)),
+        ("step", Json::str(step)),
+    ];
+    if let Some(s) = steps {
+        fields.push(("steps", s.clone()));
+    }
+    let (status, resp) = http_post(addr, "/generate", &Json::obj(fields).to_string())?;
+    anyhow::ensure!(status == 200, "step {step}: HTTP {status}: {resp}");
+    Ok(json::parse(&resp)?)
+}
+
+fn main() -> anyhow::Result<()> {
+    let cfg = EngineConfig {
+        policy: CachePolicy::Disaggregated,
+        cache: CacheConfig { page_tokens: 16, budget_bytes: 64 << 20, capacity_bytes: 0 },
+        seed: 9,
+        ..EngineConfig::default()
+    };
+    let sim = SimExecutor::new("llama3-8b-sim", presets::SIM_BUCKETS.to_vec())?;
+    let engine = Engine::new(cfg, Box::new(sim))?;
+    let scfg = ServerConfig { prefetch: true, ..ServerConfig::default() };
+    let (server, shard_handles) = Server::start_sharded(vec![engine], scfg);
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?.to_string();
+    let serve = {
+        let server = server.clone();
+        std::thread::spawn(move || server.serve_listener(listener, Some(STEPS)))
+    };
+
+    // the chain: s1 depends on s0 and inherits its prefix, and so on —
+    // `prefix_from` tells the server each successor's prefix is whatever
+    // its predecessor submitted, resolved once that predecessor arrives
+    let steps = Json::Arr(
+        (0..STEPS)
+            .map(|i| {
+                let mut node = vec![("id", Json::str(format!("s{i}")))];
+                if i > 0 {
+                    node.push(("after", Json::Arr(vec![Json::str(format!("s{}", i - 1))])));
+                    node.push(("prefix_from", Json::str(format!("s{}", i - 1))));
+                }
+                Json::obj(node)
+            })
+            .collect(),
+    );
+
+    println!("# ReAct chain over the DAG API, sim execution");
+    // shared scratchpad context, grown by one observation per step; long
+    // enough to span several 16-token pages so leases have pages to pin
+    let mut prompt = (0..100).map(|i| format!("obs{i}")).collect::<Vec<_>>().join(" ");
+    for i in 0..STEPS {
+        prompt = format!("{prompt} thought{i} action{i}");
+        let r = post_step(&addr, &prompt, &format!("s{i}"), (i == 0).then_some(&steps))?;
+        println!(
+            "s{i} | prompt {} tok, hit {} tok, ttft {:.0} us",
+            r.at(&["prompt_tokens"]).as_usize().unwrap_or(0),
+            r.at(&["hit_tokens"]).as_usize().unwrap_or(0),
+            r.at(&["ttft_us"]).as_f64().unwrap_or(0.0),
+        );
+    }
+
+    serve.join().unwrap()?;
+    println!("prefetch: {}", server.prefetch_stats());
+    server.shutdown();
+    for h in shard_handles {
+        h.join().ok();
+    }
+    Ok(())
+}

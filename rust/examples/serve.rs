@@ -37,7 +37,7 @@ fn main() -> anyhow::Result<()> {
     let exec = PjrtExecutor::load(dir)?;
     let cfg = EngineConfig {
         policy: CachePolicy::Disaggregated,
-        cache: CacheConfig { page_tokens: 16, budget_bytes: 48 << 20 },
+        cache: CacheConfig { page_tokens: 16, budget_bytes: 48 << 20, capacity_bytes: 0 },
         ..EngineConfig::default()
     };
     let engine = Engine::new(cfg, Box::new(exec))?;
@@ -70,7 +70,7 @@ fn main() -> anyhow::Result<()> {
         );
     }
     http_thread.join().unwrap()?;
-    println!("\nstats: {}", server.stats()?.to_string());
+    println!("\nstats: {}", server.stats()?);
     server.shutdown();
     engine_thread.join().ok();
     Ok(())

@@ -190,6 +190,23 @@ pub struct ServerConfig {
     /// 0 = never — compaction then runs only inline under tier insert
     /// pressure
     pub tier_compact_ms: u64,
+    /// arm cross-step workflow prefetch (`--prefetch on|off`): when a
+    /// registered DAG's step has its predecessors running, the server
+    /// pre-warms the step's known prefix on its home shard under a
+    /// lease (see the server module's prefetch section)
+    pub prefetch: bool,
+    /// how many steps past the decoding frontier the horizon warms
+    /// (`--prefetch-horizon`); 1 = only steps whose predecessors have
+    /// all arrived
+    pub prefetch_horizon: usize,
+    /// lease abandonment timeout (`--prefetch-abandon-ms`): a warmed
+    /// step that has not arrived after this many wall-clock ms gets its
+    /// lease released and its pages counted as `prefetch_wasted`
+    pub prefetch_abandon_ms: u64,
+    /// how often the `forkkv-prefetch` supervisor retries unwarmed
+    /// steps and checks abandonment; 0 parks the supervisor (tests
+    /// drive `prefetch_tick` by hand)
+    pub prefetch_tick_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -212,6 +229,10 @@ impl Default for ServerConfig {
             lend_max_frac: 0.5,
             tier: false,
             tier_compact_ms: 250,
+            prefetch: true,
+            prefetch_horizon: 1,
+            prefetch_abandon_ms: 1000,
+            prefetch_tick_ms: 25,
         }
     }
 }
@@ -283,6 +304,20 @@ impl ServerConfig {
         }
         if let Some(v) = j.get("tier_compact_ms").and_then(Json::as_usize) {
             cfg.tier_compact_ms = v as u64;
+        }
+        if let Some(v) = j.get("prefetch").and_then(Json::as_bool) {
+            cfg.prefetch = v;
+        }
+        if let Some(v) = j.get("prefetch_horizon").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "server.prefetch_horizon must be > 0");
+            cfg.prefetch_horizon = v;
+        }
+        if let Some(v) = j.get("prefetch_abandon_ms").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "server.prefetch_abandon_ms must be > 0");
+            cfg.prefetch_abandon_ms = v as u64;
+        }
+        if let Some(v) = j.get("prefetch_tick_ms").and_then(Json::as_usize) {
+            cfg.prefetch_tick_ms = v as u64;
         }
         Ok(cfg)
     }
@@ -450,7 +485,9 @@ mod tests {
                 "migrate":false,"migration_max_inflight":2,
                 "migration_bandwidth_bytes_per_s":1e9,
                 "rebalance":false,"rebalance_interval_ms":20,
-                "lend_max_frac":0.25,"tier":true,"tier_compact_ms":40}"#,
+                "lend_max_frac":0.25,"tier":true,"tier_compact_ms":40,
+                "prefetch":false,"prefetch_horizon":2,
+                "prefetch_abandon_ms":300,"prefetch_tick_ms":0}"#,
         )
         .unwrap();
         let cfg = ServerConfig::from_json(&j).unwrap();
@@ -470,6 +507,10 @@ mod tests {
         assert!((cfg.lend_max_frac - 0.25).abs() < 1e-9);
         assert!(cfg.tier);
         assert_eq!(cfg.tier_compact_ms, 40);
+        assert!(!cfg.prefetch);
+        assert_eq!(cfg.prefetch_horizon, 2);
+        assert_eq!(cfg.prefetch_abandon_ms, 300);
+        assert_eq!(cfg.prefetch_tick_ms, 0, "0 parks the supervisor");
         // zero workers / zero shards / sub-1 imbalance are rejected,
         // absent fields keep defaults
         assert!(ServerConfig::from_json(&json::parse(r#"{"workers":0}"#).unwrap()).is_err());
@@ -491,6 +532,16 @@ mod tests {
             &json::parse(r#"{"rebalance_interval_ms":0}"#).unwrap()
         )
         .is_err());
+        // a zero horizon or abandonment window would disable prefetch
+        // silently — rejected (use "prefetch": false instead)
+        assert!(ServerConfig::from_json(
+            &json::parse(r#"{"prefetch_horizon":0}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServerConfig::from_json(
+            &json::parse(r#"{"prefetch_abandon_ms":0}"#).unwrap()
+        )
+        .is_err());
         let d = ServerConfig::from_json(&json::parse("{}").unwrap()).unwrap();
         assert_eq!(d.workers, ServerConfig::default().workers);
         assert_eq!(d.max_body_bytes, 1 << 20);
@@ -505,6 +556,10 @@ mod tests {
         assert!((d.lend_max_frac - 0.5).abs() < 1e-9);
         assert!(!d.tier, "tier defaults off");
         assert_eq!(d.tier_compact_ms, 250);
+        assert!(d.prefetch, "cross-step prefetch defaults on");
+        assert_eq!(d.prefetch_horizon, 1);
+        assert_eq!(d.prefetch_abandon_ms, 1000);
+        assert_eq!(d.prefetch_tick_ms, 25);
     }
 
     #[test]

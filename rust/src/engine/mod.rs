@@ -228,6 +228,12 @@ pub struct Engine {
     /// enters the waiting queue, dropped at admission (real leases take
     /// over) or teardown — `check_quiescent` asserts no leaks.
     seq_pins: HashMap<u64, (PinPath, PinPath)>,
+    /// cross-step prefetch leases (the KVFlow horizon): server-issued
+    /// lease id -> the pinned prefix of a *future* step that has not
+    /// submitted yet. Epoch-safe like `seq_pins` (stale releases no-op
+    /// after slot recycling), released exactly once on arrival or DAG
+    /// abandonment — `check_quiescent` asserts no leaks.
+    prefetch_leases: HashMap<u64, PrefetchLease>,
     /// `next_prefill` per-tag scratch (cleared each scan, capacity
     /// retained — the admission scan must not allocate per tick)
     scratch_tags: HashMap<u64, TagState>,
@@ -347,6 +353,7 @@ impl Engine {
             pending: BinaryHeap::new(),
             pending_reqs: HashMap::new(),
             seq_pins: HashMap::new(),
+            prefetch_leases: HashMap::new(),
             scratch_tags: HashMap::new(),
             waiting: VecDeque::new(),
             running: Vec::new(),
@@ -1189,6 +1196,91 @@ impl Engine {
     }
 
     // -----------------------------------------------------------------
+    // cross-step workflow prefetch (the KVFlow horizon)
+    // -----------------------------------------------------------------
+
+    /// Pre-warm and pin a *future* step's known prefix under a prefetch
+    /// lease: promote any demoted pages of the prefix back from the host
+    /// tier (priced by the cost model, exactly like fork admission), then
+    /// soft-pin the resident coverage in both trees so LRU pressure takes
+    /// it last while the successor step is still in flight upstream.
+    /// Pins reuse the PR 4 pin epochs, so a lease can never hold freed
+    /// slots and never blocks allocation (second-pass evictable —
+    /// prefetch is advisory, not a reservation, and cannot leak budget).
+    ///
+    /// Returns the pages the lease covers across both trees. A reissued
+    /// lease id silently replaces its predecessor (no hit/waste
+    /// accounting — the server re-evaluates pending steps as their
+    /// prefixes materialize). A covering lease counts toward
+    /// `prefetched_pages`; a zero-coverage call leaves no lease behind.
+    pub fn prefetch_pin(&mut self, lease: u64, adapter: u32, tokens: &[u32]) -> usize {
+        if let Some(old) = self.prefetch_leases.remove(&lease) {
+            self.trees.base.unpin_path(&old.base);
+            self.trees.residual.unpin_path(&old.res);
+        }
+        let pt = self.cfg.cache.page_tokens;
+        if tokens.len() < pt {
+            return 0; // no full page to warm
+        }
+        let ns = base_ns(self.cfg.policy, adapter);
+        // warm-start sources first: tier promotion grafts demoted pages
+        // back in, so the pin below covers them too
+        self.promote_from_tier(Which::Base, ns, tokens);
+        if self.cfg.policy.uses_residual() {
+            self.promote_from_tier(Which::Res, adapter, tokens);
+        }
+        let base = self.trees.base.pin_prefix(ns, tokens);
+        let res = if self.cfg.policy.uses_residual() {
+            self.trees.residual.pin_prefix(adapter, tokens)
+        } else {
+            Vec::new()
+        };
+        let pages = self.trees.base.probe_pages(ns, tokens)
+            + if self.cfg.policy.uses_residual() {
+                self.trees.residual.probe_pages(adapter, tokens)
+            } else {
+                0
+            };
+        if pages == 0 {
+            // nothing resident yet (predecessors may still be
+            // prefilling): drop the empty pin paths and leave no lease,
+            // so the server's next evaluation pass can retry
+            self.trees.base.unpin_path(&base);
+            self.trees.residual.unpin_path(&res);
+            return 0;
+        }
+        self.metrics.prefetched_pages += pages as u64;
+        self.prefetch_leases.insert(lease, PrefetchLease { base, res, pages });
+        pages
+    }
+
+    /// Release a prefetch lease *exactly once*: unpin its paths (stale
+    /// epochs no-op — a pinned node recycled by eviction is skipped, per
+    /// `RadixTree::unpin_path`) and account the outcome. `hit` means the
+    /// step the lease was warmed for actually arrived; an abandoned
+    /// lease's covered pages count as `prefetch_wasted`. Returns whether
+    /// a live lease was released — a second release of the same id (or a
+    /// release of an id that never covered a page) is a no-op.
+    pub fn prefetch_release(&mut self, lease: u64, hit: bool) -> bool {
+        let Some(l) = self.prefetch_leases.remove(&lease) else {
+            return false;
+        };
+        self.trees.base.unpin_path(&l.base);
+        self.trees.residual.unpin_path(&l.res);
+        if hit {
+            self.metrics.prefetch_hits += 1;
+        } else {
+            self.metrics.prefetch_wasted += l.pages as u64;
+        }
+        true
+    }
+
+    /// Live (issued, unreleased) prefetch leases — observability/test hook.
+    pub fn prefetch_live_leases(&self) -> usize {
+        self.prefetch_leases.len()
+    }
+
+    // -----------------------------------------------------------------
     // prefill
     // -----------------------------------------------------------------
 
@@ -1864,6 +1956,12 @@ impl Engine {
                 self.seq_pins.len()
             ));
         }
+        if !self.prefetch_leases.is_empty() {
+            return Err(format!(
+                "{} prefetch leases leaked",
+                self.prefetch_leases.len()
+            ));
+        }
         let pinned =
             self.trees.base.pinned_nodes() + self.trees.residual.pinned_nodes();
         if pinned != 0 {
@@ -2120,6 +2218,15 @@ impl Engine {
 enum Which {
     Base,
     Res,
+}
+
+/// A cross-step prefetch lease: the pinned (epoch-stamped) paths covering
+/// a future step's known prefix, plus the page count the lease covered at
+/// issue time (the `prefetch_wasted` ledger on abandonment).
+struct PrefetchLease {
+    base: PinPath,
+    res: PinPath,
+    pages: usize,
 }
 
 /// Scatter chunk rows for absolute positions `[from, end)` where the chunk

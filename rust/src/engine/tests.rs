@@ -1108,3 +1108,111 @@ fn returning_session_promotes_instead_of_recomputing() {
         "tier did not raise the hit tokens: {warm_hits} vs {cold_hits}"
     );
 }
+
+#[test]
+fn prefetch_lease_pins_pages_and_survives_eviction_pressure() {
+    let mut e = engine(CachePolicy::Disaggregated, 8);
+    // publish four contexts; the first is the successor step's prefix
+    let prompts: Vec<Vec<u32>> = (0..4).map(|i| toks(160, 300 + i)).collect();
+    for (i, p) in prompts.iter().enumerate() {
+        e.submit(req(i as u64 + 1, 0, p.clone(), 4, 0));
+    }
+    assert_eq!(run_to_completion(&mut e).len(), 4);
+
+    let pages = e.prefetch_pin(1, 0, &prompts[0]);
+    assert!(pages > 0, "resident prefix covered no pages");
+    assert_eq!(e.metrics.prefetched_pages, pages as u64);
+    assert_eq!(e.prefetch_live_leases(), 1);
+
+    // eviction pressure reclaims the cold contexts but never the leased
+    // prefix: shrink to well under the four-context working set
+    let used = e.used_cache_bytes();
+    let freed = e.set_budget_bytes(used * 5 / 8);
+    assert!(freed > 0, "shrink evicted nothing");
+    assert_eq!(e.trees.base.probe_pages(0, &prompts[0]), 10);
+
+    // the warmed step arrived: release is a hit, pages unpin, and the
+    // engine is fully quiescent again
+    assert!(e.prefetch_release(1, true));
+    assert_eq!(e.metrics.prefetch_hits, 1);
+    assert_eq!(e.metrics.prefetch_wasted, 0);
+    assert_eq!(e.prefetch_live_leases(), 0);
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn prefetch_release_is_exactly_once_and_unknown_ids_are_noops() {
+    let mut e = engine(CachePolicy::Disaggregated, 8);
+    let ctx = toks(160, 42);
+    e.submit(req(1, 0, ctx.clone(), 4, 0));
+    assert_eq!(run_to_completion(&mut e).len(), 1);
+
+    let pages = e.prefetch_pin(7, 0, &ctx);
+    assert!(pages > 0);
+
+    // abandonment: the one live release accounts the lease's pages as
+    // wasted ...
+    assert!(e.prefetch_release(7, false));
+    assert_eq!(e.metrics.prefetch_wasted, pages as u64);
+    // ... and every later release of the same id — or of an id that was
+    // never issued (the stale-lease case) — is a no-op on both the pin
+    // ledger and the counters
+    assert!(!e.prefetch_release(7, false));
+    assert!(!e.prefetch_release(7, true));
+    assert!(!e.prefetch_release(999, true));
+    assert_eq!(e.metrics.prefetch_wasted, pages as u64);
+    assert_eq!(e.metrics.prefetch_hits, 0);
+    assert_eq!(e.trees.base.pinned_nodes(), 0);
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn prefetch_pin_without_resident_prefix_leaves_no_lease() {
+    let mut e = engine(CachePolicy::Disaggregated, 8);
+    // nothing cached yet (the predecessors are still prefilling):
+    // zero coverage, no lease, nothing pinned — the caller retries later
+    assert_eq!(e.prefetch_pin(1, 0, &toks(160, 5)), 0);
+    // a sub-page prefix can never cover a full page either
+    assert_eq!(e.prefetch_pin(2, 0, &toks(8, 6)), 0);
+    assert_eq!(e.prefetch_live_leases(), 0);
+    assert_eq!(e.metrics.prefetched_pages, 0);
+    assert_eq!(e.trees.base.pinned_nodes(), 0);
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn prefetch_reissue_replaces_the_old_pin_and_releases_once() {
+    let mut e = engine(CachePolicy::Disaggregated, 8);
+    let ctx = toks(160, 77);
+    e.submit(req(1, 0, ctx.clone(), 4, 0));
+    assert_eq!(run_to_completion(&mut e).len(), 1);
+
+    let first = e.prefetch_pin(3, 0, &ctx);
+    assert!(first > 0);
+    let pinned_once = e.trees.base.pinned_nodes();
+    // a supervisor retry reissues the same lease id: the old pin path is
+    // unpinned before the new one lands, so pins never accumulate
+    let second = e.prefetch_pin(3, 0, &ctx);
+    assert_eq!(second, first);
+    assert_eq!(e.trees.base.pinned_nodes(), pinned_once);
+    assert_eq!(e.prefetch_live_leases(), 1);
+
+    // one release fully unwinds the reissued lease
+    assert!(e.prefetch_release(3, true));
+    assert_eq!(e.trees.base.pinned_nodes(), 0);
+    e.check_quiescent().unwrap();
+}
+
+#[test]
+fn leaked_prefetch_lease_fails_quiescence() {
+    let mut e = engine(CachePolicy::Disaggregated, 8);
+    let ctx = toks(160, 88);
+    e.submit(req(1, 0, ctx.clone(), 4, 0));
+    assert_eq!(run_to_completion(&mut e).len(), 1);
+
+    assert!(e.prefetch_pin(4, 0, &ctx) > 0);
+    let err = e.check_quiescent().unwrap_err();
+    assert!(err.contains("prefetch lease"), "unexpected error: {err}");
+    assert!(e.prefetch_release(4, true));
+    e.check_quiescent().unwrap();
+}

@@ -12,9 +12,10 @@ use forkkv::runtime::PrefillArgs;
 use forkkv::server::Server;
 use forkkv::util::json::Json;
 use forkkv::workload::{
-    presets, run_http_load, run_multi_workflow_load, run_returning_sessions_load,
-    run_skewed_workflow_load, HttpLoadSpec, MultiWorkflowHttpSpec, ReturningSessionsHttpSpec,
-    SkewedWorkflowHttpSpec, WorkflowDriver, WorkflowKind, WorkloadSpec,
+    presets, run_dag_load, run_http_load, run_multi_workflow_load,
+    run_returning_sessions_load, run_skewed_workflow_load, DagTopology, DagWorkflowHttpSpec,
+    HttpLoadSpec, MultiWorkflowHttpSpec, ReturningSessionsHttpSpec, SkewedWorkflowHttpSpec,
+    WorkflowDriver, WorkflowKind, WorkloadSpec,
 };
 
 fn usage() -> ! {
@@ -28,6 +29,8 @@ USAGE:
                     [--migrate-max-inflight N] [--gang on|off] [--gang-hold-ms T]
                     [--rebalance on|off] [--rebalance-ms T] [--lend-max F]
                     [--tier on|off] [--tier-mb N] [--tier-compact-ms T]
+                    [--prefetch on|off] [--prefetch-horizon N]
+                    [--prefetch-abandon-ms T] [--prefetch-tick-ms T]
   forkkv run        [--policy P] [--model M] [--dataset D] [--workflow react|mapreduce]
                     [--workflows N] [--requests N] [--rate R] [--budget-mb N] [--seed S]
                     [--gang on|off] [--real --artifacts DIR]
@@ -42,6 +45,9 @@ USAGE:
                     [--rebalance on|off] [--rebalance-ms T] [--lend-max F]
                     [--tier on|off] [--tier-mb N] [--tier-compact-ms T]
                     [--sessions N --visits V] [--session-words W]
+                    [--dag mapreduce|react|pipeline]
+                    [--prefetch on|off] [--prefetch-horizon N]
+                    [--prefetch-abandon-ms T] [--prefetch-tick-ms T]
                     # closed-loop concurrent HTTP load against a sim-backed server;
                     # with --workflows, K workflows of M agents fork shared contexts
                     # (the multi-shard placement scenario; add --fan-parallel to
@@ -54,7 +60,12 @@ USAGE:
                     # words each make V round-robin visits, so a session's
                     # pages are evicted between visits (the host-tier --tier
                     # A/B: tier on promotes demoted pages back on return
-                    # instead of recomputing the prompt)
+                    # instead of recomputing the prompt); with --dag, K
+                    # workflows declare their steps-to-execute DAG up front
+                    # and the server pre-warms each successor step's known
+                    # prefix on its home shard while the predecessors decode
+                    # (the cross-step --prefetch A/B; K and the step width
+                    # come from --workflows / --agents-per-workflow)
   forkkv calibrate  [--artifacts DIR]   # measure real PJRT costs + inter-shard copy
                                         # bandwidth -> calibration.json
 
@@ -157,6 +168,23 @@ fn server_config(args: &Args) -> anyhow::Result<ServerConfig> {
     }
     if let Some(v) = args.flag("--tier-compact-ms") {
         cfg.tier_compact_ms = v.parse()?;
+    }
+    if let Some(v) = args.flag("--prefetch") {
+        cfg.prefetch = parse_on_off("--prefetch", &v)?;
+    }
+    if let Some(v) = args.flag("--prefetch-horizon") {
+        cfg.prefetch_horizon = v.parse()?;
+        anyhow::ensure!(cfg.prefetch_horizon > 0, "--prefetch-horizon must be > 0");
+    }
+    if let Some(v) = args.flag("--prefetch-abandon-ms") {
+        cfg.prefetch_abandon_ms = v.parse()?;
+        anyhow::ensure!(
+            cfg.prefetch_abandon_ms > 0,
+            "--prefetch-abandon-ms must be > 0"
+        );
+    }
+    if let Some(v) = args.flag("--prefetch-tick-ms") {
+        cfg.prefetch_tick_ms = v.parse()?;
     }
     Ok(cfg)
 }
@@ -334,6 +362,10 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         .transpose()?
         .unwrap_or(0);
     let fan_parallel = args.has("--fan-parallel");
+    let dag: Option<DagTopology> = args
+        .flag("--dag")
+        .map(|v| DagTopology::parse(&v))
+        .transpose()?;
     let sessions: Option<usize> = args.flag("--sessions").map(|v| v.parse()).transpose()?;
     let visits: usize = args.flag("--visits").map(|v| v.parse()).transpose()?.unwrap_or(3);
     let session_words: usize = args
@@ -344,11 +376,15 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
 
     let policy = cfg.policy;
     let gang = cfg.sched.gang;
+    let page_tokens = cfg.cache.page_tokens;
     let engines = build_shards(&cfg, scfg.shards, || {
         let sim = SimExecutor::new(&model, presets::SIM_BUCKETS.to_vec())?
             .with_wall_pace_us(pace_us);
         Ok(Box::new(sim) as Box<dyn Executor>)
     })?;
+    // the DAG harness mirrors the router's placement function so it can
+    // pin successor steps onto different shards than their predecessors
+    let vocab = engines[0].meta().vocab;
     let (server, shard_handles) = Server::start_sharded(engines, scfg);
 
     let listener = std::net::TcpListener::bind(
@@ -356,24 +392,33 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
             .unwrap_or_else(|| "127.0.0.1:0".into()),
     )?;
     let addr = listener.local_addr()?.to_string();
-    match (sessions, hot_agents, workflows) {
-        (Some(n), _, _) => eprintln!(
+    match (dag, sessions, hot_agents, workflows) {
+        (Some(t), _, _, _) => eprintln!(
+            "bench-http: {} DAG workflows ({} wide, topology {}) over {} shard(s), \
+             prefetch={} -> http://{addr}",
+            workflows.unwrap_or(6),
+            agents,
+            t.name(),
+            server.config().shards,
+            server.config().prefetch,
+        ),
+        (None, Some(n), _, _) => eprintln!(
             "bench-http: {n} returning sessions x {visits} visits ({session_words} context \
              words), tier={} -> http://{addr}",
             server.config().tier,
         ),
-        (None, Some(n), _) => eprintln!(
+        (None, None, Some(n), _) => eprintln!(
             "bench-http: skewed load, {n} hot agents (+{} cold) over {} shard(s), \
              migrate={} -> http://{addr}",
             workflows.unwrap_or(3),
             server.config().shards,
             server.config().migrate,
         ),
-        (None, None, Some(k)) => eprintln!(
+        (None, None, None, Some(k)) => eprintln!(
             "bench-http: {k} workflows x {agents} agents over {} shard(s) -> http://{addr}",
             server.config().shards
         ),
-        (None, None, None) => eprintln!(
+        (None, None, None, None) => eprintln!(
             "bench-http: {clients} clients x {per_client} requests over {} shard(s) -> http://{addr}",
             server.config().shards
         ),
@@ -387,8 +432,21 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         std::thread::spawn(move || server.serve_listener(listener, None))
     };
 
-    let mut report = match (sessions, hot_agents, workflows) {
-        (Some(n), _, _) => {
+    let mut report = match (dag, sessions, hot_agents, workflows) {
+        (Some(topology), _, _, _) => {
+            let spec = DagWorkflowHttpSpec {
+                topology,
+                workflows: workflows.unwrap_or(6),
+                width: agents,
+                max_new,
+                shards: server.config().shards,
+                page_tokens,
+                vocab,
+                ..DagWorkflowHttpSpec::default()
+            };
+            run_dag_load(&addr, &spec)?
+        }
+        (None, Some(n), _, _) => {
             let spec = ReturningSessionsHttpSpec {
                 sessions: n,
                 visits,
@@ -398,7 +456,7 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
             };
             run_returning_sessions_load(&addr, &spec)?
         }
-        (None, Some(n), _) => {
+        (None, None, Some(n), _) => {
             let mut spec = SkewedWorkflowHttpSpec {
                 hot_agents: n,
                 stagger_ms,
@@ -413,7 +471,7 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
             }
             run_skewed_workflow_load(&addr, &spec)?
         }
-        (None, None, Some(k)) => {
+        (None, None, None, Some(k)) => {
             let spec = MultiWorkflowHttpSpec {
                 workflows: k,
                 agents_per_workflow: agents,
@@ -423,7 +481,7 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
             };
             run_multi_workflow_load(&addr, &spec)?
         }
-        (None, None, None) => {
+        (None, None, None, None) => {
             let spec = HttpLoadSpec {
                 clients,
                 requests_per_client: per_client,
@@ -446,6 +504,7 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         m.insert("router".into(), server.router_stats());
         m.insert("rebalancer".into(), server.rebalancer_stats());
         m.insert("tier".into(), server.tier_stats());
+        m.insert("prefetch".into(), server.prefetch_stats());
         m.insert("policy".into(), Json::str(policy.name()));
         m.insert("gang".into(), Json::Bool(gang));
         m.insert("workers".into(), Json::num(server.config().workers as f64));

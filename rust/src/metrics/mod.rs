@@ -65,6 +65,18 @@ pub struct EngineMetrics {
     /// migration's `recompute_tokens_saved`)
     pub recompute_tokens_saved_tier: u64,
 
+    // cross-step workflow prefetch (the KVFlow horizon):
+    /// pages covered by prefetch leases at issue time — resident pages a
+    /// lease pinned, including pages the prefetch itself promoted from
+    /// the tier or imported via pre-migration
+    pub prefetched_pages: u64,
+    /// prefetch leases that covered at least one page and were released
+    /// by the arrival of the step they were warmed for
+    pub prefetch_hits: u64,
+    /// pages whose prefetch lease was abandoned (the successor step
+    /// never arrived before the timeout) — warmed bytes nobody used
+    pub prefetch_wasted: u64,
+
     // decode-batch occupancy (rows per decode step) and its observed peak
     pub decode_batch: Series,
     pub max_decode_batch: u64,
@@ -176,6 +188,9 @@ impl EngineMetrics {
                 "recompute_tokens_saved_tier",
                 Json::num(self.recompute_tokens_saved_tier as f64),
             ),
+            ("prefetched_pages", Json::num(self.prefetched_pages as f64)),
+            ("prefetch_hits", Json::num(self.prefetch_hits as f64)),
+            ("prefetch_wasted", Json::num(self.prefetch_wasted as f64)),
             ("decode_batch", self.decode_batch.summary().to_json()),
             ("max_decode_batch", Json::num(self.max_decode_batch as f64)),
             ("base_pool_bytes", self.base_pool_bytes.summary().to_json()),
@@ -220,7 +235,7 @@ impl EngineMetrics {
 /// Keys summed across shards by [`aggregate_stats`]. Series summaries are
 /// deliberately absent: percentiles don't compose across shards, so those
 /// stay in the per-shard snapshots.
-const SUMMED_KEYS: [&str; 26] = [
+const SUMMED_KEYS: [&str; 29] = [
     "prefill_steps",
     "decode_steps",
     "decode_rows",
@@ -247,6 +262,9 @@ const SUMMED_KEYS: [&str; 26] = [
     "promoted_pages",
     "tier_hits",
     "recompute_tokens_saved_tier",
+    "prefetched_pages",
+    "prefetch_hits",
+    "prefetch_wasted",
     // per-shard tier gauges (stats_json inserts them next to
     // budget_bytes): the aggregate is the pool-wide tier footprint
     "tier_bytes",
@@ -438,6 +456,9 @@ mod tests {
             promoted_pages: 4,
             tier_hits: 3,
             recompute_tokens_saved_tier: 64,
+            prefetched_pages: 6,
+            prefetch_hits: 2,
+            prefetch_wasted: 1,
             ..EngineMetrics::default()
         };
         let mut b = EngineMetrics {
@@ -453,6 +474,8 @@ mod tests {
             exported_pages: 5,
             demoted_pages: 1,
             tier_hits: 1,
+            prefetched_pages: 3,
+            prefetch_hits: 1,
             ..EngineMetrics::default()
         };
         let agg = aggregate_stats(&[a.to_json(), b.to_json()]);
@@ -474,6 +497,9 @@ mod tests {
             agg.at(&["recompute_tokens_saved_tier"]).as_usize().unwrap(),
             64
         );
+        assert_eq!(agg.at(&["prefetched_pages"]).as_usize().unwrap(), 9);
+        assert_eq!(agg.at(&["prefetch_hits"]).as_usize().unwrap(), 3);
+        assert_eq!(agg.at(&["prefetch_wasted"]).as_usize().unwrap(), 1);
         // weighted by steps, not the mean of per-shard averages (2.5)
         assert!((agg.at(&["avg_decode_batch"]).as_f64().unwrap() - 1.3).abs() < 1e-9);
         // weighted by prompt tokens, not the mean of per-shard rates (0.4)

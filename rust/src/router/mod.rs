@@ -116,6 +116,18 @@ impl Router {
         (self.fingerprint(tokens, tag) % self.shards as u64) as usize
     }
 
+    /// Successor home-shard resolution for cross-step prefetch: the
+    /// shard an affinity-routed request with this known prefix (and this
+    /// workflow tag) will land on, so its pages can be pre-warmed there
+    /// before the request exists. `None` under round-robin, where
+    /// placement ignores content and there is no home worth warming.
+    pub fn prefetch_home(&self, tokens: &[u32], tag: u64) -> Option<usize> {
+        match self.policy {
+            RoutePolicy::Affinity => Some(self.affinity_shard(tokens, tag)),
+            RoutePolicy::RoundRobin => None,
+        }
+    }
+
     /// Place one request. `depths[i]` is shard i's current in-flight
     /// request count (the server's load signal).
     pub fn place(&self, tokens: &[u32], tag: u64, depths: &[usize]) -> usize {

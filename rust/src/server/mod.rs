@@ -2,12 +2,14 @@
 //! offline vendor set has no hyper/axum/tokio; DESIGN.md §3).
 //!
 //! POST /generate {"prompt": "...", "adapter": 3, "max_new": 24, "tag": 0,
-//!                 "fan": 0}
+//!                 "fan": 0, "step": "map0", "steps": [...]}
 //!   -> {"tokens": [...], "text": "...", "ttft_us": ..., "latency_us": ...}
 //!
 //! `tag` is the opaque workflow id (affinity routing + the shard's gang
 //! scheduler group key); `fan` optionally declares how many requests of
 //! the tag form one workflow step, so the shard may gang-admit them.
+//! `steps` registers the workflow's steps-to-execute DAG (see below) and
+//! `step` names which DAG node this request executes.
 //! GET /stats   -> aggregated pool metrics JSON
 //! GET /metrics -> per-shard snapshots + the same aggregate + route policy
 //!
@@ -52,6 +54,23 @@
 //! `tier_compactions`/`tier_bytes_reclaimed` counters are served by
 //! `GET /metrics` under the `tier` object.
 //!
+//! Cross-step prefetch (the KVFlow horizon): a workflow may declare its
+//! steps-to-execute DAG up front (`"steps"`: nodes with tags, dependency
+//! edges, and declared prefix provenance — map→reduce fans, ReAct loops,
+//! pipeline chains). While a step's predecessors are decoding, the
+//! successor's known prefix is already resolvable (a literal declared
+//! prefix, or the prompt a predecessor submitted), so the server pins and
+//! pre-warms its pages on the successor's *home* shard before the
+//! successor request ever arrives: `Cmd::Prefetch` promotes demoted pages
+//! from the host tier and soft-pins the resident coverage under a
+//! prefetch lease, and when the prefix lives on a different shard the
+//! PR 3 migration pipeline pre-ships it, priced by the same cost model.
+//! Leases are released exactly once — by the step's arrival (a
+//! `prefetch_hit`) or by the `forkkv-prefetch` supervisor when the DAG is
+//! abandoned (`prefetch_abandon_ms` without progress; the covered pages
+//! count as `prefetch_wasted`). `prefetch_horizon` bounds how many steps
+//! past the decoding frontier are warmed.
+//!
 //! Spill = bandwidth, not FLOPs: when the router spills a request off an
 //! overloaded home shard, the worker first runs the migration pipeline
 //! (`Cmd::Probe` → cost model → `Cmd::Export` → `Cmd::Import`, see
@@ -68,7 +87,7 @@ use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::config::ServerConfig;
 use crate::engine::{Engine, Request, Tick};
@@ -116,6 +135,19 @@ enum Cmd {
     /// records, reclaim their bytes); replies with the bytes reclaimed.
     /// A no-op returning 0 when the shard runs without a tier.
     TierCompact(mpsc::Sender<usize>),
+    /// Cross-step prefetch: pre-warm and pin a future step's known
+    /// prefix under a lease (`Engine::prefetch_pin` — tier promotion +
+    /// soft pins). Replies with the pages the lease covers; 0 means
+    /// nothing was resident yet and no lease was left behind.
+    Prefetch {
+        lease: u64,
+        adapter: u32,
+        tokens: Vec<u32>,
+        reply: mpsc::Sender<usize>,
+    },
+    /// Release a prefetch lease exactly once (`Engine::prefetch_release`):
+    /// `hit` when the warmed step arrived, abandonment otherwise.
+    PrefetchRelease { lease: u64, hit: bool },
     Shutdown,
 }
 
@@ -155,7 +187,15 @@ pub struct Server {
     reb_counters: RebalanceCounters,
     /// pool-level host-tier compaction counters (`/metrics`)
     tier_counters: TierCounters,
-    /// tells the rebalance supervisor thread to exit (set by `shutdown`)
+    /// registered workflow DAGs keyed by workflow tag (the `"steps"`
+    /// payloads); the cross-step prefetch horizon walks these
+    dags: Mutex<HashMap<u64, Dag>>,
+    /// pool-unique prefetch lease ids (shard engines key their lease
+    /// maps by these)
+    lease_seq: AtomicU64,
+    /// pool-level cross-step prefetch counters (`/metrics`)
+    pf_counters: PrefetchCounters,
+    /// tells the supervisor threads to exit (set by `shutdown`)
     stop: AtomicBool,
     tokenizer: HashTokenizer,
     max_ctx: usize,
@@ -182,6 +222,146 @@ struct TierCounters {
     tier_compactions: AtomicU64,
     /// cumulative tier bytes reclaimed by compaction, summed over shards
     tier_bytes_reclaimed: AtomicU64,
+}
+
+/// Pool-level cross-step prefetch counters (the `prefetch` object of
+/// `GET /metrics`). Page-granular counters (`prefetched_pages`,
+/// `prefetch_hits`, `prefetch_wasted`) live in the engine aggregate.
+#[derive(Default)]
+struct PrefetchCounters {
+    /// workflow DAGs accepted into the registry (re-registrations of a
+    /// live tag are idempotent and not re-counted)
+    dags_registered: AtomicU64,
+    /// prefetch leases issued that covered at least one resident page
+    leases_issued: AtomicU64,
+    /// leases released by the arrival of the step they warmed
+    leases_hit: AtomicU64,
+    /// leases released by the supervisor because the step never arrived
+    /// (plus any still outstanding when a dead DAG was collected)
+    leases_abandoned: AtomicU64,
+}
+
+/// Cap on the number of steps one workflow DAG may declare.
+const MAX_DAG_NODES: usize = 64;
+
+/// A DAG goes unreachable (and its leases are abandoned) after this many
+/// `prefetch_abandon_ms` windows pass with no arrival or completion.
+const DAG_GC_FACTOR: u32 = 8;
+
+/// A registered steps-to-execute DAG: one workflow's declared future,
+/// the input to the prefetch horizon.
+struct Dag {
+    nodes: Vec<DagNode>,
+    /// last registration / arrival / completion, for abandonment GC
+    touched: Instant,
+}
+
+/// One declared workflow step.
+struct DagNode {
+    id: String,
+    /// indices into `Dag::nodes` of this step's predecessors
+    after: Vec<usize>,
+    /// adapter the step will decode under (prefetch warms that
+    /// namespace's residual pages too)
+    adapter: u32,
+    /// routing tag the step will arrive under — usually the workflow
+    /// tag; a declared per-step tag routes the step to its own home
+    tag: u64,
+    prefix: PrefixSpec,
+    state: NodeState,
+    /// the prompt the step actually submitted (recorded at arrival; the
+    /// resolution source for successors' `prefix_from`)
+    prompt: Option<Vec<u32>>,
+    /// abandoned by the supervisor — never warmed again
+    abandoned: bool,
+    /// the live prefetch lease warming this step, if any
+    lease: Option<IssuedLease>,
+}
+
+/// Declared prefix provenance of a step: where its known prefix comes
+/// from before the step itself exists.
+enum PrefixSpec {
+    /// no declared prefix — the step is never prefetched
+    None,
+    /// a literal prefix string, tokenized at registration
+    Literal(Vec<u32>),
+    /// the prompt of another step (by index), known once that step
+    /// arrives
+    FromStep(usize),
+}
+
+#[derive(Clone, Copy, PartialEq, Eq)]
+enum NodeState {
+    Pending,
+    Running,
+    Done,
+}
+
+/// A lease the server issued against a shard engine's prefetch map.
+#[derive(Clone, Copy)]
+struct IssuedLease {
+    id: u64,
+    shard: usize,
+    issued: Instant,
+}
+
+impl Dag {
+    /// Steps-from-the-frontier distance per node: 0 for running or done
+    /// steps; a pending step is 1 + the max distance over its pending
+    /// predecessors (so a root, or a step whose predecessors have all
+    /// arrived, is distance 1). Registration rejects cycles, so the
+    /// recursion is well-founded.
+    fn distances(&self) -> Vec<usize> {
+        fn d(nodes: &[DagNode], i: usize, memo: &mut [Option<usize>]) -> usize {
+            if let Some(v) = memo[i] {
+                return v;
+            }
+            let v = match nodes[i].state {
+                NodeState::Running | NodeState::Done => 0,
+                NodeState::Pending => {
+                    1 + nodes[i]
+                        .after
+                        .iter()
+                        .map(|&p| d(nodes, p, memo))
+                        .max()
+                        .unwrap_or(0)
+                }
+            };
+            memo[i] = Some(v);
+            v
+        }
+        let mut memo = vec![None; self.nodes.len()];
+        (0..self.nodes.len())
+            .map(|i| d(&self.nodes, i, &mut memo))
+            .collect()
+    }
+
+    /// The resolvable known prefix of step `i`: its declared literal, or
+    /// the prompt its provenance step submitted (None until that step
+    /// arrives).
+    fn resolve_prefix(&self, i: usize) -> Option<Vec<u32>> {
+        match &self.nodes[i].prefix {
+            PrefixSpec::Literal(t) => Some(t.clone()),
+            PrefixSpec::FromStep(p) => self.nodes[*p].prompt.clone(),
+            PrefixSpec::None => None,
+        }
+    }
+}
+
+/// One planned prefetch, recorded under the registry lock and executed
+/// outside it (the migration round trips must not serialize the whole
+/// registry).
+struct PrefetchPlan {
+    tag: u64,
+    node: usize,
+    lease: u64,
+    adapter: u32,
+    tokens: Vec<u32>,
+    /// the successor's home shard — where the pages must be warm
+    target: usize,
+    /// the prefix's provenance shard (first predecessor's home), the
+    /// pre-migration source when it differs from `target`
+    source: Option<usize>,
 }
 
 /// Pool-level routing/migration outcome counters (served by `/metrics`).
@@ -250,6 +430,14 @@ fn handle_cmd(
         }
         Cmd::TierCompact(reply) => {
             let _ = reply.send(engine.tier_compact());
+            true
+        }
+        Cmd::Prefetch { lease, adapter, tokens, reply } => {
+            let _ = reply.send(engine.prefetch_pin(lease, adapter, &tokens));
+            true
+        }
+        Cmd::PrefetchRelease { lease, hit } => {
+            engine.prefetch_release(lease, hit);
             true
         }
         Cmd::Shutdown => false,
@@ -414,6 +602,9 @@ impl Server {
             rebalancer,
             reb_counters: RebalanceCounters::default(),
             tier_counters: TierCounters::default(),
+            dags: Mutex::new(HashMap::new()),
+            lease_seq: AtomicU64::new(1),
+            pf_counters: PrefetchCounters::default(),
             stop: AtomicBool::new(false),
             tokenizer: HashTokenizer::new(meta.vocab),
             max_ctx: meta.s_max,
@@ -438,6 +629,19 @@ impl Server {
                     .name("forkkv-tier".into())
                     .spawn(move || sup.tier_compact_supervisor())
                     .expect("spawn tier compaction supervisor thread"),
+            );
+        }
+        // the prefetch supervisor retries prefixes that were not yet
+        // resident when first planned, and abandons leases for steps
+        // that never arrived; a zero tick interval parks it (tests
+        // drive `prefetch_tick` by hand)
+        if srv.cfg.prefetch && srv.cfg.prefetch_tick_ms > 0 {
+            let sup = srv.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("forkkv-prefetch".into())
+                    .spawn(move || sup.prefetch_supervisor())
+                    .expect("spawn prefetch supervisor thread"),
             );
         }
         (srv, handles)
@@ -938,12 +1142,413 @@ impl Server {
         ])
     }
 
+    // -----------------------------------------------------------------
+    // cross-step workflow prefetch (the DAG registry + horizon)
+    // -----------------------------------------------------------------
+
+    /// Register (or idempotently re-touch) one workflow's steps-to-execute
+    /// DAG under its nonzero tag. Every agent of a step may attach the
+    /// same `steps` payload — only the first registration counts.
+    fn register_dag(&self, tag: u64, steps: &[Json], default_adapter: u32) -> anyhow::Result<()> {
+        let dag = self.parse_dag(tag, steps, default_adapter)?;
+        let mut dags = self.dags.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(live) = dags.get_mut(&tag) {
+            live.touched = Instant::now();
+        } else {
+            dags.insert(tag, dag);
+            self.pf_counters.dags_registered.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(())
+    }
+
+    /// Validate and build a DAG from its `"steps"` JSON: unique ids,
+    /// known `after` / `prefix_from` references, bounded size, acyclic.
+    fn parse_dag(&self, tag: u64, steps: &[Json], default_adapter: u32) -> anyhow::Result<Dag> {
+        anyhow::ensure!(tag != 0, "dag registration needs a nonzero workflow tag");
+        anyhow::ensure!(!steps.is_empty(), "empty steps array");
+        anyhow::ensure!(
+            steps.len() <= MAX_DAG_NODES,
+            "dag exceeds {MAX_DAG_NODES} steps"
+        );
+        let mut by_id: HashMap<String, usize> = HashMap::new();
+        for (i, s) in steps.iter().enumerate() {
+            let id = s.req_str("id")?.to_string();
+            anyhow::ensure!(
+                by_id.insert(id.clone(), i).is_none(),
+                "duplicate step id {id:?}"
+            );
+        }
+        let mut nodes = Vec::with_capacity(steps.len());
+        for s in steps {
+            let id = s.req_str("id")?.to_string();
+            let mut after = Vec::new();
+            if let Some(arr) = s.get("after").and_then(Json::as_arr) {
+                for a in arr {
+                    let name = a
+                        .as_str()
+                        .ok_or_else(|| anyhow::anyhow!("\"after\" entries must be step ids"))?;
+                    let &idx = by_id.get(name).ok_or_else(|| {
+                        anyhow::anyhow!("step {id:?} is after unknown step {name:?}")
+                    })?;
+                    if !after.contains(&idx) {
+                        after.push(idx);
+                    }
+                }
+            }
+            let adapter = s
+                .get("adapter")
+                .and_then(Json::as_usize)
+                .map(|a| a as u32)
+                .unwrap_or(default_adapter);
+            let step_tag = s
+                .get("tag")
+                .and_then(Json::as_usize)
+                .map(|t| t as u64)
+                .unwrap_or(tag);
+            let prefix = if let Some(text) = s.get("prefix").and_then(Json::as_str) {
+                PrefixSpec::Literal(self.tokenizer.encode(text))
+            } else if let Some(from) = s.get("prefix_from").and_then(Json::as_str) {
+                let &idx = by_id.get(from).ok_or_else(|| {
+                    anyhow::anyhow!("step {id:?} prefix_from unknown step {from:?}")
+                })?;
+                PrefixSpec::FromStep(idx)
+            } else {
+                PrefixSpec::None
+            };
+            nodes.push(DagNode {
+                id,
+                after,
+                adapter,
+                tag: step_tag,
+                prefix,
+                state: NodeState::Pending,
+                prompt: None,
+                abandoned: false,
+                lease: None,
+            });
+        }
+        // Kahn's walk over the (deduplicated) edges: every node must
+        // drain, or the declared dependencies contain a cycle and the
+        // distance recursion would never terminate
+        let mut indeg: Vec<usize> = nodes.iter().map(|n| n.after.len()).collect();
+        let mut ready: Vec<usize> = indeg
+            .iter()
+            .enumerate()
+            .filter(|&(_, &d)| d == 0)
+            .map(|(i, _)| i)
+            .collect();
+        let mut drained = 0usize;
+        while let Some(i) = ready.pop() {
+            drained += 1;
+            for (j, n) in nodes.iter().enumerate() {
+                if n.after.contains(&i) {
+                    indeg[j] -= 1;
+                    if indeg[j] == 0 {
+                        ready.push(j);
+                    }
+                }
+            }
+        }
+        anyhow::ensure!(drained == nodes.len(), "steps dag has a cycle");
+        Ok(Dag {
+            nodes,
+            touched: Instant::now(),
+        })
+    }
+
+    /// A request declaring `"step"` arrived: mark the node running
+    /// (which moves the prefetch frontier), record its actual prompt
+    /// (resolving successors' `prefix_from`), take its lease (the caller
+    /// releases it once the outcome lands, so the warmed pages stay
+    /// pinned through admission), and re-evaluate the horizon.
+    fn step_arrival(&self, tag: u64, step: &str, prompt: &[u32]) -> Option<IssuedLease> {
+        let lease = {
+            let mut dags = self.dags.lock().unwrap_or_else(|e| e.into_inner());
+            let dag = dags.get_mut(&tag)?;
+            dag.touched = Instant::now();
+            let idx = dag.nodes.iter().position(|n| n.id == step)?;
+            let node = &mut dag.nodes[idx];
+            node.state = NodeState::Running;
+            node.prompt = Some(prompt.to_vec());
+            node.lease.take()
+        };
+        self.prefetch_eval();
+        lease
+    }
+
+    /// A step's request reached a terminal outcome. Success marks the
+    /// node done; failure returns it to pending (the client may retry;
+    /// abandonment GC covers workflows that die here). A fully-done DAG
+    /// leaves the registry.
+    fn step_done(&self, tag: u64, step: &str, ok: bool) {
+        let (all_done, strays) = {
+            let mut dags = self.dags.lock().unwrap_or_else(|e| e.into_inner());
+            let Some(dag) = dags.get_mut(&tag) else { return };
+            dag.touched = Instant::now();
+            let Some(idx) = dag.nodes.iter().position(|n| n.id == step) else {
+                return;
+            };
+            if ok {
+                dag.nodes[idx].state = NodeState::Done;
+            } else {
+                dag.nodes[idx].state = NodeState::Pending;
+                dag.nodes[idx].prompt = None;
+            }
+            let all_done = dag.nodes.iter().all(|n| n.state == NodeState::Done);
+            let mut strays = Vec::new();
+            if all_done {
+                // arrival already took every lease of a done node; the
+                // sweep is belt-and-braces (engine release is
+                // exactly-once, so a double release is a no-op)
+                if let Some(dag) = dags.remove(&tag) {
+                    strays.extend(dag.nodes.into_iter().filter_map(|n| n.lease));
+                }
+            }
+            (all_done, strays)
+        };
+        for l in &strays {
+            self.release_lease(l, false);
+        }
+        if !all_done {
+            // a completed prefill published this step's context: prefixes
+            // that were not yet resident at arrival time may now be
+            self.prefetch_eval();
+        }
+    }
+
+    /// Release one issued lease on its shard and account the outcome.
+    fn release_lease(&self, l: &IssuedLease, hit: bool) {
+        let _ = self.shards[l.shard]
+            .tx
+            .send(Cmd::PrefetchRelease { lease: l.id, hit });
+        let ctr = if hit {
+            &self.pf_counters.leases_hit
+        } else {
+            &self.pf_counters.leases_abandoned
+        };
+        ctr.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Walk every registered DAG and warm each pending step within the
+    /// horizon whose prefix is resolvable: plan under the registry lock,
+    /// then migrate + pin outside it (`PrefetchPlan`). A plan whose
+    /// prefix turns out not resident yet leaves no lease anywhere, so a
+    /// later pass (arrival, completion, supervisor tick) retries it.
+    fn prefetch_eval(&self) {
+        if !self.cfg.prefetch {
+            return;
+        }
+        let plans = {
+            let mut dags = self.dags.lock().unwrap_or_else(|e| e.into_inner());
+            let mut plans = Vec::new();
+            for (&tag, dag) in dags.iter_mut() {
+                let dist = dag.distances();
+                for i in 0..dag.nodes.len() {
+                    let n = &dag.nodes[i];
+                    if n.state != NodeState::Pending
+                        || n.abandoned
+                        || n.lease.is_some()
+                        || dist[i] > self.cfg.prefetch_horizon
+                    {
+                        continue;
+                    }
+                    let Some(tokens) = dag.resolve_prefix(i) else { continue };
+                    if tokens.is_empty() {
+                        continue;
+                    }
+                    let n = &dag.nodes[i];
+                    // where will the step land? (None under round-robin:
+                    // placement ignores content, nothing to warm)
+                    let Some(target) = self.router.prefetch_home(&tokens, n.tag) else {
+                        continue;
+                    };
+                    // where does the prefix live today? Its provenance —
+                    // the first predecessor's home for this same window
+                    // (predecessor prompts start with the shared prefix,
+                    // and the affinity fingerprint only reads the first
+                    // page window, so this is the predecessor's shard)
+                    let source = n
+                        .after
+                        .first()
+                        .and_then(|&p| self.router.prefetch_home(&tokens, dag.nodes[p].tag));
+                    let lease = self.lease_seq.fetch_add(1, Ordering::Relaxed);
+                    let adapter = dag.nodes[i].adapter;
+                    dag.nodes[i].lease = Some(IssuedLease {
+                        id: lease,
+                        shard: target,
+                        issued: Instant::now(),
+                    });
+                    plans.push(PrefetchPlan {
+                        tag,
+                        node: i,
+                        lease,
+                        adapter,
+                        tokens,
+                        target,
+                        source,
+                    });
+                }
+            }
+            plans
+        };
+        for plan in plans {
+            self.execute_prefetch(plan);
+        }
+    }
+
+    /// Carry out one planned prefetch: pre-migrate the prefix from its
+    /// provenance shard when the successor homes elsewhere (the PR 3
+    /// pipeline, priced by the same cost model and bounded by the same
+    /// migration queue), then pin + tier-promote it on the target under
+    /// the lease. Zero coverage clears the optimistic lease record so
+    /// the step can be retried.
+    fn execute_prefetch(&self, plan: PrefetchPlan) {
+        if let Some(src) = plan.source {
+            if src != plan.target {
+                // `try_migrate`'s match window drops the final token
+                // (mirroring admission, where the last *prompt* token is
+                // never served from cache) — but a prefetch prefix is
+                // fully cacheable, because the successor's prompt extends
+                // past it. Pad one token so the window covers it whole.
+                let mut window = plan.tokens.clone();
+                window.push(0);
+                self.try_migrate(src, plan.target, plan.adapter, &window);
+            }
+        }
+        let (tx, rx) = mpsc::channel();
+        let covered = self.shards[plan.target]
+            .tx
+            .send(Cmd::Prefetch {
+                lease: plan.lease,
+                adapter: plan.adapter,
+                tokens: plan.tokens,
+                reply: tx,
+            })
+            .ok()
+            .and_then(|()| rx.recv_timeout(Duration::from_secs(5)).ok())
+            .unwrap_or(0);
+        if covered > 0 {
+            self.pf_counters.leases_issued.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        // nothing resident yet (the predecessors may still be
+        // prefilling): the engine left no lease behind, so clear the
+        // registry record and let a later evaluation pass retry
+        let mut dags = self.dags.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(dag) = dags.get_mut(&plan.tag) {
+            let node = &mut dag.nodes[plan.node];
+            if node.lease.as_ref().is_some_and(|l| l.id == plan.lease) {
+                node.lease = None;
+            }
+        }
+    }
+
+    /// The prefetch maintenance loop: every `cfg.prefetch_tick_ms`,
+    /// retry unwarmed steps and abandon leases whose step never came,
+    /// until `shutdown` raises the stop flag. Runs on its own named
+    /// thread (`forkkv-prefetch`), spawned by `start_sharded` when
+    /// prefetch is armed.
+    fn prefetch_supervisor(&self) {
+        let interval = Duration::from_millis(self.cfg.prefetch_tick_ms.max(1));
+        // sleep in short steps so shutdown is never blocked behind a
+        // long interval
+        let step = interval.min(Duration::from_millis(10));
+        let mut since = Duration::ZERO;
+        while !self.stop.load(Ordering::Relaxed) {
+            std::thread::sleep(step);
+            since += step;
+            if since >= interval {
+                since = Duration::ZERO;
+                self.prefetch_tick();
+            }
+        }
+    }
+
+    /// One prefetch maintenance step: abandon leases older than
+    /// `cfg.prefetch_abandon_ms` whose step is still pending (their
+    /// pages count as `prefetch_wasted`), collect DAGs untouched for
+    /// `DAG_GC_FACTOR` windows (releasing anything they still hold),
+    /// then re-run the horizon so steps whose prefixes have since
+    /// become resident get warmed. Public so tests can drive the
+    /// supervisor deterministically; returns the leases abandoned.
+    pub fn prefetch_tick(&self) -> usize {
+        let abandon = Duration::from_millis(self.cfg.prefetch_abandon_ms.max(1));
+        let released = {
+            let mut dags = self.dags.lock().unwrap_or_else(|e| e.into_inner());
+            let mut released = Vec::new();
+            for dag in dags.values_mut() {
+                for node in &mut dag.nodes {
+                    if node.state != NodeState::Pending {
+                        continue;
+                    }
+                    if node
+                        .lease
+                        .as_ref()
+                        .is_some_and(|l| l.issued.elapsed() >= abandon)
+                    {
+                        released.extend(node.lease.take());
+                        node.abandoned = true;
+                    }
+                }
+            }
+            let dead: Vec<u64> = dags
+                .iter()
+                .filter(|(_, d)| d.touched.elapsed() >= abandon * DAG_GC_FACTOR)
+                .map(|(&t, _)| t)
+                .collect();
+            for t in dead {
+                if let Some(dag) = dags.remove(&t) {
+                    released.extend(dag.nodes.into_iter().filter_map(|n| n.lease));
+                }
+            }
+            released
+        };
+        for l in &released {
+            self.release_lease(l, false);
+        }
+        self.prefetch_eval();
+        released.len()
+    }
+
+    /// Prefetch knobs and pool-level lease/DAG counters (the `prefetch`
+    /// object of `GET /metrics`). Page-granular counters
+    /// (`prefetched_pages` / `prefetch_hits` / `prefetch_wasted`) live
+    /// in each shard's snapshot and the aggregate.
+    pub fn prefetch_stats(&self) -> Json {
+        let live_dags = self.dags.lock().unwrap_or_else(|e| e.into_inner()).len();
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.cfg.prefetch)),
+            ("horizon", Json::num(self.cfg.prefetch_horizon as f64)),
+            (
+                "abandon_ms",
+                Json::num(self.cfg.prefetch_abandon_ms as f64),
+            ),
+            ("live_dags", Json::num(live_dags as f64)),
+            (
+                "dags_registered",
+                Json::num(self.pf_counters.dags_registered.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "leases_issued",
+                Json::num(self.pf_counters.leases_issued.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "leases_hit",
+                Json::num(self.pf_counters.leases_hit.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "leases_abandoned",
+                Json::num(self.pf_counters.leases_abandoned.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+
     /// Full observability payload: aggregate + per-shard snapshots + the
     /// active route policy with its spill/migration/reroute counters +
     /// the elastic-budget rebalancer counters + the host-tier compaction
-    /// counters — what `GET /metrics` serves. Each shard snapshot
-    /// carries its live `budget_bytes`; across live shards they always
-    /// sum to the configured pool budget.
+    /// counters + the cross-step prefetch counters — what `GET /metrics`
+    /// serves. Each shard snapshot carries its live `budget_bytes`;
+    /// across live shards they always sum to the configured pool budget.
     pub fn metrics_json(&self) -> anyhow::Result<Json> {
         let per_shard = self.shard_stats()?;
         Ok(Json::obj(vec![
@@ -952,6 +1557,7 @@ impl Server {
             ("router", self.router_stats()),
             ("rebalancer", self.rebalancer_stats()),
             ("tier", self.tier_stats()),
+            ("prefetch", self.prefetch_stats()),
             ("per_shard", Json::Arr(per_shard)),
         ]))
     }
@@ -1161,7 +1767,41 @@ impl Server {
         if let Err(e) = self.validate_request(&tokens, max_new) {
             return err("400 Bad Request", format!("{e:#}"));
         }
-        match self.generate_outcome_hinted(tokens, adapter, max_new, tag, fan) {
+        // the DAG registry key: a step routed under its own tag (e.g. a
+        // reducer homing on its own shard) still belongs to one workflow
+        let workflow = j
+            .get("workflow")
+            .and_then(Json::as_usize)
+            .map(|w| w as u64)
+            .unwrap_or(tag);
+        // workflow DAG registration (idempotent per workflow): every
+        // agent of a step may attach the same `steps` payload
+        if let Some(steps) = j.get("steps").and_then(Json::as_arr) {
+            if let Err(e) = self.register_dag(workflow, steps, adapter) {
+                return err("400 Bad Request", format!("bad dag: {e:#}"));
+            }
+        }
+        // DAG arrival: mark the declared step running (moving the
+        // prefetch frontier for its successors) and take its lease — it
+        // is released only after the outcome lands, so prefetched pages
+        // stay pinned through this request's admission
+        let step = j.get("step").and_then(Json::as_str).map(str::to_string);
+        let lease = step
+            .as_deref()
+            .and_then(|s| self.step_arrival(workflow, s, &tokens));
+        let outcome = self.generate_outcome_hinted(tokens, adapter, max_new, tag, fan);
+        if let Some(l) = &lease {
+            // the warmed step arrived: a prefetch hit whatever its outcome
+            self.release_lease(l, true);
+        }
+        if let Some(s) = step.as_deref() {
+            self.step_done(
+                workflow,
+                s,
+                matches!(&outcome, Ok(RequestOutcome::Finished(_))),
+            );
+        }
+        match outcome {
             Ok(RequestOutcome::Finished(fin)) => (
                 "200 OK",
                 Json::obj(vec![
@@ -1750,5 +2390,170 @@ mod tests {
         for h in handles {
             h.join().unwrap();
         }
+    }
+
+    /// Steps-to-execute DAG for a `width`-wide map→reduce workflow whose
+    /// reducer declares the shared context as its known prefix.
+    fn mapreduce_steps(width: usize, ctx: &str) -> Json {
+        Json::Arr(
+            (0..width)
+                .map(|a| Json::obj(vec![("id", Json::str(format!("map{a}")))]))
+                .chain(std::iter::once(Json::obj(vec![
+                    ("id", Json::str("reduce")),
+                    (
+                        "after",
+                        Json::Arr(
+                            (0..width).map(|a| Json::str(format!("map{a}"))).collect(),
+                        ),
+                    ),
+                    ("prefix", Json::str(ctx)),
+                ])))
+                .collect(),
+        )
+    }
+
+    fn dag_body(ctx: &str, tail: &str, step: &str, steps: Option<&Json>) -> String {
+        let mut fields = vec![
+            ("prompt", Json::str(format!("{ctx} {tail}"))),
+            ("adapter", Json::num(0.0)),
+            ("max_new", Json::num(4.0)),
+            ("tag", Json::num(5.0)),
+            ("workflow", Json::num(5.0)),
+            ("step", Json::str(step)),
+        ];
+        if let Some(s) = steps {
+            fields.push(("steps", s.clone()));
+        }
+        Json::obj(fields).to_string()
+    }
+
+    #[test]
+    fn dag_prefetch_lease_issued_before_arrival_and_hit_on_it() {
+        // parked supervisor (tick 0): arrivals and completions drive
+        // every horizon evaluation, so the test is fully deterministic
+        let scfg = ServerConfig { prefetch_tick_ms: 0, ..ServerConfig::default() };
+        let (srv, handles) = Server::start_sharded(vec![sim_engine(32 << 20, 0)], scfg);
+        let (addr, server_thread) = spawn_server(&srv, 4);
+
+        let ctx: String =
+            (0..160).map(|i| format!("c{i}")).collect::<Vec<_>>().join(" ");
+        let steps = mapreduce_steps(3, &ctx);
+        for a in 0..3 {
+            let body =
+                dag_body(&ctx, &format!("map question {a}"), &format!("map{a}"), Some(&steps));
+            let (status, resp) = http_post(&addr, "/generate", &body).unwrap();
+            assert_eq!(status, 200, "{resp}");
+        }
+
+        // every predecessor has arrived, so the reducer entered the
+        // horizon and its lease was issued before it ever posted
+        let pf = srv.prefetch_stats();
+        assert_eq!(pf.at(&["leases_issued"]).as_usize(), Some(1), "{pf}");
+        assert_eq!(pf.at(&["leases_hit"]).as_usize(), Some(0), "{pf}");
+        let m = srv.metrics_json().unwrap();
+        assert!(
+            m.at(&["aggregate", "prefetched_pages"]).as_usize().unwrap() > 0,
+            "{m}"
+        );
+
+        // the warmed step arrives: its lease is released as a hit exactly
+        // once, the DAG completes, and the registry empties
+        let body = dag_body(&ctx, "join the mapper outputs", "reduce", None);
+        let (status, resp) = http_post(&addr, "/generate", &body).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        let j = json::parse(&resp).unwrap();
+        assert!(j.at(&["hit_tokens"]).as_usize().unwrap() > 0, "{resp}");
+
+        let pf = srv.prefetch_stats();
+        assert_eq!(pf.at(&["leases_hit"]).as_usize(), Some(1), "{pf}");
+        assert_eq!(pf.at(&["leases_abandoned"]).as_usize(), Some(0), "{pf}");
+        assert_eq!(pf.at(&["live_dags"]).as_usize(), Some(0), "{pf}");
+        let m = srv.metrics_json().unwrap();
+        assert_eq!(m.at(&["aggregate", "prefetch_hits"]).as_usize(), Some(1), "{m}");
+        assert_eq!(m.at(&["aggregate", "prefetch_wasted"]).as_usize(), Some(0), "{m}");
+
+        server_thread.join().unwrap();
+        srv.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn dag_abandonment_releases_the_lease_once_and_gcs_the_dag() {
+        let scfg = ServerConfig {
+            prefetch_tick_ms: 0,
+            prefetch_abandon_ms: 1,
+            ..ServerConfig::default()
+        };
+        let (srv, handles) = Server::start_sharded(vec![sim_engine(32 << 20, 0)], scfg);
+        let (addr, server_thread) = spawn_server(&srv, 3);
+
+        let ctx: String =
+            (0..160).map(|i| format!("d{i}")).collect::<Vec<_>>().join(" ");
+        let steps = mapreduce_steps(3, &ctx);
+        for a in 0..3 {
+            let body =
+                dag_body(&ctx, &format!("map question {a}"), &format!("map{a}"), Some(&steps));
+            let (status, resp) = http_post(&addr, "/generate", &body).unwrap();
+            assert_eq!(status, 200, "{resp}");
+        }
+        server_thread.join().unwrap();
+        let pf = srv.prefetch_stats();
+        assert_eq!(pf.at(&["leases_issued"]).as_usize(), Some(1), "{pf}");
+
+        // the reducer never arrives: past the abandonment window the tick
+        // releases its lease and accounts the warmed pages as wasted
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(srv.prefetch_tick(), 1);
+        let m = srv.metrics_json().unwrap();
+        let wasted = m.at(&["aggregate", "prefetch_wasted"]).as_usize().unwrap();
+        let warmed = m.at(&["aggregate", "prefetched_pages"]).as_usize().unwrap();
+        assert!(wasted > 0, "{m}");
+        assert_eq!(wasted, warmed, "every warmed page is accounted wasted: {m}");
+
+        // a second tick finds nothing: the abandoned node is never
+        // re-warmed and the release never double-fires
+        assert_eq!(srv.prefetch_tick(), 0);
+        let pf = srv.prefetch_stats();
+        assert_eq!(pf.at(&["leases_abandoned"]).as_usize(), Some(1), "{pf}");
+        assert_eq!(pf.at(&["leases_issued"]).as_usize(), Some(1), "{pf}");
+
+        // untouched for DAG_GC_FACTOR abandonment windows, the dead
+        // workflow leaves the registry
+        std::thread::sleep(Duration::from_millis(20));
+        srv.prefetch_tick();
+        assert_eq!(srv.prefetch_stats().at(&["live_dags"]).as_usize(), Some(0));
+
+        srv.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn malformed_dags_are_rejected_with_400() {
+        let (srv, handle) = sim_server();
+        let (addr, server_thread) = spawn_server(&srv, 3);
+
+        let post = |steps: &str| {
+            let body = format!(
+                r#"{{"prompt": "one two three", "max_new": 2, "tag": 5, "step": "a", "steps": {steps}}}"#
+            );
+            http_post(&addr, "/generate", &body).unwrap()
+        };
+        let (status, resp) = post(r#"[{"id": "a", "after": ["b"]}, {"id": "b", "after": ["a"]}]"#);
+        assert_eq!(status, 400, "{resp}");
+        assert!(resp.contains("cycle"), "{resp}");
+        let (status, resp) = post(r#"[{"id": "a"}, {"id": "a"}]"#);
+        assert_eq!(status, 400, "{resp}");
+        assert!(resp.contains("duplicate"), "{resp}");
+        let (status, resp) = post(r#"[{"id": "a", "after": ["ghost"]}]"#);
+        assert_eq!(status, 400, "{resp}");
+        assert!(resp.contains("unknown step"), "{resp}");
+
+        server_thread.join().unwrap();
+        srv.shutdown();
+        handle.join().unwrap();
     }
 }

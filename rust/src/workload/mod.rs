@@ -1080,6 +1080,392 @@ pub fn run_returning_sessions_load(
     ]))
 }
 
+// ---------------------------------------------------------------------------
+// DAG workflow HTTP load (the cross-step prefetch measurement harness)
+// ---------------------------------------------------------------------------
+
+/// Which steps-to-execute shape a DAG workflow declares.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DagTopology {
+    /// `width` mappers fan out over the shared context, then one reducer
+    /// (its own routing tag, so it homes on its own shard) joins them —
+    /// the reducer's prefix is declared literally up front
+    MapReduce,
+    /// a sequential chain under one tag; step k+1's prompt extends step
+    /// k's (`prefix_from` provenance), the ReAct transcript shape
+    React,
+    /// a sequential chain where every stage runs under its *own* tag
+    /// (stage handoff across shards); `prefix_from` the previous stage
+    Pipeline,
+}
+
+impl DagTopology {
+    /// Parse a CLI topology name (`mapreduce`, `react`, `pipeline`).
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "mapreduce" => Ok(DagTopology::MapReduce),
+            "react" => Ok(DagTopology::React),
+            "pipeline" => Ok(DagTopology::Pipeline),
+            other => anyhow::bail!("unknown dag topology {other:?}"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DagTopology::MapReduce => "mapreduce",
+            DagTopology::React => "react",
+            DagTopology::Pipeline => "pipeline",
+        }
+    }
+}
+
+/// K concurrent workflows, each declaring its steps-to-execute DAG on
+/// submit (`"steps"`) and naming its node per request (`"step"`): the
+/// measurement harness for cross-step prefetch. The map→reduce shape is
+/// the A/B scenario — while the mappers decode, the reducer's declared
+/// prefix (the shared context) is already resolvable, so with
+/// `--prefetch on` the server pre-migrates and pins it on the reducer's
+/// home shard before the reducer posts; the reducer's time-to-first-token
+/// and the pool's `computed_prompt_tokens` drop strictly versus
+/// `--prefetch off` at the same seed.
+#[derive(Debug, Clone)]
+pub struct DagWorkflowHttpSpec {
+    pub topology: DagTopology,
+    /// K: concurrent workflows, one client thread each
+    pub workflows: usize,
+    /// mappers per workflow (mapreduce) / chain length (react, pipeline)
+    pub width: usize,
+    /// words in each workflow's private shared context
+    pub shared_words: usize,
+    /// per-step unique words appended after the inherited prefix
+    pub unique_words: usize,
+    pub max_new: usize,
+    /// pool geometry mirrored from the server config: the harness picks
+    /// each successor step's routing tag so it *homes on a different
+    /// shard* than its predecessors (the cross-shard pre-migration path
+    /// is the mechanism under test, not hash luck)
+    pub shards: usize,
+    pub page_tokens: usize,
+    pub vocab: usize,
+}
+
+impl Default for DagWorkflowHttpSpec {
+    fn default() -> Self {
+        DagWorkflowHttpSpec {
+            topology: DagTopology::MapReduce,
+            workflows: 6,
+            width: 3,
+            shared_words: 160,
+            unique_words: 4,
+            max_new: 12,
+            shards: 1,
+            page_tokens: 16,
+            vocab: 32_768,
+        }
+    }
+}
+
+impl DagWorkflowHttpSpec {
+    /// Workflow `w`'s shared context text (every step's common prefix).
+    pub fn ctx_text(&self, w: usize) -> String {
+        (0..self.shared_words)
+            .map(|i| format!("wf{w}dagctx{i}"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// A routing tag near `base` whose affinity home for `window`
+    /// differs from `pred_home`, so the successor step deterministically
+    /// lands on another shard. Single-shard pools (or a pathological
+    /// hash) fall back to the first candidate — prefetch then warms in
+    /// place instead of across shards.
+    fn cross_shard_tag(
+        &self,
+        router: &crate::router::Router,
+        window: &[u32],
+        base: u64,
+        pred_home: usize,
+    ) -> u64 {
+        for c in 1..=32u64 {
+            let t = base + 1_000_000 * c;
+            if router.affinity_shard(window, t) != pred_home {
+                return t;
+            }
+        }
+        base + 1_000_000
+    }
+}
+
+/// POST one DAG step; returns the server-reported
+/// (ttft_us, prompt_tokens, hit_tokens) on success.
+#[allow(clippy::too_many_arguments)]
+fn post_dag_step(
+    addr: &str,
+    prompt: &str,
+    adapter: u32,
+    max_new: usize,
+    tag: u64,
+    workflow: u64,
+    step: &str,
+    fan: usize,
+    steps: Option<&Json>,
+) -> Option<(f64, usize, usize)> {
+    let mut fields = vec![
+        ("prompt", Json::str(prompt)),
+        ("adapter", Json::num(adapter as f64)),
+        ("max_new", Json::num(max_new as f64)),
+        ("tag", Json::num(tag as f64)),
+        ("workflow", Json::num(workflow as f64)),
+        ("step", Json::str(step)),
+        ("fan", Json::num(fan as f64)),
+    ];
+    if let Some(s) = steps {
+        fields.push(("steps", s.clone()));
+    }
+    let body = Json::obj(fields).to_string();
+    match crate::server::http_post(addr, "/generate", &body) {
+        Ok((200, resp)) => {
+            let j = crate::util::json::parse(&resp).ok()?;
+            Some((
+                j.at(&["ttft_us"]).as_f64().unwrap_or(0.0),
+                j.at(&["prompt_tokens"]).as_usize().unwrap_or(0),
+                j.at(&["hit_tokens"]).as_usize().unwrap_or(0),
+            ))
+        }
+        Ok(_) | Err(_) => None,
+    }
+}
+
+/// Per-workflow results folded into the run report.
+#[derive(Default)]
+struct DagWorkflowResult {
+    /// ttft of every non-final step
+    step_ttft: Vec<f64>,
+    /// ttft of the final step (the reducer / chain tail) — the
+    /// prefetch-sensitive number
+    final_ttft: Vec<f64>,
+    /// server-reported cache hits on the final step
+    final_hit_tokens: usize,
+    ok: usize,
+    errors: usize,
+}
+
+/// Run the DAG workflow scenario against a serving address; returns a
+/// JSON report. `reduce_ttft_us` summarizes the final step of every
+/// workflow (the reducer under mapreduce, the chain tail otherwise).
+pub fn run_dag_load(addr: &str, spec: &DagWorkflowHttpSpec) -> anyhow::Result<Json> {
+    anyhow::ensure!(spec.workflows > 0, "need at least one workflow");
+    anyhow::ensure!(spec.width > 0, "need at least one step per workflow");
+    let t0 = std::time::Instant::now();
+    let tokenizer = crate::util::tokenizer::HashTokenizer::new(spec.vocab.max(2));
+    let router = crate::router::Router::new(
+        crate::router::RoutePolicy::Affinity,
+        spec.shards.max(1),
+        spec.page_tokens.max(1),
+        1.5,
+    );
+    let router = std::sync::Arc::new(router);
+    let tokenizer = std::sync::Arc::new(tokenizer);
+    let mut handles = Vec::new();
+    for w in 0..spec.workflows {
+        let addr = addr.to_string();
+        let spec = spec.clone();
+        let router = router.clone();
+        let tokenizer = tokenizer.clone();
+        handles.push(std::thread::spawn(move || {
+            run_dag_workflow(&addr, &spec, w, &router, &tokenizer)
+        }));
+    }
+    let mut all = DagWorkflowResult::default();
+    for h in handles {
+        let r = h
+            .join()
+            .map_err(|_| anyhow::anyhow!("dag workflow client panicked"))?;
+        all.step_ttft.extend(r.step_ttft);
+        all.final_ttft.extend(r.final_ttft);
+        all.final_hit_tokens += r.final_hit_tokens;
+        all.ok += r.ok;
+        all.errors += r.errors;
+    }
+    let requests = spec.workflows
+        * match spec.topology {
+            DagTopology::MapReduce => spec.width + 1,
+            DagTopology::React | DagTopology::Pipeline => spec.width,
+        };
+    let mut step_ttft = Series::new();
+    for v in &all.step_ttft {
+        step_ttft.push(*v);
+    }
+    let mut final_ttft = Series::new();
+    for v in &all.final_ttft {
+        final_ttft.push(*v);
+    }
+    let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    Ok(Json::obj(vec![
+        ("topology", Json::str(spec.topology.name())),
+        ("workflows", Json::num(spec.workflows as f64)),
+        ("width", Json::num(spec.width as f64)),
+        ("requests", Json::num(requests as f64)),
+        ("ok", Json::num(all.ok as f64)),
+        ("errors", Json::num(all.errors as f64)),
+        ("final_hit_tokens", Json::num(all.final_hit_tokens as f64)),
+        ("step_ttft_us", step_ttft.summary().to_json()),
+        ("reduce_ttft_us", final_ttft.summary().to_json()),
+        ("wall_s", Json::num(wall_s)),
+        ("throughput_req_per_s", Json::num(all.ok as f64 / wall_s)),
+    ]))
+}
+
+/// Drive one workflow end to end (client-side step ordering is the
+/// dependency edge: a step posts only after its predecessors returned).
+fn run_dag_workflow(
+    addr: &str,
+    spec: &DagWorkflowHttpSpec,
+    w: usize,
+    router: &crate::router::Router,
+    tokenizer: &crate::util::tokenizer::HashTokenizer,
+) -> DagWorkflowResult {
+    let mut out = DagWorkflowResult::default();
+    let wf_tag = (w + 1) as u64;
+    let adapter = (w % 64) as u32;
+    let ctx = spec.ctx_text(w);
+    let window = tokenizer.encode(&ctx);
+    let home = router.affinity_shard(&window, wf_tag);
+    let mut record = |r: Option<(f64, usize, usize)>, is_final: bool| match r {
+        Some((ttft, _p, h)) => {
+            out.ok += 1;
+            if is_final {
+                out.final_ttft.push(ttft);
+                out.final_hit_tokens += h;
+            } else {
+                out.step_ttft.push(ttft);
+            }
+        }
+        None => out.errors += 1,
+    };
+    match spec.topology {
+        DagTopology::MapReduce => {
+            let reduce_tag = spec.cross_shard_tag(router, &window, wf_tag, home);
+            let mut steps: Vec<Json> = (0..spec.width)
+                .map(|a| Json::obj(vec![("id", Json::str(format!("map{a}")))]))
+                .collect();
+            steps.push(Json::obj(vec![
+                ("id", Json::str("reduce")),
+                (
+                    "after",
+                    Json::Arr(
+                        (0..spec.width)
+                            .map(|a| Json::str(format!("map{a}")))
+                            .collect(),
+                    ),
+                ),
+                ("prefix", Json::str(ctx.clone())),
+                ("tag", Json::num(reduce_tag as f64)),
+            ]));
+            let steps = Json::Arr(steps);
+            // the mappers fan out in parallel, each declaring the fan
+            // width for gang admission and attaching the (idempotently
+            // registered) DAG
+            let mut burst = Vec::new();
+            for a in 0..spec.width {
+                let addr = addr.to_string();
+                let spec = spec.clone();
+                let ctx = ctx.clone();
+                let steps = steps.clone();
+                burst.push(std::thread::spawn(move || {
+                    let unique: Vec<String> = (0..spec.unique_words)
+                        .map(|k| format!("wf{w}map{a}u{k}"))
+                        .collect();
+                    let prompt = format!("{ctx} {}", unique.join(" "));
+                    post_dag_step(
+                        &addr,
+                        &prompt,
+                        (w % 64) as u32,
+                        spec.max_new,
+                        (w + 1) as u64,
+                        (w + 1) as u64,
+                        &format!("map{a}"),
+                        spec.width,
+                        Some(&steps),
+                    )
+                }));
+            }
+            for b in burst {
+                record(b.join().unwrap_or(None), false);
+            }
+            // all mappers returned, so the server has seen every
+            // predecessor finish — the reducer's prefix was prefetched
+            // onto `reduce_tag`'s home shard before this post
+            let unique: Vec<String> = (0..spec.unique_words)
+                .map(|k| format!("wf{w}reduceu{k}"))
+                .collect();
+            let prompt = format!("{ctx} {}", unique.join(" "));
+            record(
+                post_dag_step(
+                    addr, &prompt, adapter, spec.max_new, reduce_tag, wf_tag, "reduce",
+                    1, None,
+                ),
+                true,
+            );
+        }
+        DagTopology::React | DagTopology::Pipeline => {
+            let pipeline = spec.topology == DagTopology::Pipeline;
+            // stage tags: one shared tag for react; per-stage cross-shard
+            // tags for pipeline (each handoff homes elsewhere)
+            let mut tags = vec![wf_tag];
+            let mut prev_home = home;
+            for _ in 1..spec.width {
+                let t = if pipeline {
+                    let t = spec.cross_shard_tag(router, &window, wf_tag, prev_home);
+                    prev_home = router.affinity_shard(&window, t);
+                    t
+                } else {
+                    wf_tag
+                };
+                tags.push(t);
+            }
+            let steps = Json::Arr(
+                (0..spec.width)
+                    .map(|i| {
+                        let mut fields = vec![("id", Json::str(format!("s{i}")))];
+                        if i > 0 {
+                            fields.push((
+                                "after",
+                                Json::Arr(vec![Json::str(format!("s{}", i - 1))]),
+                            ));
+                            fields.push(("prefix_from", Json::str(format!("s{}", i - 1))));
+                            fields.push(("tag", Json::num(tags[i] as f64)));
+                        }
+                        Json::obj(fields)
+                    })
+                    .collect(),
+            );
+            let mut prompt = ctx.clone();
+            for i in 0..spec.width {
+                let unique: Vec<String> = (0..spec.unique_words)
+                    .map(|k| format!("wf{w}s{i}u{k}"))
+                    .collect();
+                prompt = format!("{prompt} {}", unique.join(" "));
+                record(
+                    post_dag_step(
+                        addr,
+                        &prompt,
+                        adapter,
+                        spec.max_new,
+                        tags[i],
+                        wf_tag,
+                        &format!("s{i}"),
+                        1,
+                        (i == 0).then_some(&steps),
+                    ),
+                    i == spec.width - 1,
+                );
+            }
+        }
+    }
+    out
+}
+
 /// Standard engine builders shared by tests, benches and the CLI.
 pub mod presets {
     use crate::config::{CacheConfig, CachePolicy, EngineConfig};
