@@ -207,6 +207,30 @@ pub struct ServerConfig {
     /// steps and checks abandonment; 0 parks the supervisor (tests
     /// drive `prefetch_tick` by hand)
     pub prefetch_tick_ms: u64,
+    /// durable request journal (`--journal on|off`): every accepted
+    /// submission appends a record, every terminal outcome retires it,
+    /// and a dead shard's unretired records replay on live peers
+    /// exactly once (see the `journal` module)
+    pub journal: bool,
+    /// directory holding the journal segments and per-shard checkpoint
+    /// files (`--journal-dir`)
+    pub journal_dir: String,
+    /// group-commit window (`--journal-sync-ms`): appended records
+    /// buffer for up to this many wall-clock ms before one fsync covers
+    /// them all; 0 = strict per-append sync (slowest, zero-loss)
+    pub journal_sync_ms: u64,
+    /// group-commit byte threshold (`--journal-sync-bytes`): the buffer
+    /// also flushes as soon as it holds this many bytes, whichever of
+    /// the two thresholds trips first
+    pub journal_sync_bytes: usize,
+    /// journal segment rotation size (`--journal-seg-bytes`): a segment
+    /// past this many bytes is sealed and a fresh one opened, so GC can
+    /// delete fully-retired segments instead of rewriting one huge file
+    pub journal_segment_bytes: usize,
+    /// how often (wall-clock ms) the `forkkv-checkpoint` supervisor
+    /// writes each shard's radix-metadata checkpoint for warm restarts
+    /// (`--checkpoint-ms`); 0 = shutdown-only checkpoints
+    pub checkpoint_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -233,6 +257,12 @@ impl Default for ServerConfig {
             prefetch_horizon: 1,
             prefetch_abandon_ms: 1000,
             prefetch_tick_ms: 25,
+            journal: false,
+            journal_dir: "journal".to_string(),
+            journal_sync_ms: 5,
+            journal_sync_bytes: 64 << 10,
+            journal_segment_bytes: 1 << 20,
+            checkpoint_ms: 1000,
         }
     }
 }
@@ -318,6 +348,27 @@ impl ServerConfig {
         }
         if let Some(v) = j.get("prefetch_tick_ms").and_then(Json::as_usize) {
             cfg.prefetch_tick_ms = v as u64;
+        }
+        if let Some(v) = j.get("journal").and_then(Json::as_bool) {
+            cfg.journal = v;
+        }
+        if let Some(v) = j.get("journal_dir").and_then(Json::as_str) {
+            anyhow::ensure!(!v.is_empty(), "server.journal_dir must be non-empty");
+            cfg.journal_dir = v.to_string();
+        }
+        if let Some(v) = j.get("journal_sync_ms").and_then(Json::as_usize) {
+            cfg.journal_sync_ms = v as u64;
+        }
+        if let Some(v) = j.get("journal_sync_bytes").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "server.journal_sync_bytes must be > 0");
+            cfg.journal_sync_bytes = v;
+        }
+        if let Some(v) = j.get("journal_segment_bytes").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "server.journal_segment_bytes must be > 0");
+            cfg.journal_segment_bytes = v;
+        }
+        if let Some(v) = j.get("checkpoint_ms").and_then(Json::as_usize) {
+            cfg.checkpoint_ms = v as u64;
         }
         Ok(cfg)
     }
@@ -560,6 +611,38 @@ mod tests {
         assert_eq!(d.prefetch_horizon, 1);
         assert_eq!(d.prefetch_abandon_ms, 1000);
         assert_eq!(d.prefetch_tick_ms, 25);
+        assert!(!d.journal, "journal defaults off");
+        assert_eq!(d.journal_dir, "journal");
+        assert_eq!(d.journal_sync_ms, 5);
+        assert_eq!(d.journal_sync_bytes, 64 << 10);
+        assert_eq!(d.journal_segment_bytes, 1 << 20);
+        assert_eq!(d.checkpoint_ms, 1000);
+        // journal knobs parse, and degenerate values are rejected
+        let jj = json::parse(
+            r#"{"journal":true,"journal_dir":"wal","journal_sync_ms":0,
+                "journal_sync_bytes":4096,"journal_segment_bytes":65536,
+                "checkpoint_ms":0}"#,
+        )
+        .unwrap();
+        let jc = ServerConfig::from_json(&jj).unwrap();
+        assert!(jc.journal);
+        assert_eq!(jc.journal_dir, "wal");
+        assert_eq!(jc.journal_sync_ms, 0, "0 = strict per-append sync");
+        assert_eq!(jc.journal_sync_bytes, 4096);
+        assert_eq!(jc.journal_segment_bytes, 65536);
+        assert_eq!(jc.checkpoint_ms, 0, "0 = shutdown-only checkpoints");
+        assert!(ServerConfig::from_json(
+            &json::parse(r#"{"journal_dir":""}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServerConfig::from_json(
+            &json::parse(r#"{"journal_sync_bytes":0}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServerConfig::from_json(
+            &json::parse(r#"{"journal_segment_bytes":0}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

@@ -1030,7 +1030,7 @@ impl Engine {
             Some(store) => {
                 let metrics = &mut self.metrics;
                 let mut sink = |ns: u32, path: &[u32], data: &[f32]| {
-                    if store.insert(PageKey::new(component, ns, path), data) {
+                    if store.insert_path(PageKey::new(component, ns, path), path, data) {
                         metrics.demoted_pages += 1;
                     }
                 };
@@ -1056,13 +1056,28 @@ impl Engine {
     /// under budget pressure keeps the affordable prefix, which is
     /// still a valid radix path.
     fn promote_from_tier(&mut self, which: Which, ns: u32, tokens: &[u32]) {
+        self.pull_from_tier(which, ns, tokens, true);
+    }
+
+    /// Shared tier→pool copy-back core behind both promotion (`priced`:
+    /// cost-gated, charged to the promotion ledger) and warm-restart
+    /// checkpoint replay (unpriced — a restart rebuilds whatever the tier
+    /// still holds, charged to `restored_pages`). Returns the pages
+    /// grafted into the tree.
+    fn pull_from_tier(
+        &mut self,
+        which: Which,
+        ns: u32,
+        tokens: &[u32],
+        priced: bool,
+    ) -> usize {
         if self.tier.is_none() {
-            return;
+            return 0;
         }
         let pt = self.cfg.cache.page_tokens;
         let total_pages = tokens.len() / pt;
         if total_pages == 0 {
-            return;
+            return 0;
         }
         let component = match which {
             Which::Base => Component::Base,
@@ -1090,9 +1105,8 @@ impl Engine {
         }
         if keys.is_empty() {
             self.release_match(which, &m);
-            return;
+            return 0;
         }
-        self.metrics.tier_hits += 1;
         let (page_bytes, floats) = match which {
             Which::Base => {
                 let s = self.base_pool.spec();
@@ -1103,13 +1117,17 @@ impl Engine {
                 (s.bytes_per_page(), s.floats_per_page())
             }
         };
-        // a short tail next to a long cached prefix recomputes faster
-        // than a tier round-trip's dispatch: leave it tiered
-        let copy_us = self.tier_cost.tier_cost_us(keys.len() * page_bytes);
-        let recompute_us = self.tier_cost.prefill_cost_us(keys.len() * pt, have * pt);
-        if copy_us >= recompute_us {
-            self.release_match(which, &m);
-            return;
+        if priced {
+            self.metrics.tier_hits += 1;
+            // a short tail next to a long cached prefix recomputes faster
+            // than a tier round-trip's dispatch: leave it tiered
+            let copy_us = self.tier_cost.tier_cost_us(keys.len() * page_bytes);
+            let recompute_us =
+                self.tier_cost.prefill_cost_us(keys.len() * pt, have * pt);
+            if copy_us >= recompute_us {
+                self.release_match(which, &m);
+                return 0;
+            }
         }
         let mut fresh: Vec<PageId> = Vec::with_capacity(keys.len());
         for key in &keys {
@@ -1159,10 +1177,15 @@ impl Engine {
             for key in keys.iter().take(got) {
                 tier.remove(key);
             }
-            self.metrics.promoted_pages += got as u64;
-            self.metrics.recompute_tokens_saved_tier += (got * pt) as u64;
+            if priced {
+                self.metrics.promoted_pages += got as u64;
+                self.metrics.recompute_tokens_saved_tier += (got * pt) as u64;
+            } else {
+                self.metrics.restored_pages += got as u64;
+            }
         }
         self.release_match(which, &m);
+        got
     }
 
     /// Drop a protective `match_lease` taken by promotion: release the
@@ -1193,6 +1216,112 @@ impl Engine {
     /// with tiering off or nothing dead.
     pub fn tier_compact(&mut self) -> usize {
         self.tier.as_mut().map_or(0, |t| t.compact())
+    }
+
+    /// Detach the host-memory tier store (crash salvage): the tier lives
+    /// in host memory, so a dying shard hands it to the supervisor and a
+    /// restarted engine adopts it — GPU pool bytes die with the shard,
+    /// tiered bytes do not.
+    pub fn take_tier(&mut self) -> Option<TierStore> {
+        self.tier.take()
+    }
+
+    /// Install a salvaged tier store into a freshly constructed engine
+    /// (the `take_tier` inverse, run before checkpoint replay).
+    pub fn adopt_tier(&mut self, tier: TierStore) {
+        self.tier = Some(tier);
+    }
+
+    /// Serialize the cache's *metadata* — every live radix leaf path plus
+    /// every tiered page's token path, no KV bytes — as the warm-restart
+    /// checkpoint. A restarted shard replays this against the (salvaged)
+    /// tier via `restore_checkpoint`; paths whose bytes did not survive
+    /// degrade to no-ops there, so the checkpoint is advisory and can
+    /// never corrupt state.
+    pub fn checkpoint_json(&self) -> Json {
+        let pt = self.cfg.cache.page_tokens;
+        let mut entries: Vec<Json> = Vec::new();
+        let mut seen: std::collections::HashSet<(u8, u32, Vec<u32>)> =
+            std::collections::HashSet::new();
+        let mut tagged: Vec<(u8, u32, Vec<u32>)> = Vec::new();
+        for (ns, toks) in self.trees.base.live_paths() {
+            tagged.push((0, ns, toks));
+        }
+        for (ns, toks) in self.trees.residual.live_paths() {
+            tagged.push((1, ns, toks));
+        }
+        if let Some(tier) = self.tier.as_ref() {
+            for (component, ns, toks) in tier.live_paths() {
+                let c = match component {
+                    Component::Base => 0,
+                    Component::Residual => 1,
+                };
+                tagged.push((c, ns, toks.to_vec()));
+            }
+        }
+        for (c, ns, toks) in tagged {
+            // page-aligned full pages only: a sub-page tail can never be
+            // restored, and duplicate paths (tree + tier agreeing on a
+            // prefix) would just burn replay work
+            let toks = toks[..(toks.len() / pt) * pt].to_vec();
+            if toks.is_empty() || !seen.insert((c, ns, toks.clone())) {
+                continue;
+            }
+            entries.push(Json::obj(vec![
+                ("c", Json::str(if c == 0 { "b" } else { "r" })),
+                ("ns", Json::num(ns as f64)),
+                ("toks", Json::arr(toks.iter().map(|&t| Json::num(t)))),
+            ]));
+        }
+        Json::obj(vec![
+            ("v", Json::num(1)),
+            ("page_tokens", Json::num(pt as f64)),
+            ("entries", Json::arr(entries)),
+        ])
+    }
+
+    /// Replay a `checkpoint_json` snapshot against the tier: for each
+    /// recorded path, copy back whatever contiguous-from-root prefix the
+    /// tier still holds and graft it into the radix tree (unpriced — a
+    /// restart rebuilds what it can, it does not haggle). Returns the
+    /// pages restored; mismatched geometry or versions restore nothing.
+    pub fn restore_checkpoint(&mut self, ckpt: &Json) -> usize {
+        if ckpt.get("v").and_then(Json::as_usize) != Some(1) {
+            return 0;
+        }
+        if ckpt.get("page_tokens").and_then(Json::as_usize)
+            != Some(self.cfg.cache.page_tokens)
+        {
+            return 0;
+        }
+        let Some(entries) = ckpt.get("entries").and_then(Json::as_arr) else {
+            return 0;
+        };
+        let mut restored = 0;
+        for e in entries {
+            let (which, ns) = match (
+                e.get("c").and_then(Json::as_str),
+                e.get("ns").and_then(Json::as_usize),
+            ) {
+                (Some("b"), Some(ns)) => (Which::Base, ns as u32),
+                (Some("r"), Some(ns)) if self.cfg.policy.uses_residual() => {
+                    (Which::Res, ns as u32)
+                }
+                _ => continue,
+            };
+            let Some(toks) = e.get("toks").and_then(Json::as_arr) else {
+                continue;
+            };
+            let tokens: Vec<u32> = toks
+                .iter()
+                .filter_map(|t| t.as_usize().map(|v| v as u32))
+                .collect();
+            if tokens.len() != toks.len() {
+                continue; // non-numeric token: refuse the entry
+            }
+            restored += self.pull_from_tier(which, ns, &tokens, false);
+        }
+        restored
     }
 
     // -----------------------------------------------------------------

@@ -1,0 +1,680 @@
+//! Durable request journal: a group-committed, segmented, checksummed
+//! append-only log of accepted submissions and their terminal outcomes.
+//!
+//! Every accepted `POST /generate` appends a **Submit** record (its
+//! idempotency key, target shard, and enough of the request — tokens,
+//! adapter, tag, fan, max_new — to re-execute it), and every terminal
+//! outcome appends an **Outcome** record. The in-memory mirror of
+//! "submits without outcomes" is the replay worklist: when a shard dies,
+//! the server claims that shard's open records and re-runs each on a
+//! live peer exactly once (claiming is a mutex-guarded remove, so a
+//! record can never be both replayed and completed twice).
+//!
+//! Disk layout follows the lfkv-db WAL exemplar: numbered segment files
+//! (`seg-NNNNNN.wal`) of line records `<fnv1a64-hex> <body-json>\n`,
+//! rotated at `segment_bytes` and garbage-collected as soon as every
+//! submit in a sealed segment has its outcome. Appends **group-commit**:
+//! they buffer in memory and hit the file when the buffer crosses
+//! `sync_bytes` or the periodic `sync_ms` supervisor tick fires
+//! (`sync_ms == 0` = strict sync on every append, the wrongodb
+//! `wal_sync_interval_ms` semantics). Recovery tolerates a torn tail
+//! (the last partially-written line is truncated away) and rejects
+//! corrupt lines by checksum — everything after the first bad line in a
+//! segment is dropped, never misparsed.
+
+use std::collections::{BTreeMap, HashMap};
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::json::{self, Json};
+use crate::util::lockstats::LockStat;
+use crate::util::{fnv1a_from, FNV_OFFSET};
+
+/// One journaled submission: everything needed to re-execute the request
+/// on a different shard if its original shard dies before replying.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SubmitRecord {
+    /// idempotency key (client-supplied or server-generated): the
+    /// identity under which duplicates dedup and replays claim
+    pub key: String,
+    /// shard the submission was accepted on (replay skips it)
+    pub shard: usize,
+    /// workflow tag carried into the re-executed request
+    pub tag: u64,
+    /// LoRA adapter id
+    pub adapter: u32,
+    /// decode budget
+    pub max_new: usize,
+    /// declared gang fan width
+    pub fan: usize,
+    /// the full prompt token stream
+    pub tokens: Vec<u32>,
+}
+
+impl SubmitRecord {
+    fn to_body(&self) -> String {
+        Json::obj(vec![
+            ("t", Json::str("s")),
+            ("k", Json::str(self.key.clone())),
+            ("sh", Json::num(self.shard as f64)),
+            ("tag", Json::num(self.tag as f64)),
+            ("ad", Json::num(self.adapter as f64)),
+            ("mn", Json::num(self.max_new as f64)),
+            ("fan", Json::num(self.fan as f64)),
+            (
+                "toks",
+                Json::arr(self.tokens.iter().map(|&t| Json::num(t as f64))),
+            ),
+        ])
+        .to_string()
+    }
+
+    fn from_json(j: &Json) -> Option<SubmitRecord> {
+        Some(SubmitRecord {
+            key: j.get("k")?.as_str()?.to_string(),
+            shard: j.get("sh")?.as_usize()?,
+            tag: j.get("tag")?.as_f64()? as u64,
+            adapter: j.get("ad")?.as_usize()? as u32,
+            max_new: j.get("mn")?.as_usize()?,
+            fan: j.get("fan")?.as_usize()?,
+            tokens: j
+                .get("toks")?
+                .as_arr()?
+                .iter()
+                .map(|t| t.as_usize().map(|v| v as u32))
+                .collect::<Option<Vec<u32>>>()?,
+        })
+    }
+}
+
+/// Lifetime journal counters (the `/metrics` `journal` object's
+/// durability half).
+#[derive(Debug, Default, Clone)]
+pub struct JournalStats {
+    /// Submit records appended
+    pub submits: u64,
+    /// Outcome records appended
+    pub outcomes: u64,
+    /// buffered-append flushes (each one batch of records — the group
+    /// in "group commit")
+    pub group_commits: u64,
+    /// bytes pushed to segment files across all flushes
+    pub synced_bytes: u64,
+    /// segment files opened over the journal's lifetime
+    pub segments_created: u64,
+    /// fully-outcomed sealed segments deleted by GC
+    pub segments_gced: u64,
+    /// torn-tail bytes truncated away during recovery
+    pub truncated_bytes: u64,
+    /// checksum-rejected lines dropped during recovery
+    pub corrupt_lines: u64,
+    /// outcome appends refused because the key had no live submit (a
+    /// second outcome for an already-retired key, or an unknown key) —
+    /// nonzero means some caller bypassed the `claim` gate
+    pub duplicate_outcomes: u64,
+}
+
+struct Inner {
+    file: fs::File,
+    active_seg: u64,
+    active_bytes: usize,
+    buf: Vec<u8>,
+    last_sync: Instant,
+    /// submits without an outcome yet — the replay worklist. A claim
+    /// (completion or replay) removes the entry; whoever removed it owns
+    /// appending the one outcome record.
+    pending: HashMap<String, SubmitRecord>,
+    /// un-outcomed key -> segment holding its submit record (outlives a
+    /// claim: cleared only by the outcome append, which drives GC)
+    key_seg: HashMap<String, u64>,
+    /// segment -> open (un-outcomed) submit count
+    seg_open: BTreeMap<u64, u64>,
+    stats: JournalStats,
+}
+
+/// The durable request journal (module docs). Shared by every server
+/// worker; one mutex guards the buffered writer and the pending map —
+/// contention on it is exported via [`Journal::lock_stat`].
+pub struct Journal {
+    dir: PathBuf,
+    sync_ms: u64,
+    sync_bytes: usize,
+    seg_bytes: usize,
+    inner: Mutex<Inner>,
+    lock: LockStat,
+}
+
+fn seg_path(dir: &Path, idx: u64) -> PathBuf {
+    dir.join(format!("seg-{idx:06}.wal"))
+}
+
+fn record_line(body: &str) -> String {
+    let h = fnv1a_from(FNV_OFFSET, body.bytes());
+    format!("{h:016x} {body}\n")
+}
+
+/// Parse one checksummed line into its body JSON; `None` = corrupt.
+fn parse_line(line: &str) -> Option<Json> {
+    let (hash, body) = line.split_once(' ')?;
+    if hash.len() != 16 {
+        return None;
+    }
+    let want = u64::from_str_radix(hash, 16).ok()?;
+    if fnv1a_from(FNV_OFFSET, body.bytes()) != want {
+        return None;
+    }
+    json::parse(body).ok()
+}
+
+impl Journal {
+    /// Open (or create) the journal under `dir`, replaying existing
+    /// segments to rebuild the pending map. Records that were submitted
+    /// but never outcomed by the previous process remain pending — the
+    /// server replays them as orphans at startup. The torn tail of the
+    /// newest segment is truncated; checksum-corrupt lines and
+    /// everything after them in their segment are dropped. Appends
+    /// always go to a fresh segment; sealed segments left fully
+    /// outcomed are deleted on the spot.
+    pub fn open(
+        dir: impl Into<PathBuf>,
+        sync_ms: u64,
+        sync_bytes: usize,
+        seg_bytes: usize,
+    ) -> anyhow::Result<Journal> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        let mut stats = JournalStats::default();
+        let mut pending: HashMap<String, SubmitRecord> = HashMap::new();
+        let mut key_seg: HashMap<String, u64> = HashMap::new();
+        let mut seg_open: BTreeMap<u64, u64> = BTreeMap::new();
+
+        let mut segs: Vec<u64> = Vec::new();
+        for entry in fs::read_dir(&dir)? {
+            let name = entry?.file_name();
+            let name = name.to_string_lossy();
+            if let Some(idx) = name
+                .strip_prefix("seg-")
+                .and_then(|s| s.strip_suffix(".wal"))
+                .and_then(|s| s.parse::<u64>().ok())
+            {
+                segs.push(idx);
+            }
+        }
+        segs.sort_unstable();
+        let last = segs.last().copied();
+        for &idx in &segs {
+            let path = seg_path(&dir, idx);
+            let raw = fs::read(&path)?;
+            let text = String::from_utf8_lossy(&raw);
+            let mut valid_bytes = 0usize;
+            for line in text.split_inclusive('\n') {
+                let complete = line.ends_with('\n');
+                let body = match parse_line(line.trim_end_matches('\n')) {
+                    Some(b) if complete => b,
+                    _ => {
+                        stats.corrupt_lines += 1;
+                        break; // nothing after a bad line is trusted
+                    }
+                };
+                valid_bytes += line.len();
+                match body.get("t").and_then(Json::as_str) {
+                    Some("s") => {
+                        if let Some(rec) = SubmitRecord::from_json(&body) {
+                            *seg_open.entry(idx).or_insert(0) += 1;
+                            key_seg.insert(rec.key.clone(), idx);
+                            pending.insert(rec.key.clone(), rec);
+                        }
+                    }
+                    Some("o") => {
+                        if let Some(key) = body.get("k").and_then(Json::as_str) {
+                            pending.remove(key);
+                            if let Some(s) = key_seg.remove(key) {
+                                if let Some(n) = seg_open.get_mut(&s) {
+                                    *n = n.saturating_sub(1);
+                                }
+                            }
+                        }
+                    }
+                    _ => {}
+                }
+            }
+            if valid_bytes < raw.len() && Some(idx) == last {
+                // torn tail on the newest segment: a crash mid-append.
+                // Physically truncate so a later reader never re-parses
+                // the garbage.
+                stats.truncated_bytes += (raw.len() - valid_bytes) as u64;
+                let f = fs::OpenOptions::new().write(true).open(&path)?;
+                f.set_len(valid_bytes as u64)?;
+            }
+        }
+        // sealed segments whose submits all have outcomes are dead weight
+        for &idx in &segs {
+            if seg_open.get(&idx).copied().unwrap_or(0) == 0 {
+                let _ = fs::remove_file(seg_path(&dir, idx));
+                seg_open.remove(&idx);
+                stats.segments_gced += 1;
+            }
+        }
+        let active_seg = last.map_or(0, |l| l + 1);
+        let file = fs::File::create(seg_path(&dir, active_seg))?;
+        stats.segments_created += 1;
+        seg_open.insert(active_seg, 0);
+        Ok(Journal {
+            dir,
+            sync_ms,
+            sync_bytes: sync_bytes.max(1),
+            seg_bytes: seg_bytes.max(1),
+            inner: Mutex::new(Inner {
+                file,
+                active_seg,
+                active_bytes: 0,
+                buf: Vec::new(),
+                last_sync: Instant::now(),
+                pending,
+                key_seg,
+                seg_open,
+                stats,
+            }),
+            lock: LockStat::new("journal"),
+        })
+    }
+
+    /// Directory the segments (and the per-shard checkpoint files) live in.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Contention counters for the journal mutex.
+    pub fn lock_stat(&self) -> &LockStat {
+        &self.lock
+    }
+
+    fn flush_locked(inner: &mut Inner) {
+        if inner.buf.is_empty() {
+            return;
+        }
+        let _ = inner.file.write_all(&inner.buf);
+        let _ = inner.file.sync_data();
+        inner.stats.group_commits += 1;
+        inner.stats.synced_bytes += inner.buf.len() as u64;
+        inner.buf.clear();
+        inner.last_sync = Instant::now();
+    }
+
+    fn rotate_locked(&self, inner: &mut Inner) {
+        Self::flush_locked(inner);
+        let sealed = inner.active_seg;
+        inner.active_seg += 1;
+        let next = inner.active_seg;
+        if let Ok(f) = fs::File::create(seg_path(&self.dir, next)) {
+            inner.file = f;
+        }
+        inner.active_bytes = 0;
+        inner.stats.segments_created += 1;
+        inner.seg_open.entry(next).or_insert(0);
+        // a segment sealed with nothing open will never see another
+        // outcome — GC it now or never
+        if inner.seg_open.get(&sealed).copied().unwrap_or(0) == 0 {
+            let _ = fs::remove_file(seg_path(&self.dir, sealed));
+            inner.seg_open.remove(&sealed);
+            inner.stats.segments_gced += 1;
+        }
+    }
+
+    fn append_locked(&self, inner: &mut Inner, body: &str) {
+        let line = record_line(body);
+        inner.active_bytes += line.len();
+        inner.buf.extend_from_slice(line.as_bytes());
+        if inner.active_bytes >= self.seg_bytes {
+            self.rotate_locked(inner);
+        } else if self.sync_ms == 0 || inner.buf.len() >= self.sync_bytes {
+            Self::flush_locked(inner);
+        }
+    }
+
+    /// Journal one accepted submission (call after the target shard took
+    /// it). The record joins the pending (replayable) set.
+    pub fn append_submit(&self, rec: &SubmitRecord) {
+        let body = rec.to_body();
+        let mut guard = self.lock.lock(&self.inner);
+        let inner = &mut *guard;
+        inner.stats.submits += 1;
+        *inner.seg_open.entry(inner.active_seg).or_insert(0) += 1;
+        inner.key_seg.insert(rec.key.clone(), inner.active_seg);
+        inner.pending.insert(rec.key.clone(), rec.clone());
+        self.append_locked(inner, &body);
+    }
+
+    /// Journal a terminal outcome for `key`, closing its submit. Drives
+    /// GC: a sealed segment whose last open submit this was is flushed
+    /// past (so the outcome is durable first) and deleted.
+    pub fn append_outcome(&self, key: &str, ok: bool) {
+        let body = Json::obj(vec![
+            ("t", Json::str("o")),
+            ("k", Json::str(key)),
+            ("ok", Json::Bool(ok)),
+        ])
+        .to_string();
+        let mut guard = self.lock.lock(&self.inner);
+        let inner = &mut *guard;
+        let Some(seg) = inner.key_seg.remove(key) else {
+            // no live submit for this key: appending would create a
+            // duplicate outcome record (someone bypassed the `claim`
+            // gate, or retried an already-retired key) — refuse and
+            // count the attempt instead
+            inner.stats.duplicate_outcomes += 1;
+            return;
+        };
+        inner.stats.outcomes += 1;
+        inner.pending.remove(key);
+        self.append_locked(inner, &body);
+        let n = inner.seg_open.entry(seg).or_insert(1);
+        *n = n.saturating_sub(1);
+        let closed = *n == 0;
+        if closed && seg != inner.active_seg {
+            // the outcome that freed the segment must be durable
+            // before the submit it closes disappears
+            Self::flush_locked(inner);
+            let _ = fs::remove_file(seg_path(&self.dir, seg));
+            inner.seg_open.remove(&seg);
+            inner.stats.segments_gced += 1;
+        }
+    }
+
+    /// Atomically take `key`'s pending record — the exactly-once gate.
+    /// Exactly one caller (the original completion path or a dead-shard
+    /// replayer) gets `Some`; that caller owns appending the outcome.
+    pub fn claim(&self, key: &str) -> Option<SubmitRecord> {
+        self.lock.lock(&self.inner).pending.remove(key)
+    }
+
+    /// Atomically claim every pending record submitted to `shard` (the
+    /// dead-shard replay worklist).
+    pub fn claim_shard(&self, shard: usize) -> Vec<SubmitRecord> {
+        let mut inner = self.lock.lock(&self.inner);
+        let keys: Vec<String> = inner
+            .pending
+            .iter()
+            .filter(|(_, r)| r.shard == shard)
+            .map(|(k, _)| k.clone())
+            .collect();
+        keys.iter()
+            .filter_map(|k| inner.pending.remove(k))
+            .collect()
+    }
+
+    /// Atomically claim every pending record regardless of shard
+    /// (startup orphan recovery).
+    pub fn claim_all(&self) -> Vec<SubmitRecord> {
+        let mut inner = self.lock.lock(&self.inner);
+        inner.pending.drain().map(|(_, r)| r).collect()
+    }
+
+    /// Submits currently without an outcome.
+    pub fn pending_len(&self) -> usize {
+        self.lock.lock(&self.inner).pending.len()
+    }
+
+    /// Flush buffered appends to the active segment now.
+    pub fn sync(&self) {
+        let mut inner = self.lock.lock(&self.inner);
+        Self::flush_locked(&mut inner);
+    }
+
+    /// Flush iff the group-commit interval has elapsed since the last
+    /// flush (the `forkkv-journal` supervisor's tick body; public for
+    /// deterministic tests).
+    pub fn maybe_sync(&self) {
+        let mut inner = self.lock.lock(&self.inner);
+        if !inner.buf.is_empty()
+            && inner.last_sync.elapsed().as_millis() as u64 >= self.sync_ms
+        {
+            Self::flush_locked(&mut inner);
+        }
+    }
+
+    /// Lifetime counters snapshot.
+    pub fn stats(&self) -> JournalStats {
+        self.lock.lock(&self.inner).stats.clone()
+    }
+
+    /// Live segment files on disk (tests / GC assertions).
+    pub fn segment_files(&self) -> Vec<PathBuf> {
+        let mut out: Vec<PathBuf> = fs::read_dir(&self.dir)
+            .map(|rd| {
+                rd.filter_map(|e| e.ok())
+                    .map(|e| e.path())
+                    .filter(|p| {
+                        p.file_name()
+                            .and_then(|n| n.to_str())
+                            .is_some_and(|n| n.starts_with("seg-") && n.ends_with(".wal"))
+                    })
+                    .collect()
+            })
+            .unwrap_or_default();
+        out.sort();
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicU64, Ordering};
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        static N: AtomicU64 = AtomicU64::new(0);
+        let d = std::env::temp_dir().join(format!(
+            "forkkv-journal-{tag}-{}-{}",
+            std::process::id(),
+            N.fetch_add(1, Ordering::Relaxed)
+        ));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn rec(key: &str, shard: usize, n: usize) -> SubmitRecord {
+        SubmitRecord {
+            key: key.to_string(),
+            shard,
+            tag: 7,
+            adapter: 3,
+            max_new: 16,
+            fan: 2,
+            tokens: (0..n as u32).collect(),
+        }
+    }
+
+    #[test]
+    fn submit_outcome_round_trip_survives_reopen() {
+        let dir = tmp_dir("rt");
+        {
+            let j = Journal::open(&dir, 0, 1, 1 << 20).unwrap();
+            j.append_submit(&rec("a", 0, 8));
+            j.append_submit(&rec("b", 1, 4));
+            j.append_outcome("a", true);
+        }
+        let j = Journal::open(&dir, 0, 1, 1 << 20).unwrap();
+        assert_eq!(j.pending_len(), 1);
+        let got = j.claim("b").expect("b still pending");
+        assert_eq!(got, rec("b", 1, 4));
+        assert!(j.claim("a").is_none(), "outcomed submit must not replay");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn group_commit_thresholds_buffer_until_bytes_or_sync() {
+        let dir = tmp_dir("gc");
+        let j = Journal::open(&dir, 10_000, 4096, 1 << 20).unwrap();
+        j.append_submit(&rec("a", 0, 4));
+        assert_eq!(j.stats().group_commits, 0, "small append buffers");
+        j.sync();
+        let s = j.stats();
+        assert_eq!(s.group_commits, 1);
+        assert!(s.synced_bytes > 0);
+        // byte threshold forces a flush without an explicit sync
+        let j2 = Journal::open(tmp_dir("gc2"), 10_000, 64, 1 << 20).unwrap();
+        j2.append_submit(&rec("big", 0, 64));
+        assert!(j2.stats().group_commits >= 1, "64-byte threshold crossed");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn maybe_sync_respects_interval() {
+        let dir = tmp_dir("ms");
+        let j = Journal::open(&dir, 60_000, 1 << 20, 1 << 20).unwrap();
+        j.append_submit(&rec("a", 0, 4));
+        j.maybe_sync();
+        assert_eq!(j.stats().group_commits, 0, "interval not elapsed");
+        let j = Journal::open(tmp_dir("ms2"), 0, 1 << 20, 1 << 20).unwrap();
+        j.append_submit(&rec("a", 0, 4));
+        assert_eq!(j.stats().group_commits, 1, "sync_ms=0 is strict");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_truncates_and_keeps_valid_prefix() {
+        let dir = tmp_dir("torn");
+        {
+            let j = Journal::open(&dir, 0, 1, 1 << 20).unwrap();
+            j.append_submit(&rec("keep", 0, 8));
+            j.append_submit(&rec("alsokeep", 0, 8));
+        }
+        // crash mid-append: chop the newest segment mid-record
+        let seg = seg_path(&dir, 0);
+        let mut raw = fs::read(&seg).unwrap();
+        let cut = raw.len() - 10;
+        raw.truncate(cut);
+        fs::write(&seg, &raw).unwrap();
+        let j = Journal::open(&dir, 0, 1, 1 << 20).unwrap();
+        let s = j.stats();
+        assert!(s.truncated_bytes > 0, "tail was truncated");
+        assert_eq!(j.pending_len(), 1, "only the intact record survives");
+        assert!(j.claim("keep").is_some());
+        assert!(fs::read(&seg).unwrap().len() < cut, "file physically truncated");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checksum_rejects_corrupt_line_and_everything_after() {
+        let dir = tmp_dir("crc");
+        {
+            let j = Journal::open(&dir, 0, 1, 1 << 20).unwrap();
+            j.append_submit(&rec("first", 0, 8));
+            j.append_submit(&rec("second", 0, 8));
+            j.append_submit(&rec("third", 0, 8));
+        }
+        let seg = seg_path(&dir, 0);
+        let mut raw = fs::read(&seg).unwrap();
+        // flip a byte inside the second record's body
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0x40;
+        fs::write(&seg, &raw).unwrap();
+        let j = Journal::open(&dir, 0, 1, 1 << 20).unwrap();
+        assert!(j.stats().corrupt_lines >= 1);
+        assert!(j.claim("first").is_some(), "prefix before corruption kept");
+        assert!(
+            j.claim("third").is_none(),
+            "records after a corrupt line are untrusted"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn gc_deletes_only_fully_outcomed_sealed_segments() {
+        let dir = tmp_dir("gc3");
+        // tiny segments: every submit seals a segment quickly
+        let j = Journal::open(&dir, 0, 1, 64).unwrap();
+        j.append_submit(&rec("a", 0, 16));
+        j.append_submit(&rec("b", 0, 16));
+        j.append_submit(&rec("c", 0, 16));
+        let before = j.segment_files().len();
+        assert!(before > 1, "rotation produced sealed segments");
+        // an un-outcomed record's segment must survive any amount of GC
+        j.append_outcome("a", true);
+        j.append_outcome("c", true);
+        assert!(j.claim("b").is_some(), "b never lost while un-outcomed");
+        let s = j.stats();
+        assert!(s.segments_gced >= 1, "a's fully-closed segment collected");
+        // after b's outcome, reopen collects everything sealed
+        j.append_outcome("b", false);
+        drop(j);
+        let j = Journal::open(&dir, 0, 1, 64).unwrap();
+        assert_eq!(j.pending_len(), 0);
+        assert_eq!(
+            j.segment_files().len(),
+            1,
+            "only the fresh active segment remains"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn claim_is_exactly_once_per_key_and_shard_scoped() {
+        let dir = tmp_dir("claim");
+        let j = Journal::open(&dir, 0, 1, 1 << 20).unwrap();
+        j.append_submit(&rec("x", 0, 4));
+        j.append_submit(&rec("y", 1, 4));
+        j.append_submit(&rec("z", 1, 4));
+        let dead = j.claim_shard(1);
+        assert_eq!(dead.len(), 2);
+        assert!(j.claim_shard(1).is_empty(), "second sweep finds nothing");
+        assert!(j.claim("x").is_some());
+        assert!(j.claim("x").is_none(), "claim is exactly-once");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn second_outcome_for_a_key_is_refused_and_counted() {
+        let dir = tmp_dir("dup");
+        let j = Journal::open(&dir, 0, 1, 1 << 20).unwrap();
+        j.append_submit(&rec("k", 0, 4));
+        j.append_outcome("k", true);
+        j.append_outcome("k", false); // duplicate: must not append
+        j.append_outcome("ghost", true); // never submitted: same refusal
+        let s = j.stats();
+        assert_eq!(s.outcomes, 1, "exactly one outcome record appended");
+        assert_eq!(s.duplicate_outcomes, 2);
+        // reopen sees one submit + one outcome, nothing pending
+        drop(j);
+        let j2 = Journal::open(&dir, 0, 1, 1 << 20).unwrap();
+        assert_eq!(j2.pending_len(), 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fuzz_recovery_never_resurrects_outcomed_submits() {
+        // random interleavings of submit/outcome; after reopen the
+        // pending set must be exactly the un-outcomed submits
+        let mut rng = crate::util::rng::Rng::seeded(0x6a6f);
+        for round in 0..8u64 {
+            let dir = tmp_dir("fuzz");
+            let mut open: Vec<String> = Vec::new();
+            let mut expect: std::collections::HashSet<String> =
+                std::collections::HashSet::new();
+            {
+                let j = Journal::open(&dir, 0, 1, 256).unwrap();
+                for i in 0..40u64 {
+                    if !open.is_empty() && rng.below(3) == 0 {
+                        let k = open.swap_remove(rng.below(open.len()));
+                        expect.remove(&k);
+                        j.append_outcome(&k, true);
+                    } else {
+                        let k = format!("r{round}k{i}");
+                        j.append_submit(&rec(&k, (i % 3) as usize, 8));
+                        expect.insert(k.clone());
+                        open.push(k);
+                    }
+                }
+            }
+            let j = Journal::open(&dir, 0, 1, 256).unwrap();
+            let got: std::collections::HashSet<String> =
+                j.claim_all().into_iter().map(|r| r.key).collect();
+            assert_eq!(got, expect, "round {round}");
+            let _ = fs::remove_dir_all(&dir);
+        }
+    }
+}

@@ -10,6 +10,7 @@ pub mod batch;
 pub mod config;
 pub mod engine;
 pub mod exec;
+pub mod journal;
 pub mod kvcache;
 pub mod metrics;
 pub mod migrate;

@@ -13,9 +13,10 @@ use forkkv::server::Server;
 use forkkv::util::json::Json;
 use forkkv::workload::{
     presets, run_dag_load, run_http_load, run_multi_workflow_load,
-    run_returning_sessions_load, run_skewed_workflow_load, DagTopology, DagWorkflowHttpSpec,
-    HttpLoadSpec, MultiWorkflowHttpSpec, ReturningSessionsHttpSpec, SkewedWorkflowHttpSpec,
-    WorkflowDriver, WorkflowKind, WorkloadSpec,
+    run_returning_sessions_load, run_skewed_workflow_load, spawn_http_shard_killer,
+    DagTopology, DagWorkflowHttpSpec, HttpLoadSpec, MultiWorkflowHttpSpec,
+    ReturningSessionsHttpSpec, SkewedWorkflowHttpSpec, WorkflowDriver, WorkflowKind,
+    WorkloadSpec,
 };
 
 fn usage() -> ! {
@@ -31,6 +32,8 @@ USAGE:
                     [--tier on|off] [--tier-mb N] [--tier-compact-ms T]
                     [--prefetch on|off] [--prefetch-horizon N]
                     [--prefetch-abandon-ms T] [--prefetch-tick-ms T]
+                    [--journal on|off] [--journal-dir DIR] [--journal-sync-ms T]
+                    [--journal-sync-kb N] [--journal-seg-kb N] [--checkpoint-ms T]
   forkkv run        [--policy P] [--model M] [--dataset D] [--workflow react|mapreduce]
                     [--workflows N] [--requests N] [--rate R] [--budget-mb N] [--seed S]
                     [--gang on|off] [--real --artifacts DIR]
@@ -48,6 +51,9 @@ USAGE:
                     [--dag mapreduce|react|pipeline]
                     [--prefetch on|off] [--prefetch-horizon N]
                     [--prefetch-abandon-ms T] [--prefetch-tick-ms T]
+                    [--journal on|off] [--journal-dir DIR] [--journal-sync-ms T]
+                    [--journal-sync-kb N] [--journal-seg-kb N] [--checkpoint-ms T]
+                    [--fault-kill-shard-after-ms T] [--fault-kill-shard I]
                     # closed-loop concurrent HTTP load against a sim-backed server;
                     # with --workflows, K workflows of M agents fork shared contexts
                     # (the multi-shard placement scenario; add --fan-parallel to
@@ -65,7 +71,12 @@ USAGE:
                     # and the server pre-warms each successor step's known
                     # prefix on its home shard while the predecessors decode
                     # (the cross-step --prefetch A/B; K and the step width
-                    # come from --workflows / --agents-per-workflow)
+                    # come from --workflows / --agents-per-workflow); with
+                                        # --fault-kill-shard-after-ms, a fault injector crashes
+                                        # --fault-kill-shard (default 0) mid-bench once it holds an
+                                        # in-flight request — with --journal on, its journaled
+                                        # submits replay on the surviving shards and the report's
+                                        # journal block proves zero requests were lost
   forkkv calibrate  [--artifacts DIR]   # measure real PJRT costs + inter-shard copy
                                         # bandwidth -> calibration.json
 
@@ -185,6 +196,29 @@ fn server_config(args: &Args) -> anyhow::Result<ServerConfig> {
     }
     if let Some(v) = args.flag("--prefetch-tick-ms") {
         cfg.prefetch_tick_ms = v.parse()?;
+    }
+    if let Some(v) = args.flag("--journal") {
+        cfg.journal = parse_on_off("--journal", &v)?;
+    }
+    if let Some(v) = args.flag("--journal-dir") {
+        anyhow::ensure!(!v.is_empty(), "--journal-dir must not be empty");
+        cfg.journal_dir = v;
+    }
+    if let Some(v) = args.flag("--journal-sync-ms") {
+        cfg.journal_sync_ms = v.parse()?;
+    }
+    if let Some(v) = args.flag("--journal-sync-kb") {
+        let kb: usize = v.parse()?;
+        anyhow::ensure!(kb > 0, "--journal-sync-kb must be > 0");
+        cfg.journal_sync_bytes = kb << 10;
+    }
+    if let Some(v) = args.flag("--journal-seg-kb") {
+        let kb: usize = v.parse()?;
+        anyhow::ensure!(kb > 0, "--journal-seg-kb must be > 0");
+        cfg.journal_segment_bytes = kb << 10;
+    }
+    if let Some(v) = args.flag("--checkpoint-ms") {
+        cfg.checkpoint_ms = v.parse()?;
     }
     Ok(cfg)
 }
@@ -373,6 +407,15 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         .map(|v| v.parse())
         .transpose()?
         .unwrap_or(160);
+    let fault_after_ms: Option<u64> = args
+        .flag("--fault-kill-shard-after-ms")
+        .map(|v| v.parse())
+        .transpose()?;
+    let fault_shard: usize = args
+        .flag("--fault-kill-shard")
+        .map(|v| v.parse())
+        .transpose()?
+        .unwrap_or(0);
 
     let policy = cfg.policy;
     let gang = cfg.sched.gang;
@@ -431,6 +474,22 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         let server = server.clone();
         std::thread::spawn(move || server.serve_listener(listener, None))
     };
+
+    // the fault injector: after the grace period, crash the victim shard
+    // over the same HTTP surface the bench drives (waiting for it to hold
+    // an in-flight request so the journal replay path demonstrably runs)
+    let killer = fault_after_ms.map(|after_ms| {
+        anyhow::ensure!(
+            fault_shard < server.config().shards,
+            "--fault-kill-shard {fault_shard} out of range ({} shards)",
+            server.config().shards
+        );
+        eprintln!(
+            "bench-http: fault injector armed — killing shard {fault_shard} after {after_ms}ms"
+        );
+        Ok(spawn_http_shard_killer(&addr, fault_shard, after_ms, 1, 2_000))
+    });
+    let killer = killer.transpose()?;
 
     let mut report = match (dag, sessions, hot_agents, workflows) {
         (Some(topology), _, _, _) => {
@@ -505,10 +564,19 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         m.insert("rebalancer".into(), server.rebalancer_stats());
         m.insert("tier".into(), server.tier_stats());
         m.insert("prefetch".into(), server.prefetch_stats());
+        m.insert("journal".into(), server.journal_stats());
+        m.insert("locks".into(), server.lock_stats());
         m.insert("policy".into(), Json::str(policy.name()));
         m.insert("gang".into(), Json::Bool(gang));
         m.insert("workers".into(), Json::num(server.config().workers as f64));
         m.insert("pace_us".into(), Json::num(pace_us as f64));
+    }
+    if let Some(k) = killer {
+        if let Some(kill) = k.join().ok().flatten() {
+            if let Json::Obj(m) = &mut report {
+                m.insert("fault".into(), kill);
+            }
+        }
     }
     server.shutdown();
     for h in shard_handles {

@@ -64,6 +64,11 @@ pub struct EngineMetrics {
     /// from the tier (the tier's own bytes-for-FLOPs ledger, parallel to
     /// migration's `recompute_tokens_saved`)
     pub recompute_tokens_saved_tier: u64,
+    /// pages rebuilt from the tier by a warm restart's checkpoint replay
+    /// (`Engine::restore_checkpoint`) — the recovery path's own
+    /// bytes-for-FLOPs ledger, disjoint from `promoted_pages` (admission
+    /// promotion) so the two mechanisms stay separately auditable
+    pub restored_pages: u64,
 
     // cross-step workflow prefetch (the KVFlow horizon):
     /// pages covered by prefetch leases at issue time — resident pages a
@@ -188,6 +193,7 @@ impl EngineMetrics {
                 "recompute_tokens_saved_tier",
                 Json::num(self.recompute_tokens_saved_tier as f64),
             ),
+            ("restored_pages", Json::num(self.restored_pages as f64)),
             ("prefetched_pages", Json::num(self.prefetched_pages as f64)),
             ("prefetch_hits", Json::num(self.prefetch_hits as f64)),
             ("prefetch_wasted", Json::num(self.prefetch_wasted as f64)),
@@ -235,7 +241,7 @@ impl EngineMetrics {
 /// Keys summed across shards by [`aggregate_stats`]. Series summaries are
 /// deliberately absent: percentiles don't compose across shards, so those
 /// stay in the per-shard snapshots.
-const SUMMED_KEYS: [&str; 29] = [
+const SUMMED_KEYS: [&str; 30] = [
     "prefill_steps",
     "decode_steps",
     "decode_rows",
@@ -262,6 +268,7 @@ const SUMMED_KEYS: [&str; 29] = [
     "promoted_pages",
     "tier_hits",
     "recompute_tokens_saved_tier",
+    "restored_pages",
     "prefetched_pages",
     "prefetch_hits",
     "prefetch_wasted",
@@ -355,12 +362,17 @@ pub enum DropReason {
     /// memory deadlock breaker: every schedulable unit was blocked on pages
     /// held by blocked sequences, and this request was the chosen victim
     OutOfMemory,
+    /// the shard serving the request died and no live peer could replay
+    /// it (journal off, or the whole pool is dead) — the terminal state
+    /// that replaces an infinite client wait
+    ShardLost,
 }
 
 impl DropReason {
     pub fn as_str(&self) -> &'static str {
         match self {
             DropReason::OutOfMemory => "out of memory",
+            DropReason::ShardLost => "shard lost",
         }
     }
 }

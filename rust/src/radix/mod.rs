@@ -504,6 +504,23 @@ impl RadixTree {
         spans.concat()
     }
 
+    /// The full token path of every live **leaf**, with its namespace.
+    /// A leaf path names its entire ancestor chain, so this is the
+    /// tree's complete structural metadata in O(pages) space — the
+    /// checkpoint half of warm shard restarts (paired with the tier
+    /// store's own live-path scan). Root sentinels carry no page and are
+    /// skipped; an idle namespace contributes nothing.
+    pub fn live_paths(&self) -> Vec<(u32, Vec<u32>)> {
+        let mut out = Vec::new();
+        for (id, node) in self.nodes.iter().enumerate() {
+            if node.dead || node.parent == NIL || !node.children.is_empty() {
+                continue;
+            }
+            out.push((node.ns, self.token_path(id as NodeId)));
+        }
+        out
+    }
+
     /// Read-only longest-prefix probe: pages that a `match_lease` would
     /// return, without taking leases (admission-control estimates).
     pub fn probe_pages(&self, ns: u32, tokens: &[u32]) -> usize {

@@ -81,22 +81,27 @@
 //! and `/metrics` reports `{"dead": true}` per dead shard instead of
 //! failing the snapshot.
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use crate::config::ServerConfig;
 use crate::engine::{Engine, Request, Tick};
 use crate::exec::CostModel;
-use crate::metrics::{self, FinishedRequest, RequestOutcome};
+use crate::journal::{Journal, SubmitRecord};
+use crate::metrics::{
+    self, DropReason, DroppedRequest, FinishedRequest, RequestOutcome,
+};
 use crate::migrate::{MigrationEstimate, MigrationPayload, MigrationPolicy};
 use crate::rebalance::{BudgetPressure, Rebalancer};
 use crate::router::Router;
+use crate::tier::TierStore;
 use crate::util::json::{self, Json};
+use crate::util::lockstats::{locks_json, LockStat};
 use crate::util::tokenizer::HashTokenizer;
 
 enum Cmd {
@@ -148,14 +153,28 @@ enum Cmd {
     /// Release a prefetch lease exactly once (`Engine::prefetch_release`):
     /// `hit` when the warmed step arrived, abandonment otherwise.
     PrefetchRelease { lease: u64, hit: bool },
+    /// Snapshot this shard's warm-restart checkpoint: every live radix
+    /// leaf path plus every tiered page's token path, metadata only
+    /// (`Engine::checkpoint_json`).
+    Checkpoint(mpsc::Sender<Json>),
+    /// Fault injection: die in place. The shard hands its host-memory
+    /// tier back to the supervisor (host memory survives a shard crash;
+    /// GPU pool bytes do not) and exits WITHOUT the final waiter drain —
+    /// in-flight waiters observe a closed reply channel exactly as they
+    /// would under a real crash, and the journal replay path takes over.
+    Crash { salvage: mpsc::Sender<Option<TierStore>> },
     Shutdown,
 }
 
 /// The server's handle on one engine shard: its command channel plus the
-/// in-flight request count the router reads as the shard's load.
+/// in-flight request count the router reads as the shard's load. The
+/// sender sits behind an RwLock so a warm restart can install a fresh
+/// channel in place (`restart_shard`) while concurrent submitters keep
+/// cheap read access; the shared `tx_lock` stat samples its contention.
 struct ShardHandle {
-    tx: mpsc::Sender<Cmd>,
+    tx: RwLock<mpsc::Sender<Cmd>>,
     depth: Arc<AtomicUsize>,
+    tx_lock: Arc<LockStat>,
 }
 
 /// Depths at or above this mark a dead shard. A *range* rather than the
@@ -169,6 +188,12 @@ const DEPTH_POISONED: usize = usize::MAX / 2;
 impl ShardHandle {
     fn is_poisoned(&self) -> bool {
         self.depth.load(Ordering::Relaxed) >= DEPTH_POISONED
+    }
+
+    /// Send through the current channel (restart-safe: a restarted shard
+    /// swapped in a fresh sender under the write lock).
+    fn send(&self, cmd: Cmd) -> Result<(), mpsc::SendError<Cmd>> {
+        self.tx_lock.read(&self.tx).send(cmd)
     }
 }
 
@@ -197,9 +222,69 @@ pub struct Server {
     pf_counters: PrefetchCounters,
     /// tells the supervisor threads to exit (set by `shutdown`)
     stop: AtomicBool,
+    /// durable request journal + replay/dedup state (None = `--journal
+    /// off`: the submit hot path pays nothing)
+    journal: Option<JournalState>,
+    /// host-memory tiers salvaged from crashed shards, waiting for a
+    /// warm restart to adopt them (`kill_shard` -> `restart_shard`)
+    salvaged: Mutex<HashMap<usize, TierStore>>,
+    salvaged_lock: LockStat,
+    /// the shard senders' shared RwLock contention stat (one stat across
+    /// the pool: what matters is whether restarts ever stall submitters)
+    shard_tx_stat: Arc<LockStat>,
     tokenizer: HashTokenizer,
     max_ctx: usize,
     cfg: ServerConfig,
+}
+
+/// The bounded outcome-dedup window: terminal outcomes by idempotency
+/// key plus their insertion order (for FIFO aging).
+type OutcomeWindow = (HashMap<String, RequestOutcome>, VecDeque<String>);
+
+/// Everything the durable-journal feature hangs off the server: the
+/// segmented log itself, the bounded outcome window that deduplicates
+/// client retries and hands replayed outcomes back to their original
+/// waiters, and the replay/restart counters `GET /metrics` serves.
+struct JournalState {
+    journal: Journal,
+    /// terminal outcomes by idempotency key — a bounded FIFO window
+    /// (map + insertion order). Grows per finished request, so it must
+    /// be capped: old entries age out once `OUTCOME_WINDOW` newer keys
+    /// landed, which bounds how stale a dedup-able retry can be.
+    outcomes: Mutex<OutcomeWindow>,
+    outcomes_lock: LockStat,
+    /// server-generated idempotency keys: a per-process epoch (start
+    /// time, nanos) + a counter, so keys never collide across restarts
+    key_epoch: u128,
+    key_seq: AtomicU64,
+    /// dead-shard submits re-executed on a live peer
+    replayed_requests: AtomicU64,
+    /// replays with no live peer left (the waiter got `ShardLost`)
+    replay_failed: AtomicU64,
+    /// duplicate client retries answered from the outcome window
+    deduped_retries: AtomicU64,
+    /// completions that lost the `claim` race to a replayer (the
+    /// prevented double-journal — nonzero is fine, it means a request
+    /// finished on a shard at the instant the shard was declared dead)
+    replay_races: AtomicU64,
+    /// journal records found pending at startup and re-executed (the
+    /// previous process died holding them)
+    recovered_orphans: AtomicU64,
+    /// per-shard checkpoint files written (`checkpoint_tick`)
+    checkpoints_written: AtomicU64,
+}
+
+/// Terminal outcomes kept for retry dedup before aging out.
+const OUTCOME_WINDOW: usize = 4096;
+
+impl JournalState {
+    fn next_key(&self) -> String {
+        format!(
+            "srv-{:x}-{}",
+            self.key_epoch,
+            self.key_seq.fetch_add(1, Ordering::Relaxed)
+        )
+    }
 }
 
 /// Pool-level elastic-budget counters (the `rebalancer` object of
@@ -388,13 +473,23 @@ impl Drop for MigSlot<'_> {
     }
 }
 
-/// Apply one command on a shard thread; false = shutdown requested.
+/// How the shard loop proceeds after one command.
+enum Flow {
+    Continue,
+    /// orderly exit: drain every remaining waiter first
+    Shutdown,
+    /// fault-injected death: exit WITHOUT the drain, so waiters see the
+    /// closed channel a real crash would leave behind
+    Crash,
+}
+
+/// Apply one command on a shard thread.
 fn handle_cmd(
     engine: &mut Engine,
     waiters: &mut HashMap<u64, mpsc::Sender<RequestOutcome>>,
     next_id: &mut u64,
     cmd: Cmd,
-) -> bool {
+) -> Flow {
     match cmd {
         Cmd::Submit(mut req, reply) => {
             req.id = *next_id;
@@ -402,45 +497,53 @@ fn handle_cmd(
             req.arrival_us = engine.now_us();
             waiters.insert(req.id, reply);
             engine.submit(req);
-            true
+            Flow::Continue
         }
         Cmd::Probe { adapter, tokens, reply } => {
             let _ = reply.send(engine.migration_probe(adapter, &tokens));
-            true
+            Flow::Continue
         }
         Cmd::Export { adapter, tokens, reply } => {
             let _ = reply.send(engine.export_pages(adapter, &tokens));
-            true
+            Flow::Continue
         }
         Cmd::Import(payload) => {
             engine.import_pages(&payload);
-            true
+            Flow::Continue
         }
         Cmd::Stats(reply) => {
             let _ = reply.send(engine.stats_json());
-            true
+            Flow::Continue
         }
         Cmd::Pressure(reply) => {
             let _ = reply.send(engine.budget_pressure());
-            true
+            Flow::Continue
         }
         Cmd::Budget(bytes) => {
             engine.set_budget_bytes(bytes);
-            true
+            Flow::Continue
         }
         Cmd::TierCompact(reply) => {
             let _ = reply.send(engine.tier_compact());
-            true
+            Flow::Continue
         }
         Cmd::Prefetch { lease, adapter, tokens, reply } => {
             let _ = reply.send(engine.prefetch_pin(lease, adapter, &tokens));
-            true
+            Flow::Continue
         }
         Cmd::PrefetchRelease { lease, hit } => {
             engine.prefetch_release(lease, hit);
-            true
+            Flow::Continue
         }
-        Cmd::Shutdown => false,
+        Cmd::Checkpoint(reply) => {
+            let _ = reply.send(engine.checkpoint_json());
+            Flow::Continue
+        }
+        Cmd::Crash { salvage } => {
+            let _ = salvage.send(engine.take_tier());
+            Flow::Crash
+        }
+        Cmd::Shutdown => Flow::Shutdown,
     }
 }
 
@@ -483,8 +586,10 @@ fn run_shard(
         loop {
             match rx.try_recv() {
                 Ok(cmd) => {
-                    if !handle_cmd(&mut engine, &mut waiters, &mut next_id, cmd) {
-                        break 'run;
+                    match handle_cmd(&mut engine, &mut waiters, &mut next_id, cmd) {
+                        Flow::Continue => {}
+                        Flow::Shutdown => break 'run,
+                        Flow::Crash => return, // no drain: waiters see a dead shard
                     }
                 }
                 Err(mpsc::TryRecvError::Empty) => break,
@@ -499,8 +604,10 @@ fn run_shard(
                 // command can get
                 match rx.recv_timeout(idle_wait) {
                     Ok(cmd) => {
-                        if !handle_cmd(&mut engine, &mut waiters, &mut next_id, cmd) {
-                            break 'run;
+                        match handle_cmd(&mut engine, &mut waiters, &mut next_id, cmd) {
+                            Flow::Continue => {}
+                            Flow::Shutdown => break 'run,
+                            Flow::Crash => return,
                         }
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -560,6 +667,7 @@ impl Server {
         // the planner's authoritative starting point: whatever budgets
         // the engines were constructed with (normally `shard_slice`)
         let base_budgets: Vec<usize> = engines.iter().map(|e| e.budget_bytes()).collect();
+        let shard_tx_stat = Arc::new(LockStat::new("shard_tx"));
         let mut shards = Vec::with_capacity(engines.len());
         let mut handles = Vec::with_capacity(engines.len() + 1);
         for (i, engine) in engines.into_iter().enumerate() {
@@ -570,7 +678,11 @@ impl Server {
                 .name(format!("forkkv-shard-{i}"))
                 .spawn(move || run_shard(engine, rx, thread_depth, idle_wait))
                 .expect("spawn engine shard thread");
-            shards.push(ShardHandle { tx, depth });
+            shards.push(ShardHandle {
+                tx: RwLock::new(tx),
+                depth,
+                tx_lock: shard_tx_stat.clone(),
+            });
             handles.push(handle);
         }
         let router = Router::new(
@@ -593,6 +705,36 @@ impl Server {
         // allowance; otherwise the static split stands
         let rebalancer = (cfg.rebalance && shards.len() > 1 && cfg.lend_max_frac > 0.0)
             .then(|| Mutex::new(Rebalancer::new(base_budgets, cfg.lend_max_frac)));
+        // the durable request journal: opening replays existing segments
+        // (rebuilding the pending map from a previous process) and the
+        // per-process key epoch keeps server-generated idempotency keys
+        // unique across restarts
+        let journal = cfg.journal.then(|| {
+            let journal = Journal::open(
+                cfg.journal_dir.clone(),
+                cfg.journal_sync_ms,
+                cfg.journal_sync_bytes,
+                cfg.journal_segment_bytes,
+            )
+            .expect("open request journal");
+            let key_epoch = std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .map(|d| d.as_nanos())
+                .unwrap_or(0);
+            JournalState {
+                journal,
+                outcomes: Mutex::new((HashMap::new(), VecDeque::new())),
+                outcomes_lock: LockStat::new("outcomes"),
+                key_epoch,
+                key_seq: AtomicU64::new(1),
+                replayed_requests: AtomicU64::new(0),
+                replay_failed: AtomicU64::new(0),
+                deduped_retries: AtomicU64::new(0),
+                replay_races: AtomicU64::new(0),
+                recovered_orphans: AtomicU64::new(0),
+                checkpoints_written: AtomicU64::new(0),
+            }
+        });
         let srv = Arc::new(Server {
             shards,
             router,
@@ -606,10 +748,27 @@ impl Server {
             lease_seq: AtomicU64::new(1),
             pf_counters: PrefetchCounters::default(),
             stop: AtomicBool::new(false),
+            journal,
+            salvaged: Mutex::new(HashMap::new()),
+            salvaged_lock: LockStat::new("salvaged"),
+            shard_tx_stat,
             tokenizer: HashTokenizer::new(meta.vocab),
             max_ctx: meta.s_max,
             cfg,
         });
+        // orphan recovery: Submit records a previous process accepted but
+        // never outcomed are re-executed before this pool serves traffic
+        // — a restart must not silently drop accepted work
+        if let Some(js) = srv.journal.as_ref() {
+            let orphans = js.journal.claim_all();
+            if !orphans.is_empty() {
+                js.recovered_orphans
+                    .fetch_add(orphans.len() as u64, Ordering::Relaxed);
+                for rec in orphans {
+                    srv.replay_one(&rec);
+                }
+            }
+        }
         if srv.rebalancer.is_some() {
             let sup = srv.clone();
             handles.push(
@@ -644,13 +803,44 @@ impl Server {
                     .expect("spawn prefetch supervisor thread"),
             );
         }
+        // the group-commit pacer: without it a quiet journal could hold
+        // buffered records unsynced past `journal_sync_ms` (appends only
+        // check the thresholds when they happen)
+        if srv.journal.is_some() && srv.cfg.journal_sync_ms > 0 {
+            let sup = srv.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("forkkv-journal".into())
+                    .spawn(move || sup.journal_supervisor())
+                    .expect("spawn journal supervisor thread"),
+            );
+        }
+        // periodic warm-restart checkpoints (plus the final one taken by
+        // `shutdown`); a zero interval parks it (tests drive
+        // `checkpoint_tick` by hand)
+        if srv.journal.is_some() && srv.cfg.checkpoint_ms > 0 {
+            let sup = srv.clone();
+            handles.push(
+                std::thread::Builder::new()
+                    .name("forkkv-checkpoint".into())
+                    .spawn(move || sup.checkpoint_supervisor())
+                    .expect("spawn checkpoint supervisor thread"),
+            );
+        }
         (srv, handles)
     }
 
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Relaxed);
+        // a final checkpoint + group-commit flush: the next process
+        // warm-starts from here, and no accepted record stays buffered
+        // in memory across the exit
+        self.checkpoint_tick();
+        if let Some(js) = self.journal.as_ref() {
+            js.journal.sync();
+        }
         for shard in &self.shards {
-            let _ = shard.tx.send(Cmd::Shutdown);
+            let _ = shard.send(Cmd::Shutdown);
         }
     }
 
@@ -660,7 +850,7 @@ impl Server {
     /// as `rerouted` in `/metrics`); its in-flight requests still get
     /// terminal replies from the thread's final drain.
     pub fn shutdown_shard(&self, shard: usize) {
-        let _ = self.shards[shard].tx.send(Cmd::Shutdown);
+        let _ = self.shards[shard].send(Cmd::Shutdown);
         self.shards[shard].depth.store(usize::MAX, Ordering::Relaxed);
     }
 
@@ -709,7 +899,55 @@ impl Server {
         tag: u64,
         fan: usize,
     ) -> anyhow::Result<RequestOutcome> {
+        self.generate_outcome_keyed(prompt_tokens, adapter, max_new, tag, fan, None)
+    }
+
+    /// Like [`Server::generate_outcome_hinted`], with an optional
+    /// idempotency key (the durable journal's unit of exactly-once).
+    /// With the journal on, every submission is journaled under its key
+    /// (client-supplied, else server-generated) and a duplicate retry of
+    /// an already-terminal key is answered from the outcome window
+    /// without re-executing. With the journal off the key is ignored and
+    /// the submit path pays nothing.
+    pub fn generate_outcome_keyed(
+        &self,
+        prompt_tokens: Vec<u32>,
+        adapter: u32,
+        max_new: usize,
+        tag: u64,
+        fan: usize,
+        key: Option<String>,
+    ) -> anyhow::Result<RequestOutcome> {
         self.validate_request(&prompt_tokens, max_new)?;
+        let Some(js) = self.journal.as_ref() else {
+            return self.submit_and_wait(prompt_tokens, adapter, max_new, tag, fan, None);
+        };
+        let key = key.unwrap_or_else(|| js.next_key());
+        if let Some(prev) = self.lookup_outcome(&key) {
+            // duplicate client retry: the original terminal outcome
+            // stands, nothing is re-executed
+            js.deduped_retries.fetch_add(1, Ordering::Relaxed);
+            return Ok(prev);
+        }
+        self.submit_and_wait(prompt_tokens, adapter, max_new, tag, fan, Some(&key))
+    }
+
+    /// The shared submission core: route (with spill-migration), submit
+    /// to a live shard (re-routing around dead ones), and wait for the
+    /// terminal outcome. With `journal_key` set, the accepted submission
+    /// is journaled against the shard that owns it, the outcome is
+    /// journaled exactly once (the `claim` gate), and a shard dying
+    /// mid-flight triggers replay of everything it owed instead of an
+    /// error — the waiter then collects its key's replayed outcome.
+    fn submit_and_wait(
+        &self,
+        prompt_tokens: Vec<u32>,
+        adapter: u32,
+        max_new: usize,
+        tag: u64,
+        fan: usize,
+        journal_key: Option<&str>,
+    ) -> anyhow::Result<RequestOutcome> {
         let depths: Vec<usize> = self
             .shards
             .iter()
@@ -723,6 +961,8 @@ impl Server {
             // home shard's cached pages ahead of this Submit
             self.try_migrate(home, shard, adapter, &prompt_tokens);
         }
+        // journaled submissions keep the prompt for the Submit record
+        let journal_tokens = journal_key.map(|_| prompt_tokens.clone());
         let (mut reply_tx, reply_rx) = mpsc::channel();
         let mut req = Request {
             id: 0, // assigned by the shard thread
@@ -743,7 +983,7 @@ impl Server {
             // idlest in the pool to every racing placement
             if !handle.is_poisoned() {
                 handle.depth.fetch_add(1, Ordering::Relaxed);
-                match handle.tx.send(Cmd::Submit(req, reply_tx)) {
+                match handle.send(Cmd::Submit(req, reply_tx)) {
                     Ok(()) => break,
                     Err(mpsc::SendError(cmd)) => {
                         // a dead shard must not look idle to the router:
@@ -770,15 +1010,145 @@ impl Server {
                 ),
             }
         }
+        // the request is durably owned by `shard` now: journal the
+        // Submit so a crash of that shard can replay it on a peer
+        if let (Some(js), Some(key), Some(tokens)) =
+            (self.journal.as_ref(), journal_key, journal_tokens)
+        {
+            js.journal.append_submit(&SubmitRecord {
+                key: key.to_string(),
+                shard,
+                tag,
+                adapter,
+                max_new,
+                fan,
+                tokens,
+            });
+        }
         let handle = &self.shards[shard];
-        reply_rx.recv().map_err(|_| {
-            // the shard died holding our request: same poisoning. The
-            // request itself is not replayed — re-routing covers new
-            // submissions only (a half-executed request may have side
-            // effects in flight-tracking the caller must see fail).
-            handle.depth.store(usize::MAX, Ordering::Relaxed);
-            anyhow::anyhow!("engine shard {shard} gone")
-        })
+        match reply_rx.recv() {
+            Ok(out) => {
+                if let (Some(js), Some(key)) = (self.journal.as_ref(), journal_key) {
+                    // exactly-once gate: only the claimant journals the
+                    // Outcome. Losing the claim means a concurrent
+                    // replayer already owns this key (the shard finished
+                    // the request at the instant it was declared dead) —
+                    // the replayer's outcome record stands, ours doesn't.
+                    if js.journal.claim(key).is_some() {
+                        js.journal
+                            .append_outcome(key, matches!(out, RequestOutcome::Finished(_)));
+                        self.store_outcome(key, out.clone());
+                    } else {
+                        js.replay_races.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                Ok(out)
+            }
+            Err(_) => {
+                // the shard died holding our request: poison its depth so
+                // everything routes around it
+                handle.depth.store(usize::MAX, Ordering::Relaxed);
+                match (self.journal.as_ref(), journal_key) {
+                    (Some(_), Some(key)) => {
+                        // replay everything the dead shard still owed
+                        // (this request included — claim partitions the
+                        // records among concurrent waiters), then collect
+                        // our key's outcome, written by whichever thread
+                        // won its claim
+                        self.replay_shard(shard);
+                        self.await_outcome(key)
+                    }
+                    // no journal: the request is not replayable — the
+                    // caller must see its shard fail
+                    _ => anyhow::bail!("engine shard {shard} gone"),
+                }
+            }
+        }
+    }
+
+    /// Replay every journaled Submit the dead shard still owed onto live
+    /// peers. Exactly-once per key: `claim_shard` atomically removes the
+    /// records from the journal's pending set, so concurrent waiters
+    /// replaying the same dead shard partition the work between them and
+    /// no record runs twice.
+    fn replay_shard(&self, dead: usize) {
+        let Some(js) = self.journal.as_ref() else { return };
+        for rec in js.journal.claim_shard(dead) {
+            self.replay_one(&rec);
+        }
+    }
+
+    /// Re-execute one claimed Submit record on a live peer and journal
+    /// its single Outcome. A replay that reaches no live shard lands a
+    /// terminal `ShardLost` drop in the outcome window — the waiting
+    /// client gets a definite 503, never a hang.
+    fn replay_one(&self, rec: &SubmitRecord) {
+        let Some(js) = self.journal.as_ref() else { return };
+        let out = match self.submit_and_wait(
+            rec.tokens.clone(),
+            rec.adapter,
+            rec.max_new,
+            rec.tag,
+            rec.fan,
+            None,
+        ) {
+            Ok(out) => {
+                js.replayed_requests.fetch_add(1, Ordering::Relaxed);
+                out
+            }
+            Err(_) => {
+                js.replay_failed.fetch_add(1, Ordering::Relaxed);
+                RequestOutcome::Dropped(DroppedRequest {
+                    id: 0,
+                    tag: rec.tag,
+                    adapter: rec.adapter,
+                    prompt_len: rec.tokens.len(),
+                    arrival_us: 0,
+                    drop_us: 0,
+                    reason: DropReason::ShardLost,
+                })
+            }
+        };
+        js.journal
+            .append_outcome(&rec.key, matches!(out, RequestOutcome::Finished(_)));
+        self.store_outcome(&rec.key, out);
+    }
+
+    /// Wait (bounded) for `key`'s outcome to land in the dedup window —
+    /// written by whichever thread won the replay claim for it.
+    fn await_outcome(&self, key: &str) -> anyhow::Result<RequestOutcome> {
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            if let Some(out) = self.lookup_outcome(key) {
+                return Ok(out);
+            }
+            anyhow::ensure!(
+                Instant::now() < deadline,
+                "replayed request {key} produced no outcome within 30s"
+            );
+            std::thread::sleep(Duration::from_millis(2));
+        }
+    }
+
+    /// Record a terminal outcome in the bounded dedup window.
+    fn store_outcome(&self, key: &str, out: RequestOutcome) {
+        let Some(js) = self.journal.as_ref() else { return };
+        let mut guard = js.outcomes_lock.lock(&js.outcomes);
+        let (map, order) = &mut *guard;
+        if map.insert(key.to_string(), out).is_none() {
+            order.push_back(key.to_string());
+        }
+        while order.len() > OUTCOME_WINDOW {
+            if let Some(old) = order.pop_front() {
+                map.remove(&old);
+            }
+        }
+    }
+
+    fn lookup_outcome(&self, key: &str) -> Option<RequestOutcome> {
+        let js = self.journal.as_ref()?;
+        let guard = js.outcomes_lock.lock(&js.outcomes);
+        guard.0.get(key).cloned()
     }
 
     /// The least-loaded shard still believed alive (depth below the
@@ -830,7 +1200,7 @@ impl Server {
             tokens: window.to_vec(),
             reply: probe_tx,
         };
-        if self.shards[home].tx.send(probe).is_err() {
+        if self.shards[home].send(probe).is_err() {
             skipped();
             return;
         }
@@ -852,7 +1222,7 @@ impl Server {
             tokens: window.to_vec(),
             reply: tgt_tx,
         };
-        if self.shards[target].tx.send(target_probe).is_err() {
+        if self.shards[target].send(target_probe).is_err() {
             skipped();
             return;
         }
@@ -870,7 +1240,7 @@ impl Server {
             tokens: window.to_vec(),
             reply: exp_tx,
         };
-        if self.shards[home].tx.send(export).is_err() {
+        if self.shards[home].send(export).is_err() {
             skipped();
             return;
         }
@@ -881,7 +1251,6 @@ impl Server {
         // the home shard may have evicted between probe and export
         if payload.pages() == 0
             || self.shards[target]
-                .tx
                 .send(Cmd::Import(Box::new(payload)))
                 .is_err()
         {
@@ -935,7 +1304,7 @@ impl Server {
         let mut pending = Vec::with_capacity(self.shards.len());
         for shard in &self.shards {
             let (tx, rx) = mpsc::channel();
-            pending.push(shard.tx.send(Cmd::Stats(tx)).ok().map(|()| rx));
+            pending.push(shard.send(Cmd::Stats(tx)).ok().map(|()| rx));
         }
         Ok(pending
             .into_iter()
@@ -1013,7 +1382,7 @@ impl Server {
                 continue;
             }
             let (tx, rx) = mpsc::channel();
-            if shard.tx.send(Cmd::Pressure(tx)).is_err() {
+            if shard.send(Cmd::Pressure(tx)).is_err() {
                 obs.push(None);
                 continue;
             }
@@ -1023,7 +1392,7 @@ impl Server {
         }
         let (moves, moved) = reb.lock().unwrap_or_else(|e| e.into_inner()).tick(&obs);
         for &(i, bytes) in &moves {
-            if self.shards[i].tx.send(Cmd::Budget(bytes)).is_err() {
+            if self.shards[i].send(Cmd::Budget(bytes)).is_err() {
                 // a closed channel means the shard died between the
                 // pressure poll and the move. Poison its depth so the
                 // router and every later tick see it dead — its budget
@@ -1103,7 +1472,7 @@ impl Server {
                 continue;
             }
             let (tx, rx) = mpsc::channel();
-            pending.push(shard.tx.send(Cmd::TierCompact(tx)).ok().map(|()| rx));
+            pending.push(shard.send(Cmd::TierCompact(tx)).ok().map(|()| rx));
         }
         let reclaimed: usize = pending
             .into_iter()
@@ -1140,6 +1509,214 @@ impl Server {
                 ),
             ),
         ])
+    }
+
+    // -----------------------------------------------------------------
+    // durability: shard crash, journal replay, warm restart
+    // -----------------------------------------------------------------
+
+    /// Fault injection + maintenance: crash one shard as if its process
+    /// died mid-flight. The engine's host-memory tier is salvaged (host
+    /// RAM survives an engine crash by construction; device pool state
+    /// does not) and parked for a later [`Server::restart_shard`];
+    /// everything else — device pages, radix indices, in-flight requests
+    /// — is lost. In-flight waiters observe their reply channels close
+    /// and run the journal replay path. Returns whether the shard was
+    /// alive to kill.
+    pub fn kill_shard(&self, shard: usize) -> bool {
+        let handle = &self.shards[shard];
+        let (tx, rx) = mpsc::channel();
+        let alive = handle.send(Cmd::Crash { salvage: tx }).is_ok();
+        if alive {
+            if let Ok(Some(tier)) = rx.recv_timeout(Duration::from_secs(5)) {
+                let mut guard = self.salvaged_lock.lock(&self.salvaged);
+                guard.insert(shard, tier);
+            }
+        }
+        handle.depth.store(usize::MAX, Ordering::Relaxed);
+        alive
+    }
+
+    /// Warm-restart a dead shard around a fresh engine: re-adopt its
+    /// salvaged host tier, replay its latest checkpoint (radix paths
+    /// re-linked against the tier-resident pages, counted as
+    /// `restored_pages`), install a fresh command channel under the
+    /// sender lock, and un-poison its depth so the router sends traffic
+    /// again. Returns the new shard thread's join handle.
+    pub fn restart_shard(
+        &self,
+        shard: usize,
+        mut engine: Engine,
+    ) -> anyhow::Result<std::thread::JoinHandle<()>> {
+        anyhow::ensure!(shard < self.shards.len(), "no such shard {shard}");
+        anyhow::ensure!(
+            self.shards[shard].is_poisoned(),
+            "shard {shard} is still live; kill or drain it first"
+        );
+        // host tier first: the checkpoint restore pulls pages out of it
+        {
+            let mut guard = self.salvaged_lock.lock(&self.salvaged);
+            if let Some(tier) = guard.remove(&shard) {
+                engine.adopt_tier(tier);
+            }
+        }
+        if let Some(js) = self.journal.as_ref() {
+            let path = js.journal.dir().join(format!("ckpt-shard-{shard}.json"));
+            if let Ok(text) = std::fs::read_to_string(&path) {
+                if let Ok(ckpt) = json::parse(&text) {
+                    engine.restore_checkpoint(&ckpt);
+                }
+            }
+        }
+        let (tx, rx) = mpsc::channel::<Cmd>();
+        let handle = &self.shards[shard];
+        let depth = handle.depth.clone();
+        let idle_wait = Duration::from_millis(self.cfg.idle_wait_ms.max(1));
+        let thread = std::thread::Builder::new()
+            .name(format!("forkkv-shard-{shard}"))
+            .spawn(move || run_shard(engine, rx, depth, idle_wait))
+            .expect("spawn engine shard thread");
+        *handle.tx_lock.write(&handle.tx) = tx;
+        // un-poison only after the fresh sender is installed: a racing
+        // submit must never see depth 0 with the dead channel in place
+        handle.depth.store(0, Ordering::Relaxed);
+        Ok(thread)
+    }
+
+    /// One checkpoint step: fan `Cmd::Checkpoint` to every live shard
+    /// (all sends go out before the first receive), then atomically
+    /// replace each shard's `ckpt-shard-{i}.json` in the journal
+    /// directory (write a temp file, then rename — a crash mid-write
+    /// leaves the previous checkpoint intact). Public so tests can drive
+    /// checkpointing deterministically; returns the shards checkpointed.
+    pub fn checkpoint_tick(&self) -> usize {
+        let Some(js) = self.journal.as_ref() else { return 0 };
+        let mut pending = Vec::with_capacity(self.shards.len());
+        for shard in &self.shards {
+            if shard.is_poisoned() {
+                pending.push(None);
+                continue;
+            }
+            let (tx, rx) = mpsc::channel();
+            pending.push(shard.send(Cmd::Checkpoint(tx)).ok().map(|()| rx));
+        }
+        let dir = js.journal.dir().to_path_buf();
+        let mut written = 0usize;
+        for (i, rx) in pending.into_iter().enumerate() {
+            let Some(rx) = rx else { continue };
+            let Ok(ckpt) = rx.recv_timeout(Duration::from_secs(5)) else {
+                continue;
+            };
+            let tmp = dir.join(format!("ckpt-shard-{i}.tmp"));
+            let dst = dir.join(format!("ckpt-shard-{i}.json"));
+            if std::fs::write(&tmp, ckpt.to_string()).is_ok()
+                && std::fs::rename(&tmp, &dst).is_ok()
+            {
+                written += 1;
+            }
+        }
+        if written > 0 {
+            js.checkpoints_written
+                .fetch_add(written as u64, Ordering::Relaxed);
+        }
+        written
+    }
+
+    /// The journal group-commit pacer: flush + fsync buffered records on
+    /// the `journal_sync_ms` cadence even when no append crosses the
+    /// thresholds. Runs on its own named thread (`forkkv-journal`),
+    /// spawned by `start_sharded` when the journal is armed.
+    fn journal_supervisor(&self) {
+        let step = Duration::from_millis(self.cfg.journal_sync_ms.clamp(1, 10));
+        while !self.stop.load(Ordering::Relaxed) {
+            std::thread::sleep(step);
+            if let Some(js) = self.journal.as_ref() {
+                js.journal.maybe_sync();
+            }
+        }
+    }
+
+    /// The warm-restart checkpoint loop: every `cfg.checkpoint_ms`
+    /// snapshot each live shard's radix/tier metadata, until `shutdown`
+    /// raises the stop flag (which also takes one final checkpoint).
+    /// Runs on its own named thread (`forkkv-checkpoint`), spawned by
+    /// `start_sharded` when the journal is armed.
+    fn checkpoint_supervisor(&self) {
+        let interval = Duration::from_millis(self.cfg.checkpoint_ms.max(1));
+        // sleep in short steps so shutdown is never blocked behind a
+        // long interval
+        let step = interval.min(Duration::from_millis(10));
+        let mut since = Duration::ZERO;
+        while !self.stop.load(Ordering::Relaxed) {
+            std::thread::sleep(step);
+            since += step;
+            if since >= interval {
+                since = Duration::ZERO;
+                self.checkpoint_tick();
+            }
+        }
+    }
+
+    /// Durability knobs plus journal/replay/restart counters (the
+    /// `journal` object of `GET /metrics`).
+    pub fn journal_stats(&self) -> Json {
+        let Some(js) = self.journal.as_ref() else {
+            return Json::obj(vec![("enabled", Json::Bool(false))]);
+        };
+        let s = js.journal.stats();
+        Json::obj(vec![
+            ("enabled", Json::Bool(true)),
+            ("submits", Json::num(s.submits as f64)),
+            ("outcomes", Json::num(s.outcomes as f64)),
+            ("pending", Json::num(js.journal.pending_len() as f64)),
+            ("group_commits", Json::num(s.group_commits as f64)),
+            ("synced_bytes", Json::num(s.synced_bytes as f64)),
+            ("segments_created", Json::num(s.segments_created as f64)),
+            ("segments_gced", Json::num(s.segments_gced as f64)),
+            ("truncated_bytes", Json::num(s.truncated_bytes as f64)),
+            ("corrupt_lines", Json::num(s.corrupt_lines as f64)),
+            (
+                "duplicate_outcomes",
+                Json::num(s.duplicate_outcomes as f64),
+            ),
+            (
+                "replayed_requests",
+                Json::num(js.replayed_requests.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "replay_failed",
+                Json::num(js.replay_failed.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "deduped_retries",
+                Json::num(js.deduped_retries.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "replay_races",
+                Json::num(js.replay_races.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "recovered_orphans",
+                Json::num(js.recovered_orphans.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "checkpoints_written",
+                Json::num(js.checkpoints_written.load(Ordering::Relaxed) as f64),
+            ),
+        ])
+    }
+
+    /// Sampled contention counters for the server's hot locks (the
+    /// `locks` object of `GET /metrics`): per lock, total acquisitions,
+    /// how many contended (failed the try-lock fast path), and the
+    /// microseconds spent waiting on those.
+    pub fn lock_stats(&self) -> Json {
+        let mut stats: Vec<&LockStat> = vec![&*self.shard_tx_stat, &self.salvaged_lock];
+        if let Some(js) = self.journal.as_ref() {
+            stats.push(js.journal.lock_stat());
+            stats.push(&js.outcomes_lock);
+        }
+        locks_json(&stats)
     }
 
     // -----------------------------------------------------------------
@@ -1318,9 +1895,7 @@ impl Server {
 
     /// Release one issued lease on its shard and account the outcome.
     fn release_lease(&self, l: &IssuedLease, hit: bool) {
-        let _ = self.shards[l.shard]
-            .tx
-            .send(Cmd::PrefetchRelease { lease: l.id, hit });
+        let _ = self.shards[l.shard].send(Cmd::PrefetchRelease { lease: l.id, hit });
         let ctr = if hit {
             &self.pf_counters.leases_hit
         } else {
@@ -1417,7 +1992,6 @@ impl Server {
         }
         let (tx, rx) = mpsc::channel();
         let covered = self.shards[plan.target]
-            .tx
             .send(Cmd::Prefetch {
                 lease: plan.lease,
                 adapter: plan.adapter,
@@ -1558,6 +2132,8 @@ impl Server {
             ("rebalancer", self.rebalancer_stats()),
             ("tier", self.tier_stats()),
             ("prefetch", self.prefetch_stats()),
+            ("journal", self.journal_stats()),
+            ("locks", self.lock_stats()),
             ("per_shard", Json::Arr(per_shard)),
         ]))
     }
@@ -1698,6 +2274,7 @@ impl Server {
 
         let (status, payload) = match (method.as_str(), path.as_str()) {
             ("POST", "/generate") => self.api_generate(&body),
+            ("POST", "/admin/kill_shard") => self.api_kill_shard(&body),
             ("GET", "/stats") => match self.stats() {
                 Ok(j) => ("200 OK", j),
                 Err(e) => (
@@ -1789,7 +2366,10 @@ impl Server {
         let lease = step
             .as_deref()
             .and_then(|s| self.step_arrival(workflow, s, &tokens));
-        let outcome = self.generate_outcome_hinted(tokens, adapter, max_new, tag, fan);
+        // client-supplied idempotency key: with the journal on, a retry
+        // of an already-terminal key returns the original outcome
+        let key = j.get("key").and_then(Json::as_str).map(str::to_string);
+        let outcome = self.generate_outcome_keyed(tokens, adapter, max_new, tag, fan, key);
         if let Some(l) = &lease {
             // the warmed step arrived: a prefetch hit whatever its outcome
             self.release_lease(l, true);
@@ -1824,6 +2404,50 @@ impl Server {
             ),
             Err(e) => err("500 Internal Server Error", format!("{e:#}")),
         }
+    }
+
+    /// Fault injection over HTTP: `POST /admin/kill_shard` with
+    /// `{"shard": i, "min_depth": d, "wait_ms": w}` crashes shard `i` as
+    /// if its process died mid-flight (see [`Server::kill_shard`]). With
+    /// `min_depth > 0` the kill first waits (up to `wait_ms`) for the
+    /// victim to hold at least that many in-flight requests, so a bench
+    /// can guarantee the journal replay path actually runs.
+    fn api_kill_shard(&self, body: &str) -> (&'static str, Json) {
+        fn err(status: &'static str, msg: String) -> (&'static str, Json) {
+            (status, Json::obj(vec![("error", Json::str(msg))]))
+        }
+        let j = match json::parse(body) {
+            Ok(j) => j,
+            Err(e) => return err("400 Bad Request", format!("bad json: {e}")),
+        };
+        let Some(shard) = j.get("shard").and_then(Json::as_usize) else {
+            return err("400 Bad Request", "missing \"shard\"".to_string());
+        };
+        if shard >= self.shards.len() {
+            return err("400 Bad Request", format!("no such shard {shard}"));
+        }
+        let min_depth = j.get("min_depth").and_then(Json::as_usize).unwrap_or(0);
+        let wait_ms = j.get("wait_ms").and_then(Json::as_usize).unwrap_or(0) as u64;
+        let deadline = Instant::now() + Duration::from_millis(wait_ms);
+        while self.shards[shard].depth.load(Ordering::Relaxed) < min_depth
+            && Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let depth_at_kill = if self.shards[shard].is_poisoned() {
+            0
+        } else {
+            self.shards[shard].depth.load(Ordering::Relaxed)
+        };
+        let killed = self.kill_shard(shard);
+        (
+            "200 OK",
+            Json::obj(vec![
+                ("killed", Json::Bool(killed)),
+                ("shard", Json::num(shard as f64)),
+                ("depth_at_kill", Json::num(depth_at_kill as f64)),
+            ]),
+        )
     }
 }
 
@@ -2555,5 +3179,210 @@ mod tests {
         server_thread.join().unwrap();
         srv.shutdown();
         handle.join().unwrap();
+    }
+
+    /// Fresh per-test journal directory (removed by the test on success;
+    /// a leaked dir from a failed run is rebuilt by the next).
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("forkkv-srv-journal-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    /// Small-budget tiered engine: a second session's working set forces
+    /// the first's pages to demote into the host tier.
+    fn tiered_engine() -> Engine {
+        let cfg = EngineConfig {
+            policy: CachePolicy::Disaggregated,
+            cache: CacheConfig {
+                page_tokens: 16,
+                budget_bytes: 2 << 20,
+                capacity_bytes: 0,
+            },
+            tier: TierConfig { tier_bytes: 64 << 20, cost: None },
+            ..EngineConfig::default()
+        };
+        let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8]).unwrap();
+        Engine::new(cfg, Box::new(sim)).unwrap()
+    }
+
+    #[test]
+    fn duplicate_retry_with_same_key_returns_original_outcome() {
+        let dir = tmp_dir("dedup");
+        let scfg = ServerConfig {
+            journal: true,
+            journal_dir: dir.to_string_lossy().to_string(),
+            journal_sync_ms: 0, // park the pacer; shutdown syncs
+            checkpoint_ms: 0,
+            ..ServerConfig::default()
+        };
+        let (srv, handles) = Server::start_sharded(vec![sim_engine(32 << 20, 0)], scfg);
+        let tokens: Vec<u32> = (10..90).collect();
+        let first = srv
+            .generate_outcome_keyed(tokens.clone(), 1, 8, 0, 0, Some("cli-req-1".into()))
+            .unwrap();
+        let RequestOutcome::Finished(fin) = &first else {
+            panic!("dropped: {first:?}")
+        };
+        let retry = srv
+            .generate_outcome_keyed(tokens, 1, 8, 0, 0, Some("cli-req-1".into()))
+            .unwrap();
+        let RequestOutcome::Finished(fin2) = &retry else {
+            panic!("dropped: {retry:?}")
+        };
+        assert_eq!(fin.generated, fin2.generated, "retry changed the outcome");
+        let j = srv.journal_stats();
+        assert_eq!(j.at(&["enabled"]).as_bool(), Some(true));
+        assert_eq!(j.at(&["submits"]).as_usize(), Some(1), "{j}");
+        assert_eq!(j.at(&["outcomes"]).as_usize(), Some(1), "{j}");
+        assert_eq!(j.at(&["deduped_retries"]).as_usize(), Some(1), "{j}");
+        assert_eq!(j.at(&["duplicate_outcomes"]).as_usize(), Some(0), "{j}");
+        // the engine executed the request exactly once
+        let agg = srv.stats().unwrap();
+        assert_eq!(agg.at(&["completed"]).as_usize(), Some(1), "{agg}");
+        srv.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn killed_shard_requests_are_replayed_exactly_once_on_a_peer() {
+        let dir = tmp_dir("replay");
+        let scfg = ServerConfig {
+            route_policy: RoutePolicy::RoundRobin,
+            journal: true,
+            journal_dir: dir.to_string_lossy().to_string(),
+            checkpoint_ms: 0,
+            ..ServerConfig::default()
+        };
+        // wall-paced decode: each request holds its shard for tens of
+        // milliseconds, so the kill below lands mid-flight
+        let engines: Vec<Engine> = (0..2).map(|_| sim_engine(32 << 20, 500)).collect();
+        let (srv, handles) = Server::start_sharded(engines, scfg);
+        let mut clients = Vec::new();
+        for c in 0..4u32 {
+            let srv = srv.clone();
+            clients.push(std::thread::spawn(move || {
+                let tokens: Vec<u32> = (100 + c * 40..160 + c * 40).collect();
+                srv.generate_outcome_keyed(tokens, c, 48, 0, 0, Some(format!("cli-{c}")))
+            }));
+        }
+        // catch a shard holding at least one in-flight request, crash it
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let victim = loop {
+            if let Some(v) = (0..2).find(|&i| {
+                !srv.shards[i].is_poisoned()
+                    && srv.shards[i].depth.load(Ordering::Relaxed) > 0
+            }) {
+                break v;
+            }
+            assert!(Instant::now() < deadline, "no shard ever held a request");
+            std::thread::yield_now();
+        };
+        assert!(srv.kill_shard(victim));
+        // every client gets a terminal outcome — no hangs, no errors:
+        // the dead shard's journaled submits were replayed on the peer
+        for c in clients {
+            c.join().unwrap().unwrap();
+        }
+        let j = srv.journal_stats();
+        assert!(j.at(&["replayed_requests"]).as_usize().unwrap() > 0, "{j}");
+        assert_eq!(j.at(&["pending"]).as_usize(), Some(0), "{j}");
+        assert_eq!(
+            j.at(&["submits"]).as_usize().unwrap(),
+            j.at(&["outcomes"]).as_usize().unwrap(),
+            "every accepted submit must reach exactly one outcome: {j}"
+        );
+        assert_eq!(j.at(&["duplicate_outcomes"]).as_usize(), Some(0), "{j}");
+        srv.shutdown();
+        // the crashed shard's thread already exited; joins must not hang
+        for h in handles {
+            h.join().unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn warm_restart_restores_checkpointed_pages_and_serves_hits() {
+        let dir = tmp_dir("warm");
+        let scfg = ServerConfig {
+            tier: true,
+            tier_compact_ms: 3_600_000,
+            journal: true,
+            journal_dir: dir.to_string_lossy().to_string(),
+            checkpoint_ms: 0, // the test drives checkpointing by hand
+            ..ServerConfig::default()
+        };
+        let (srv, handles) = Server::start_sharded(vec![tiered_engine()], scfg);
+        let t_a: Vec<u32> = (1000..1300).collect();
+        let t_b: Vec<u32> = (500..800).collect();
+        srv.generate(t_a.clone(), 0, 8).unwrap();
+        // B's working set forces A's pages to demote into the host tier
+        srv.generate(t_b, 1, 8).unwrap();
+        assert_eq!(srv.checkpoint_tick(), 1);
+        assert!(dir.join("ckpt-shard-0.json").is_file());
+
+        assert!(srv.kill_shard(0));
+        let thread = srv.restart_shard(0, tiered_engine()).unwrap();
+        let m = srv.metrics_json().unwrap();
+        assert!(
+            m.at(&["aggregate", "restored_pages"]).as_usize().unwrap() > 0,
+            "warm restart restored nothing: {m}"
+        );
+        // session A returns to the restarted shard: served from the
+        // salvaged tier + restored index instead of recomputed — a cold
+        // restart starts from zero hits
+        let fin = srv.generate(t_a, 0, 8).unwrap();
+        assert!(fin.hit_full > 0, "warm-restarted shard served no cache hits");
+        let j = srv.journal_stats();
+        assert!(j.at(&["checkpoints_written"]).as_usize().unwrap() >= 1, "{j}");
+        srv.shutdown();
+        thread.join().unwrap();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn kill_shard_endpoint_crashes_one_shard_and_survivors_serve() {
+        let dir = tmp_dir("killhttp");
+        let scfg = ServerConfig {
+            route_policy: RoutePolicy::RoundRobin,
+            journal: true,
+            journal_dir: dir.to_string_lossy().to_string(),
+            checkpoint_ms: 0,
+            ..ServerConfig::default()
+        };
+        let engines: Vec<Engine> = (0..2).map(|_| sim_engine(32 << 20, 0)).collect();
+        let (srv, handles) = Server::start_sharded(engines, scfg);
+        let (addr, server_thread) = spawn_server(&srv, 4);
+
+        let (status, resp) =
+            http_post(&addr, "/admin/kill_shard", r#"{"shard": 9}"#).unwrap();
+        assert_eq!(status, 400, "{resp}");
+        let (status, resp) =
+            http_post(&addr, "/admin/kill_shard", r#"{"shard": 1}"#).unwrap();
+        assert_eq!(status, 200, "{resp}");
+        let j = json::parse(&resp).unwrap();
+        assert_eq!(j.at(&["killed"]).as_bool(), Some(true), "{resp}");
+
+        // the survivor keeps serving; placements landing on the corpse
+        // are re-routed instead of erroring
+        for i in 0..2 {
+            let body = format!(r#"{{"prompt": "hello survivor {i}", "max_new": 4}}"#);
+            let (status, resp) = http_post(&addr, "/generate", &body).unwrap();
+            assert_eq!(status, 200, "{resp}");
+        }
+        server_thread.join().unwrap();
+        srv.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -76,6 +76,11 @@ impl PageKey {
 #[derive(Debug)]
 struct Record {
     key: PageKey,
+    /// the full token path the key fingerprints, recorded at demote time
+    /// (fingerprints are one-way, so without this a checkpoint could
+    /// never name the tier's contents). Empty when the caller used the
+    /// path-less [`TierStore::insert`].
+    path: Vec<u32>,
     data: Vec<f32>,
     dead: bool,
 }
@@ -185,6 +190,21 @@ impl TierStore {
         self.index.contains_key(key)
     }
 
+    /// Every live record's identity with a recorded token path:
+    /// `(component, namespace, full token path)` in no particular order.
+    /// Records inserted without a path (the path-less
+    /// [`TierStore::insert`]) are skipped — they are promotable by probe
+    /// but not checkpointable. This is the restart scan: a shard
+    /// checkpoint unions these paths with the radix tree's own.
+    pub fn live_paths(&self) -> Vec<(Component, u32, &[u32])> {
+        self.index
+            .values()
+            .map(|&(seg, rec)| &self.segments[seg as usize].records[rec as usize])
+            .filter(|r| !r.path.is_empty())
+            .map(|r| (r.key.component, r.key.ns, r.path.as_slice()))
+            .collect()
+    }
+
     /// Mark the live record for `key` dead (promotion took its bytes, or
     /// the caller invalidated it). The bytes stay retained until the next
     /// [`TierStore::compact`]. Returns whether a record was removed.
@@ -204,6 +224,18 @@ impl TierStore {
     /// the oldest live records; a record that still cannot fit is refused
     /// (`false`) — retained bytes never exceed the budget.
     pub fn insert(&mut self, key: PageKey, data: &[f32]) -> bool {
+        self.insert_inner(key, Vec::new(), data)
+    }
+
+    /// [`TierStore::insert`] plus the page's full token path, so the
+    /// record shows up in [`TierStore::live_paths`] — the variant the
+    /// engine's demotion sink uses, making the tier's contents
+    /// checkpointable (restart metadata, not just promote-by-probe).
+    pub fn insert_path(&mut self, key: PageKey, token_path: &[u32], data: &[f32]) -> bool {
+        self.insert_inner(key, token_path.to_vec(), data)
+    }
+
+    fn insert_inner(&mut self, key: PageKey, path: Vec<u32>, data: &[f32]) -> bool {
         let bytes = data.len() * 4;
         if bytes == 0 || bytes > self.budget_bytes {
             self.stats.rejected_pages += 1;
@@ -231,7 +263,7 @@ impl TierStore {
         let seg = self.segments.len() - 1;
         let s = &mut self.segments[seg];
         s.live_bytes += bytes;
-        s.records.push(Record { key, data: data.to_vec(), dead: false });
+        s.records.push(Record { key, path, data: data.to_vec(), dead: false });
         self.index.insert(key, (seg as u32, (s.records.len() - 1) as u32));
         self.live_bytes += bytes;
         self.total_bytes += bytes;
@@ -444,6 +476,24 @@ mod tests {
         assert_eq!(t.compact(), before);
         assert_eq!(t.bytes(), 0);
         assert_eq!(t.stats().reclaimed_bytes, before as u64);
+        t.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn recorded_paths_survive_replacement_and_compaction() {
+        let mut t = TierStore::new(1 << 20);
+        assert!(t.insert_path(key(0, &[1, 2]), &[1, 2], &page(1.0, 16)));
+        assert!(t.insert_path(key(0, &[1, 2, 3, 4]), &[1, 2, 3, 4], &page(2.0, 16)));
+        assert!(t.insert(key(9, &[8]), &page(3.0, 16)), "path-less insert still ok");
+        let mut paths: Vec<Vec<u32>> =
+            t.live_paths().iter().map(|&(_, _, p)| p.to_vec()).collect();
+        paths.sort();
+        assert_eq!(paths, vec![vec![1, 2], vec![1, 2, 3, 4]], "path-less skipped");
+        assert!(t.remove(&key(0, &[1, 2])));
+        assert!(t.compact() > 0);
+        let paths: Vec<Vec<u32>> =
+            t.live_paths().iter().map(|&(_, _, p)| p.to_vec()).collect();
+        assert_eq!(paths, vec![vec![1, 2, 3, 4]], "paths track index through compaction");
         t.check_invariants().unwrap();
     }
 

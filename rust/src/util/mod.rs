@@ -4,6 +4,7 @@
 //! stack actually needs.
 
 pub mod json;
+pub mod lockstats;
 pub mod prop;
 pub mod rng;
 pub mod stats;

@@ -733,6 +733,40 @@ pub fn run_multi_workflow_load(
 }
 
 // ---------------------------------------------------------------------------
+// fault injection (the durability measurement harness)
+// ---------------------------------------------------------------------------
+
+/// Spawn the bench-http fault injector: a thread that sleeps `after_ms`,
+/// then POSTs `/admin/kill_shard` asking the server to crash `shard` —
+/// waiting (up to `wait_ms`) until the victim holds at least `min_depth`
+/// in-flight requests, so the kill reliably strands work for the journal
+/// to replay. Returns the endpoint's response JSON (`None` if the post
+/// failed or the server refused the kill), which bench-http folds into
+/// its report as the `fault` object.
+pub fn spawn_http_shard_killer(
+    addr: &str,
+    shard: usize,
+    after_ms: u64,
+    min_depth: usize,
+    wait_ms: u64,
+) -> std::thread::JoinHandle<Option<Json>> {
+    let addr = addr.to_string();
+    std::thread::spawn(move || {
+        std::thread::sleep(std::time::Duration::from_millis(after_ms));
+        let body = Json::obj(vec![
+            ("shard", Json::num(shard as f64)),
+            ("min_depth", Json::num(min_depth as f64)),
+            ("wait_ms", Json::num(wait_ms as f64)),
+        ])
+        .to_string();
+        match crate::server::http_post(&addr, "/admin/kill_shard", &body) {
+            Ok((200, resp)) => crate::util::json::parse(&resp).ok(),
+            Ok(_) | Err(_) => None,
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
 // skewed hot-workflow HTTP load (the migration measurement harness)
 // ---------------------------------------------------------------------------
 
