@@ -165,6 +165,23 @@ pub struct ServerConfig {
     /// assumed shard-to-shard copy bandwidth (bytes/s) for the
     /// migrate-vs-recompute decision; overridden by calibration
     pub migration_bandwidth_bytes_per_s: f64,
+    /// one-to-many hot-context replication (`--replicate on|off`): when a
+    /// read-mostly prefix keeps spill-missing on the same shard, copy its
+    /// shared base proactively and let the router prefer replica holders
+    /// over cold spill targets (see the server module's replication
+    /// section). Off by default — the migration/rebalance A/B gates
+    /// measure the un-replicated pool; armed explicitly per run.
+    pub replicate: bool,
+    /// spill-misses a prefix must take on the *same* shard before that
+    /// shard earns a replica (`--replicate-miss`); the first miss is
+    /// served by plain point-to-point migration
+    pub replicate_miss_threshold: u32,
+    /// sliding-window length (events per prefix) for the read-mostly
+    /// detector (`--replicate-window`)
+    pub replicate_window: usize,
+    /// fork events required inside the window before a prefix can be
+    /// classified read-mostly (`--replicate-min-forks`)
+    pub replicate_min_forks: usize,
     /// fully calibrated cost model for the migration decision (the CLI
     /// loads `calibration.json` into this); None = derive the FLOP terms
     /// from the model geometry and use `migration_bandwidth_bytes_per_s`
@@ -248,6 +265,10 @@ impl Default for ServerConfig {
             migration_max_inflight: 4,
             migration_bandwidth_bytes_per_s: crate::exec::DEFAULT_MIGRATION_BANDWIDTH,
             migration_cost: None,
+            replicate: false,
+            replicate_miss_threshold: 2,
+            replicate_window: 32,
+            replicate_min_forks: 4,
             rebalance: true,
             rebalance_interval_ms: 50,
             lend_max_frac: 0.5,
@@ -314,6 +335,21 @@ impl ServerConfig {
                 "server.migration_bandwidth_bytes_per_s must be > 0"
             );
             cfg.migration_bandwidth_bytes_per_s = v;
+        }
+        if let Some(v) = j.get("replicate").and_then(Json::as_bool) {
+            cfg.replicate = v;
+        }
+        if let Some(v) = j.get("replicate_miss_threshold").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "server.replicate_miss_threshold must be > 0");
+            cfg.replicate_miss_threshold = v as u32;
+        }
+        if let Some(v) = j.get("replicate_window").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "server.replicate_window must be > 0");
+            cfg.replicate_window = v;
+        }
+        if let Some(v) = j.get("replicate_min_forks").and_then(Json::as_usize) {
+            anyhow::ensure!(v > 0, "server.replicate_min_forks must be > 0");
+            cfg.replicate_min_forks = v;
         }
         if let Some(v) = j.get("rebalance").and_then(Json::as_bool) {
             cfg.rebalance = v;
@@ -535,6 +571,8 @@ mod tests {
                 "route":"round_robin","imbalance_factor":3.5,
                 "migrate":false,"migration_max_inflight":2,
                 "migration_bandwidth_bytes_per_s":1e9,
+                "replicate":true,"replicate_miss_threshold":3,
+                "replicate_window":16,"replicate_min_forks":2,
                 "rebalance":false,"rebalance_interval_ms":20,
                 "lend_max_frac":0.25,"tier":true,"tier_compact_ms":40,
                 "prefetch":false,"prefetch_horizon":2,
@@ -553,6 +591,10 @@ mod tests {
         assert!(!cfg.migrate);
         assert_eq!(cfg.migration_max_inflight, 2);
         assert!((cfg.migration_bandwidth_bytes_per_s - 1e9).abs() < 1.0);
+        assert!(cfg.replicate);
+        assert_eq!(cfg.replicate_miss_threshold, 3);
+        assert_eq!(cfg.replicate_window, 16);
+        assert_eq!(cfg.replicate_min_forks, 2);
         assert!(!cfg.rebalance);
         assert_eq!(cfg.rebalance_interval_ms, 20);
         assert!((cfg.lend_max_frac - 0.25).abs() < 1e-9);
@@ -579,6 +621,20 @@ mod tests {
             &json::parse(r#"{"lend_max_frac":1.5}"#).unwrap()
         )
         .is_err());
+        // degenerate replication knobs are rejected (use "replicate":
+        // false to disable, not a zero threshold/window)
+        assert!(ServerConfig::from_json(
+            &json::parse(r#"{"replicate_miss_threshold":0}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServerConfig::from_json(
+            &json::parse(r#"{"replicate_window":0}"#).unwrap()
+        )
+        .is_err());
+        assert!(ServerConfig::from_json(
+            &json::parse(r#"{"replicate_min_forks":0}"#).unwrap()
+        )
+        .is_err());
         assert!(ServerConfig::from_json(
             &json::parse(r#"{"rebalance_interval_ms":0}"#).unwrap()
         )
@@ -602,6 +658,10 @@ mod tests {
         assert!((d.imbalance_factor - 1.5).abs() < 1e-9);
         assert!(d.migrate, "migration defaults on");
         assert_eq!(d.migration_max_inflight, 4);
+        assert!(!d.replicate, "replication defaults off (armed per run)");
+        assert_eq!(d.replicate_miss_threshold, 2);
+        assert_eq!(d.replicate_window, 32);
+        assert_eq!(d.replicate_min_forks, 4);
         assert!(d.rebalance, "elastic budgets default on");
         assert_eq!(d.rebalance_interval_ms, 50);
         assert!((d.lend_max_frac - 0.5).abs() < 1e-9);

@@ -497,6 +497,10 @@ impl Engine {
             alloc_failures: self.base_pool.alloc_failures()
                 + self.res_pool.as_ref().map_or(0, |p| p.alloc_failures()),
             oom_drops: self.metrics.oom_drops,
+            // the engine has no pool-wide view of which contexts are
+            // replicated; the server overlays its replica-map holder
+            // count before handing the snapshot to the rebalancer
+            hot_replicas: 0,
         }
     }
 
@@ -1407,6 +1411,33 @@ impl Engine {
     /// Live (issued, unreleased) prefetch leases — observability/test hook.
     pub fn prefetch_live_leases(&self) -> usize {
         self.prefetch_leases.len()
+    }
+
+    /// Re-warm a replica of `tokens` that was demoted to the host tier:
+    /// promote both cache components back on-device (priced by the cost
+    /// model, exactly like fork admission and prefetch warm-starts) and
+    /// return the device-resident page coverage afterwards. Unlike
+    /// [`Engine::prefetch_pin`] this takes no pin and issues no lease —
+    /// replica residency is advisory (the server's replica map verifies
+    /// on use), so the promoted pages compete for budget like any other
+    /// cached prefix. Unlike a migration import it moves no bytes across
+    /// shards: whatever the tier cannot supply, the follow-up export/
+    /// import ship fills.
+    pub fn replica_warm(&mut self, adapter: u32, tokens: &[u32]) -> usize {
+        if tokens.len() < self.cfg.cache.page_tokens {
+            return 0;
+        }
+        let ns = base_ns(self.cfg.policy, adapter);
+        self.promote_from_tier(Which::Base, ns, tokens);
+        if self.cfg.policy.uses_residual() {
+            self.promote_from_tier(Which::Res, adapter, tokens);
+        }
+        self.trees.base.probe_pages(ns, tokens)
+            + if self.cfg.policy.uses_residual() {
+                self.trees.residual.probe_pages(adapter, tokens)
+            } else {
+                0
+            }
     }
 
     // -----------------------------------------------------------------

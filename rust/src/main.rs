@@ -28,6 +28,8 @@ USAGE:
                     [--workers N] [--max-body-kb N] [--shards N] [--route R]
                     [--imbalance F] [--migrate on|off] [--migrate-gbps F]
                     [--migrate-max-inflight N] [--gang on|off] [--gang-hold-ms T]
+                    [--replicate on|off] [--replicate-miss N]
+                    [--replicate-window N] [--replicate-min-forks N]
                     [--rebalance on|off] [--rebalance-ms T] [--lend-max F]
                     [--tier on|off] [--tier-mb N] [--tier-compact-ms T]
                     [--prefetch on|off] [--prefetch-horizon N]
@@ -45,6 +47,8 @@ USAGE:
                     [--unique-words U] [--hot-pad-words P]
                     [--migrate on|off] [--migrate-gbps F]
                     [--gang on|off] [--gang-hold-ms T]
+                    [--replicate on|off] [--replicate-miss N]
+                    [--replicate-window N] [--replicate-min-forks N]
                     [--rebalance on|off] [--rebalance-ms T] [--lend-max F]
                     [--tier on|off] [--tier-mb N] [--tier-compact-ms T]
                     [--sessions N --visits V] [--session-words W]
@@ -62,6 +66,9 @@ USAGE:
                     # parallel agents so spills are forced and cross-shard page
                     # migration (--migrate) is exercised; --waves W replays the
                     # hot burst W times (the elastic-budget --rebalance A/B);
+                    # with --replicate on, repeated spill-misses of a hot
+                    # read-mostly prefix plant durable replicas instead of
+                    # per-spill copies (the hot-context --replicate A/B);
                     # with --sessions, N sessions of --session-words context
                     # words each make V round-robin visits, so a session's
                     # pages are evicted between visits (the host-tier --tier
@@ -158,6 +165,27 @@ fn server_config(args: &Args) -> anyhow::Result<ServerConfig> {
         anyhow::ensure!(
             cfg.migration_max_inflight > 0,
             "--migrate-max-inflight must be > 0"
+        );
+    }
+    if let Some(v) = args.flag("--replicate") {
+        cfg.replicate = parse_on_off("--replicate", &v)?;
+    }
+    if let Some(v) = args.flag("--replicate-miss") {
+        cfg.replicate_miss_threshold = v.parse()?;
+        anyhow::ensure!(
+            cfg.replicate_miss_threshold > 0,
+            "--replicate-miss must be > 0"
+        );
+    }
+    if let Some(v) = args.flag("--replicate-window") {
+        cfg.replicate_window = v.parse()?;
+        anyhow::ensure!(cfg.replicate_window > 0, "--replicate-window must be > 0");
+    }
+    if let Some(v) = args.flag("--replicate-min-forks") {
+        cfg.replicate_min_forks = v.parse()?;
+        anyhow::ensure!(
+            cfg.replicate_min_forks > 0,
+            "--replicate-min-forks must be > 0"
         );
     }
     if let Some(v) = args.flag("--rebalance") {
@@ -564,6 +592,7 @@ fn cmd_bench_http(args: &Args) -> anyhow::Result<()> {
         m.insert("rebalancer".into(), server.rebalancer_stats());
         m.insert("tier".into(), server.tier_stats());
         m.insert("prefetch".into(), server.prefetch_stats());
+        m.insert("replication".into(), server.replication_stats());
         m.insert("journal".into(), server.journal_stats());
         m.insert("locks".into(), server.lock_stats());
         m.insert("policy".into(), Json::str(policy.name()));

@@ -28,7 +28,14 @@
 //!     [`DONOR_COOLDOWN_TICKS`] ticks before it lends, moves are bounded
 //!     by a per-donor per-tick step, and surplus drifts back toward the
 //!     static split only while *no* shard is hot — budget cannot thrash
-//!     back and forth between two bursty shards.
+//!     back and forth between two bursty shards;
+//!   - **replica weighting** — a shard holding hot-context replicas (the
+//!     server threads its replica-map holder count through
+//!     [`BudgetPressure::hot_replicas`]) lends at half the usual
+//!     per-tick step, and among equally starved borrowers the replica
+//!     holder is served first: its pages are the warm copies the router
+//!     steers spilled forks onto, so squeezing its budget would evict
+//!     exactly the bytes replication just paid to ship.
 //!
 //! The planner is deliberately pure (budgets in, budgets out, no
 //! channels): the server supervisor feeds it `Cmd::Pressure` snapshots and
@@ -55,6 +62,10 @@ pub struct BudgetPressure {
     pub alloc_failures: u64,
     /// cumulative requests dropped by the memory-deadlock breaker
     pub oom_drops: u64,
+    /// hot-context replicas this shard currently holds, per the server's
+    /// replica map (engines report 0 — the server fills this in before
+    /// ticking the planner; see the module docs' replica-weighting rule)
+    pub hot_replicas: usize,
 }
 
 /// Ticks a shard must stay non-hot before it is allowed to lend budget
@@ -172,12 +183,22 @@ impl Rebalancer {
             let slack = self.base[i] / 16;
             let free = self.budgets[i].saturating_sub(p.used_bytes + slack);
             let above_floor = self.budgets[i] - self.floor[i];
-            let step = (self.base[i] / 4).max(1);
+            // replica holders lend at half the step: their free bytes
+            // back the warm pages spilled forks are being routed onto
+            let step = if p.hot_replicas > 0 {
+                (self.base[i] / 8).max(1)
+            } else {
+                (self.base[i] / 4).max(1)
+            };
             offer[i] = free.min(above_floor).min(step);
         }
 
         // borrowers, most-starved first (drops outrank denials outrank
-        // fullness; index breaks ties deterministically)
+        // replica weight; index breaks ties deterministically)
+        let reps: Vec<usize> = obs
+            .iter()
+            .map(|o| o.as_ref().map_or(0, |p| p.hot_replicas))
+            .collect();
         let mut borrowers: Vec<usize> = (0..n)
             .filter(|&i| {
                 obs[i].is_some()
@@ -185,7 +206,14 @@ impl Rebalancer {
                     && self.budgets[i] < obs[i].as_ref().map_or(0, |p| p.capacity_bytes)
             })
             .collect();
-        borrowers.sort_by_key(|&i| (std::cmp::Reverse(oom_d[i]), std::cmp::Reverse(fail_d[i]), i));
+        borrowers.sort_by_key(|&i| {
+            (
+                std::cmp::Reverse(oom_d[i]),
+                std::cmp::Reverse(fail_d[i]),
+                std::cmp::Reverse(reps[i]),
+                i,
+            )
+        });
 
         let mut moved = 0usize;
         if borrowers.is_empty() {
@@ -279,6 +307,7 @@ mod tests {
             budget_denials: 0,
             alloc_failures: 0,
             oom_drops: 0,
+            hot_replicas: 0,
         }
     }
 
@@ -424,6 +453,42 @@ mod tests {
     }
 
     #[test]
+    fn replica_holders_lend_less_and_borrow_first() {
+        // donor side: a replica-holding donor lends at half the step
+        let mut reb = Rebalancer::new(vec![MB; 2], 1.0);
+        let obs = vec![
+            Some(BudgetPressure { oom_drops: 1, ..pressure(MB, MB) }),
+            Some(BudgetPressure { hot_replicas: 3, ..pressure(0, MB) }),
+        ];
+        let (_, halved) = reb.tick(&obs);
+        assert!(halved > 0, "replica holder refused to lend at all");
+        assert!(halved <= MB / 8, "replica holder lent a full step: {halved}");
+        let mut reb = Rebalancer::new(vec![MB; 2], 1.0);
+        let obs = vec![
+            Some(BudgetPressure { oom_drops: 1, ..pressure(MB, MB) }),
+            Some(pressure(0, MB)),
+        ];
+        let (_, full) = reb.tick(&obs);
+        assert!(full > halved, "replica weighting changed nothing: {full} vs {halved}");
+
+        // borrower side: two equally starved hot shards, one donor — the
+        // replica holder is served first and takes the whole offer
+        let mut reb = Rebalancer::new(vec![MB; 3], 1.0);
+        let obs = vec![
+            Some(pressure(0, MB)),
+            Some(BudgetPressure { oom_drops: 1, ..pressure(MB, MB) }),
+            Some(BudgetPressure { oom_drops: 1, hot_replicas: 2, ..pressure(MB, MB) }),
+        ];
+        reb.tick(&obs);
+        assert!(
+            reb.budgets()[2] > reb.budgets()[1],
+            "replica-holding borrower was not preferred: {:?}",
+            reb.budgets()
+        );
+        assert_eq!(reb.budgets().iter().sum::<usize>(), 3 * MB);
+    }
+
+    #[test]
     fn prop_random_lend_reclaim_keeps_invariants() {
         // ISSUE 5 satellite: random lend/reclaim sequences on a 4-shard
         // pool — the budgets never drift from the configured total, no
@@ -462,6 +527,9 @@ mod tests {
                         budget_denials: fails[i],
                         alloc_failures: 0,
                         oom_drops: ooms[i],
+                        // replica weighting must not be able to break
+                        // conservation/floor/capacity either
+                        hot_replicas: rng.below(4),
                     }));
                 }
                 let (moves, moved) = reb.tick(&obs);

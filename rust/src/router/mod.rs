@@ -20,16 +20,39 @@
 //!   - `RoundRobin`: the placement-oblivious baseline — even load, no
 //!     cache locality. Kept so benchmarks can isolate the affinity win.
 //!
-//! The router is intentionally stateless about cache *contents*: it never
-//! asks a shard what it holds. Affinity is a pure function of the request,
-//! which keeps placement O(window) and makes identical prompts land on the
-//! same shard across the whole process lifetime.
+//! The *affinity function* is intentionally stateless about cache
+//! contents: it never asks a shard what it holds. Affinity is a pure
+//! function of the request, which keeps placement O(window) and makes
+//! identical prompts land on the same shard across the whole process
+//! lifetime.
+//!
+//! Layered on top of that pure function, the router hosts two small
+//! pieces of *replication* state (owned and fed by the server, never
+//! consulted by `place`/`place_spill` themselves):
+//!   - [`ReplicaMap`]: prefix fingerprint → the set of shards known to
+//!     hold a warm replica of that prefix, with an invalidation epoch
+//!     that is bumped whenever the parent context grows. Fed by
+//!     migration imports, replications, prefetch pins, and shard
+//!     death/restart events. [`Router::place_spill_replicated`] uses it
+//!     to prefer a warm replica holder over a cold least-loaded shard
+//!     when a request must spill off its overloaded home.
+//!   - [`ReadMostly`]: a per-prefix sliding window classifying a context
+//!     as read-mostly (many forks, few extends) — the precondition for
+//!     one-to-many replication, since a context that keeps growing would
+//!     invalidate its replicas as fast as they are made.
 
 #![warn(missing_docs)]
 
+use std::collections::{BTreeSet, HashMap, VecDeque};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::util::{fnv1a_from, FNV_OFFSET};
+
+/// Bound on distinct prefixes tracked by [`ReplicaMap`] and
+/// [`ReadMostly`]: both are advisory caches keyed by content
+/// fingerprint, so forgetting a cold prefix costs at most one extra
+/// replication round-trip later — never correctness.
+const MAX_TRACKED_PREFIXES: usize = 4096;
 
 /// How the server maps a request onto an engine shard.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -169,6 +192,39 @@ impl Router {
             }
         }
     }
+
+    /// Like [`Router::place_spill`], but when the request must spill off
+    /// its overloaded home shard, prefer a shard from `holders` — the
+    /// replica holders of this prefix per the server's [`ReplicaMap`] —
+    /// over the cold least-loaded shard. A holder is eligible only if it
+    /// is not the home itself and its own depth is under the spill
+    /// threshold (a holder more overloaded than the rule allows is no
+    /// refuge); ties break to the least-loaded eligible holder, then the
+    /// lowest index. With no eligible holder the plain spill decision
+    /// stands. Non-spill placements (and round-robin) are returned
+    /// unchanged: replicas only ever redirect load that was already
+    /// leaving home.
+    pub fn place_spill_replicated(
+        &self,
+        tokens: &[u32],
+        tag: u64,
+        depths: &[usize],
+        holders: &[usize],
+    ) -> Placement {
+        let p = self.place_spill(tokens, tag, depths);
+        let Some(home) = p.spilled_from else { return p };
+        let min = depths.iter().copied().min().unwrap_or(0);
+        let limit = self.imbalance_factor * (min as f64 + 1.0);
+        let best = holders
+            .iter()
+            .copied()
+            .filter(|&h| h < depths.len() && h != home && (depths[h] as f64) <= limit)
+            .min_by_key(|&h| (depths[h], h));
+        match best {
+            Some(shard) => Placement { shard, spilled_from: Some(home) },
+            None => p,
+        }
+    }
 }
 
 /// A routing decision plus its spill provenance (see
@@ -179,6 +235,262 @@ pub struct Placement {
     pub shard: usize,
     /// the overloaded home shard this request was spilled away from
     pub spilled_from: Option<usize>,
+}
+
+#[derive(Debug, Default, Clone)]
+struct ReplicaEntry {
+    /// bumped on every invalidation; a bumped epoch means any replica
+    /// shipped under the previous epoch is stale (parent context grew)
+    epoch: u64,
+    holders: BTreeSet<usize>,
+}
+
+/// Prefix fingerprint → set of shards believed to hold a warm replica.
+///
+/// Purely advisory book-keeping: the authoritative truth about what a
+/// shard holds stays inside that shard's engine, and every routing
+/// decision taken from this map is verified against the target shard
+/// (a probe) before the migration step is skipped. The map therefore
+/// only has to be *conservative about liveness* — a dead shard must
+/// never appear in a resident set — while staleness about contents is
+/// tolerated and repaired on use.
+///
+/// Invariants (checked by [`ReplicaMap::check_invariants`], exercised by
+/// the `replica-map-invariants` property test):
+///   - no dead shard appears in any resident set
+///   - an invalidated (epoch-bumped) prefix has an empty resident set
+///     until something re-registers under the new epoch
+///   - [`ReplicaMap::unregister`] is idempotent
+///   - every resident set's size is ≤ the number of live shards
+#[derive(Debug)]
+pub struct ReplicaMap {
+    shards: usize,
+    live: Vec<bool>,
+    entries: HashMap<u64, ReplicaEntry>,
+    /// first-insertion order, for bounded-size eviction
+    order: VecDeque<u64>,
+}
+
+impl ReplicaMap {
+    /// Empty map over `shards` peer shards, all initially live.
+    pub fn new(shards: usize) -> Self {
+        assert!(shards > 0, "replica map needs at least one shard");
+        ReplicaMap {
+            shards,
+            live: vec![true; shards],
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+        }
+    }
+
+    fn entry_mut(&mut self, fp: u64) -> &mut ReplicaEntry {
+        if !self.entries.contains_key(&fp) {
+            if self.entries.len() >= MAX_TRACKED_PREFIXES {
+                // forget the oldest tracked prefix; each fp appears in
+                // `order` exactly once (pushed on first insert only)
+                if let Some(old) = self.order.pop_front() {
+                    self.entries.remove(&old);
+                }
+            }
+            self.order.push_back(fp);
+        }
+        self.entries.entry(fp).or_default()
+    }
+
+    /// Record that `shard` now holds a warm replica of `fp`. No-op for
+    /// an out-of-range or dead shard (a registration racing a crash must
+    /// lose: the death event has already stripped the shard).
+    pub fn register(&mut self, fp: u64, shard: usize) {
+        if shard >= self.shards || !self.live[shard] {
+            return;
+        }
+        self.entry_mut(fp).holders.insert(shard);
+    }
+
+    /// Drop `shard` from `fp`'s resident set (replica evicted or demoted
+    /// off-device). Idempotent: unregistering an absent pair is a no-op.
+    pub fn unregister(&mut self, fp: u64, shard: usize) {
+        if let Some(e) = self.entries.get_mut(&fp) {
+            e.holders.remove(&shard);
+        }
+    }
+
+    /// The parent context grew (an extend event): every replica of the
+    /// old, shorter prefix is now stale. Clears the resident set, bumps
+    /// the epoch, and returns how many holders were invalidated.
+    pub fn invalidate(&mut self, fp: u64) -> usize {
+        let e = self.entry_mut(fp);
+        let cleared = e.holders.len();
+        e.holders.clear();
+        e.epoch += 1;
+        cleared
+    }
+
+    /// Current invalidation epoch for `fp` (0 if never tracked).
+    pub fn epoch(&self, fp: u64) -> u64 {
+        self.entries.get(&fp).map_or(0, |e| e.epoch)
+    }
+
+    /// Shards currently believed to hold a warm replica of `fp`,
+    /// ascending. Empty when untracked or invalidated.
+    pub fn holders(&self, fp: u64) -> Vec<usize> {
+        self.entries
+            .get(&fp)
+            .map(|e| e.holders.iter().copied().collect())
+            .unwrap_or_default()
+    }
+
+    /// `shard` died (poisoned/crashed): mark it dead and strip it from
+    /// every resident set. Until [`ReplicaMap::shard_restarted`], any
+    /// [`ReplicaMap::register`] for it is refused.
+    pub fn shard_dead(&mut self, shard: usize) {
+        if shard >= self.shards {
+            return;
+        }
+        self.live[shard] = false;
+        for e in self.entries.values_mut() {
+            e.holders.remove(&shard);
+        }
+    }
+
+    /// `shard` came back from a restart: live again, but holding nothing
+    /// (a restarted shard restores session metadata, not replica pages —
+    /// replicas must be re-shipped and re-registered).
+    pub fn shard_restarted(&mut self, shard: usize) {
+        if shard >= self.shards {
+            return;
+        }
+        self.live[shard] = true;
+        // defensive: death already stripped it, but restart must never
+        // resurrect holders from a pre-death registration
+        for e in self.entries.values_mut() {
+            e.holders.remove(&shard);
+        }
+    }
+
+    /// How many tracked prefixes each shard currently holds a replica
+    /// of — the rebalancer's "hot replica" weight per shard.
+    pub fn holder_counts(&self) -> Vec<usize> {
+        let mut counts = vec![0usize; self.shards];
+        for e in self.entries.values() {
+            for &s in &e.holders {
+                counts[s] += 1;
+            }
+        }
+        counts
+    }
+
+    /// Number of prefixes currently tracked (registered or invalidated).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no prefix is tracked.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Verify the structural invariants listed in the type docs.
+    /// Returns a description of the first violation found.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let live_count = self.live.iter().filter(|&&l| l).count();
+        for (fp, e) in &self.entries {
+            for &s in &e.holders {
+                if s >= self.shards {
+                    return Err(format!("fp {fp:#x}: holder {s} out of range"));
+                }
+                if !self.live[s] {
+                    return Err(format!("fp {fp:#x}: dead shard {s} in resident set"));
+                }
+            }
+            if e.holders.len() > live_count {
+                return Err(format!(
+                    "fp {fp:#x}: {} holders > {live_count} live shards",
+                    e.holders.len()
+                ));
+            }
+        }
+        if self.entries.len() > MAX_TRACKED_PREFIXES {
+            return Err(format!("{} entries exceed the tracking cap", self.entries.len()));
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Default)]
+struct ReadMostlyEntry {
+    /// sliding window of events, `true` = extend (context grew)
+    events: VecDeque<bool>,
+    /// longest prompt length seen for this prefix so far
+    hi_len: usize,
+}
+
+/// Per-prefix fork-vs-extend classifier over a sliding window.
+///
+/// A workflow's shared context is worth replicating only if it is
+/// *read-mostly*: many agents fork from it (same length, divergent
+/// tails) while the parent rarely grows. Each observed request is
+/// classified as an **extend** when its prompt is more than `slack`
+/// tokens longer than the longest previously seen for the prefix
+/// (`slack` absorbs the agents' small unique suffixes — one page of
+/// tokens in practice), else a **fork**. A prefix is read-mostly once
+/// its window holds at least `min_forks` forks and extends are at most
+/// a quarter of the window.
+#[derive(Debug)]
+pub struct ReadMostly {
+    window: usize,
+    min_forks: usize,
+    slack: usize,
+    entries: HashMap<u64, ReadMostlyEntry>,
+    order: VecDeque<u64>,
+}
+
+impl ReadMostly {
+    /// Classifier with a per-prefix window of `window` events, requiring
+    /// `min_forks` forks, treating growth ≤ `slack` tokens as noise.
+    pub fn new(window: usize, min_forks: usize, slack: usize) -> Self {
+        assert!(window > 0, "read-mostly window must be > 0");
+        ReadMostly {
+            window,
+            min_forks,
+            slack,
+            entries: HashMap::new(),
+            order: VecDeque::new(),
+        }
+    }
+
+    /// Record one request against prefix `fp` with prompt length
+    /// `token_len`. Returns `true` when the event is an **extend** —
+    /// the caller's cue to invalidate replicas of the old prefix.
+    pub fn observe(&mut self, fp: u64, token_len: usize) -> bool {
+        if !self.entries.contains_key(&fp) {
+            if self.entries.len() >= MAX_TRACKED_PREFIXES {
+                if let Some(old) = self.order.pop_front() {
+                    self.entries.remove(&old);
+                }
+            }
+            self.order.push_back(fp);
+        }
+        let window = self.window;
+        let slack = self.slack;
+        let e = self.entries.entry(fp).or_default();
+        let extend = e.hi_len > 0 && token_len > e.hi_len + slack;
+        e.hi_len = e.hi_len.max(token_len);
+        e.events.push_back(extend);
+        while e.events.len() > window {
+            e.events.pop_front();
+        }
+        extend
+    }
+
+    /// Is `fp` currently classified read-mostly? (See type docs for the
+    /// rule.) Unknown prefixes are not.
+    pub fn is_read_mostly(&self, fp: u64) -> bool {
+        let Some(e) = self.entries.get(&fp) else { return false };
+        let extends = e.events.iter().filter(|&&x| x).count();
+        let forks = e.events.len() - extends;
+        forks >= self.min_forks && extends * 4 <= e.events.len()
+    }
 }
 
 #[cfg(test)]
@@ -330,5 +642,186 @@ mod tests {
         let spread: std::collections::HashSet<usize> =
             (0..32).map(|tag| r.affinity_shard(&tokens, tag)).collect();
         assert!(spread.len() > 1, "all 32 tags landed on one shard");
+    }
+
+    #[test]
+    fn spill_prefers_replica_holder_over_cold_target() {
+        let r = affinity(4);
+        let tokens: Vec<u32> = (10..40).collect();
+        let home = r.affinity_shard(&tokens, 7);
+        let mut depths = [2usize, 3, 2, 3];
+        depths[home] = 20; // forced spill
+        let plain = r.place_spill(&tokens, 7, &depths);
+        assert_eq!(plain.spilled_from, Some(home));
+        // a holder that is not the cold least-loaded shard: pick it
+        let holder = (0..4).find(|&s| s != home && s != plain.shard).unwrap();
+        let p = r.place_spill_replicated(&tokens, 7, &depths, &[holder]);
+        assert_eq!(p, Placement { shard: holder, spilled_from: Some(home) });
+        // the home itself as the only holder is useless: fall back
+        let p = r.place_spill_replicated(&tokens, 7, &depths, &[home]);
+        assert_eq!(p, plain);
+        // a holder that is itself past the spill threshold is no refuge
+        let mut hot = depths;
+        hot[holder] = 25;
+        let p = r.place_spill_replicated(&tokens, 7, &hot, &[holder]);
+        assert_eq!(p.shard, r.place_spill(&tokens, 7, &hot).shard);
+        // no spill means holders are irrelevant (affinity stays sticky)
+        let p = r.place_spill_replicated(&tokens, 7, &[1, 1, 1, 1], &[holder]);
+        assert_eq!(p, Placement { shard: home, spilled_from: None });
+        // least-loaded eligible holder wins among several
+        let mut depths = [4usize, 4, 4, 4];
+        depths[home] = 30;
+        let others: Vec<usize> = (0..4).filter(|&s| s != home).collect();
+        let mut uneven = depths;
+        uneven[others[1]] = 1;
+        let p = r.place_spill_replicated(&tokens, 7, &uneven, &others);
+        assert_eq!(p.shard, others[1]);
+    }
+
+    #[test]
+    fn replica_map_register_invalidate_death_cycle() {
+        let mut m = ReplicaMap::new(4);
+        assert!(m.is_empty());
+        m.register(0xBEEF, 1);
+        m.register(0xBEEF, 2);
+        m.register(0xBEEF, 2); // duplicate registration is a no-op
+        m.register(0xBEEF, 9); // out of range: refused
+        assert_eq!(m.holders(0xBEEF), vec![1, 2]);
+        assert_eq!(m.holder_counts(), vec![0, 1, 1, 0]);
+        assert_eq!(m.len(), 1);
+
+        // parent context grew: epoch bump clears every holder
+        assert_eq!(m.epoch(0xBEEF), 0);
+        assert_eq!(m.invalidate(0xBEEF), 2);
+        assert_eq!(m.epoch(0xBEEF), 1);
+        assert!(m.holders(0xBEEF).is_empty());
+
+        // death strips the shard everywhere and refuses re-registration
+        m.register(0xBEEF, 3);
+        m.register(0xF00D, 3);
+        m.shard_dead(3);
+        assert!(m.holders(0xBEEF).is_empty());
+        assert!(m.holders(0xF00D).is_empty());
+        m.register(0xF00D, 3); // dead: refused
+        assert!(m.holders(0xF00D).is_empty());
+
+        // restart: live again but holding nothing until re-registered
+        m.shard_restarted(3);
+        assert!(m.holders(0xF00D).is_empty());
+        m.register(0xF00D, 3);
+        assert_eq!(m.holders(0xF00D), vec![3]);
+
+        // unregister is idempotent
+        m.unregister(0xF00D, 3);
+        m.unregister(0xF00D, 3);
+        m.unregister(0xDEAD, 0); // never-tracked prefix: no-op
+        assert!(m.holders(0xF00D).is_empty());
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn replica_map_tracking_is_bounded() {
+        let mut m = ReplicaMap::new(2);
+        for fp in 0..(MAX_TRACKED_PREFIXES as u64 + 100) {
+            m.register(fp, 1);
+        }
+        assert_eq!(m.len(), MAX_TRACKED_PREFIXES);
+        // oldest forgotten, newest retained
+        assert!(m.holders(0).is_empty());
+        assert_eq!(m.holders(MAX_TRACKED_PREFIXES as u64 + 99), vec![1]);
+        m.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prop_replica_map_invariants_under_random_events() {
+        // satellite: random register/invalidate/unregister/shard-death/
+        // restart sequences must preserve the documented invariants
+        crate::util::prop::check("replica-map-invariants", 128, |rng| {
+            let shards = 2 + rng.below(7);
+            let mut m = ReplicaMap::new(shards);
+            let mut live = vec![true; shards];
+            let fps: Vec<u64> = (0..(1 + rng.below(8))).map(|_| rng.next_u64()).collect();
+            for _ in 0..200 {
+                let fp = fps[rng.below(fps.len())];
+                let shard = rng.below(shards + 1); // sometimes out of range
+                match rng.below(6) {
+                    0 | 1 => m.register(fp, shard),
+                    2 => {
+                        m.unregister(fp, shard);
+                        let snap = m.holders(fp);
+                        m.unregister(fp, shard); // idempotent
+                        if m.holders(fp) != snap {
+                            return Err("second unregister changed the set".into());
+                        }
+                    }
+                    3 => {
+                        let before = m.epoch(fp);
+                        m.invalidate(fp);
+                        if m.epoch(fp) != before + 1 {
+                            return Err("invalidate did not bump the epoch".into());
+                        }
+                        if !m.holders(fp).is_empty() {
+                            return Err("invalidated prefix kept holders".into());
+                        }
+                    }
+                    4 => {
+                        if shard < shards {
+                            live[shard] = false;
+                        }
+                        m.shard_dead(shard);
+                    }
+                    _ => {
+                        if shard < shards {
+                            live[shard] = true;
+                        }
+                        m.shard_restarted(shard);
+                    }
+                }
+                m.check_invariants()?;
+                // mirror-model check: no dead shard in any resident set
+                for &f in &fps {
+                    for h in m.holders(f) {
+                        if !live[h] {
+                            return Err(format!("dead shard {h} resident for {f:#x}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn read_mostly_detector_classifies_forks_vs_extends() {
+        let mut d = ReadMostly::new(32, 4, 16);
+        let fp = 0xABu64;
+        // first sight is never an extend, and too few forks yet
+        assert!(!d.observe(fp, 200));
+        assert!(!d.is_read_mostly(fp));
+        // agents forking: same base length, small unique tails (≤ slack)
+        for i in 0..5 {
+            assert!(!d.observe(fp, 200 + i), "fork misread as extend");
+        }
+        assert!(d.is_read_mostly(fp), "5 forks, 0 extends must qualify");
+        // the parent context grows past the slack: an extend
+        assert!(d.observe(fp, 400));
+        assert!(d.is_read_mostly(fp), "1 extend in 7 events still ≤ 25%");
+        // a write-heavy prefix never qualifies
+        let wr = 0xCDu64;
+        for i in 0..10 {
+            d.observe(wr, 100 + i * 50);
+        }
+        assert!(!d.is_read_mostly(wr), "every event an extend");
+        // unknown prefixes are not read-mostly
+        assert!(!d.is_read_mostly(0xEF));
+        // window slides: ancient extends age out
+        let mut d = ReadMostly::new(4, 2, 16);
+        let fp = 0x11u64;
+        d.observe(fp, 100);
+        d.observe(fp, 500); // extend
+        for _ in 0..4 {
+            d.observe(fp, 500); // forks push the extend out of the window
+        }
+        assert!(d.is_read_mostly(fp));
     }
 }

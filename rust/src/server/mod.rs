@@ -80,6 +80,27 @@
 //! re-routed to the least-loaded live shard (`rerouted` in `/metrics`)
 //! and `/metrics` reports `{"dead": true}` per dead shard instead of
 //! failing the snapshot.
+//!
+//! Hot-context replication (one-to-many): point-to-point migration
+//! re-ships the same read-mostly shared prefix once per spill, forever.
+//! With `--replicate on` the server keeps a replica map (prefix
+//! fingerprint → shards holding a warm copy, fed by migration imports,
+//! replications, prefetch pins, and shard death/restart events) and a
+//! per-prefix read-mostly detector (fork rate vs extend rate over a
+//! sliding window). A spill is steered onto a replica holder first,
+//! verified by a read-only probe — a stale entry (the holder evicted or
+//! demoted the replica) unregisters on use instead of routing the fork
+//! into a cold prefill. A prefix that keeps spill-missing on the same
+//! shard (`replicate_miss_threshold`) while classified read-mostly earns
+//! a proactive replica there: `Cmd::ReplicaWarm` re-promotes anything
+//! the target's host tier still holds, then the PR 3 export/import path
+//! ships the rest (leased on the source, priced against recompute,
+//! bounded by the same migration queue). An *extend* of the parent
+//! context bumps the prefix's invalidation epoch and clears every
+//! holder; shard death strips the corpse from every resident set and a
+//! restarted shard re-enters holding nothing. The rebalancer weights
+//! budget toward replica holders (`BudgetPressure::hot_replicas`), and
+//! `GET /metrics` serves the `replication` counters.
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -98,7 +119,7 @@ use crate::metrics::{
 };
 use crate::migrate::{MigrationEstimate, MigrationPayload, MigrationPolicy};
 use crate::rebalance::{BudgetPressure, Rebalancer};
-use crate::router::Router;
+use crate::router::{Placement, ReadMostly, ReplicaMap, Router};
 use crate::tier::TierStore;
 use crate::util::json::{self, Json};
 use crate::util::lockstats::{locks_json, LockStat};
@@ -153,6 +174,16 @@ enum Cmd {
     /// Release a prefetch lease exactly once (`Engine::prefetch_release`):
     /// `hit` when the warmed step arrived, abandonment otherwise.
     PrefetchRelease { lease: u64, hit: bool },
+    /// Hot-context replication: re-promote a (possibly demoted) replica
+    /// prefix from this shard's host tier back on-device
+    /// (`Engine::replica_warm` — no pins, no lease; the replica map
+    /// verifies residency on use). Replies with the device-resident page
+    /// coverage afterwards.
+    ReplicaWarm {
+        adapter: u32,
+        tokens: Vec<u32>,
+        reply: mpsc::Sender<usize>,
+    },
     /// Snapshot this shard's warm-restart checkpoint: every live radix
     /// leaf path plus every tiered page's token path, metadata only
     /// (`Engine::checkpoint_json`).
@@ -205,6 +236,17 @@ pub struct Server {
     /// migrations currently in flight (the bounded migration queue)
     mig_inflight: AtomicUsize,
     counters: RouteCounters,
+    /// hot-context replication state (None = `--replicate off` or a
+    /// single shard): replica map + read-mostly detector + per-prefix
+    /// spill-miss tallies under one mutex, consulted only on the spill
+    /// path (the common no-spill placement never takes it)
+    replication: Option<Mutex<ReplicaTracker>>,
+    /// pool-level replication outcome counters (`/metrics`)
+    rep_counters: ReplicaCounters,
+    /// per-prefix spill attribution — fingerprint → (tag, cold spills) —
+    /// always on, so the bench report's `spills_by_prefix` can show the
+    /// hot context specifically, replication armed or not
+    spill_attr: Mutex<HashMap<u64, (u64, u64)>>,
     /// elastic-budget planner (None = rebalance off or single shard);
     /// the supervisor thread and `rebalance_tick` go through here
     rebalancer: Option<Mutex<Rebalancer>>,
@@ -447,7 +489,70 @@ struct PrefetchPlan {
     /// the prefix's provenance shard (first predecessor's home), the
     /// pre-migration source when it differs from `target`
     source: Option<usize>,
+    /// the tag the successor step will arrive under — the fingerprint
+    /// key a successful prefetch registers in the replica map
+    route_tag: u64,
 }
+
+/// The replication subsystem's mutable state, under one server mutex.
+struct ReplicaTracker {
+    /// prefix fingerprint → verified-on-use resident-shard set
+    map: ReplicaMap,
+    /// per-prefix fork-vs-extend classifier (the replication gate)
+    detector: ReadMostly,
+    /// per-prefix, per-shard cold spill-misses since the last
+    /// replication or invalidation — the one-to-many trigger tally
+    misses: HashMap<u64, HashMap<usize, u32>>,
+}
+
+/// Pool-level hot-context replication counters (the `replication`
+/// object of `GET /metrics`).
+#[derive(Default)]
+struct ReplicaCounters {
+    /// replicas planted by the one-to-many path (zero-copy plants — the
+    /// target already warm, or promoted from its host tier — included;
+    /// `replica_bytes` isolates the actual copy traffic)
+    replications: AtomicU64,
+    /// spills served by routing onto a verified replica holder (no
+    /// copy, no cold prefill)
+    replica_hits: AtomicU64,
+    /// replica registrations dropped — parent-context extends (each
+    /// cleared holder counts) plus stale entries caught by the
+    /// verify-on-use probe
+    replica_invalidations: AtomicU64,
+    /// cumulative payload bytes shipped by replications (kept separate
+    /// from migration traffic)
+    replica_bytes: AtomicU64,
+}
+
+/// What a spill decided to do about its cached pages.
+enum SpillAction {
+    /// run the PR 3 point-to-point migration pipeline (the default)
+    Migrate,
+    /// this shard earned a proactive replica of a hot read-mostly
+    /// prefix (second spill-miss + detector agreement)
+    Replicate,
+    /// the chosen target verifiably holds the prefix already: no copy,
+    /// and not a cold miss
+    ReplicaHit,
+}
+
+/// Outcome of one run of the export/import shipping pipeline.
+#[derive(Clone, Copy)]
+enum Ship {
+    /// pages crossed the wire — carries the payload byte count
+    Shipped(usize),
+    /// the target already held at least as much of the prefix, so the
+    /// copy was skipped (still a success for residency purposes)
+    AlreadyWarm,
+    /// inflight cap, probe miss, empty payload, or a dead shard — no
+    /// residency claim can be made
+    Skipped,
+}
+
+/// Cap on distinct prefixes in the spill-attribution table. On overflow
+/// the table resets — it feeds A/B bench reports, not billing.
+const MAX_SPILL_ATTR: usize = 512;
 
 /// Pool-level routing/migration outcome counters (served by `/metrics`).
 #[derive(Default)]
@@ -533,6 +638,10 @@ fn handle_cmd(
         }
         Cmd::PrefetchRelease { lease, hit } => {
             engine.prefetch_release(lease, hit);
+            Flow::Continue
+        }
+        Cmd::ReplicaWarm { adapter, tokens, reply } => {
+            let _ = reply.send(engine.replica_warm(adapter, &tokens));
             Flow::Continue
         }
         Cmd::Checkpoint(reply) => {
@@ -735,12 +844,30 @@ impl Server {
                 checkpoints_written: AtomicU64::new(0),
             }
         });
+        // hot-context replication: like migration, the subsystem only
+        // makes sense with a peer to replicate onto. The detector's
+        // slack is one affinity window — a tail that grows less than a
+        // page is fork noise, not a parent-context extend.
+        let replication = (cfg.replicate && cfg.shards > 1).then(|| {
+            Mutex::new(ReplicaTracker {
+                map: ReplicaMap::new(cfg.shards),
+                detector: ReadMostly::new(
+                    cfg.replicate_window,
+                    cfg.replicate_min_forks,
+                    page_tokens,
+                ),
+                misses: HashMap::new(),
+            })
+        });
         let srv = Arc::new(Server {
             shards,
             router,
             migration,
             mig_inflight: AtomicUsize::new(0),
             counters: RouteCounters::default(),
+            replication,
+            rep_counters: ReplicaCounters::default(),
+            spill_attr: Mutex::new(HashMap::new()),
             rebalancer,
             reb_counters: RebalanceCounters::default(),
             tier_counters: TierCounters::default(),
@@ -851,7 +978,17 @@ impl Server {
     /// terminal replies from the thread's final drain.
     pub fn shutdown_shard(&self, shard: usize) {
         let _ = self.shards[shard].send(Cmd::Shutdown);
+        self.poison_shard(shard);
+    }
+
+    /// Mark a shard dead for routing: poison its depth (affinity spills
+    /// away, least-loaded never picks it) and drop it from every replica
+    /// set so no spill routes a fork onto pages that no longer exist.
+    fn poison_shard(&self, shard: usize) {
         self.shards[shard].depth.store(usize::MAX, Ordering::Relaxed);
+        if let Some(rep) = &self.replication {
+            rep.lock().unwrap_or_else(|e| e.into_inner()).map.shard_dead(shard);
+        }
     }
 
     pub fn config(&self) -> &ServerConfig {
@@ -953,13 +1090,35 @@ impl Server {
             .iter()
             .map(|s| s.depth.load(Ordering::Relaxed))
             .collect();
-        let placement = self.router.place_spill(&prompt_tokens, tag, &depths);
+        let (placement, action) =
+            self.route_with_replicas(&prompt_tokens, tag, adapter, &depths);
         let mut shard = placement.shard;
         if let Some(home) = placement.spilled_from {
             self.counters.spills.fetch_add(1, Ordering::Relaxed);
-            // make the spill cost bandwidth instead of FLOPs: copy the
-            // home shard's cached pages ahead of this Submit
-            self.try_migrate(home, shard, adapter, &prompt_tokens);
+            let fp = self.router.fingerprint(&prompt_tokens, tag);
+            match action {
+                // routed onto a verified replica holder: the prefix is
+                // already resident there — no copy, no cold prefill
+                SpillAction::ReplicaHit => {}
+                // the one-to-many path: this prefix keeps spill-missing
+                // here, so plant a durable replica instead of paying a
+                // point-to-point copy on every future spill
+                SpillAction::Replicate => {
+                    self.attribute_spill(fp, tag);
+                    self.replicate_to(fp, home, shard, adapter, &prompt_tokens);
+                }
+                // make the spill cost bandwidth instead of FLOPs: copy
+                // the home shard's cached pages ahead of this Submit.
+                // Deliberately NOT registered in the replica map: a
+                // migration is transient residency (evictable, never
+                // re-verified) — only the one-to-many path and prefetch
+                // pins feed the map, so a hot prefix's repeat miss on
+                // the same shard still reaches the replication trigger
+                SpillAction::Migrate => {
+                    self.attribute_spill(fp, tag);
+                    self.try_migrate(home, shard, adapter, &prompt_tokens);
+                }
+            }
         }
         // journaled submissions keep the prompt for the Submit record
         let journal_tokens = journal_key.map(|_| prompt_tokens.clone());
@@ -990,7 +1149,7 @@ impl Server {
                         // poison its depth so affinity spills away and
                         // least-loaded never picks it; then re-route
                         // this (still unsubmitted) request
-                        handle.depth.store(usize::MAX, Ordering::Relaxed);
+                        self.poison_shard(shard);
                         let Cmd::Submit(r, t) = cmd else {
                             unreachable!("send echoes back the submit")
                         };
@@ -1025,7 +1184,6 @@ impl Server {
                 tokens,
             });
         }
-        let handle = &self.shards[shard];
         match reply_rx.recv() {
             Ok(out) => {
                 if let (Some(js), Some(key)) = (self.journal.as_ref(), journal_key) {
@@ -1047,7 +1205,7 @@ impl Server {
             Err(_) => {
                 // the shard died holding our request: poison its depth so
                 // everything routes around it
-                handle.depth.store(usize::MAX, Ordering::Relaxed);
+                self.poison_shard(shard);
                 match (self.journal.as_ref(), journal_key) {
                     (Some(_), Some(key)) => {
                         // replay everything the dead shard still owed
@@ -1163,23 +1321,38 @@ impl Server {
             .map(|(i, _)| i)
     }
 
-    /// The spilled-request migration pipeline: Probe the home shard →
-    /// price migrate-vs-recompute → Probe the target (skip if it is
-    /// already warm) → Export the matched pages → Import them on the
-    /// target, all ahead of the request's Submit on the target's FIFO
-    /// command channel. Best-effort by design: on any failure (home
-    /// shard dead, bounded queue full, nothing cached, copy dearer than
-    /// recompute, target already covered) the spill simply proceeds
-    /// down the recompute path it always had.
-    fn try_migrate(&self, home: usize, target: usize, adapter: u32, tokens: &[u32]) {
-        let skipped = || {
-            self.counters
-                .migration_skipped
-                .fetch_add(1, Ordering::Relaxed);
-        };
+    /// The spilled-request migration pipeline, with counter accounting:
+    /// a shipped payload counts as a migration, everything else (cap,
+    /// probe miss, already warm, dead shard) as a skip. Returns the
+    /// shipping outcome so the caller can feed the replica map.
+    fn try_migrate(&self, home: usize, target: usize, adapter: u32, tokens: &[u32]) -> Ship {
+        let ship = self.ship_pages(home, target, adapter, tokens);
+        match ship {
+            Ship::Shipped(_) => {
+                self.counters.migrations.fetch_add(1, Ordering::Relaxed);
+            }
+            Ship::AlreadyWarm | Ship::Skipped => {
+                self.counters
+                    .migration_skipped
+                    .fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        ship
+    }
+
+    /// The page-shipping pipeline shared by spill migration and replica
+    /// planting: Probe the home shard → price migrate-vs-recompute →
+    /// Probe the target (stop if it is already warm) → Export the
+    /// matched pages → Import them on the target, all ahead of the
+    /// request's Submit on the target's FIFO command channel. The export
+    /// pins the matched pages under a lease until the payload is built,
+    /// so a racing eviction cannot ship dangling pages. Best-effort by
+    /// design: on any failure (home shard dead, bounded queue full,
+    /// nothing cached, copy dearer than recompute) the spill simply
+    /// proceeds down the recompute path it always had.
+    fn ship_pages(&self, home: usize, target: usize, adapter: u32, tokens: &[u32]) -> Ship {
         if !self.migration.enabled || home == target || tokens.len() < 2 {
-            skipped();
-            return;
+            return Ship::Skipped;
         }
         // bounded migration queue: page copies run on the shard threads,
         // so cap how many can be outstanding before spills fall back to
@@ -1187,8 +1360,7 @@ impl Server {
         let slots = self.cfg.migration_max_inflight.max(1);
         if self.mig_inflight.fetch_add(1, Ordering::Relaxed) >= slots {
             self.mig_inflight.fetch_sub(1, Ordering::Relaxed);
-            skipped();
-            return;
+            return Ship::Skipped;
         }
         let _slot = MigSlot(&self.mig_inflight);
         // the match window: everything but the final prompt token, which
@@ -1201,16 +1373,13 @@ impl Server {
             reply: probe_tx,
         };
         if self.shards[home].send(probe).is_err() {
-            skipped();
-            return;
+            return Ship::Skipped;
         }
         let Ok(est) = probe_rx.recv() else {
-            skipped();
-            return;
+            return Ship::Skipped;
         };
         if !self.migration.should_migrate(&est) {
-            skipped();
-            return;
+            return Ship::Skipped;
         }
         // target-side warmth check: an earlier migration of the same hot
         // context (or the target's own traffic) may already cover what
@@ -1223,16 +1392,13 @@ impl Server {
             reply: tgt_tx,
         };
         if self.shards[target].send(target_probe).is_err() {
-            skipped();
-            return;
+            return Ship::Skipped;
         }
         let Ok(target_est) = tgt_rx.recv() else {
-            skipped();
-            return;
+            return Ship::Skipped;
         };
         if target_est.tokens_saved >= est.tokens_saved {
-            skipped(); // already warm: nothing worth moving
-            return;
+            return Ship::AlreadyWarm; // nothing worth moving
         }
         let (exp_tx, exp_rx) = mpsc::channel();
         let export = Cmd::Export {
@@ -1241,23 +1407,199 @@ impl Server {
             reply: exp_tx,
         };
         if self.shards[home].send(export).is_err() {
-            skipped();
-            return;
+            return Ship::Skipped;
         }
         let Ok(payload) = exp_rx.recv() else {
-            skipped();
-            return;
+            return Ship::Skipped;
         };
+        let bytes = payload.bytes();
         // the home shard may have evicted between probe and export
         if payload.pages() == 0
             || self.shards[target]
                 .send(Cmd::Import(Box::new(payload)))
                 .is_err()
         {
-            skipped();
-            return;
+            return Ship::Skipped;
         }
-        self.counters.migrations.fetch_add(1, Ordering::Relaxed);
+        Ship::Shipped(bytes)
+    }
+
+    /// Route one submission, preferring verified replica holders over
+    /// cold spill targets. With replication off this is exactly
+    /// `Router::place_spill` plus the default migrate action. With it
+    /// on: feed the read-mostly detector (a parent-context extend bumps
+    /// the prefix's epoch and drops every replica), ask the router for a
+    /// holder-preferring placement, and verify-on-use — a holder that no
+    /// longer probes warm (evicted or demoted since registration) is
+    /// unregistered on the spot and the spill re-placed, so a stale
+    /// entry never routes a fork to a shard that would cold-prefill it.
+    fn route_with_replicas(
+        &self,
+        tokens: &[u32],
+        tag: u64,
+        adapter: u32,
+        depths: &[usize],
+    ) -> (Placement, SpillAction) {
+        let Some(rep) = &self.replication else {
+            return (self.router.place_spill(tokens, tag, depths), SpillAction::Migrate);
+        };
+        let fp = self.router.fingerprint(tokens, tag);
+        let holders = {
+            let mut tracker = rep.lock().unwrap_or_else(|e| e.into_inner());
+            if tracker.detector.observe(fp, tokens.len()) {
+                // the parent context grew: every replica of the shorter
+                // prefix is stale — invalidate before routing
+                let cleared = tracker.map.invalidate(fp);
+                if cleared > 0 {
+                    self.rep_counters
+                        .replica_invalidations
+                        .fetch_add(cleared as u64, Ordering::Relaxed);
+                }
+                tracker.misses.remove(&fp);
+            }
+            tracker.map.holders(fp)
+        };
+        let placement = self.router.place_spill_replicated(tokens, tag, depths, &holders);
+        if placement.spilled_from.is_none() {
+            return (placement, SpillAction::Migrate);
+        }
+        if holders.contains(&placement.shard) {
+            // verify-on-use: registration is advisory, the probe is truth
+            if self.probe_tokens_saved(placement.shard, adapter, tokens) > 0 {
+                self.rep_counters.replica_hits.fetch_add(1, Ordering::Relaxed);
+                return (placement, SpillAction::ReplicaHit);
+            }
+            {
+                let mut tracker = rep.lock().unwrap_or_else(|e| e.into_inner());
+                tracker.map.unregister(fp, placement.shard);
+            }
+            self.rep_counters
+                .replica_invalidations
+                .fetch_add(1, Ordering::Relaxed);
+            // the stale holder may have been the only reason this shard
+            // won: re-place without the replica preference
+            let placement = self.router.place_spill(tokens, tag, depths);
+            let action = self.tally_spill_miss(rep, fp, placement.shard);
+            return (placement, action);
+        }
+        let action = self.tally_spill_miss(rep, fp, placement.shard);
+        (placement, action)
+    }
+
+    /// Record one cold spill-miss of `fp` on `shard` and decide whether
+    /// it has earned a replica: the `replicate_miss_threshold`-th miss on
+    /// the same shard of a prefix the detector calls read-mostly
+    /// triggers the one-to-many path (and resets that shard's tally so a
+    /// failed plant retries after another full round of misses).
+    fn tally_spill_miss(&self, rep: &Mutex<ReplicaTracker>, fp: u64, shard: usize) -> SpillAction {
+        let mut guard = rep.lock().unwrap_or_else(|e| e.into_inner());
+        let tracker = &mut *guard;
+        if tracker.misses.len() >= MAX_SPILL_ATTR && !tracker.misses.contains_key(&fp) {
+            tracker.misses.clear();
+        }
+        let n = tracker
+            .misses
+            .entry(fp)
+            .or_default()
+            .entry(shard)
+            .or_insert(0);
+        *n += 1;
+        if *n >= self.cfg.replicate_miss_threshold && tracker.detector.is_read_mostly(fp) {
+            if let Some(per_shard) = tracker.misses.get_mut(&fp) {
+                per_shard.remove(&shard);
+            }
+            return SpillAction::Replicate;
+        }
+        SpillAction::Migrate
+    }
+
+    /// How many prompt tokens the shard would serve from cache for this
+    /// prompt (the same match window the migration pipeline uses). 0 on
+    /// a dead shard — which correctly reads as "not a replica holder".
+    fn probe_tokens_saved(&self, shard: usize, adapter: u32, tokens: &[u32]) -> usize {
+        if tokens.len() < 2 {
+            return 0;
+        }
+        let (tx, rx) = mpsc::channel();
+        let probe = Cmd::Probe {
+            adapter,
+            tokens: tokens[..tokens.len() - 1].to_vec(),
+            reply: tx,
+        };
+        if self.shards[shard].send(probe).is_err() {
+            return 0;
+        }
+        rx.recv_timeout(Duration::from_secs(5))
+            .map_or(0, |est| est.tokens_saved)
+    }
+
+    /// Attribute one cold spill to its prefix fingerprint for the bench
+    /// report (`router.spills_by_prefix`). Replica hits are deliberately
+    /// not attributed: with replication on, a hot prefix's count stops
+    /// growing once replicas serve its spills — exactly the signal the
+    /// A/B gate checks.
+    fn attribute_spill(&self, fp: u64, tag: u64) {
+        let mut attr = self.spill_attr.lock().unwrap_or_else(|e| e.into_inner());
+        if attr.len() >= MAX_SPILL_ATTR && !attr.contains_key(&fp) {
+            attr.clear();
+        }
+        attr.entry(fp).or_insert((tag, 0)).1 += 1;
+    }
+
+    /// Register `shards` as verified holders of `fp` in the replica map
+    /// (no-op with replication off; the map itself drops dead shards).
+    fn register_replica(&self, fp: u64, shards: &[usize]) {
+        let Some(rep) = &self.replication else { return };
+        let mut tracker = rep.lock().unwrap_or_else(|e| e.into_inner());
+        for &s in shards {
+            tracker.map.register(fp, s);
+        }
+    }
+
+    /// Plant a durable replica of a hot read-mostly prefix on `target`:
+    /// first ask the target to promote any demoted copy of the prefix
+    /// back to its device tier (`Cmd::ReplicaWarm` — free if the pages
+    /// merely aged out to host), then run the shipping pipeline for
+    /// whatever is still missing. Every outcome that proves residency
+    /// registers the holder and counts as a replication event; a plant
+    /// is zero-copy when the target was already warm (an earlier
+    /// migration or the promotion above), so `replica_bytes` counts
+    /// only actual copy traffic.
+    fn replicate_to(&self, fp: u64, home: usize, target: usize, adapter: u32, tokens: &[u32]) {
+        let (tx, rx) = mpsc::channel();
+        let warm = Cmd::ReplicaWarm {
+            adapter,
+            tokens: tokens.to_vec(),
+            reply: tx,
+        };
+        let promoted = if self.shards[target].send(warm).is_ok() {
+            rx.recv_timeout(Duration::from_secs(5)).unwrap_or(0)
+        } else {
+            0
+        };
+        let planted = match self.ship_pages(home, target, adapter, tokens) {
+            Ship::Shipped(bytes) => {
+                self.rep_counters
+                    .replica_bytes
+                    .fetch_add(bytes as u64, Ordering::Relaxed);
+                self.register_replica(fp, &[home, target]);
+                true
+            }
+            // the target already covered the home's pages (an earlier
+            // migration, or the promotion above): zero-copy plant
+            Ship::AlreadyWarm => {
+                self.register_replica(fp, &[home, target]);
+                true
+            }
+            Ship::Skipped if promoted > 0 => {
+                self.register_replica(fp, &[target]);
+                true
+            }
+            Ship::Skipped => false,
+        };
+        if planted {
+            self.rep_counters.replications.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     pub fn generate_outcome(
@@ -1325,6 +1667,23 @@ impl Server {
     /// `GET /metrics`).
     pub fn router_stats(&self) -> Json {
         let c = &self.counters;
+        // cold-spill attribution, keyed by prefix fingerprint (hex) so
+        // bench reports can split hot-context spills from the long tail
+        let by_prefix: std::collections::BTreeMap<String, Json> = self
+            .spill_attr
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .iter()
+            .map(|(fp, &(tag, spills))| {
+                (
+                    format!("{fp:016x}"),
+                    Json::obj(vec![
+                        ("tag", Json::num(tag as f64)),
+                        ("spills", Json::num(spills as f64)),
+                    ]),
+                )
+            })
+            .collect();
         Json::obj(vec![
             ("policy", Json::str(self.cfg.route_policy.name())),
             ("migrate", Json::Bool(self.migration.enabled)),
@@ -1340,6 +1699,42 @@ impl Server {
             (
                 "rerouted",
                 Json::num(c.rerouted.load(Ordering::Relaxed) as f64),
+            ),
+            ("spills_by_prefix", Json::Obj(by_prefix)),
+        ])
+    }
+
+    /// Hot-context replication knobs and outcome counters (the
+    /// `replication` object of `GET /metrics`).
+    pub fn replication_stats(&self) -> Json {
+        let tracked = self.replication.as_ref().map_or(0, |rep| {
+            rep.lock().unwrap_or_else(|e| e.into_inner()).map.len()
+        });
+        let c = &self.rep_counters;
+        Json::obj(vec![
+            ("enabled", Json::Bool(self.replication.is_some())),
+            (
+                "miss_threshold",
+                Json::num(self.cfg.replicate_miss_threshold as f64),
+            ),
+            ("window", Json::num(self.cfg.replicate_window as f64)),
+            ("min_forks", Json::num(self.cfg.replicate_min_forks as f64)),
+            ("tracked_prefixes", Json::num(tracked as f64)),
+            (
+                "replications",
+                Json::num(c.replications.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "replica_hits",
+                Json::num(c.replica_hits.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "replica_invalidations",
+                Json::num(c.replica_invalidations.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "replica_bytes",
+                Json::num(c.replica_bytes.load(Ordering::Relaxed) as f64),
             ),
         ])
     }
@@ -1390,6 +1785,21 @@ impl Server {
             // treated as dead *for this tick* only (its budget freezes)
             obs.push(rx.recv_timeout(Duration::from_secs(5)).ok());
         }
+        // replica overlay: engines report hot_replicas = 0 (they have no
+        // pool-wide view), so fill in each shard's holder count from the
+        // replica map before the planner weighs donors and borrowers
+        if let Some(rep) = &self.replication {
+            let counts = rep
+                .lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .map
+                .holder_counts();
+            for (o, &c) in obs.iter_mut().zip(&counts) {
+                if let Some(p) = o {
+                    p.hot_replicas = c;
+                }
+            }
+        }
         let (moves, moved) = reb.lock().unwrap_or_else(|e| e.into_inner()).tick(&obs);
         for &(i, bytes) in &moves {
             if self.shards[i].send(Cmd::Budget(bytes)).is_err() {
@@ -1400,7 +1810,7 @@ impl Server {
                 // planner, exactly like any other dead shard's. A dead
                 // engine allocates nothing, so live shards' enforced
                 // budgets never exceed the planner's conserved total.
-                self.shards[i].depth.store(usize::MAX, Ordering::Relaxed);
+                self.poison_shard(i);
             }
         }
         if moved > 0 {
@@ -1533,7 +1943,7 @@ impl Server {
                 guard.insert(shard, tier);
             }
         }
-        handle.depth.store(usize::MAX, Ordering::Relaxed);
+        self.poison_shard(shard);
         alive
     }
 
@@ -1580,6 +1990,15 @@ impl Server {
         // un-poison only after the fresh sender is installed: a racing
         // submit must never see depth 0 with the dead channel in place
         handle.depth.store(0, Ordering::Relaxed);
+        // the restarted shard is routable again but holds no replicas:
+        // its checkpoint restore is best-effort and verify-on-use would
+        // catch stragglers anyway — start it with a clean slate
+        if let Some(rep) = &self.replication {
+            rep.lock()
+                .unwrap_or_else(|e| e.into_inner())
+                .map
+                .shard_restarted(shard);
+        }
         Ok(thread)
     }
 
@@ -1948,6 +2367,7 @@ impl Server {
                         .and_then(|&p| self.router.prefetch_home(&tokens, dag.nodes[p].tag));
                     let lease = self.lease_seq.fetch_add(1, Ordering::Relaxed);
                     let adapter = dag.nodes[i].adapter;
+                    let route_tag = dag.nodes[i].tag;
                     dag.nodes[i].lease = Some(IssuedLease {
                         id: lease,
                         shard: target,
@@ -1961,6 +2381,7 @@ impl Server {
                         tokens,
                         target,
                         source,
+                        route_tag,
                     });
                 }
             }
@@ -1990,6 +2411,9 @@ impl Server {
                 self.try_migrate(src, plan.target, plan.adapter, &window);
             }
         }
+        // the fingerprint the step will arrive under — computed before
+        // the Prefetch send moves the tokens
+        let fp = self.router.fingerprint(&plan.tokens, plan.route_tag);
         let (tx, rx) = mpsc::channel();
         let covered = self.shards[plan.target]
             .send(Cmd::Prefetch {
@@ -2003,6 +2427,9 @@ impl Server {
             .unwrap_or(0);
         if covered > 0 {
             self.pf_counters.leases_issued.fetch_add(1, Ordering::Relaxed);
+            // a pinned prefetch is verified residency: feed the replica
+            // map so spills of this prefix can route onto the pin
+            self.register_replica(fp, &[plan.target]);
             return;
         }
         // nothing resident yet (the predecessors may still be
@@ -2120,9 +2547,10 @@ impl Server {
     /// Full observability payload: aggregate + per-shard snapshots + the
     /// active route policy with its spill/migration/reroute counters +
     /// the elastic-budget rebalancer counters + the host-tier compaction
-    /// counters + the cross-step prefetch counters — what `GET /metrics`
-    /// serves. Each shard snapshot carries its live `budget_bytes`;
-    /// across live shards they always sum to the configured pool budget.
+    /// counters + the cross-step prefetch counters + the hot-context
+    /// replication counters — what `GET /metrics` serves. Each shard
+    /// snapshot carries its live `budget_bytes`; across live shards they
+    /// always sum to the configured pool budget.
     pub fn metrics_json(&self) -> anyhow::Result<Json> {
         let per_shard = self.shard_stats()?;
         Ok(Json::obj(vec![
@@ -2132,6 +2560,7 @@ impl Server {
             ("rebalancer", self.rebalancer_stats()),
             ("tier", self.tier_stats()),
             ("prefetch", self.prefetch_stats()),
+            ("replication", self.replication_stats()),
             ("journal", self.journal_stats()),
             ("locks", self.lock_stats()),
             ("per_shard", Json::Arr(per_shard)),
@@ -3384,5 +3813,140 @@ mod tests {
             h.join().unwrap();
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn planted_replica_serves_spills_as_hits_until_the_context_extends() {
+        let scfg = ServerConfig {
+            replicate: true,
+            migrate: true,
+            migration_max_inflight: 8,
+            ..ServerConfig::default()
+        };
+        let engines: Vec<Engine> = (0..2).map(|_| sim_engine(32 << 20, 0)).collect();
+        let (srv, handles) = Server::start_sharded(engines, scfg);
+        const TAG: u64 = 0xF00D;
+        let tokens: Vec<u32> = (1000..1300).collect();
+        let home = srv.router.affinity_shard(&tokens, TAG);
+        let other = 1 - home;
+        let fp = srv.router.fingerprint(&tokens, TAG);
+        // warm the home shard, then plant a replica on the peer
+        srv.generate_tagged(tokens.clone(), 1, 8, TAG).unwrap();
+        srv.replicate_to(fp, home, other, 1, &tokens);
+        let m = srv.replication_stats();
+        assert_eq!(m.at(&["replications"]).as_usize(), Some(1), "{m}");
+        assert!(m.at(&["replica_bytes"]).as_usize().unwrap() > 0, "{m}");
+        // an overloaded home now spills straight onto the holder, and the
+        // verified-warm routing counts as a hit, not a cold miss
+        let mut depths = vec![0usize; 2];
+        depths[home] = 100;
+        let (p, action) = srv.route_with_replicas(&tokens, TAG, 1, &depths);
+        assert_eq!(p.shard, other, "spill must prefer the replica holder");
+        assert_eq!(p.spilled_from, Some(home));
+        assert!(matches!(action, SpillAction::ReplicaHit), "expected a replica hit");
+        let m = srv.replication_stats();
+        assert!(m.at(&["replica_hits"]).as_usize().unwrap() >= 1, "{m}");
+        // the parent context extends past the detector's slack: every
+        // replica of the shorter prefix is invalidated before routing
+        let extended: Vec<u32> = (1000..1340).collect();
+        assert_eq!(srv.router.fingerprint(&extended, TAG), fp);
+        let (_, action) = srv.route_with_replicas(&extended, TAG, 1, &depths);
+        assert!(
+            !matches!(action, SpillAction::ReplicaHit),
+            "a stale replica must not serve the extended context"
+        );
+        let holders = {
+            let rep = srv.replication.as_ref().unwrap();
+            rep.lock().unwrap().map.holders(fp)
+        };
+        assert!(holders.is_empty(), "extend left replicas behind: {holders:?}");
+        let m = srv.replication_stats();
+        assert!(m.at(&["replica_invalidations"]).as_usize().unwrap() >= 2, "{m}");
+        srv.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn demoted_replica_unregisters_on_use_and_promotion_reregisters() {
+        let scfg = ServerConfig {
+            replicate: true,
+            migrate: true,
+            migration_max_inflight: 8,
+            tier: true,
+            tier_compact_ms: 3_600_000,
+            ..ServerConfig::default()
+        };
+        let engines: Vec<Engine> = (0..2).map(|_| tiered_engine()).collect();
+        let (srv, handles) = Server::start_sharded(engines, scfg);
+        const TAG: u64 = 0xBEEF;
+        let tokens: Vec<u32> = (2000..2300).collect();
+        let home = srv.router.affinity_shard(&tokens, TAG);
+        let other = 1 - home;
+        let fp = srv.router.fingerprint(&tokens, TAG);
+        srv.generate_tagged(tokens.clone(), 1, 8, TAG).unwrap();
+        srv.replicate_to(fp, home, other, 1, &tokens);
+        assert_eq!(
+            srv.replication_stats().at(&["replications"]).as_usize(),
+            Some(1)
+        );
+        // shrink the holder's device budget to nothing: every replica
+        // page demotes into its host tier (`evict_demote`)
+        assert!(srv.shards[other].send(Cmd::Budget(1)).is_ok());
+        // verify-on-use: the demoted holder probes cold, so the spill is
+        // NOT treated as a replica hit (which would cold-prefill) and the
+        // stale registration is dropped on the spot
+        let mut depths = vec![0usize; 2];
+        depths[home] = 100;
+        let (p, action) = srv.route_with_replicas(&tokens, TAG, 1, &depths);
+        assert!(p.spilled_from.is_some(), "synthetic overload must spill");
+        assert!(
+            !matches!(action, SpillAction::ReplicaHit),
+            "a demoted replica must not route a fork to a cold-prefilling shard"
+        );
+        let holders = {
+            let rep = srv.replication.as_ref().unwrap();
+            rep.lock().unwrap().map.holders(fp)
+        };
+        assert!(
+            !holders.contains(&other),
+            "stale holder survived verify-on-use: {holders:?}"
+        );
+        assert!(
+            srv.replication_stats()
+                .at(&["replica_invalidations"])
+                .as_usize()
+                .unwrap()
+                >= 1
+        );
+        // restore the budget and re-plant: `Cmd::ReplicaWarm` promotes
+        // the demoted pages back to the device tier (FIFO after the
+        // Budget command), so residency re-registers without a new copy
+        let bytes_before = srv
+            .replication_stats()
+            .at(&["replica_bytes"])
+            .as_usize()
+            .unwrap();
+        assert!(bytes_before > 0, "the first plant shipped no bytes");
+        assert!(srv.shards[other].send(Cmd::Budget(2 << 20)).is_ok());
+        srv.replicate_to(fp, home, other, 1, &tokens);
+        let holders = {
+            let rep = srv.replication.as_ref().unwrap();
+            rep.lock().unwrap().map.holders(fp)
+        };
+        assert!(
+            holders.contains(&other),
+            "promotion did not re-register the holder: {holders:?}"
+        );
+        assert_eq!(
+            srv.replication_stats().at(&["replica_bytes"]).as_usize(),
+            Some(bytes_before),
+            "re-planting a promoted replica must be zero-copy"
+        );
+        srv.shutdown();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

@@ -979,6 +979,28 @@ pub fn run_skewed_workflow_load(
         errors += e;
     }
     let wall_s = t0.elapsed().as_secs_f64().max(1e-9);
+    // per-prefix spill attribution from the router's counters: the
+    // pool-wide `spills` total conflates the hot context with the cold
+    // background, so the replication A/B reads the hot fingerprint's
+    // share (every hot request carries HOT_TAG) from this breakdown
+    let mut spills_by_prefix = Json::Obj(std::collections::BTreeMap::new());
+    let mut hot_prefix_spills = 0.0;
+    if let Ok((200, body)) = crate::server::http_get(addr, "/metrics") {
+        if let Ok(m) = crate::util::json::parse(&body) {
+            let by_prefix = m.at(&["router", "spills_by_prefix"]);
+            if let Json::Obj(map) = by_prefix {
+                hot_prefix_spills = map
+                    .values()
+                    .filter(|e| {
+                        e.at(&["tag"]).as_f64()
+                            == Some(SkewedWorkflowHttpSpec::HOT_TAG as f64)
+                    })
+                    .filter_map(|e| e.at(&["spills"]).as_f64())
+                    .sum();
+                spills_by_prefix = by_prefix.clone();
+            }
+        }
+    }
     Ok(Json::obj(vec![
         ("hot_agents", Json::num(spec.hot_agents as f64)),
         ("cold_workflows", Json::num(spec.cold_workflows as f64)),
@@ -994,6 +1016,8 @@ pub fn run_skewed_workflow_load(
         ("wall_s", Json::num(wall_s)),
         ("throughput_req_per_s", Json::num(ok as f64 / wall_s)),
         ("latency_us", latency.summary().to_json()),
+        ("hot_prefix_spills", Json::num(hot_prefix_spills)),
+        ("spills_by_prefix", spills_by_prefix),
     ]))
 }
 

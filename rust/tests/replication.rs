@@ -1,0 +1,199 @@
+//! Hot-context replication integration: a read-mostly shared prefix that
+//! keeps spilling must stop paying per-spill page copies. One hot
+//! workflow bursts parallel agents (shared context, shared adapter, one
+//! tag) at an 8-shard pool in sequential waves. During warmup the spills
+//! migrate (PR 3) and tally spill-misses; the repeat miss of the hot
+//! read-mostly prefix on a shard plants a durable replica there, and
+//! later waves route their spills onto verified holders as `replica_hits`
+//! — so the per-wave migration count collapses after warmup while the
+//! pool's matched-page rate stays within 10% of the same-seed
+//! single-shard ceiling (where nothing ever spills).
+
+use std::sync::Arc;
+
+use forkkv::config::{CacheConfig, CachePolicy, EngineConfig, ServerConfig};
+use forkkv::engine::Engine;
+use forkkv::exec::SimExecutor;
+use forkkv::server::Server;
+use forkkv::util::json::Json;
+use forkkv::util::tokenizer::HashTokenizer;
+use forkkv::workload::SkewedWorkflowHttpSpec;
+
+const SHARDS: usize = 8;
+const PAGE_TOKENS: usize = 16;
+const MAX_NEW: usize = 32;
+const HOT_AGENTS: usize = 8;
+const STAGGER_MS: u64 = 5;
+const WAVES: usize = 3;
+
+/// Shard pool with every supervisor parked (no rebalance, no prefetch,
+/// no tier, no journal): the only moving parts are routing, migration
+/// and — when armed — replication, so the per-wave counters below are
+/// attributable.
+fn pool(shards: usize, replicate: bool) -> (Arc<Server>, Vec<std::thread::JoinHandle<()>>) {
+    let base = EngineConfig {
+        policy: CachePolicy::Disaggregated,
+        cache: CacheConfig {
+            page_tokens: PAGE_TOKENS,
+            budget_bytes: 128 << 20,
+            capacity_bytes: 0,
+        },
+        ..EngineConfig::default()
+    };
+    let engines: Vec<Engine> = (0..shards)
+        .map(|i| {
+            // wall-paced sim: requests overlap in wall time, so the
+            // router's depth signal sees the burst and actually spills
+            let sim = SimExecutor::new("llama3-8b-sim", vec![1, 2, 4, 8])
+                .unwrap()
+                .with_wall_pace_us(2_500);
+            Engine::new(base.shard_slice(i, shards), Box::new(sim)).unwrap()
+        })
+        .collect();
+    let scfg = ServerConfig {
+        migrate: true,
+        migration_max_inflight: 8,
+        replicate,
+        // the detector needs a handful of fork observations before it
+        // trusts a prefix; the primer plus the first wave provide them
+        replicate_min_forks: 4,
+        ..ServerConfig::default()
+    };
+    Server::start_sharded(engines, scfg)
+}
+
+fn spec() -> SkewedWorkflowHttpSpec {
+    SkewedWorkflowHttpSpec {
+        hot_agents: HOT_AGENTS,
+        stagger_ms: STAGGER_MS,
+        cold_workflows: 0,
+        max_new: MAX_NEW,
+        ..SkewedWorkflowHttpSpec::default()
+    }
+}
+
+/// One staggered hot burst (the same per-agent prompts every wave).
+fn run_wave(srv: &Arc<Server>, tok: &HashTokenizer, spec: &SkewedWorkflowHttpSpec) {
+    let adapter = SkewedWorkflowHttpSpec::HOT_ADAPTER as u32;
+    let mut clients = Vec::new();
+    for a in 0..spec.hot_agents {
+        let srv = srv.clone();
+        let tokens = tok.encode(&spec.hot_prompt(a));
+        clients.push(std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(a as u64 * STAGGER_MS));
+            srv.generate_tagged(tokens, adapter, MAX_NEW, SkewedWorkflowHttpSpec::HOT_TAG)
+                .unwrap();
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+}
+
+fn counter(j: &Json, path: &[&str]) -> f64 {
+    j.at(path).as_f64().unwrap_or(0.0)
+}
+
+/// Aggregate matched-page rate of a full same-seed run; the single-shard
+/// variant is the sharing ceiling (nothing ever spills or recomputes the
+/// shared context).
+fn matched_rate(shards: usize, replicate: bool) -> f64 {
+    let (srv, handles) = pool(shards, replicate);
+    let spec = spec();
+    let tok = HashTokenizer::new(2048); // sim model vocab
+    let adapter = SkewedWorkflowHttpSpec::HOT_ADAPTER as u32;
+    let primer = tok.encode(&spec.hot_prompt(spec.hot_agents));
+    srv.generate_tagged(primer, adapter, MAX_NEW, SkewedWorkflowHttpSpec::HOT_TAG)
+        .unwrap();
+    for _ in 0..WAVES {
+        run_wave(&srv, &tok, &spec);
+    }
+    let m = srv.metrics_json().unwrap();
+    assert_eq!(
+        m.at(&["aggregate", "completed"]).as_usize().unwrap(),
+        1 + WAVES * HOT_AGENTS,
+        "shards={shards}: every request must complete"
+    );
+    let rate = counter(&m, &["aggregate", "matched_rate"]);
+    srv.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+    rate
+}
+
+#[test]
+fn replication_absorbs_hot_spills_after_warmup() {
+    let (srv, handles) = pool(SHARDS, true);
+    let spec = spec();
+    let tok = HashTokenizer::new(2048); // sim model vocab
+    let adapter = SkewedWorkflowHttpSpec::HOT_ADAPTER as u32;
+
+    // primer: runs alone so the home shard has the hot context published
+    // (both cache components) before the burst can spill anyone
+    let primer = tok.encode(&spec.hot_prompt(spec.hot_agents));
+    srv.generate_tagged(primer, adapter, MAX_NEW, SkewedWorkflowHttpSpec::HOT_TAG)
+        .unwrap();
+
+    // drive the waves, snapshotting the migration/hit counters between
+    // them: warmup waves migrate and plant, later waves hit replicas
+    let mut migrations = Vec::new();
+    let mut hits = Vec::new();
+    for _ in 0..WAVES {
+        let m0 = counter(&srv.router_stats(), &["migrations"]);
+        let h0 = counter(&srv.replication_stats(), &["replica_hits"]);
+        run_wave(&srv, &tok, &spec);
+        migrations.push(counter(&srv.router_stats(), &["migrations"]) - m0);
+        hits.push(counter(&srv.replication_stats(), &["replica_hits"]) - h0);
+    }
+
+    let rep = srv.replication_stats();
+    assert_eq!(rep.at(&["enabled"]).as_bool(), Some(true));
+    assert!(
+        counter(&rep, &["replications"]) > 0.0,
+        "the hot prefix never earned a replica: {rep}"
+    );
+    assert!(
+        counter(&rep, &["replica_hits"]) > 0.0,
+        "no spill was ever served by a replica holder: {rep}"
+    );
+    let router = srv.router_stats();
+    assert!(
+        counter(&router, &["spills"]) > 0.0,
+        "the load failed to force a spill: {router}"
+    );
+    // warmup actually paid migrations...
+    let warmup: f64 = migrations[..WAVES - 1].iter().sum();
+    assert!(
+        warmup > 0.0,
+        "warmup waves never migrated (spills missing?): {migrations:?}"
+    );
+    // ...and the final wave pays (almost) none: its hot spills route to
+    // the replicas planted during warmup instead of re-copying pages
+    assert!(
+        migrations[WAVES - 1] < warmup,
+        "hot-context migrations did not collapse after warmup \
+         (per-wave migrations {migrations:?}, per-wave hits {hits:?})"
+    );
+    assert!(
+        hits[WAVES - 1] > 0.0,
+        "the post-warmup wave hit no replicas \
+         (per-wave migrations {migrations:?}, per-wave hits {hits:?})"
+    );
+
+    let multi = counter(&srv.metrics_json().unwrap(), &["aggregate", "matched_rate"]);
+    srv.shutdown();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    // the replicated pool shares like a single shard: within 10% of the
+    // same-seed single-shard ceiling, where no request ever spills
+    let single = matched_rate(1, true);
+    assert!(single > 0.0, "single-shard ceiling measured nothing");
+    assert!(
+        multi >= single * 0.9,
+        "replicated matched rate {multi:.3} not within 10% of the \
+         single-shard ceiling {single:.3}"
+    );
+}
