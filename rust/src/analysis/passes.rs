@@ -1,0 +1,832 @@
+//! The six invariant passes behind `forkkv analyze`.
+//!
+//! Every pass is a pure function over lexed source text (plus, for the
+//! drift passes, the companion artifacts it cross-checks against), so
+//! the fixture tests in `tests/analyze.rs` can drive each one against a
+//! single bad file without touching the real tree. The driver in
+//! [`super`] maps them over the repo's hot-path files.
+//!
+//! Suppression: a `// analyze:allow(<pass>) reason` comment (see
+//! [`super::scan::allow_map`]) marks a finding as reviewed; allowed
+//! findings are still reported (with `allowed: true`) but do not fail
+//! the run.
+
+use super::scan::{self, allow_map, lex, struct_fields, test_mask, Lexed};
+use super::Finding;
+
+/// Build a finding for `pass` at 0-based `line` of `file`.
+fn finding(pass: &'static str, file: &str, line: usize, msg: String, allowed: bool) -> Finding {
+    Finding {
+        pass,
+        file: file.to_string(),
+        line: line + 1,
+        message: msg,
+        allowed,
+    }
+}
+
+fn has_allow(map: &[Vec<String>], line: usize, pass: &str) -> bool {
+    map.get(line).is_some_and(|v| v.iter().any(|s| s == pass))
+}
+
+// ------------------------------------------------------------------
+// pass 1: panic-path
+// ------------------------------------------------------------------
+
+/// Panicking macros flagged on the hot path (left word boundary and a
+/// following `(` are required, so `log_panic!`-style names don't trip).
+const PANIC_MACROS: [&str; 4] = ["panic!", "unreachable!", "todo!", "unimplemented!"];
+
+/// `panic-path`: no `unwrap()`, `expect(…)`, panicking macro, or
+/// unchecked `[index]` expression in non-test code of a hot-path file.
+///
+/// `assert!`-family contract checks are deliberately *not* flagged:
+/// an assertion states an invariant, an unwrap hides one.
+pub fn panic_path(path: &str, src: &str) -> Vec<Finding> {
+    let lx = lex(src);
+    let tmask = test_mask(&lx.code);
+    let amap = allow_map(&lx);
+    let mut out = Vec::new();
+    for (ln, text) in lx.code.iter().enumerate() {
+        if tmask[ln] {
+            continue;
+        }
+        let allowed = has_allow(&amap, ln, "panic_path");
+        if text.contains(".unwrap()") {
+            out.push(finding("panic_path", path, ln, "panicking call: .unwrap()".into(), allowed));
+        }
+        if text.contains(".expect(") {
+            out.push(finding("panic_path", path, ln, "panicking call: .expect(".into(), allowed));
+        }
+        for mac in PANIC_MACROS {
+            for at in scan::find_word_starts(text, mac) {
+                let after = text[at + mac.len()..].trim_start();
+                if after.starts_with('(') {
+                    out.push(finding(
+                        "panic_path",
+                        path,
+                        ln,
+                        format!("panicking call: {mac}("),
+                        allowed,
+                    ));
+                }
+            }
+        }
+        for inner in index_expressions(text) {
+            out.push(finding(
+                "panic_path",
+                path,
+                ln,
+                format!("unchecked indexing [{inner}]"),
+                allowed,
+            ));
+        }
+    }
+    out
+}
+
+/// Extract `expr[index]` subscript interiors worth flagging: the char
+/// before `[` must be a word char / `)` / `]` (so slice types, array
+/// literals, and attributes don't match), the interior must contain a
+/// letter (so `[0]` literals pass), and ranges (`..`) and array-type
+/// notation (`;`) are skipped.
+fn index_expressions(line: &str) -> Vec<String> {
+    let chars: Vec<char> = line.chars().collect();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < chars.len() {
+        if chars[i] != '[' {
+            i += 1;
+            continue;
+        }
+        let prev_ok = i > 0
+            && (chars[i - 1].is_ascii_alphanumeric()
+                || chars[i - 1] == '_'
+                || chars[i - 1] == ')'
+                || chars[i - 1] == ']');
+        if !prev_ok {
+            i += 1;
+            continue;
+        }
+        // innermost-bracket scan: abandon on a nested `[`
+        let mut j = i + 1;
+        let mut inner = String::new();
+        let mut closed = false;
+        while j < chars.len() {
+            match chars[j] {
+                ']' => {
+                    closed = true;
+                    break;
+                }
+                '[' => break,
+                c => inner.push(c),
+            }
+            j += 1;
+        }
+        if !closed {
+            i += 1;
+            continue;
+        }
+        i = j + 1;
+        let inner = inner.trim().to_string();
+        if inner.is_empty() || inner.contains("..") || inner.contains(';') {
+            continue;
+        }
+        if !inner.chars().any(|c| c.is_ascii_alphabetic()) {
+            continue;
+        }
+        let numeric = {
+            let stem = inner.strip_suffix("usize").unwrap_or(&inner);
+            !stem.is_empty() && stem.chars().all(|c| c.is_ascii_digit() || c == '_')
+        };
+        if numeric {
+            continue;
+        }
+        out.push(inner);
+    }
+    out
+}
+
+// ------------------------------------------------------------------
+// pass 2: pair discipline (+ Cmd coverage)
+// ------------------------------------------------------------------
+
+/// Acquire → release vocabularies the pair pass knows about.
+const PAIRS: [(&str, &[&str]); 3] = [
+    ("pin_prefix(", &["unpin_path("]),
+    ("match_lease(", &["release_path("]),
+    ("prefetch_pin(", &["prefetch_release(", "PrefetchRelease"]),
+];
+
+/// `pair-discipline`, per-file half: every `pin_prefix` /
+/// `match_lease` / `prefetch_pin` call site must be lexically paired
+/// with its release somewhere in the same (non-test) file — a file
+/// that acquires but can never release is a leak by construction.
+pub fn pair_discipline(path: &str, src: &str) -> Vec<Finding> {
+    let lx = lex(src);
+    let tmask = test_mask(&lx.code);
+    let amap = allow_map(&lx);
+    let nontest: Vec<(usize, &String)> = lx
+        .code
+        .iter()
+        .enumerate()
+        .filter(|(ln, _)| !tmask[*ln])
+        .collect();
+    let lines: Vec<&str> = nontest.iter().map(|(_, t)| t.as_str()).collect();
+    let blob = lines.join("\n");
+    let mut out = Vec::new();
+    for (acquire, releases) in PAIRS {
+        if !blob.contains(acquire) {
+            continue;
+        }
+        let stem = acquire.trim_end_matches('(');
+        let call_lines: Vec<usize> = nontest
+            .iter()
+            .filter(|(_, t)| t.contains(acquire) && !is_fn_def_of(t, stem))
+            .map(|(ln, _)| *ln)
+            .collect();
+        if call_lines.is_empty() {
+            continue;
+        }
+        if releases.iter().any(|r| blob.contains(r)) {
+            continue;
+        }
+        for ln in call_lines {
+            let allowed = has_allow(&amap, ln, "pair_discipline");
+            out.push(finding(
+                "pair_discipline",
+                path,
+                ln,
+                format!(
+                    "{stem} call without any {} in file",
+                    releases[0].trim_end_matches('(')
+                ),
+                allowed,
+            ));
+        }
+    }
+    out
+}
+
+/// Does this line *define* a function whose name ends with `stem`
+/// (rather than calling it)?
+fn is_fn_def_of(line: &str, stem: &str) -> bool {
+    let mut rest = line;
+    while let Some(p) = rest.find("fn ") {
+        let at_boundary = rest[..p]
+            .chars()
+            .next_back()
+            .map(|c| !(c.is_ascii_alphanumeric() || c == '_'))
+            .unwrap_or(true);
+        let after = rest[p + 3..].trim_start();
+        let name: String = after
+            .chars()
+            .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+            .collect();
+        if at_boundary && name.ends_with(stem) {
+            return true;
+        }
+        rest = &rest[p + 3..];
+    }
+    false
+}
+
+/// `pair-discipline`, Cmd half: every variant of the server's `Cmd`
+/// enum must be *handled* somewhere outside the enum declaration (a
+/// variant nobody matches is a shard-protocol message that would be
+/// silently dropped).
+pub fn cmd_coverage(path: &str, src: &str) -> Vec<Finding> {
+    let lx = lex(src);
+    let tmask = test_mask(&lx.code);
+    let mut variants: Vec<(String, usize)> = Vec::new();
+    let mut enum_start: Option<usize> = None;
+    let mut enum_end = 0usize;
+    let mut depth: i64 = 0;
+    for (ln, t) in lx.code.iter().enumerate() {
+        match enum_start {
+            None => {
+                let longer_name = t
+                    .split("enum Cmd")
+                    .nth(1)
+                    .is_some_and(|r| r.starts_with(|c: char| c.is_ascii_alphanumeric() || c == '_'));
+                if t.contains("enum Cmd") && !longer_name {
+                    enum_start = Some(ln);
+                    depth = delta(t);
+                }
+            }
+            Some(_) => {
+                depth += delta(t);
+                let head: String = t
+                    .trim_start()
+                    .chars()
+                    .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                    .collect();
+                if depth >= 1 && head.starts_with(|c: char| c.is_ascii_uppercase()) {
+                    variants.push((head, ln));
+                }
+                if depth <= 0 {
+                    enum_end = ln;
+                    break;
+                }
+            }
+        }
+    }
+    let Some(start) = enum_start else { return Vec::new() };
+    let body: String = lx
+        .code
+        .iter()
+        .enumerate()
+        .filter(|(ln, _)| !tmask[*ln] && !(start <= *ln && *ln <= enum_end))
+        .map(|(_, t)| t.as_str())
+        .collect::<Vec<_>>()
+        .join("\n");
+    let mut out = Vec::new();
+    for (v, ln) in variants {
+        if !body.contains(&format!("Cmd::{v}")) {
+            out.push(finding(
+                "pair_discipline",
+                path,
+                ln,
+                format!("Cmd::{v} not handled outside the enum declaration"),
+                false,
+            ));
+        }
+    }
+    out
+}
+
+fn delta(line: &str) -> i64 {
+    let mut d = 0i64;
+    for c in line.chars() {
+        if c == '{' {
+            d += 1;
+        } else if c == '}' {
+            d -= 1;
+        }
+    }
+    d
+}
+
+// ------------------------------------------------------------------
+// pass 3: lock order
+// ------------------------------------------------------------------
+
+/// The named pool-wide locks the order pass tracks, and the call
+/// shapes that acquire them in `server/mod.rs`.
+fn lock_hits(line: &str) -> Vec<&'static str> {
+    let mut hits = Vec::new();
+    if line.contains("tx_lock.read(") || line.contains("tx_lock.write(") {
+        hits.push("shard_tx");
+    }
+    if line.contains("salvaged_lock.lock(") {
+        hits.push("salvaged");
+    }
+    const JOURNAL_CALLS: [&str; 10] = [
+        "journal.append_submit(",
+        "journal.append_outcome(",
+        "journal.claim(",
+        "journal.claim_shard(",
+        "journal.claim_all(",
+        "journal.pending_len(",
+        "journal.stats(",
+        "journal.sync(",
+        "journal.maybe_sync(",
+        "journal.lock_stat(",
+    ];
+    if JOURNAL_CALLS.iter().any(|c| line.contains(c)) {
+        hits.push("journal");
+    }
+    if line.contains("outcomes_lock.lock(") {
+        hits.push("outcomes");
+    }
+    let rep_hit = !scan::find_word_starts(line, "rep.lock()").is_empty()
+        || line
+            .find("replication")
+            .is_some_and(|p| line[p..].contains(".lock("));
+    if rep_hit {
+        hits.push("replicas");
+    }
+    hits
+}
+
+/// `lock-order`: extract nested acquisition scopes over the named
+/// pool locks and check them against the `// analyze:lock-order:`
+/// declaration (and for cycles). A `let`-bound guard is held until its
+/// enclosing block closes; a temporary guard dies at its statement's
+/// `;`. Edges are (held → acquired) pairs observed while another lock
+/// is live.
+pub fn lock_order(path: &str, src: &str) -> Vec<Finding> {
+    let lx = lex(src);
+    let tmask = test_mask(&lx.code);
+    // declared order from the annotation comment
+    let mut declared: Option<Vec<String>> = None;
+    for text in &lx.comments {
+        if let Some(p) = text.find("analyze:lock-order:") {
+            let rest = &text[p + "analyze:lock-order:".len()..];
+            let spec: String = rest
+                .chars()
+                .take_while(|c| {
+                    c.is_ascii_alphanumeric() || *c == '_' || *c == '<' || c.is_whitespace()
+                })
+                .collect();
+            declared = Some(spec.split('<').map(|s| s.trim().to_string()).collect());
+        }
+    }
+    // nested-acquisition edges
+    let mut edges: Vec<(&'static str, &'static str, usize)> = Vec::new();
+    // (lock, Some(close-at-depth) for let-guards | None for temporaries)
+    let mut held: Vec<(&'static str, Option<i64>)> = Vec::new();
+    let mut depth: i64 = 0;
+    for (ln, t) in lx.code.iter().enumerate() {
+        if tmask[ln] {
+            continue;
+        }
+        for name in lock_hits(t) {
+            for &(h, _) in &held {
+                if h != name && !edges.iter().any(|&(a, b, _)| a == h && b == name) {
+                    edges.push((h, name, ln));
+                }
+            }
+            let is_let = !scan::find_word_starts(t, "let ").is_empty()
+                || t.trim_start().starts_with("let ");
+            held.push((name, if is_let { Some(depth) } else { None }));
+        }
+        if t.contains(';') {
+            held.retain(|h| h.1.is_some());
+        }
+        for c in t.chars() {
+            if c == '{' {
+                depth += 1;
+            } else if c == '}' {
+                depth -= 1;
+                held.retain(|h| match h.1 {
+                    None => true,
+                    Some(close) => close < depth + 1,
+                });
+            }
+        }
+    }
+    let mut out = Vec::new();
+    if has_cycle(&edges) {
+        let msg = "cycle in lock acquisition order graph".to_string();
+        out.push(finding("lock_order", path, 0, msg, false));
+    }
+    match declared {
+        Some(order) => {
+            let rank = |n: &str| order.iter().position(|o| o == n);
+            for &(a, b, ln) in &edges {
+                if let (Some(ra), Some(rb)) = (rank(a), rank(b)) {
+                    if ra > rb {
+                        out.push(finding(
+                            "lock_order",
+                            path,
+                            ln,
+                            format!("acquisition {a} -> {b} contradicts declared order"),
+                            false,
+                        ));
+                    }
+                }
+            }
+        }
+        None => {
+            out.push(finding(
+                "lock_order",
+                path,
+                0,
+                "no analyze:lock-order declaration found".into(),
+                false,
+            ));
+        }
+    }
+    out
+}
+
+fn has_cycle(edges: &[(&'static str, &'static str, usize)]) -> bool {
+    let nodes: Vec<&str> = {
+        let mut v: Vec<&str> = Vec::new();
+        for &(a, b, _) in edges {
+            if !v.contains(&a) {
+                v.push(a);
+            }
+            if !v.contains(&b) {
+                v.push(b);
+            }
+        }
+        v
+    };
+    // DFS three-color over a tiny graph
+    fn dfs(
+        u: &str,
+        edges: &[(&'static str, &'static str, usize)],
+        grey: &mut Vec<String>,
+        black: &mut Vec<String>,
+    ) -> bool {
+        grey.push(u.to_string());
+        for &(a, b, _) in edges {
+            if a != u {
+                continue;
+            }
+            if grey.iter().any(|g| g == b) {
+                return true;
+            }
+            if !black.iter().any(|x| x == b) && dfs(b, edges, grey, black) {
+                return true;
+            }
+        }
+        grey.retain(|g| g != u);
+        black.push(u.to_string());
+        false
+    }
+    let mut grey = Vec::new();
+    let mut black = Vec::new();
+    nodes
+        .iter()
+        .any(|n| !black.iter().any(|x| x == n) && dfs(n, edges, &mut grey, &mut black))
+}
+
+// ------------------------------------------------------------------
+// pass 4: counter drift
+// ------------------------------------------------------------------
+
+/// Numeric field types that count as counters/gauges.
+const NUMERIC: [&str; 6] = ["u64", "usize", "u32", "f64", "u8", "i64"];
+
+/// `counter-drift`: every numeric `EngineMetrics` field must appear in
+/// the pool aggregation (`SUMMED_KEYS` or the `aggregate_stats` body),
+/// in the `to_json` serializer, and as a `docs/METRICS.md` row — a
+/// counter missing any leg silently under-reports.
+pub fn counter_drift(path: &str, metrics_src: &str, metrics_docs: &str) -> Vec<Finding> {
+    let lx = lex(metrics_src);
+    let amap = allow_map(&lx);
+    let summed = summed_keys(metrics_src);
+    let agg = body_between(metrics_src, "fn aggregate_stats", "\n}");
+    let to_json = body_between(metrics_src, "fn to_json", "\n    }");
+    let mut out = Vec::new();
+    for f in struct_fields(&lx.code, "EngineMetrics") {
+        if !NUMERIC.contains(&f.ty.as_str()) {
+            continue;
+        }
+        let allowed = has_allow(&amap, f.line, "counter_drift");
+        let quoted = format!("\"{}\"", f.name);
+        if !summed.iter().any(|k| *k == f.name) && !agg.contains(&f.name) {
+            out.push(finding(
+                "counter_drift",
+                path,
+                f.line,
+                format!("metrics field `{}` missing from aggregate_stats/SUMMED_KEYS", f.name),
+                allowed,
+            ));
+        }
+        if !to_json.contains(&quoted) {
+            out.push(finding(
+                "counter_drift",
+                path,
+                f.line,
+                format!("metrics field `{}` missing from to_json serializer", f.name),
+                allowed,
+            ));
+        }
+        if !metrics_docs.contains(&format!("`{}`", f.name)) {
+            out.push(finding(
+                "counter_drift",
+                path,
+                f.line,
+                format!("metrics field `{}` has no docs/METRICS.md row", f.name),
+                allowed,
+            ));
+        }
+    }
+    out
+}
+
+/// The string keys of the `SUMMED_KEYS` array in raw source.
+fn summed_keys(src: &str) -> Vec<String> {
+    let Some(p) = src.find("SUMMED_KEYS") else { return Vec::new() };
+    // skip past the `=` so the `[&str; N]` type annotation's bracket
+    // can't be mistaken for the array literal
+    let Some(eq) = src[p..].find('=') else { return Vec::new() };
+    let rest = &src[p + eq..];
+    let Some(open) = rest.find('[') else { return Vec::new() };
+    let Some(close) = rest[open..].find(']') else { return Vec::new() };
+    let body = &rest[open..open + close];
+    let mut keys = Vec::new();
+    let mut it = body.split('"');
+    it.next();
+    while let (Some(k), Some(_)) = (it.next(), it.next()) {
+        keys.push(k.to_string());
+    }
+    keys
+}
+
+/// The raw-source span from the first occurrence of `start` to the
+/// next occurrence of `end` (inclusive of neither bound's tail).
+fn body_between(src: &str, start: &str, end: &str) -> String {
+    let Some(p) = src.find(start) else { return String::new() };
+    let rest = &src[p..];
+    match rest.find(end) {
+        Some(q) => rest[..q].to_string(),
+        None => rest.to_string(),
+    }
+}
+
+// ------------------------------------------------------------------
+// pass 5: knob drift
+// ------------------------------------------------------------------
+
+/// Config-field → serving-surface aliases: the JSON key / CLI flag /
+/// README spelling when it differs from the field name (unit-scaled
+/// knobs like `budget_bytes` ↔ `budget_mb`).
+const KNOB_ALIASES: [(&str, &[&str]); 13] = [
+    ("route_policy", &["route"]),
+    ("max_body_bytes", &["max_body_kb", "max-body-kb"]),
+    ("migration_bandwidth_bytes_per_s", &["migrate_gbps", "migrate-gbps"]),
+    ("migration_max_inflight", &["migrate-max-inflight", "migrate_max_inflight"]),
+    ("replicate_miss_threshold", &["replicate-miss", "replicate_miss"]),
+    ("rebalance_interval_ms", &["rebalance-ms", "rebalance_ms"]),
+    ("lend_max_frac", &["lend-max", "lend_max"]),
+    ("journal_sync_bytes", &["journal-sync-kb", "journal_sync_kb"]),
+    ("journal_segment_bytes", &["journal-seg-kb", "journal_seg_kb"]),
+    ("imbalance_factor", &["imbalance"]),
+    ("budget_bytes", &["budget_mb", "budget-mb"]),
+    ("capacity_bytes", &["capacity_mb"]),
+    ("tier_bytes", &["tier_mb", "tier-mb"]),
+];
+
+/// Struct-typed config fields whose knobs live on their own struct.
+const NESTED_CONFIG_TYPES: [&str; 4] =
+    ["CacheConfig", "SchedulerConfig", "TierConfig", "CachePolicy"];
+
+/// `knob-drift`: every `ServerConfig` / `EngineConfig` / `TierConfig`
+/// field must be loadable from JSON, settable from the CLI, and listed
+/// in the README knob table — a knob missing a surface is dead config.
+pub fn knob_drift(path: &str, config_src: &str, main_src: &str, readme: &str) -> Vec<Finding> {
+    let lx = lex(config_src);
+    let amap = allow_map(&lx);
+    let mut out = Vec::new();
+    for sname in ["ServerConfig", "EngineConfig", "TierConfig"] {
+        for f in struct_fields(&lx.code, sname) {
+            let base = f.ty.split('<').next().unwrap_or("").trim();
+            if NESTED_CONFIG_TYPES.contains(&base) {
+                continue;
+            }
+            let allowed = has_allow(&amap, f.line, "knob_drift");
+            let mut names: Vec<String> = vec![f.name.clone()];
+            for (field, aliases) in KNOB_ALIASES {
+                if field == f.name {
+                    names.extend(aliases.iter().map(|s| s.to_string()));
+                }
+            }
+            if !names.iter().any(|n| config_src.contains(&format!("\"{n}\""))) {
+                out.push(finding(
+                    "knob_drift",
+                    path,
+                    f.line,
+                    format!("{sname}.{}: no JSON key in config", f.name),
+                    allowed,
+                ));
+            }
+            if !names.iter().any(|n| main_src.contains(&format!("--{}", kebab(n)))) {
+                out.push(finding(
+                    "knob_drift",
+                    path,
+                    f.line,
+                    format!("{sname}.{}: no CLI flag in main.rs", f.name),
+                    allowed,
+                ));
+            }
+            let in_readme = names.iter().any(|n| {
+                readme.contains(&format!("`{n}`")) || readme.contains(&format!("`--{}", kebab(n)))
+            });
+            if !in_readme {
+                out.push(finding(
+                    "knob_drift",
+                    path,
+                    f.line,
+                    format!("{sname}.{}: no README knob-table entry", f.name),
+                    allowed,
+                ));
+            }
+        }
+    }
+    out
+}
+
+fn kebab(s: &str) -> String {
+    s.replace('_', "-")
+}
+
+// ------------------------------------------------------------------
+// pass 6: doc gate
+// ------------------------------------------------------------------
+
+/// Item keywords the doc gate inventories.
+const PUB_ITEM_KINDS: [&str; 8] =
+    ["fn", "struct", "enum", "trait", "mod", "const", "static", "type"];
+
+/// `doc-gate`: the module must opt into `#![warn(missing_docs)]`, and
+/// (mirroring what rustc will then enforce) every non-test `pub` item,
+/// `pub` struct field, and enum variant must carry a `///` doc.
+pub fn doc_gate(path: &str, src: &str) -> Vec<Finding> {
+    let lx = lex(src);
+    let tmask = test_mask(&lx.code);
+    let mut out = Vec::new();
+    if !src.contains("#![warn(missing_docs)]") {
+        let msg = "module missing #![warn(missing_docs)]".to_string();
+        out.push(finding("doc_gate", path, 0, msg, false));
+    }
+    for (ln, t) in lx.code.iter().enumerate() {
+        if tmask[ln] {
+            continue;
+        }
+        let Some((kind, name)) = pub_item(t) else { continue };
+        if !looks_documented(&lx, ln) {
+            out.push(finding(
+                "doc_gate",
+                path,
+                ln,
+                format!("undocumented pub {kind} {name}"),
+                false,
+            ));
+        }
+    }
+    out.extend(member_docs(path, &lx, &tmask));
+    out
+}
+
+/// Parse `pub [unsafe] <kind> <name>` at the head of a code line.
+fn pub_item(line: &str) -> Option<(&'static str, String)> {
+    let mut s = line.trim_start();
+    s = s.strip_prefix("pub ")?;
+    s = s.trim_start();
+    if let Some(rest) = s.strip_prefix("unsafe ") {
+        s = rest.trim_start();
+    }
+    for kind in PUB_ITEM_KINDS {
+        if let Some(rest) = s.strip_prefix(kind) {
+            let rest = rest.strip_prefix(' ')?;
+            let name: String = rest
+                .trim_start()
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                return Some((kind, name));
+            }
+            return None;
+        }
+    }
+    None
+}
+
+/// Walk upward from the item over attribute lines looking for a `///`
+/// (or `//!`-adjacent) doc comment.
+fn looks_documented(lx: &Lexed, ln: usize) -> bool {
+    let mut k = ln as i64 - 1;
+    while k >= 0 {
+        let prev_comment = lx.comments[k as usize].trim();
+        let prev_code = lx.code[k as usize].trim();
+        if prev_comment.starts_with("///") {
+            return true;
+        }
+        if prev_code.starts_with("#[") || prev_code.starts_with("#![") {
+            k -= 1;
+            continue;
+        }
+        return false;
+    }
+    false
+}
+
+/// Undocumented `pub` fields of pub structs and variants of pub enums.
+fn member_docs(path: &str, lx: &Lexed, tmask: &[bool]) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < lx.code.len() {
+        let Some((kind, owner)) = pub_container(&lx.code[i]) else {
+            i += 1;
+            continue;
+        };
+        let brace_near = lx.code[i..lx.code.len().min(i + 3)].iter().any(|l| l.contains('{'));
+        if tmask[i] || !brace_near {
+            i += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut j = i;
+        while j < lx.code.len() {
+            depth += delta(&lx.code[j]);
+            if j > i && depth == 1 {
+                let member = if kind == "struct" {
+                    pub_field_name(&lx.code[j])
+                } else {
+                    variant_name(&lx.code[j])
+                };
+                if let Some(m) = member {
+                    let doc = j > 0 && lx.comments[j - 1].trim().starts_with("///");
+                    if !doc {
+                        out.push(finding(
+                            "doc_gate",
+                            path,
+                            j,
+                            format!("undocumented {kind} member {owner}::{m}"),
+                            false,
+                        ));
+                    }
+                }
+            }
+            if depth <= 0 && j > i {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    out
+}
+
+/// Parse `pub struct <name>` / `pub enum <name>` at the head of a line.
+fn pub_container(line: &str) -> Option<(&'static str, String)> {
+    let s = line.trim_start().strip_prefix("pub ")?.trim_start();
+    for kind in ["struct", "enum"] {
+        if let Some(rest) = s.strip_prefix(kind) {
+            let rest = rest.strip_prefix(' ')?;
+            let name: String = rest
+                .trim_start()
+                .chars()
+                .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+                .collect();
+            if !name.is_empty() {
+                let k: &'static str = if kind == "struct" { "struct" } else { "enum" };
+                return Some((k, name));
+            }
+        }
+    }
+    None
+}
+
+/// `pub <name>:` field line inside a struct body.
+fn pub_field_name(line: &str) -> Option<String> {
+    let s = line.trim_start().strip_prefix("pub ")?.trim_start();
+    let name: String = s
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if name.is_empty() {
+        return None;
+    }
+    s[name.len()..].trim_start().starts_with(':').then_some(name)
+}
+
+/// `<Variant>` line inside an enum body (leading uppercase ident).
+fn variant_name(line: &str) -> Option<String> {
+    let s = line.trim_start();
+    let name: String = s
+        .chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect();
+    if name.starts_with(|c: char| c.is_ascii_uppercase()) {
+        Some(name)
+    } else {
+        None
+    }
+}

@@ -1,0 +1,520 @@
+//! Line-level Rust source scanning: a small lexer that strips comments
+//! and string contents per line, a `#[cfg(test)]` item mask, and the
+//! `// analyze:allow(<pass>)` annotation map.
+//!
+//! This is deliberately *not* a parser. Every invariant pass works on
+//! lexed lines (comments removed from code, string/char interiors
+//! blanked so their contents can never fake a call site), which keeps
+//! the analyzer dependency-free and fast while staying immune to the
+//! classic grep failure modes (`unwrap` inside a string literal, a
+//! commented-out `panic!`, an index expression inside a doc example).
+
+/// A source file split into per-line code and comment channels.
+///
+/// `code[i]` is line `i` with comments removed and string/char literal
+/// interiors dropped (the delimiting quotes are kept so "a string was
+/// here" is still visible). `comments[i]` is the comment text of line
+/// `i` (line comments, doc comments, and the body of block comments).
+pub struct Lexed {
+    /// Per-line code channel (strings blanked, comments removed).
+    pub code: Vec<String>,
+    /// Per-line comment channel (everything the code channel dropped).
+    pub comments: Vec<String>,
+}
+
+/// Lex `src` into per-line code and comment channels.
+///
+/// Handles line comments (`//`, `///`, `//!`), nested block comments,
+/// string literals with escapes, raw strings (`r"…"`, `r#"…"#`, byte
+/// variants), and char literals vs lifetimes (`'a'` vs `'a`).
+pub fn lex(src: &str) -> Lexed {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut code: Vec<String> = Vec::new();
+    let mut comments: Vec<String> = Vec::new();
+    let mut cur_code = String::new();
+    let mut cur_comment = String::new();
+
+    enum State {
+        Normal,
+        Block(usize),
+        Str,
+        RawStr(usize),
+    }
+    let mut state = State::Normal;
+    let mut i = 0usize;
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            code.push(std::mem::take(&mut cur_code));
+            comments.push(std::mem::take(&mut cur_comment));
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Normal => {
+                let c2 = chars.get(i + 1).copied().unwrap_or('\0');
+                if c == '/' && c2 == '/' {
+                    // line comment (incl. /// and //! docs)
+                    while i < n && chars[i] != '\n' {
+                        cur_comment.push(chars[i]);
+                        i += 1;
+                    }
+                } else if c == '/' && c2 == '*' {
+                    state = State::Block(1);
+                    i += 2;
+                } else if c == '"' {
+                    state = State::Str;
+                    cur_code.push('"');
+                    i += 1;
+                } else if let Some((skip, hashes)) = raw_string_open(&chars, i) {
+                    state = State::RawStr(hashes);
+                    cur_code.push('"');
+                    i += skip;
+                } else if c == '\'' {
+                    if let Some(skip) = char_literal(&chars, i) {
+                        cur_code.push_str("' '");
+                        i += skip;
+                    } else {
+                        // a lifetime: keep the tick, the ident follows as code
+                        cur_code.push('\'');
+                        i += 1;
+                    }
+                } else {
+                    cur_code.push(c);
+                    i += 1;
+                }
+            }
+            State::Block(depth) => {
+                let c2 = chars.get(i + 1).copied().unwrap_or('\0');
+                if c == '/' && c2 == '*' {
+                    state = State::Block(depth + 1);
+                    i += 2;
+                } else if c == '*' && c2 == '/' {
+                    if depth == 1 {
+                        state = State::Normal;
+                    } else {
+                        state = State::Block(depth - 1);
+                    }
+                    i += 2;
+                } else {
+                    cur_comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    i += 2;
+                } else if c == '"' {
+                    cur_code.push('"');
+                    state = State::Normal;
+                    i += 1;
+                } else {
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' && closes_raw(&chars, i, hashes) {
+                    cur_code.push('"');
+                    state = State::Normal;
+                    i += 1 + hashes;
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+    code.push(cur_code);
+    comments.push(cur_comment);
+    Lexed { code, comments }
+}
+
+/// If position `i` opens a raw string (`r"`, `r#"`, `br"`, …), return
+/// `(chars to skip, hash count)`. Guards against identifiers ending in
+/// `r` by requiring the previous char not be a word char.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    if i > 0 && is_word(chars[i - 1]) {
+        return None;
+    }
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0usize;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((j + 1 - i, hashes))
+    } else {
+        None
+    }
+}
+
+/// Does the `"` at `i` close a raw string with `hashes` trailing `#`s?
+fn closes_raw(chars: &[char], i: usize, hashes: usize) -> bool {
+    (1..=hashes).all(|k| chars.get(i + k) == Some(&'#'))
+}
+
+/// If position `i` (a `'`) starts a char literal, return its length in
+/// chars; `None` means it is a lifetime tick.
+fn char_literal(chars: &[char], i: usize) -> Option<usize> {
+    let next = chars.get(i + 1).copied()?;
+    if next == '\\' {
+        // escaped char: scan to the closing quote on the same line
+        let mut j = i + 2;
+        while j < chars.len() && chars[j] != '\n' && j < i + 12 {
+            if chars[j] == '\'' {
+                return Some(j + 1 - i);
+            }
+            j += 1;
+        }
+        None
+    } else if next != '\'' && chars.get(i + 2) == Some(&'\'') {
+        Some(3)
+    } else {
+        None
+    }
+}
+
+fn is_word(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Per-line mask: `true` where the line is inside a `#[cfg(test)]`
+/// item (the attribute line itself, through the item's closing brace).
+pub fn test_mask(code: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let mut i = 0usize;
+    while i < code.len() {
+        let t = &code[i];
+        if !(t.contains("cfg(test)") && t.contains("#[")) {
+            i += 1;
+            continue;
+        }
+        // brace-track from the attribute through the item it gates
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = i;
+        while j < code.len() {
+            for ch in code[j].chars() {
+                if ch == '{' {
+                    depth += 1;
+                    opened = true;
+                } else if ch == '}' {
+                    depth -= 1;
+                }
+            }
+            mask[j] = true;
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    mask
+}
+
+/// Per-line allow map: `map[i]` is the set of pass names an
+/// `// analyze:allow(<pass>) reason` annotation suppresses on line `i`.
+///
+/// Two forms:
+///   - `// analyze:allow(<pass>) reason` — covers its own line and the
+///     next line (annotate above or at end of the flagged line);
+///   - `// analyze:allow(<pass>, fn) reason` — covers the whole body of
+///     the next `fn` item (skipping blank and `#[…]` attribute lines).
+pub fn allow_map(lx: &Lexed) -> Vec<Vec<String>> {
+    let mut map: Vec<Vec<String>> = vec![Vec::new(); lx.code.len()];
+    let mut push = |map: &mut Vec<Vec<String>>, ln: usize, name: &str| {
+        if ln < map.len() && !map[ln].iter().any(|s| s == name) {
+            map[ln].push(name.to_string());
+        }
+    };
+    for (ln, text) in lx.comments.iter().enumerate() {
+        let mut rest: &str = text;
+        while let Some(p) = rest.find("analyze:allow(") {
+            rest = &rest[p + "analyze:allow(".len()..];
+            let Some((name, fn_scoped, after)) = parse_allow_args(rest) else {
+                continue;
+            };
+            rest = after;
+            if !fn_scoped {
+                push(&mut map, ln, &name);
+                push(&mut map, ln + 1, &name);
+                continue;
+            }
+            // fn-scoped: locate the next fn item, cover through its close
+            let mut j = ln + 1;
+            while j < lx.code.len() {
+                let s = lx.code[j].trim();
+                if line_declares_fn(&lx.code[j]) {
+                    break;
+                }
+                if s.is_empty() || s.starts_with("#[") {
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            let mut depth: i64 = 0;
+            let mut opened = false;
+            let mut k = j;
+            while k < lx.code.len() {
+                push(&mut map, k, &name);
+                for ch in lx.code[k].chars() {
+                    if ch == '{' {
+                        depth += 1;
+                        opened = true;
+                    } else if ch == '}' {
+                        depth -= 1;
+                    }
+                }
+                if opened && depth <= 0 {
+                    break;
+                }
+                k += 1;
+            }
+        }
+    }
+    map
+}
+
+/// Parse `<name>)` or `<name>, fn)` at the head of `rest`; return the
+/// pass name, whether it is fn-scoped, and the remaining text.
+fn parse_allow_args(rest: &str) -> Option<(String, bool, &str)> {
+    let mut name = String::new();
+    for (idx, c) in rest.char_indices() {
+        if c.is_ascii_alphanumeric() || c == '_' || c == '-' {
+            name.push(c);
+            continue;
+        }
+        if name.is_empty() {
+            return None;
+        }
+        let tail = &rest[idx..];
+        if let Some(t) = tail.strip_prefix(')') {
+            return Some((name, false, t));
+        }
+        // optional `, fn)` (whitespace tolerated)
+        let t = tail.trim_start_matches([',', ' ', '\t']);
+        if tail.starts_with(',') && t.starts_with("fn)") {
+            return Some((name, true, &t[3..]));
+        }
+        return None;
+    }
+    None
+}
+
+/// Does this code line declare a `fn` (as a word, followed by a name)?
+pub fn line_declares_fn(line: &str) -> bool {
+    let chars: Vec<char> = line.chars().collect();
+    let mut i = 0usize;
+    while i + 1 < chars.len() {
+        if chars[i] == 'f'
+            && chars[i + 1] == 'n'
+            && (i == 0 || !is_word(chars[i - 1]))
+            && chars.get(i + 2).is_some_and(|c| c.is_whitespace())
+        {
+            let mut j = i + 2;
+            while j < chars.len() && chars[j].is_whitespace() {
+                j += 1;
+            }
+            if chars.get(j).is_some_and(|&c| is_word(c)) {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// A `name: Type` field of a struct, with its 0-based line number.
+pub struct Field {
+    /// Field name.
+    pub name: String,
+    /// Field type as written (up to the first `,`).
+    pub ty: String,
+    /// 0-based line of the field in the lexed file.
+    pub line: usize,
+}
+
+/// The fields of `struct <name> { … }` in lexed code lines. Returns an
+/// empty list when the struct is absent.
+pub fn struct_fields(code: &[String], name: &str) -> Vec<Field> {
+    let mut fields = Vec::new();
+    let header = format!("struct {name}");
+    let mut start: Option<usize> = None;
+    let mut depth: i64 = 0;
+    for (ln, t) in code.iter().enumerate() {
+        match start {
+            None => {
+                let is_decl = t.contains(&header)
+                    && !t
+                        .split(&header)
+                        .nth(1)
+                        .is_some_and(|rest| rest.starts_with(|c: char| is_word(c)));
+                let brace_near =
+                    code[ln..code.len().min(ln + 3)].iter().any(|l| l.contains('{'));
+                if is_decl && brace_near {
+                    start = Some(ln);
+                    depth = brace_delta(t);
+                }
+            }
+            Some(_) => {
+                depth += brace_delta(t);
+                if let Some(f) = parse_field_line(t, ln) {
+                    if depth >= 1 {
+                        fields.push(f);
+                    }
+                }
+                if depth <= 0 {
+                    break;
+                }
+            }
+        }
+    }
+    fields
+}
+
+fn brace_delta(line: &str) -> i64 {
+    let mut d = 0i64;
+    for c in line.chars() {
+        if c == '{' {
+            d += 1;
+        } else if c == '}' {
+            d -= 1;
+        }
+    }
+    d
+}
+
+/// Parse a `pub name: Type,` struct-field line (attributes and
+/// non-field lines return `None`).
+fn parse_field_line(line: &str, ln: usize) -> Option<Field> {
+    let mut s = line.trim_start();
+    if s.starts_with("#[") || s.starts_with("#![") {
+        return None;
+    }
+    if let Some(rest) = s.strip_prefix("pub ") {
+        s = rest.trim_start();
+    }
+    let name_end = s
+        .char_indices()
+        .find(|&(_, c)| !is_word(c))
+        .map(|(i, _)| i)
+        .unwrap_or(s.len());
+    if name_end == 0 {
+        return None;
+    }
+    let name = &s[..name_end];
+    if !name.starts_with(|c: char| c.is_ascii_alphabetic() || c == '_') {
+        return None;
+    }
+    let after = s[name_end..].trim_start();
+    let ty_part = after.strip_prefix(':')?;
+    // type chars per the field grammar we care about: idents, paths,
+    // generics, whitespace — stop at the trailing comma
+    let ty_end = ty_part
+        .char_indices()
+        .find(|&(_, c)| !(is_word(c) || c == ':' || c == '<' || c == '>' || c.is_whitespace()))
+        .map(|(i, _)| i)
+        .unwrap_or(ty_part.len());
+    let ty = ty_part[..ty_end].trim();
+    if ty.is_empty() {
+        return None;
+    }
+    Some(Field { name: name.to_string(), ty: ty.to_string(), line: ln })
+}
+
+/// Positions of `needle` in `hay` where the char before the match is
+/// not a word char (a poor man's `\b` on the left side).
+pub fn find_word_starts(hay: &str, needle: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = hay[from..].find(needle) {
+        let at = from + p;
+        let boundary = hay[..at]
+            .chars()
+            .next_back()
+            .map(|c| !is_word(c))
+            .unwrap_or(true);
+        if boundary {
+            out.push(at);
+        }
+        from = at + needle.len();
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexer_strips_comments_and_strings() {
+        let lx = lex("let x = \"unwrap()\"; // panic!()\nlet y = 1;\n");
+        assert_eq!(lx.code[0], "let x = \"\"; ");
+        assert!(lx.comments[0].contains("panic!"));
+        assert_eq!(lx.code[1], "let y = 1;");
+    }
+
+    #[test]
+    fn lexer_handles_raw_strings_and_lifetimes() {
+        let lx = lex("let r = r#\"a \" b\"#;\nfn f<'a>(x: &'a str) -> char { 'x' }\n");
+        assert_eq!(lx.code[0], "let r = \"\";");
+        assert!(lx.code[1].contains("<'a>"));
+        assert!(lx.code[1].contains("' '"));
+    }
+
+    #[test]
+    fn block_comments_nest() {
+        let lx = lex("a /* x /* y */ z */ b\n");
+        assert_eq!(lx.code[0].trim(), "a  b".trim());
+        assert!(lx.comments[0].contains('y'));
+    }
+
+    #[test]
+    fn test_mask_covers_cfg_test_mod() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n  fn b() {}\n}\nfn c() {}\n";
+        let lx = lex(src);
+        let m = test_mask(&lx.code);
+        assert_eq!(m, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn allow_map_plain_and_fn_scoped() {
+        let src = "\
+// analyze:allow(panic_path) reason
+let a = v[i];
+// analyze:allow(panic_path, fn) whole body
+fn f(v: &[u32]) -> u32 {
+    v[0]
+}
+let later = 1;
+";
+        let lx = lex(src);
+        let m = allow_map(&lx);
+        assert!(m[0].iter().any(|s| s == "panic_path"));
+        assert!(m[1].iter().any(|s| s == "panic_path"));
+        assert!(m[4].iter().any(|s| s == "panic_path"));
+        assert!(m[5].iter().any(|s| s == "panic_path"));
+        assert!(m[6].is_empty());
+    }
+
+    #[test]
+    fn struct_fields_finds_typed_fields() {
+        let src = "pub struct M {\n    pub a: u64,\n    b: Vec<usize>,\n}\n";
+        let lx = lex(src);
+        let fs = struct_fields(&lx.code, "M");
+        assert_eq!(fs.len(), 2);
+        assert_eq!(fs[0].name, "a");
+        assert_eq!(fs[0].ty, "u64");
+        assert_eq!(fs[1].name, "b");
+    }
+}

@@ -82,6 +82,7 @@ pub struct TierConfig {
     /// (the CLI loads `calibration.json` into this); None = derive the
     /// FLOP terms from the model geometry and use the default tier
     /// bandwidth
+    // analyze:allow(knob_drift) loaded from calibration.json, not a user knob
     pub cost: Option<crate::exec::CostModel>,
 }
 
@@ -185,6 +186,7 @@ pub struct ServerConfig {
     /// fully calibrated cost model for the migration decision (the CLI
     /// loads `calibration.json` into this); None = derive the FLOP terms
     /// from the model geometry and use `migration_bandwidth_bytes_per_s`
+    // analyze:allow(knob_drift) loaded from calibration.json, not a user knob
     pub migration_cost: Option<crate::exec::CostModel>,
     /// elastic shard budgets: a pool supervisor periodically lends free
     /// byte budget from cold shards to hot ones (see the `rebalance`
@@ -419,6 +421,7 @@ pub struct EngineConfig {
     pub tier: TierConfig,
     pub seed: u64,
     /// sample greedily (real mode); sim mode always synthesizes tokens
+    // analyze:allow(knob_drift) fixed by the entry point, not a served knob
     pub greedy: bool,
 }
 

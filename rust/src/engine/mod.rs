@@ -35,6 +35,7 @@
 //! final prompt token is never served from cache, and only full pages are
 //! published to the trees — together these guarantee divergence always
 //! lands in fresh pages, so sharing never requires a copy.
+#![warn(missing_docs)]
 
 use std::collections::{BinaryHeap, HashMap, VecDeque};
 
@@ -61,18 +62,28 @@ fn base_ns(policy: CachePolicy, adapter: u32) -> u32 {
     }
 }
 
+/// One generation request as the engine sees it: the prompt, its adapter
+/// namespace, the generation bound, and the workflow-scheduling hints
+/// (`tag`, `fan`) the gang scheduler reads.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// engine-unique request id (assigned by the shard thread)
     pub id: u64,
     /// opaque grouping tag (workflow id) carried into FinishedRequest.
     /// Tag 0 means *untagged* (the HTTP default): it names no workflow,
     /// so the gang scheduler gives it no tag preference and counts it in
     /// no gang metrics — plain serving traffic keeps plain FCFS.
     pub tag: u64,
+    /// LoRA adapter id (namespace key for the rCache / unified trees)
     pub adapter: u32,
+    /// prompt token ids
     pub tokens: Vec<u32>,
+    /// generation bound: decode stops after this many new tokens
     pub max_new: usize,
+    /// request release time on the engine's monotone clock (µs)
     pub arrival_us: u64,
+    /// ignore EOS sampling and always decode `max_new` tokens
+    /// (benchmarks want deterministic lengths)
     pub ignore_eos: bool,
     /// declared fan width of this request's workflow step (gang-admission
     /// hint): with `sched.gang` on, admission briefly holds this tag until
@@ -164,9 +175,13 @@ impl Seq {
     }
 }
 
+/// What one `Engine::tick` call accomplished — the shard thread blocks
+/// on its command channel after `Idle` instead of spinning.
 #[derive(Debug, PartialEq, Eq)]
 pub enum Tick {
+    /// the tick prefilled, decoded, or admitted something
     Progress,
+    /// nothing to do: no admissible request and no running sequence
     Idle,
 }
 
@@ -193,11 +208,19 @@ struct TagState {
 /// Workload driver: releases requests over (virtual) time and observes
 /// completions (the agent-workflow layer implements this).
 pub trait Driver {
+    /// Observe completions and release any requests due at `now_us`.
     fn poll(&mut self, now_us: u64, finished: &[FinishedRequest]) -> Vec<Request>;
+    /// True once the workload has released and observed everything.
     fn done(&self) -> bool;
 }
 
+/// One serving shard: continuous-batching scheduler, paged dual pools,
+/// radix trees, optional host-memory tier, and the executor that runs
+/// prefill/decode — single-owner by design (the server scales by running
+/// N engines as peer shards; see the module docs).
 pub struct Engine {
+    /// construction-time configuration (policy, cache geometry, scheduler
+    /// knobs); public so the serving layer can consult page geometry
     pub cfg: EngineConfig,
     exec: Box<dyn Executor>,
     /// the *currently enforced* byte budget across both pools. Starts at
@@ -241,9 +264,13 @@ pub struct Engine {
     running: Vec<u64>,
     now_us: u64,
     rng: Rng,
+    /// cumulative serving counters (`docs/METRICS.md`), read and
+    /// serialized by `stats_json`
     pub metrics: EngineMetrics,
     finished: Vec<FinishedRequest>,
     dropped: Vec<DroppedRequest>,
+    /// keep each sequence's first-token logits on its FinishedRequest
+    /// (numeric-equivalence tests; off for serving — logits are large)
     pub collect_first_logits: bool,
     max_bucket: usize,
     /// executor bucket ladder, cached (`Executor::decode_buckets`
@@ -290,6 +317,9 @@ struct MetaScalars {
 }
 
 impl Engine {
+    /// Build a shard around an executor: size both page pools against the
+    /// single byte budget, wire the radix trees for `cfg.cache.policy`,
+    /// and (with `cfg.tier.enabled`) attach a host-memory tier store.
     pub fn new(cfg: EngineConfig, exec: Box<dyn Executor>) -> anyhow::Result<Self> {
         let meta = exec.meta().clone();
         let pt = cfg.cache.page_tokens;
@@ -382,24 +412,32 @@ impl Engine {
         })
     }
 
+    /// The executor's model geometry (vocab, context window, page size).
     pub fn meta(&self) -> &crate::runtime::ModelMeta {
         self.exec.meta()
     }
+    /// Current position of the engine's monotone clock (µs).
     pub fn now_us(&self) -> u64 {
         self.now_us
     }
+    /// The bCache page pool (shared base KV).
     pub fn base_pool(&self) -> &BlockPool {
         &self.base_pool
     }
+    /// The rCache page pool (per-adapter residual KV); `None` for the
+    /// monolithic baseline policies.
     pub fn res_pool(&self) -> Option<&BlockPool> {
         self.res_pool.as_ref()
     }
+    /// The radix trees indexing both caches.
     pub fn trees(&self) -> &DualRadixTree {
         &self.trees
     }
+    /// Sequences currently admitted or waiting (not yet terminal).
     pub fn active_seqs(&self) -> usize {
         self.seqs.len()
     }
+    /// Bytes in use across both pools right now.
     pub fn used_cache_bytes(&self) -> usize {
         self.base_pool.used_bytes() + self.res_pool.as_ref().map_or(0, |p| p.used_bytes())
     }
@@ -504,6 +542,9 @@ impl Engine {
         }
     }
 
+    /// Queue a request for admission at its `arrival_us`. Contract
+    /// violations (empty prompt, prompt+output past the context window)
+    /// panic — the serving layer validates before submitting.
     pub fn submit(&mut self, req: Request) {
         let max_ctx = self.exec.meta().s_max;
         assert!(
@@ -519,6 +560,7 @@ impl Engine {
         self.pending_reqs.insert(req.id, req);
     }
 
+    /// Take the completions accumulated since the last drain.
     pub fn drain_finished(&mut self) -> Vec<FinishedRequest> {
         std::mem::take(&mut self.finished)
     }
@@ -531,10 +573,13 @@ impl Engine {
         std::mem::take(&mut self.dropped)
     }
 
+    /// The earliest queued arrival time, if any — what the event-driven
+    /// shard thread sleeps toward when the engine reports `Idle`.
     pub fn next_pending_arrival(&self) -> Option<u64> {
         self.pending.peek().map(|std::cmp::Reverse((t, _))| *t)
     }
 
+    // analyze:allow(panic_path, fn) every pending-heap id has a pending_reqs entry (inserted together in submit)
     fn admit_pending(&mut self) {
         while let Some(&std::cmp::Reverse((t, id))) = self.pending.peek() {
             if t > self.now_us {
@@ -675,6 +720,7 @@ impl Engine {
     /// preference, no fan holds, and no gang accounting — a plain
     /// deployment that never sets `tag` keeps plain FCFS (modulo the
     /// content-based warm-prefix preference, which is tag-free).
+    // analyze:allow(panic_path, fn) every id in `waiting` has a live `seqs` entry (scheduler list invariant), and the scan above tallied every live tag
     fn next_prefill(&mut self) -> AdmissionPick {
         // gang off: the pre-gang O(1) scheduler, verbatim. FCFS only
         // ever admits (and chunk-continues) the queue head, so an
@@ -861,6 +907,7 @@ impl Engine {
     // memory management: alloc -> evict (decoupled LRU) -> preempt
     // -----------------------------------------------------------------
 
+    // analyze:allow(panic_path, fn) Which::Res is only constructed when the residual pool exists (policy.uses_residual())
     fn alloc_pages(&mut self, which: Which, n: usize, for_seq: u64) -> Option<Vec<PageId>> {
         let budget = self.budget_bytes;
         let mut budget_denied = false;
@@ -924,6 +971,7 @@ impl Engine {
     /// priority than `for_seq` (recompute-style preemption: release
     /// everything, requeue). Never preempts upward — FCFS priority is what
     /// guarantees forward progress under memory thrash.
+    // analyze:allow(panic_path, fn) the victim id was selected from running/waiting via seqs.get() on this same call
     fn preempt_one(&mut self, for_seq: u64) -> bool {
         let my_key = self.seqs.get(&for_seq).map(|s| s.priority_key());
         let Some(my_key) = my_key else { return false };
@@ -1019,6 +1067,7 @@ impl Engine {
     /// removed, so the victims are exactly the pages the pre-tier drop
     /// path freed — never leased, running-sequence, or (first-pass)
     /// workflow-pinned state.
+    // analyze:allow(panic_path, fn) Which::Res is only constructed when the residual pool exists
     fn evict_demote(&mut self, which: Which, want: usize, escalate: bool) -> usize {
         let (tree, pool, component) = match which {
             Which::Base => {
@@ -1068,6 +1117,7 @@ impl Engine {
     /// checkpoint replay (unpriced — a restart rebuilds whatever the tier
     /// still holds, charged to `restored_pages`). Returns the pages
     /// grafted into the tree.
+    // analyze:allow(panic_path, fn) tier expects are behind the is_none() early return; res-pool expects behind Which::Res
     fn pull_from_tier(
         &mut self,
         which: Which,
@@ -1194,6 +1244,7 @@ impl Engine {
 
     /// Drop a protective `match_lease` taken by promotion: release the
     /// matched pages' pool refs and the lease path.
+    // analyze:allow(panic_path, fn) Which::Res is only constructed when the residual pool exists
     fn release_match(&mut self, which: Which, m: &MatchResult) {
         let (tree, pool) = match which {
             Which::Base => (&mut self.trees.base, &mut self.base_pool),
@@ -1447,6 +1498,7 @@ impl Engine {
     /// Fork admission (paper Fig. 9): Step 1 = prefix match + inherit the
     /// shared pages; the chunk loop below performs Step 2's CoW
     /// allocations for the un-cached tail.
+    // analyze:allow(panic_path, fn) sid is the admission scan's pick from `waiting` (live seqs entry); res-pool/slab expects follow policy and needs_data gates
     fn admit_fork(&mut self, sid: u64) {
         // the real leases below supersede the queued-fork eviction pins
         self.unpin_seq(sid);
@@ -1561,6 +1613,7 @@ impl Engine {
     /// satisfied from free + tree-reclaimable memory. Without this gate,
     /// prefill-first scheduling over-admits under saturation and the
     /// engine preempt-thrashes.
+    // analyze:allow(panic_path, fn) sid comes from `waiting` — a live seqs entry by the scheduler list invariant
     fn can_admit(&self, sid: u64) -> bool {
         let seq = &self.seqs[&sid];
         let pt = self.cfg.cache.page_tokens;
@@ -1591,6 +1644,7 @@ impl Engine {
 
     /// Returns Ok(false) when the chunk is blocked on memory (the caller
     /// falls through to decode; the sequence keeps its state and retries).
+    // analyze:allow(panic_path, fn) sid is the admission pick from `waiting` (live entry, kept live across the chunk); res-pool/slab expects follow policy and needs_data gates
     fn prefill_tick(&mut self, sid: u64) -> anyhow::Result<bool> {
         if !self.seqs[&sid].admitted {
             if !self.can_admit(sid) {
@@ -1739,6 +1793,7 @@ impl Engine {
 
     /// Transition a sequence out of prefill; sample its first token if it
     /// has none yet (fresh prefill).
+    // analyze:allow(panic_path, fn) called only from prefill_tick with its live sid
     fn to_decode(&mut self, sid: u64, last_logits: Option<Vec<f32>>, _vocab: usize) {
         let sample_first = self.seqs[&sid].generated.is_empty();
         if sample_first {
@@ -1774,6 +1829,7 @@ impl Engine {
 
     /// Insert this sequence's full pages into the trees so concurrent and
     /// future agents can fork from them (SGLang-style cache-as-you-go).
+    // analyze:allow(panic_path, fn) guarded by the seqs.get() early return; res-pool expect behind uses_residual()
     fn publish(&mut self, sid: u64) {
         let policy = self.cfg.policy;
         let pt = self.cfg.cache.page_tokens;
@@ -1811,6 +1867,7 @@ impl Engine {
     /// Hot-path contract: in steady state (stable row set) this performs
     /// no heap allocation — every per-step buffer lives on the engine
     /// (`scratch_*`) and is cleared, not rebuilt.
+    // analyze:allow(panic_path, fn) row sids are filtered through seqs.get() at snapshot time and the batch is rebuilt whenever a preemption epoch moves; res-pool/slab expects follow policy and needs_data gates
     fn decode_tick(&mut self) -> anyhow::Result<bool> {
         let meta = self.scal;
         let pt = self.cfg.cache.page_tokens;
@@ -2052,6 +2109,7 @@ impl Engine {
         Ok(true)
     }
 
+    // analyze:allow(panic_path, fn) callers pass a sid they just observed live in seqs
     fn finish_seq(&mut self, sid: u64) {
         // publish the generated span too: successor agents (ReAct) fork
         // from prompt + previous outputs
@@ -2270,6 +2328,7 @@ impl Engine {
     /// it already held are deduplicated (and this method's redundant
     /// copies freed), so the count can be below the payload prefix that
     /// was walked.
+    // analyze:allow(panic_path, fn) Which::Res is only constructed when the residual pool exists
     fn import_component(&mut self, which: Which, c: &crate::migrate::ComponentExport) -> usize {
         let pt = self.cfg.cache.page_tokens;
         if c.tokens.len() < c.pages.len() * pt {
@@ -2322,6 +2381,7 @@ impl Engine {
     /// tree's own LRU tail under pressure, but never preempts sequences
     /// — a migration must not cannibalize running work to speed up
     /// future work.
+    // analyze:allow(panic_path, fn) Which::Res is only constructed when the residual pool exists
     fn alloc_import_page(&mut self, which: Which) -> Option<PageId> {
         loop {
             let page_bytes = match which {
@@ -2391,6 +2451,7 @@ struct PrefetchLease {
 
 /// Scatter chunk rows for absolute positions `[from, end)` where the chunk
 /// was computed starting at `chunk_start` (layout `[L, chunk, src_width]`).
+// analyze:allow(panic_path, fn) callers allocate pages_for(end) pages before scattering, so pos/pt < pages.len()
 #[allow(clippy::too_many_arguments)]
 fn scatter_range(
     pool: &mut BlockPool,

@@ -22,6 +22,8 @@
 //! corrupt lines by checksum — everything after the first bad line in a
 //! segment is dropped, never misparsed.
 
+#![warn(missing_docs)]
+
 use std::collections::{BTreeMap, HashMap};
 use std::fs;
 use std::io::Write as _;

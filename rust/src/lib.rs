@@ -6,6 +6,7 @@
 //!   - this crate is L3: the serving coordinator that loads the AOT HLO
 //!     artifacts via PJRT and owns the request path end to end.
 
+pub mod analysis;
 pub mod batch;
 pub mod config;
 pub mod engine;

@@ -25,7 +25,8 @@ fn usage() -> ! {
 
 USAGE:
   forkkv serve      [--artifacts DIR] [--addr HOST:PORT] [--policy P] [--budget-mb N]
-                    [--workers N] [--max-body-kb N] [--shards N] [--route R]
+                    [--workers N] [--max-body-kb N] [--accept-backlog N]
+                    [--idle-wait-ms T] [--io-timeout-ms T] [--shards N] [--route R]
                     [--imbalance F] [--migrate on|off] [--migrate-gbps F]
                     [--migrate-max-inflight N] [--gang on|off] [--gang-hold-ms T]
                     [--replicate on|off] [--replicate-miss N]
@@ -86,6 +87,11 @@ USAGE:
                                         # journal block proves zero requests were lost
   forkkv calibrate  [--artifacts DIR]   # measure real PJRT costs + inter-shard copy
                                         # bandwidth -> calibration.json
+  forkkv analyze    [--json] [PATH ...] # cross-layer invariant linter: panic-path,
+                                        # pair-discipline, lock-order, counter-drift,
+                                        # knob-drift, doc-gate (see docs/ANALYSIS.md);
+                                        # PATH prefixes filter the report; exits 1 on
+                                        # any finding not covered by an analyze:allow
 
   P: forkkv | prefix | full-reuse      M: llama3-8b-sim | qwen2.5-7b-sim | qwen2.5-14b-sim
   D: loogle | narrativeqa | apigen     R: affinity | round_robin"
@@ -125,8 +131,38 @@ fn main() -> anyhow::Result<()> {
         "run" => cmd_run(&args),
         "bench-http" => cmd_bench_http(&args),
         "calibrate" => cmd_calibrate(&args),
+        "analyze" => cmd_analyze(&args),
         _ => usage(),
     }
+}
+
+/// `forkkv analyze [--json] [PATH ...]` — run the invariant passes and
+/// exit non-zero when any non-allowed finding remains.
+fn cmd_analyze(args: &Args) -> anyhow::Result<()> {
+    let as_json = args.has("--json");
+    let paths: Vec<String> = args
+        .0
+        .iter()
+        .filter(|a| !a.starts_with("--"))
+        .cloned()
+        .collect();
+    let cwd = std::env::current_dir()?;
+    let root = forkkv::analysis::find_root(&cwd).ok_or_else(|| {
+        anyhow::anyhow!(
+            "cannot locate the crate root (src/server/mod.rs) from {}",
+            cwd.display()
+        )
+    })?;
+    let report = forkkv::analysis::run(&root, &paths);
+    if as_json {
+        println!("{}", report.to_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    if report.active() > 0 {
+        std::process::exit(1);
+    }
+    Ok(())
 }
 
 fn server_config(args: &Args) -> anyhow::Result<ServerConfig> {
@@ -134,6 +170,16 @@ fn server_config(args: &Args) -> anyhow::Result<ServerConfig> {
     if let Some(v) = args.flag("--workers") {
         cfg.workers = v.parse()?;
         anyhow::ensure!(cfg.workers > 0, "--workers must be > 0");
+    }
+    if let Some(v) = args.flag("--accept-backlog") {
+        cfg.accept_backlog = v.parse()?;
+        anyhow::ensure!(cfg.accept_backlog > 0, "--accept-backlog must be > 0");
+    }
+    if let Some(v) = args.flag("--idle-wait-ms") {
+        cfg.idle_wait_ms = v.parse()?;
+    }
+    if let Some(v) = args.flag("--io-timeout-ms") {
+        cfg.io_timeout_ms = v.parse()?;
     }
     if let Some(v) = args.flag("--max-body-kb") {
         let kb: usize = v.parse()?;

@@ -101,6 +101,7 @@
 //! restarted shard re-enters holding nothing. The rebalancer weights
 //! budget toward replica holders (`BudgetPressure::hot_replicas`), and
 //! `GET /metrics` serves the `replication` counters.
+#![warn(missing_docs)]
 
 use std::collections::{HashMap, VecDeque};
 use std::io::{BufRead, BufReader, Read, Write};
@@ -228,6 +229,16 @@ impl ShardHandle {
     }
 }
 
+// Pool-wide lock hierarchy, machine-checked by `forkkv analyze`'s
+// lock-order pass (any nested acquisition scope must respect this order;
+// the journal's internal mutex never escapes its methods, so it can
+// never be held across an outcomes/replicas acquisition):
+// analyze:lock-order: shard_tx < salvaged < journal < outcomes < replicas
+/// The sharded serving pool: N engine shard threads behind a router,
+/// plus the supervisor threads (rebalance, tier compaction, prefetch,
+/// journal checkpoints) and all pool-level counters `GET /metrics`
+/// serves. Built by [`Server::start_sharded`]; clients reach it through
+/// the HTTP front-end (`serve`) or the in-process `generate*` helpers.
 pub struct Server {
     shards: Vec<ShardHandle>,
     router: Router,
@@ -438,6 +449,7 @@ impl Dag {
     /// predecessors (so a root, or a step whose predecessors have all
     /// arrived, is distance 1). Registration rejects cycles, so the
     /// recursion is well-founded.
+    // analyze:allow(panic_path, fn) node/edge indices validated at DAG registration; memo is sized to nodes.len()
     fn distances(&self) -> Vec<usize> {
         fn d(nodes: &[DagNode], i: usize, memo: &mut [Option<usize>]) -> usize {
             if let Some(v) = memo[i] {
@@ -466,6 +478,7 @@ impl Dag {
     /// The resolvable known prefix of step `i`: its declared literal, or
     /// the prompt its provenance step submitted (None until that step
     /// arrives).
+    // analyze:allow(panic_path, fn) callers iterate 0..nodes.len(); FromStep indices validated at registration
     fn resolve_prefix(&self, i: usize) -> Option<Vec<u32>> {
         match &self.nodes[i].prefix {
             PrefixSpec::Literal(t) => Some(t.clone()),
@@ -786,6 +799,7 @@ impl Server {
             let handle = std::thread::Builder::new()
                 .name(format!("forkkv-shard-{i}"))
                 .spawn(move || run_shard(engine, rx, thread_depth, idle_wait))
+                // analyze:allow(panic_path) startup-only: fails on OS thread exhaustion before any request is accepted
                 .expect("spawn engine shard thread");
             shards.push(ShardHandle {
                 tx: RwLock::new(tx),
@@ -825,6 +839,7 @@ impl Server {
                 cfg.journal_sync_bytes,
                 cfg.journal_segment_bytes,
             )
+            // analyze:allow(panic_path) startup-only: an unopenable journal dir must abort before any request is accepted
             .expect("open request journal");
             let key_epoch = std::time::SystemTime::now()
                 .duration_since(std::time::UNIX_EPOCH)
@@ -902,6 +917,7 @@ impl Server {
                 std::thread::Builder::new()
                     .name("forkkv-rebalance".into())
                     .spawn(move || sup.rebalance_supervisor())
+                    // analyze:allow(panic_path) startup-only: fails on OS thread exhaustion before any request is accepted
                     .expect("spawn rebalance supervisor thread"),
             );
         }
@@ -914,6 +930,7 @@ impl Server {
                 std::thread::Builder::new()
                     .name("forkkv-tier".into())
                     .spawn(move || sup.tier_compact_supervisor())
+                    // analyze:allow(panic_path) startup-only: fails on OS thread exhaustion before any request is accepted
                     .expect("spawn tier compaction supervisor thread"),
             );
         }
@@ -927,6 +944,7 @@ impl Server {
                 std::thread::Builder::new()
                     .name("forkkv-prefetch".into())
                     .spawn(move || sup.prefetch_supervisor())
+                    // analyze:allow(panic_path) startup-only: fails on OS thread exhaustion before any request is accepted
                     .expect("spawn prefetch supervisor thread"),
             );
         }
@@ -939,6 +957,7 @@ impl Server {
                 std::thread::Builder::new()
                     .name("forkkv-journal".into())
                     .spawn(move || sup.journal_supervisor())
+                    // analyze:allow(panic_path) startup-only: fails on OS thread exhaustion before any request is accepted
                     .expect("spawn journal supervisor thread"),
             );
         }
@@ -951,12 +970,17 @@ impl Server {
                 std::thread::Builder::new()
                     .name("forkkv-checkpoint".into())
                     .spawn(move || sup.checkpoint_supervisor())
+                    // analyze:allow(panic_path) startup-only: fails on OS thread exhaustion before any request is accepted
                     .expect("spawn checkpoint supervisor thread"),
             );
         }
         (srv, handles)
     }
 
+    /// Stop the pool: signal the supervisor threads, take a final
+    /// warm-restart checkpoint, flush the journal's group-commit buffer,
+    /// and send every shard `Cmd::Shutdown` (each drains its in-flight
+    /// waiters before exiting).
     pub fn shutdown(&self) {
         self.stop.store(true, Ordering::Relaxed);
         // a final checkpoint + group-commit flush: the next process
@@ -977,7 +1001,7 @@ impl Server {
     /// as `rerouted` in `/metrics`); its in-flight requests still get
     /// terminal replies from the thread's final drain.
     pub fn shutdown_shard(&self, shard: usize) {
-        let _ = self.shards[shard].send(Cmd::Shutdown);
+        let _ = self.shard(shard).send(Cmd::Shutdown);
         self.poison_shard(shard);
     }
 
@@ -985,14 +1009,25 @@ impl Server {
     /// away, least-loaded never picks it) and drop it from every replica
     /// set so no spill routes a fork onto pages that no longer exist.
     fn poison_shard(&self, shard: usize) {
-        self.shards[shard].depth.store(usize::MAX, Ordering::Relaxed);
+        self.shard(shard).depth.store(usize::MAX, Ordering::Relaxed);
         if let Some(rep) = &self.replication {
             rep.lock().unwrap_or_else(|e| e.into_inner()).map.shard_dead(shard);
         }
     }
 
+    /// The pool's effective configuration (after `start_sharded`
+    /// overrode `shards` with the actual engine count).
     pub fn config(&self) -> &ServerConfig {
         &self.cfg
+    }
+
+    /// The handle of shard `i` — the pool's one index-into-`shards`
+    /// site. Every caller's index comes from the router (bounded by the
+    /// pool size it was built with), a registered DAG lease/plan, or a
+    /// bounds-checked admin path.
+    // analyze:allow(panic_path, fn) callers' shard indices are router-produced or validated, always < shards.len()
+    fn shard(&self, i: usize) -> &ShardHandle {
+        &self.shards[i]
     }
 
     /// Request limits shared by every entry point (direct and HTTP): the
@@ -1135,7 +1170,7 @@ impl Server {
         };
         let mut attempts = 0;
         loop {
-            let handle = &self.shards[shard];
+            let handle = self.shard(shard);
             // a shard already known dead is re-routed WITHOUT touching
             // its depth: fetch_add on the poison value would wrap it
             // toward 0 and transiently advertise the dead shard as the
@@ -1151,6 +1186,7 @@ impl Server {
                         // this (still unsubmitted) request
                         self.poison_shard(shard);
                         let Cmd::Submit(r, t) = cmd else {
+                            // analyze:allow(panic_path) mpsc::SendError echoes back the exact value we just sent
                             unreachable!("send echoes back the submit")
                         };
                         req = r;
@@ -1372,7 +1408,7 @@ impl Server {
             tokens: window.to_vec(),
             reply: probe_tx,
         };
-        if self.shards[home].send(probe).is_err() {
+        if self.shard(home).send(probe).is_err() {
             return Ship::Skipped;
         }
         let Ok(est) = probe_rx.recv() else {
@@ -1391,7 +1427,7 @@ impl Server {
             tokens: window.to_vec(),
             reply: tgt_tx,
         };
-        if self.shards[target].send(target_probe).is_err() {
+        if self.shard(target).send(target_probe).is_err() {
             return Ship::Skipped;
         }
         let Ok(target_est) = tgt_rx.recv() else {
@@ -1406,7 +1442,7 @@ impl Server {
             tokens: window.to_vec(),
             reply: exp_tx,
         };
-        if self.shards[home].send(export).is_err() {
+        if self.shard(home).send(export).is_err() {
             return Ship::Skipped;
         }
         let Ok(payload) = exp_rx.recv() else {
@@ -1415,7 +1451,8 @@ impl Server {
         let bytes = payload.bytes();
         // the home shard may have evicted between probe and export
         if payload.pages() == 0
-            || self.shards[target]
+            || self
+                .shard(target)
                 .send(Cmd::Import(Box::new(payload)))
                 .is_err()
         {
@@ -1526,7 +1563,7 @@ impl Server {
             tokens: tokens[..tokens.len() - 1].to_vec(),
             reply: tx,
         };
-        if self.shards[shard].send(probe).is_err() {
+        if self.shard(shard).send(probe).is_err() {
             return 0;
         }
         rx.recv_timeout(Duration::from_secs(5))
@@ -1572,7 +1609,7 @@ impl Server {
             tokens: tokens.to_vec(),
             reply: tx,
         };
-        let promoted = if self.shards[target].send(warm).is_ok() {
+        let promoted = if self.shard(target).send(warm).is_ok() {
             rx.recv_timeout(Duration::from_secs(5)).unwrap_or(0)
         } else {
             0
@@ -1602,6 +1639,9 @@ impl Server {
         }
     }
 
+    /// Untagged [`Server::generate_outcome_tagged`]: route and wait for
+    /// the terminal outcome, drops surfaced as `RequestOutcome::Dropped`
+    /// rather than an error.
     pub fn generate_outcome(
         &self,
         prompt_tokens: Vec<u32>,
@@ -1611,6 +1651,9 @@ impl Server {
         self.generate_outcome_tagged(prompt_tokens, adapter, max_new, 0)
     }
 
+    /// Generate under a workflow tag and insist on completion: an
+    /// engine-initiated drop (OOM eviction) comes back as an error
+    /// naming the `DropReason`.
     pub fn generate_tagged(
         &self,
         prompt_tokens: Vec<u32>,
@@ -1628,6 +1671,8 @@ impl Server {
         }
     }
 
+    /// The simplest entry point: untagged [`Server::generate_tagged`]
+    /// (tag 0 — no workflow affinity, no gang admission).
     pub fn generate(
         &self,
         prompt_tokens: Vec<u32>,
@@ -1802,7 +1847,7 @@ impl Server {
         }
         let (moves, moved) = reb.lock().unwrap_or_else(|e| e.into_inner()).tick(&obs);
         for &(i, bytes) in &moves {
-            if self.shards[i].send(Cmd::Budget(bytes)).is_err() {
+            if self.shard(i).send(Cmd::Budget(bytes)).is_err() {
                 // a closed channel means the shard died between the
                 // pressure poll and the move. Poison its depth so the
                 // router and every later tick see it dead — its budget
@@ -1934,7 +1979,7 @@ impl Server {
     /// and run the journal replay path. Returns whether the shard was
     /// alive to kill.
     pub fn kill_shard(&self, shard: usize) -> bool {
-        let handle = &self.shards[shard];
+        let handle = self.shard(shard);
         let (tx, rx) = mpsc::channel();
         let alive = handle.send(Cmd::Crash { salvage: tx }).is_ok();
         if alive {
@@ -1960,7 +2005,7 @@ impl Server {
     ) -> anyhow::Result<std::thread::JoinHandle<()>> {
         anyhow::ensure!(shard < self.shards.len(), "no such shard {shard}");
         anyhow::ensure!(
-            self.shards[shard].is_poisoned(),
+            self.shard(shard).is_poisoned(),
             "shard {shard} is still live; kill or drain it first"
         );
         // host tier first: the checkpoint restore pulls pages out of it
@@ -1979,13 +2024,12 @@ impl Server {
             }
         }
         let (tx, rx) = mpsc::channel::<Cmd>();
-        let handle = &self.shards[shard];
+        let handle = self.shard(shard);
         let depth = handle.depth.clone();
         let idle_wait = Duration::from_millis(self.cfg.idle_wait_ms.max(1));
         let thread = std::thread::Builder::new()
             .name(format!("forkkv-shard-{shard}"))
-            .spawn(move || run_shard(engine, rx, depth, idle_wait))
-            .expect("spawn engine shard thread");
+            .spawn(move || run_shard(engine, rx, depth, idle_wait))?;
         *handle.tx_lock.write(&handle.tx) = tx;
         // un-poison only after the fresh sender is installed: a racing
         // submit must never see depth 0 with the dead channel in place
@@ -2159,6 +2203,7 @@ impl Server {
 
     /// Validate and build a DAG from its `"steps"` JSON: unique ids,
     /// known `after` / `prefix_from` references, bounded size, acyclic.
+    // analyze:allow(panic_path, fn) Kahn indices come from enumerate() over the same nodes vec that sized indeg
     fn parse_dag(&self, tag: u64, steps: &[Json], default_adapter: u32) -> anyhow::Result<Dag> {
         anyhow::ensure!(tag != 0, "dag registration needs a nonzero workflow tag");
         anyhow::ensure!(!steps.is_empty(), "empty steps array");
@@ -2257,6 +2302,7 @@ impl Server {
     /// (resolving successors' `prefix_from`), take its lease (the caller
     /// releases it once the outcome lands, so the warmed pages stay
     /// pinned through admission), and re-evaluate the horizon.
+    // analyze:allow(panic_path, fn) idx comes from position() over the same nodes vec, under the registry lock
     fn step_arrival(&self, tag: u64, step: &str, prompt: &[u32]) -> Option<IssuedLease> {
         let lease = {
             let mut dags = self.dags.lock().unwrap_or_else(|e| e.into_inner());
@@ -2276,6 +2322,7 @@ impl Server {
     /// node done; failure returns it to pending (the client may retry;
     /// abandonment GC covers workflows that die here). A fully-done DAG
     /// leaves the registry.
+    // analyze:allow(panic_path, fn) idx comes from position() over the same nodes vec, under the registry lock
     fn step_done(&self, tag: u64, step: &str, ok: bool) {
         let (all_done, strays) = {
             let mut dags = self.dags.lock().unwrap_or_else(|e| e.into_inner());
@@ -2314,7 +2361,7 @@ impl Server {
 
     /// Release one issued lease on its shard and account the outcome.
     fn release_lease(&self, l: &IssuedLease, hit: bool) {
-        let _ = self.shards[l.shard].send(Cmd::PrefetchRelease { lease: l.id, hit });
+        let _ = self.shard(l.shard).send(Cmd::PrefetchRelease { lease: l.id, hit });
         let ctr = if hit {
             &self.pf_counters.leases_hit
         } else {
@@ -2328,6 +2375,7 @@ impl Server {
     /// then migrate + pin outside it (`PrefetchPlan`). A plan whose
     /// prefix turns out not resident yet leaves no lease anywhere, so a
     /// later pass (arrival, completion, supervisor tick) retries it.
+    // analyze:allow(panic_path, fn) i ranges over nodes.len() (dist is distances() over the same vec); after/FromStep indices validated at registration
     fn prefetch_eval(&self) {
         if !self.cfg.prefetch {
             return;
@@ -2415,7 +2463,8 @@ impl Server {
         // the Prefetch send moves the tokens
         let fp = self.router.fingerprint(&plan.tokens, plan.route_tag);
         let (tx, rx) = mpsc::channel();
-        let covered = self.shards[plan.target]
+        let covered = self
+            .shard(plan.target)
             .send(Cmd::Prefetch {
                 lease: plan.lease,
                 adapter: plan.adapter,
@@ -2436,8 +2485,15 @@ impl Server {
         // prefilling): the engine left no lease behind, so clear the
         // registry record and let a later evaluation pass retry
         let mut dags = self.dags.lock().unwrap_or_else(|e| e.into_inner());
-        if let Some(dag) = dags.get_mut(&plan.tag) {
-            let node = &mut dag.nodes[plan.node];
+        // get_mut, not indexing: the registry was unlocked during the
+        // migration round trips, so the DAG may have been GC'd and
+        // re-registered with fewer nodes in the meantime — a stale
+        // `plan.node` must be a no-op, not a panic (the lease-id check
+        // already guards the matching-index-different-lease case)
+        if let Some(node) = dags
+            .get_mut(&plan.tag)
+            .and_then(|dag| dag.nodes.get_mut(plan.node))
+        {
             if node.lease.as_ref().is_some_and(|l| l.id == plan.lease) {
                 node.lease = None;
             }
@@ -2858,15 +2914,15 @@ impl Server {
         let min_depth = j.get("min_depth").and_then(Json::as_usize).unwrap_or(0);
         let wait_ms = j.get("wait_ms").and_then(Json::as_usize).unwrap_or(0) as u64;
         let deadline = Instant::now() + Duration::from_millis(wait_ms);
-        while self.shards[shard].depth.load(Ordering::Relaxed) < min_depth
+        while self.shard(shard).depth.load(Ordering::Relaxed) < min_depth
             && Instant::now() < deadline
         {
             std::thread::sleep(Duration::from_millis(1));
         }
-        let depth_at_kill = if self.shards[shard].is_poisoned() {
+        let depth_at_kill = if self.shard(shard).is_poisoned() {
             0
         } else {
-            self.shards[shard].depth.load(Ordering::Relaxed)
+            self.shard(shard).depth.load(Ordering::Relaxed)
         };
         let killed = self.kill_shard(shard);
         (
@@ -2942,10 +2998,13 @@ pub fn http_request(
     Ok((status, body))
 }
 
+/// Minimal HTTP/1.1 POST helper (tests and the bench harness talk to a
+/// served pool through this): returns `(status, body)`.
 pub fn http_post(addr: &str, path: &str, body: &str) -> anyhow::Result<(u16, String)> {
     http_request(addr, "POST", path, Some(body))
 }
 
+/// Minimal HTTP/1.1 GET helper: returns `(status, body)`.
 pub fn http_get(addr: &str, path: &str) -> anyhow::Result<(u16, String)> {
     http_request(addr, "GET", path, None)
 }

@@ -1,0 +1,149 @@
+//! Fixture tests for the `forkkv analyze` invariant passes: each pass
+//! must fire on its bad fixture, stay quiet on the clean one, and
+//! honor the `analyze:allow` escape hatch — plus a self-test that the
+//! real tree has zero active findings (the same gate CI enforces).
+
+use forkkv::analysis::{self, passes};
+
+const PANIC_BAD: &str = include_str!("fixtures/analyze/panic_bad.rs");
+const PAIR_BAD: &str = include_str!("fixtures/analyze/pair_bad.rs");
+const CMD_BAD: &str = include_str!("fixtures/analyze/cmd_bad.rs");
+const LOCK_BAD: &str = include_str!("fixtures/analyze/lock_bad.rs");
+const COUNTER_BAD: &str = include_str!("fixtures/analyze/counter_bad.rs");
+const KNOB_BAD: &str = include_str!("fixtures/analyze/knob_bad.rs");
+const DOC_BAD: &str = include_str!("fixtures/analyze/doc_bad.rs");
+const CLEAN: &str = include_str!("fixtures/analyze/clean.rs");
+const ALLOW: &str = include_str!("fixtures/analyze/allow.rs");
+
+#[test]
+fn panic_path_fires_on_bad_fixture() {
+    let fs = passes::panic_path("panic_bad.rs", PANIC_BAD);
+    let msgs: Vec<&str> = fs.iter().map(|f| f.message.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains(".unwrap()")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains(".expect(")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("panic!")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("unreachable!")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("indexing [i]")), "{msgs:?}");
+    assert_eq!(fs.len(), 5, "look-alikes must not fire: {msgs:?}");
+    assert!(fs.iter().all(|f| !f.allowed));
+    assert!(fs.iter().all(|f| f.line > 0));
+}
+
+#[test]
+fn pair_discipline_fires_on_unreleased_acquisitions() {
+    let fs = passes::pair_discipline("pair_bad.rs", PAIR_BAD);
+    assert!(
+        fs.iter().any(|f| f.message.contains("pin_prefix")),
+        "missing pin_prefix finding"
+    );
+    assert!(
+        fs.iter().any(|f| f.message.contains("match_lease")),
+        "missing match_lease finding"
+    );
+    assert_eq!(fs.len(), 2);
+}
+
+#[test]
+fn cmd_coverage_flags_unhandled_variant() {
+    let fs = passes::cmd_coverage("cmd_bad.rs", CMD_BAD);
+    assert_eq!(fs.len(), 1);
+    assert!(fs[0].message.contains("Cmd::Orphan"), "{}", fs[0].message);
+}
+
+#[test]
+fn lock_order_flags_declaration_violation() {
+    let fs = passes::lock_order("lock_bad.rs", LOCK_BAD);
+    assert_eq!(fs.len(), 1, "{:?}", fs.iter().map(|f| &f.message).collect::<Vec<_>>());
+    assert!(
+        fs[0].message.contains("salvaged -> shard_tx"),
+        "{}",
+        fs[0].message
+    );
+}
+
+#[test]
+fn lock_order_requires_a_declaration() {
+    let fs = passes::lock_order("no_decl.rs", "pub fn f() {}\n");
+    assert!(fs.iter().any(|f| f.message.contains("no analyze:lock-order")));
+}
+
+#[test]
+fn counter_drift_flags_missing_legs() {
+    let docs = "| `completed` | total completed |\n";
+    let fs = passes::counter_drift("counter_bad.rs", COUNTER_BAD, docs);
+    let for_field = |name: &str| {
+        fs.iter()
+            .filter(|f| f.message.contains(&format!("`{name}`")))
+            .count()
+    };
+    assert_eq!(for_field("completed"), 0, "fully-wired counter must pass");
+    // ghost_counter: summed but not serialized, not documented
+    assert_eq!(for_field("ghost_counter"), 2);
+    // unsummed_counter: missing all three legs
+    assert_eq!(for_field("unsummed_counter"), 3);
+}
+
+#[test]
+fn knob_drift_flags_dead_knob() {
+    let main_src = "--workers";
+    let readme = "| `workers` | 4 | worker threads |";
+    let fs = passes::knob_drift("knob_bad.rs", KNOB_BAD, main_src, readme);
+    assert!(fs.iter().all(|f| f.message.contains("dead_knob_ms")), "workers is fully wired");
+    assert_eq!(fs.len(), 3, "dead_knob_ms must miss all three surfaces");
+}
+
+#[test]
+fn doc_gate_flags_missing_docs() {
+    let fs = passes::doc_gate("doc_bad.rs", DOC_BAD);
+    let msgs: Vec<&str> = fs.iter().map(|f| f.message.as_str()).collect();
+    assert!(msgs.iter().any(|m| m.contains("missing #![warn(missing_docs)]")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("undocumented pub fn undocumented")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("Holder::bare")), "{msgs:?}");
+    assert!(msgs.iter().any(|m| m.contains("Kind::Bare")), "{msgs:?}");
+    assert_eq!(fs.len(), 4, "documented items must not fire: {msgs:?}");
+}
+
+#[test]
+fn clean_fixture_has_no_findings() {
+    assert!(passes::panic_path("clean.rs", CLEAN).is_empty());
+    assert!(passes::pair_discipline("clean.rs", CLEAN).is_empty());
+    assert!(passes::doc_gate("clean.rs", CLEAN).is_empty());
+}
+
+#[test]
+fn allow_annotations_suppress_without_hiding() {
+    let fs = passes::panic_path("allow.rs", ALLOW);
+    assert_eq!(fs.len(), 3, "annotated findings are still reported");
+    assert!(fs.iter().all(|f| f.allowed), "…but every one is allowed");
+}
+
+#[test]
+fn report_json_is_parseable_and_counts_active() {
+    let report = analysis::Report {
+        findings: passes::panic_path("allow.rs", ALLOW)
+            .into_iter()
+            .chain(passes::panic_path("panic_bad.rs", PANIC_BAD))
+            .collect(),
+    };
+    assert_eq!(report.active(), 5);
+    let parsed = forkkv::util::json::parse(&report.to_json()).expect("valid JSON");
+    assert_eq!(parsed.at(&["active"]).as_usize(), Some(5));
+    assert_eq!(
+        parsed.get("findings").and_then(|f| f.as_arr()).map(|a| a.len()),
+        Some(8)
+    );
+}
+
+#[test]
+fn real_tree_has_zero_active_findings() {
+    let root = analysis::find_root(std::path::Path::new(env!("CARGO_MANIFEST_DIR")))
+        .expect("crate root");
+    let report = analysis::run(&root, &[]);
+    let active: Vec<String> = report
+        .findings
+        .iter()
+        .filter(|f| !f.allowed)
+        .map(|f| format!("{}:{}: {}", f.file, f.line, f.message))
+        .collect();
+    assert!(active.is_empty(), "active findings:\n{}", active.join("\n"));
+}

@@ -1,0 +1,19 @@
+//! Allow-annotation fixture: every finding here is covered by an
+//! escape hatch, so the file has findings but zero active ones.
+//! Never compiled — scanned as text.
+
+pub fn annotated(v: &[u32], i: usize) -> u32 {
+    // analyze:allow(panic_path) caller validated i at the API boundary
+    let a = v[i];
+    // analyze:allow(panic_path) non-empty checked by caller
+    v.first().unwrap() + a
+}
+
+// analyze:allow(panic_path, fn) indices come from enumerate() over v itself
+pub fn fn_scoped(v: &[u32]) -> u32 {
+    let mut total = 0;
+    for (i, _) in v.iter().enumerate() {
+        total += v[i];
+    }
+    total
+}

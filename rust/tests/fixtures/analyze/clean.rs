@@ -1,0 +1,17 @@
+//! Clean fixture: hot-path-shaped code with none of the flagged
+//! constructs. Never compiled — scanned as text.
+
+#![warn(missing_docs)]
+
+/// Sum the first two values, tolerating short input.
+pub fn careful(v: &[u32]) -> u32 {
+    let a = v.first().copied().unwrap_or(0);
+    let b = v.get(1).copied().unwrap_or_default();
+    a + b
+}
+
+/// Pin, use, and release a prefix — the paired shape.
+pub fn paired(tree: &mut Tree, fp: u64) {
+    tree.pin_prefix(fp);
+    tree.unpin_path(fp);
+}

@@ -1,0 +1,16 @@
+//! Cmd-coverage fixture: an enum with a variant nobody handles.
+//! Never compiled — scanned as text.
+
+enum Cmd {
+    /// Handled below.
+    Submit,
+    /// Never matched outside the declaration: must be flagged.
+    Orphan,
+}
+
+pub fn dispatch(c: Cmd) {
+    match c {
+        Cmd::Submit => {}
+        _ => {}
+    }
+}

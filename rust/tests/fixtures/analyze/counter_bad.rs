@@ -1,0 +1,21 @@
+//! counter-drift fixture: an EngineMetrics with a counter that is
+//! aggregated but neither serialized nor documented, and one missing
+//! from aggregation entirely. Never compiled — scanned as text.
+
+pub struct EngineMetrics {
+    pub completed: u64,
+    pub ghost_counter: u64,
+    pub unsummed_counter: u64,
+}
+
+const SUMMED_KEYS: [&str; 2] = ["completed", "ghost_counter"];
+
+impl EngineMetrics {
+    pub fn to_json(&self) -> String {
+        obj(&[("completed", self.completed)])
+    }
+}
+
+pub fn aggregate_stats(all: &[EngineMetrics]) -> u64 {
+    all.iter().map(|m| m.completed).sum()
+}

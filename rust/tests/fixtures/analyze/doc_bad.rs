@@ -1,0 +1,22 @@
+//! doc-gate fixture: no missing_docs opt-in, an undocumented pub fn,
+//! an undocumented struct field, and an undocumented enum variant.
+//! Never compiled — scanned as text.
+
+/// Documented: must not be flagged.
+pub fn documented() {}
+
+pub fn undocumented() {}
+
+/// The container itself is documented…
+pub struct Holder {
+    /// …and so is this field.
+    pub fine: u64,
+    pub bare: u64,
+}
+
+/// Documented enum.
+pub enum Kind {
+    /// Documented variant.
+    Fine,
+    Bare,
+}

@@ -1,0 +1,14 @@
+//! knob-drift fixture: a ServerConfig with a field wired to no
+//! serving surface at all. Never compiled — scanned as text.
+
+pub struct ServerConfig {
+    pub workers: usize,
+    pub dead_knob_ms: u64,
+}
+
+pub fn from_json(j: &Json) -> ServerConfig {
+    ServerConfig {
+        workers: j.get("workers").unwrap_or(4),
+        dead_knob_ms: 100, // hardcoded: no JSON key loads this field
+    }
+}

@@ -1,0 +1,14 @@
+//! lock-order fixture: a nested acquisition that contradicts the
+//! declared hierarchy. Never compiled — scanned as text.
+
+// analyze:lock-order: shard_tx < salvaged < journal < outcomes < replicas
+
+pub fn inverted(self_: &Pool) {
+    let salvaged = self_.salvaged_lock.lock();
+    {
+        // acquiring shard_tx while holding salvaged: order violation
+        let txs = self_.tx_lock.read();
+        drop(txs);
+    }
+    drop(salvaged);
+}

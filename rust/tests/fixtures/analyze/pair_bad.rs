@@ -1,0 +1,13 @@
+//! pair-discipline fixture: a file that acquires pins but can never
+//! release them. Never compiled — scanned as text.
+
+pub fn leaky(tree: &mut Tree, fp: u64) {
+    // acquisition with no unpin_path anywhere in this file
+    tree.pin_prefix(fp);
+    let lease = tree.match_lease(fp); // no release_path either
+    drop(lease);
+}
+
+fn pin_prefix_helper() {
+    // definition-looking name; the call below still counts
+}

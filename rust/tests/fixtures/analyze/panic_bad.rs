@@ -1,0 +1,39 @@
+//! panic-path fixture: every construct the pass must flag, plus the
+//! look-alikes it must NOT flag. Never compiled — scanned as text.
+
+pub fn hot(v: &[u32], i: usize) -> u32 {
+    let a = v.first().unwrap();
+    let b = v.get(i).expect("in range");
+    let c = v[i];
+    if *a > 10 {
+        panic!("a too big");
+    }
+    match b {
+        0 => unreachable!("zero filtered upstream"),
+        _ => {}
+    }
+    *a + b + c
+}
+
+pub fn look_alikes(v: &[u32]) -> u32 {
+    // none of these may fire:
+    let s = "call .unwrap() and panic!(now)"; // inside a string
+    // let x = v[9].unwrap();  (commented out)
+    let d = v.first().copied().unwrap_or(0);
+    let e = v.first().copied().unwrap_or_default();
+    assert!(!v.is_empty(), "contract check, allowed");
+    let f = v[0]; // literal index, allowed
+    let arr: [u32; 2] = [d, e]; // array type/literal, allowed
+    let g = &v[1..]; // range slice, allowed
+    s.len() as u32 + f + arr[1] + g.len() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        let v = vec![1u32, 2];
+        let _ = v[1]; // indexing in tests never fires
+        v.first().unwrap();
+    }
+}
